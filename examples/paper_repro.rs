@@ -1,0 +1,67 @@
+//! END-TO-END DRIVER: the full paper reproduction on a real workload.
+//!
+//! Runs all five CUDA benchmarks (sizes 32..256) on the soft GPGPU across
+//! every configuration the paper evaluates (1-2 SMs x 8/16/32 SPs), runs
+//! the MicroBlaze-class baseline on the same inputs, verifies every
+//! output against BOTH the host golden references and the AOT-compiled
+//! JAX/Pallas golden models through PJRT, and regenerates Tables 1-6 and
+//! Figures 4-5 side-by-side with the paper's published numbers.
+//!
+//! The output of this binary is the source of EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example paper_repro
+
+use flexgrip::harness::{tables, Evaluation};
+use flexgrip::kernels::{self, BenchId};
+use flexgrip::runtime::{golden, Artifacts};
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("FlexGrip-RS paper reproduction (seed {:#x})\n", flexgrip::harness::eval::EVAL_SEED);
+
+    // Phase 1: XLA golden cross-check of every benchmark at every size —
+    // the three-layer stack validating the simulator's contract.
+    let arts = Artifacts::open_default().expect("run `make artifacts` first");
+    println!("[1/3] XLA golden cross-checks ({}):", arts.platform());
+    for id in BenchId::PAPER {
+        for n in kernels::PAPER_SIZES {
+            let w = kernels::prepare(id, n, flexgrip::harness::eval::EVAL_SEED);
+            let elems = golden::crosscheck(&arts, id, n, &w.input, &w.expected())
+                .unwrap_or_else(|e| panic!("{e}"));
+            print!("  {}:{n} ({elems}) ok", id.name());
+        }
+        println!();
+    }
+
+    // Phase 2: the headline evaluation at size 256.
+    println!("\n[2/3] paper tables & figures (size 256):\n");
+    let mut ev = Evaluation::new(256);
+    println!("{}", tables::table1().render());
+    println!("{}", tables::table2().render());
+    println!("{}", tables::table3(&mut ev).render());
+    println!("{}", tables::table4().render());
+    println!("{}", tables::table5(&mut ev).render());
+    println!("{}", tables::table6(&mut ev).render());
+    println!("{}", tables::fig4(&mut ev).render());
+    println!("{}", tables::fig5(&mut ev).render());
+
+    // Phase 3: input-size scaling (§5.1.1).
+    println!("[3/3] input-size scaling:\n");
+    println!("{}", tables::sweep(&kernels::PAPER_SIZES).render());
+
+    // Headline claims, asserted.
+    let mut ev2 = Evaluation::new(256);
+    let avg32_2sm: f64 = BenchId::PAPER
+        .iter()
+        .map(|b| ev2.speedup(*b, 2, 32))
+        .sum::<f64>()
+        / BenchId::PAPER.len() as f64;
+    let peak = BenchId::PAPER
+        .iter()
+        .map(|b| ev2.speedup(*b, 2, 32))
+        .fold(f64::MIN, f64::max);
+    println!("headline: 2 SM / 32 SP avg speedup {avg32_2sm:.1}x, peak {peak:.1}x (paper: avg ~44x, peak 55x)");
+    assert!(avg32_2sm > 10.0, "2 SM / 32 SP must be an order of magnitude over MicroBlaze");
+    println!("\npaper_repro OK in {:?}", t0.elapsed());
+}

@@ -1,0 +1,67 @@
+//! Quickstart: assemble a kernel, launch it on the soft GPGPU, read back
+//! the result — the complete FlexGrip flow in ~40 lines.
+//!
+//!     cargo run --release --example quickstart
+
+use flexgrip::asm::assemble;
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use flexgrip::sim::{GlobalMem, NativeAlu};
+
+fn main() {
+    // 1. Write a CUDA-style kernel in FlexGrip assembly: out[i] = a[i]+b[i].
+    let kernel = assemble(
+        r#"
+        .entry vecadd
+        .regs 8
+            S2R  R1, SR_GTID
+            SLD  R2, [0]        ; param 0: a base
+            SLD  R3, [4]        ; param 1: b base
+            SLD  R4, [8]        ; param 2: out base
+            SHL  R5, R1, #2
+            IADD R2, R2, R5
+            IADD R3, R3, R5
+            IADD R4, R4, R5
+            GLD  R6, [R2]
+            GLD  R7, [R3]
+            IADD R6, R6, R7
+            GST  [R4], R6
+            EXIT
+        "#,
+    )
+    .expect("kernel assembles");
+
+    // 2. Instantiate a soft GPGPU: 1 SM x 8 scalar processors (the
+    //    paper's baseline) — no rebuild needed to run any other kernel.
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
+
+    // 3. DMA inputs into device memory (driver role).
+    let n = 128u32;
+    let (a_base, b_base, out_base) = (0x1000u32, 0x1000 + 4 * n, 0x1000 + 8 * n);
+    let mut gmem = GlobalMem::new(0x4000);
+    let a: Vec<i32> = (0..n as i32).collect();
+    let b: Vec<i32> = (0..n as i32).map(|x| 1000 - x).collect();
+    gmem.write_words(a_base, &a).unwrap();
+    gmem.write_words(b_base, &b).unwrap();
+
+    // 4. Launch: 2 blocks x 64 threads, params through the shared-memory
+    //    parameter segment.
+    let launch = LaunchConfig::linear(2, 64);
+    let params = [a_base as i32, b_base as i32, out_base as i32];
+    let mut alu = NativeAlu;
+    let result = gpgpu
+        .launch(&kernel, launch, &params, &mut gmem, &mut alu)
+        .expect("launch succeeds");
+
+    // 5. Read back and check.
+    let out = gmem.read_words(out_base, n as usize).unwrap();
+    assert!(out.iter().all(|&v| v == 1000), "every element sums to 1000");
+    println!(
+        "vecadd n={n}: {} cycles = {:.3} ms @ 100 MHz ({} warp instructions, {} blocks)",
+        result.total.cycles,
+        result.exec_time_ms(),
+        result.total.instructions,
+        result.total.blocks,
+    );
+    println!("out[0..8] = {:?}", &out[..8]);
+    println!("quickstart OK");
+}

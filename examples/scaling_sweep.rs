@@ -1,0 +1,29 @@
+//! §5.1.1 scalability study: speedup vs MicroBlaze across input sizes
+//! (32..256), SP counts (8/16/32), and SM counts (1/2).
+//!
+//!     cargo run --release --example scaling_sweep
+
+use flexgrip::harness::{tables, Evaluation};
+use flexgrip::kernels::{BenchId, PAPER_SIZES};
+
+fn main() {
+    println!("{}", tables::sweep(&PAPER_SIZES).render());
+
+    let mut ev = Evaluation::new(256);
+    println!("{}", tables::fig4(&mut ev).render());
+    println!("{}", tables::fig5(&mut ev).render());
+    println!("{}", tables::table3(&mut ev).render());
+
+    // Residency telemetry: how the block scheduler fills SMs (Table 1).
+    for id in [BenchId::MatMul, BenchId::Autocorr] {
+        let run = ev.fg(id, 2, 32);
+        let blocks: Vec<u64> = run.phases[0].per_sm.iter().map(|s| s.blocks).collect();
+        println!(
+            "{}: 2 SM block split {:?}, resident limit {}",
+            id.name(),
+            blocks,
+            run.phases[0].max_resident_blocks
+        );
+    }
+    println!("scaling_sweep OK");
+}

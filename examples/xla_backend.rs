@@ -1,0 +1,55 @@
+//! Three-layer demo: the simulator's execute stage running on the
+//! AOT-compiled JAX/Pallas warp-ALU artifact through PJRT, with the
+//! output cross-checked against the XLA benchmark golden model.
+//!
+//!     make artifacts && cargo run --release --example xla_backend
+
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
+use flexgrip::kernels::{self, BenchId};
+use flexgrip::runtime::{golden, Artifacts, XlaAlu};
+use flexgrip::sim::{AluBackend, NativeAlu};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let arts = Arc::new(Artifacts::open_default().expect("run `make artifacts` first"));
+    println!("PJRT platform: {}", arts.platform());
+
+    let (id, n) = (BenchId::Bitonic, 64u32);
+    let w = kernels::prepare(id, n, 42);
+
+    // Native execute stage.
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 32));
+    let mut gmem = w.make_gmem();
+    let t0 = Instant::now();
+    let mut native = NativeAlu;
+    let run_native = w.run(&gpgpu, &mut gmem, &mut native).unwrap();
+    w.verify(&gmem).unwrap();
+    let native_wall = t0.elapsed();
+
+    // XLA execute stage (same kernel binary, same simulator).
+    let mut xla = XlaAlu::new(arts.clone()).unwrap();
+    let mut gmem2 = w.make_gmem();
+    let t0 = Instant::now();
+    let run_xla = w.run(&gpgpu, &mut gmem2, &mut xla).unwrap();
+    w.verify(&gmem2).unwrap();
+    let xla_wall = t0.elapsed();
+
+    assert_eq!(
+        run_native.cycles, run_xla.cycles,
+        "timing model is backend-independent"
+    );
+    println!(
+        "{} n={n}: {} simulated cycles; native ALU wall {native_wall:?}, \
+         xla ALU wall {xla_wall:?} ({} PJRT calls)",
+        id.name(),
+        run_native.cycles,
+        xla.calls(),
+    );
+
+    // Independent cross-check: JAX/Pallas golden model through PJRT.
+    let compared = golden::crosscheck(&arts, id, n, &w.input, &w.expected())
+        .expect("XLA golden agrees with host golden");
+    println!("XLA golden model cross-check: {compared} elements agree");
+    println!("xla_backend OK (backend: {})", xla.name());
+}

@@ -1,0 +1,98 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* artifacts.
+
+Run once by `make artifacts`; the rust binary only ever loads the
+artifacts. HLO text (not serialized HloModuleProto) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifact inventory (all int32):
+  warp_alu.hlo.txt           op(1) cond(1) a(32) b(32) c(32) -> (32)
+  warp_alu_batch64.hlo.txt   ops(64) conds(64) a/b/c(64,32) -> (64,32)
+  bench_<name>_n<N>.hlo.txt  golden models for N in {32,64,128,256}
+plus manifest.txt listing every artifact with its signature.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+SIZES = [32, 64, 128, 256]
+WARP = 32
+BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def artifact_specs():
+    """(name, jitted_fn, example_args) for every artifact."""
+    out = [
+        (
+            "warp_alu",
+            model.execute_slot,
+            (_spec(1), _spec(1), _spec(WARP), _spec(WARP), _spec(WARP)),
+        ),
+        (
+            f"warp_alu_batch{BATCH}",
+            model.execute_batch,
+            (
+                _spec(BATCH),
+                _spec(BATCH),
+                _spec(BATCH, WARP),
+                _spec(BATCH, WARP),
+                _spec(BATCH, WARP),
+            ),
+        ),
+    ]
+    for n in SIZES:
+        seg = min(n, 64)
+        out += [
+            (f"bench_matmul_n{n}", model.golden_matmul, (_spec(n, n), _spec(n, n))),
+            (f"bench_transpose_n{n}", model.golden_transpose, (_spec(n, n),)),
+            (f"bench_autocorr_n{n}", model.golden_autocorr, (_spec(n),)),
+            (f"bench_reduction_n{n}", model.golden_reduction, (_spec(n),)),
+            (f"bench_bitonic_n{n}", model.golden_bitonic(seg), (_spec(n),)),
+            (f"bench_vecadd_n{n}", model.golden_vecadd, (_spec(n), _spec(n))),
+        ]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for name, fn, specs in artifact_specs():
+        lowered = fn.lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        sig = ", ".join("x".join(map(str, s.shape)) or "1" for s in specs)
+        manifest.append(f"{name}: ({sig}) -> hlo {len(text)} chars")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"{len(manifest)} artifacts -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Build-time kernels: Pallas L1 + oracles. Never imported at runtime."""

@@ -1,0 +1,86 @@
+"""L1/L2 golden models for the five paper benchmarks.
+
+These are the *independent* XLA-executed implementations the rust
+coordinator loads (``runtime::golden``) to cross-check simulator output —
+the three-layer analogue of the paper authors checking FPGA results
+against host C code.
+
+The matmul and transpose goldens are real Pallas kernels (tiled,
+BlockSpec'd, interpret=True); reduction/autocorr/bitonic are L2 jnp
+graphs. All use wrapping int32 semantics to match the SP datapath.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 16
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # One (TILE, n) x (n, TILE) -> (TILE, TILE) tile; int32 MACs.
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.int32)
+
+
+def matmul_pallas(a, b):
+    """C = A @ B for square int32 matrices, 16x16 output tiles."""
+    n = a.shape[0]
+    assert a.shape == (n, n) and b.shape == (n, n) and n % TILE == 0
+    grid = (n // TILE, n // TILE)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, TILE), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def _transpose_kernel(a_ref, o_ref):
+    o_ref[...] = a_ref[...].T
+
+
+def transpose_pallas(a):
+    """B = A^T via 16x16 tiles with a swapped output index map."""
+    n = a.shape[0]
+    assert a.shape == (n, n) and n % TILE == 0
+    grid = (n // TILE, n // TILE)
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, TILE), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.int32),
+        interpret=True,
+    )(a)
+
+
+def autocorr_jnp(x):
+    """r[k] = sum_i x[i] * x[i+k] as a masked shift-matrix product (L2)."""
+    n = x.shape[0]
+    idx = jnp.arange(n)
+    # shifted[k, i] = x[i+k] if i+k < n else 0
+    gather = idx[None, :] + idx[:, None]
+    valid = gather < n
+    shifted = jnp.where(valid, x[jnp.clip(gather, 0, n - 1)], 0)
+    return shifted @ x
+
+
+def reduction_jnp(x):
+    """Wrapping int32 sum, returned as shape (1,)."""
+    return jnp.sum(x, dtype=jnp.int32)[None]
+
+
+def bitonic_jnp(x, seg):
+    """Each `seg`-sized segment sorted ascending (lowers to HLO sort)."""
+    n = x.shape[0]
+    assert n % seg == 0
+    return jnp.sort(x.reshape(n // seg, seg), axis=1).reshape(n)
+
+
+def vecadd_jnp(a, b):
+    return a + b

@@ -1,0 +1,140 @@
+"""Pure-numpy/jnp correctness oracles.
+
+Independent implementations of the warp-ALU semantics (structured as a
+per-opcode dispatch rather than the kernel's select tree) and of the five
+benchmark golden models. pytest compares ``warp_alu.py`` /
+``bench_refs.py`` against these — the CORE build-time correctness signal
+for L1.
+"""
+
+import numpy as np
+
+from . import warp_alu as wa
+
+_I32_MIN = np.int32(-(2**31))
+
+
+def _flags(a, b):
+    a64 = a.astype(np.int64)
+    b64 = b.astype(np.int64)
+    diff = ((a64 - b64) & 0xFFFFFFFF).astype(np.uint32).astype(np.int32)
+    sign = diff < 0
+    zero = diff == 0
+    carry = ~(a.astype(np.uint32) < b.astype(np.uint32))
+    ovf = (a64 - b64) != diff.astype(np.int64)
+    return sign, zero, carry, ovf
+
+
+def _cond(cond, a, b):
+    sign, zero, _, ovf = _flags(a, b)
+    lt = sign != ovf
+    table = {
+        wa.COND_ALWAYS: np.ones_like(zero),
+        wa.COND_EQ: zero,
+        wa.COND_NE: ~zero,
+        wa.COND_LT: lt,
+        wa.COND_LE: zero | lt,
+        wa.COND_GT: (~zero) & (~lt),
+        wa.COND_GE: ~lt,
+        wa.COND_NEVER: np.zeros_like(zero),
+    }
+    return table[int(cond)]
+
+
+def _wide(x, y, f):
+    return (
+        (f(x.astype(np.int64), y.astype(np.int64)) & 0xFFFFFFFF)
+        .astype(np.uint32)
+        .astype(np.int32)
+    )
+
+
+def alu_ref(op, cond, a, b, c):
+    """Numpy reference for one ALU op over lane vectors (wrapping i32)."""
+    a = np.asarray(a, np.int32)
+    b = np.asarray(b, np.int32)
+    c = np.asarray(c, np.int32)
+    op = int(op)
+    sh = (b.astype(np.uint32) & 31).astype(np.uint32)
+    if op == wa.OPC_ADD:
+        return _wide(a, b, lambda x, y: x + y)
+    if op == wa.OPC_SUB:
+        return _wide(a, b, lambda x, y: x - y)
+    if op == wa.OPC_MUL:
+        return _wide(a, b, lambda x, y: x * y)
+    if op == wa.OPC_MAD:
+        return _wide(_wide(a, b, lambda x, y: x * y), c, lambda x, y: x + y)
+    if op == wa.OPC_MIN:
+        return np.minimum(a, b)
+    if op == wa.OPC_MAX:
+        return np.maximum(a, b)
+    if op == wa.OPC_AND:
+        return a & b
+    if op == wa.OPC_OR:
+        return a | b
+    if op == wa.OPC_XOR:
+        return a ^ b
+    if op == wa.OPC_NOT:
+        return ~a
+    if op == wa.OPC_SHL:
+        return (a.astype(np.uint32) << sh).astype(np.int32)
+    if op == wa.OPC_SHR:
+        return (a.astype(np.uint32) >> sh).astype(np.int32)
+    if op == wa.OPC_SAR:
+        return a >> sh.astype(np.int32)
+    if op == wa.OPC_ABS:
+        return np.where(a == _I32_MIN, _I32_MIN, np.abs(a))
+    if op == wa.OPC_NEG:
+        return np.where(a == _I32_MIN, _I32_MIN, -a)
+    if op == wa.OPC_MOV:
+        return a
+    if op == wa.OPC_SETP:
+        s, z, cy, o = _flags(a, b)
+        return (
+            s.astype(np.int32)
+            | (z.astype(np.int32) << 1)
+            | (cy.astype(np.int32) << 2)
+            | (o.astype(np.int32) << 3)
+        )
+    if op == wa.OPC_SET:
+        return np.where(_cond(cond, a, b), np.int32(-1), np.int32(0))
+    if op == wa.OPC_SEL:
+        return np.where(c != 0, a, b)
+    raise ValueError(f"unknown opcode {op}")
+
+
+# --- benchmark golden oracles (wrapping i32, matching rust kernels::golden) ---
+
+
+def autocorr_ref(x):
+    x = np.asarray(x, np.int64)
+    n = len(x)
+    out = np.zeros(n, np.int64)
+    for k in range(n):
+        out[k] = np.sum(x[: n - k] * x[k:]) if k < n else 0
+    return (out & 0xFFFFFFFF).astype(np.uint32).astype(np.int32)
+
+
+def bitonic_ref(x, seg):
+    x = np.asarray(x, np.int32).copy()
+    for s in range(0, len(x), seg):
+        x[s : s + seg] = np.sort(x[s : s + seg])
+    return x
+
+
+def matmul_ref(a, b):
+    c = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    return (c & 0xFFFFFFFF).astype(np.uint32).astype(np.int32)
+
+
+def reduction_ref(x):
+    s = int(np.sum(np.asarray(x, np.int64))) & 0xFFFFFFFF
+    return np.array([s], np.uint32).astype(np.int32)
+
+
+def transpose_ref(a):
+    return np.asarray(a, np.int32).T.copy()
+
+
+def vecadd_ref(a, b):
+    return _wide(np.asarray(a, np.int32), np.asarray(b, np.int32), lambda x, y: x + y)

@@ -1,0 +1,204 @@
+"""L1: the FlexGrip scalar-processor array as a Pallas kernel.
+
+One warp instruction = one decoded ALU function broadcast to 32 lock-step
+integer lanes (the paper's SPs, Fig. 3 right). On the FPGA those lanes are
+DSP48E datapaths; on TPU hardware they are VPU lanes, and the kernel is
+written the way both machines want it: every candidate operation is
+computed over the full lane vector and the opcode *selects* — no per-lane
+control flow (DESIGN.md §Hardware-Adaptation).
+
+ABI: the ``OPC_*`` constants MUST match ``AluFunc`` in
+``rust/src/sim/alu.rs``; the packed flags layout (sign | zero<<1 |
+carry<<2 | overflow<<3) must match ``isa::Flags``. The rust runtime loads
+the AOT artifact of this kernel and drives it as an ``AluBackend``,
+differentially tested against the native rust datapath.
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO, which is exactly
+what the rust loader needs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WARP_SIZE = 32
+
+# --- ALU function selectors (ABI with rust/src/sim/alu.rs::AluFunc) ---
+OPC_ADD = 0
+OPC_SUB = 1
+OPC_MUL = 2
+OPC_MAD = 3
+OPC_MIN = 4
+OPC_MAX = 5
+OPC_AND = 6
+OPC_OR = 7
+OPC_XOR = 8
+OPC_NOT = 9
+OPC_SHL = 10
+OPC_SHR = 11
+OPC_SAR = 12
+OPC_ABS = 13
+OPC_NEG = 14
+OPC_MOV = 15
+OPC_SETP = 16
+OPC_SET = 17
+OPC_SEL = 18
+NUM_OPCODES = 19
+
+# Condition codes (ABI with rust isa::Cond).
+COND_ALWAYS = 0
+COND_EQ = 1
+COND_NE = 2
+COND_LT = 3
+COND_LE = 4
+COND_GT = 5
+COND_GE = 6
+COND_NEVER = 7
+
+_I32_MIN = -(2**31)  # plain int: pallas kernels must not capture array constants
+
+
+def _flags_of_sub(a, b):
+    """4-bit condition flags of a - b, FlexGrip layout (paper Fig. 2)."""
+    diff = a - b  # int32 wraps in XLA
+    sign = diff < 0
+    zero = diff == 0
+    # x86-style inverted borrow: carry set when no unsigned borrow.
+    carry = ~(a.astype(jnp.uint32) < b.astype(jnp.uint32))
+    # Signed overflow of subtraction.
+    ovf = ((a ^ b) & (a ^ diff)) < 0
+    return sign, zero, carry, ovf
+
+
+def _eval_cond(cond, sign, zero, carry, ovf):
+    """The paper's condition lookup table -> per-lane boolean mask."""
+    del carry  # unsigned conditions are not in the integer subset
+    lt = sign != ovf
+    return jnp.select(
+        [
+            cond == COND_ALWAYS,
+            cond == COND_EQ,
+            cond == COND_NE,
+            cond == COND_LT,
+            cond == COND_LE,
+            cond == COND_GT,
+            cond == COND_GE,
+        ],
+        [
+            jnp.ones_like(zero),
+            zero,
+            ~zero,
+            lt,
+            zero | lt,
+            (~zero) & (~lt),
+            ~lt,
+        ],
+        default=jnp.zeros_like(zero),  # COND_NEVER
+    )
+
+
+def alu_lanes(op, cond, a, b, c):
+    """Evaluate one ALU function over lane vectors (select-tree form).
+
+    ``op``/``cond`` are int32 scalars; ``a``/``b``/``c`` int32 lane vectors.
+    This is shared by the Pallas kernel body and the L2 graph.
+    """
+    sh = b.astype(jnp.uint32) & 31
+    au = a.astype(jnp.uint32)
+    sign, zero, carry, ovf = _flags_of_sub(a, b)
+    flags = (
+        sign.astype(jnp.int32)
+        | (zero.astype(jnp.int32) << 1)
+        | (carry.astype(jnp.int32) << 2)
+        | (ovf.astype(jnp.int32) << 3)
+    )
+    cond_mask = _eval_cond(cond, sign, zero, carry, ovf)
+
+    candidates = [
+        (OPC_ADD, a + b),
+        (OPC_SUB, a - b),
+        (OPC_MUL, a * b),
+        (OPC_MAD, a * b + c),
+        (OPC_MIN, jnp.minimum(a, b)),
+        (OPC_MAX, jnp.maximum(a, b)),
+        (OPC_AND, a & b),
+        (OPC_OR, a | b),
+        (OPC_XOR, a ^ b),
+        (OPC_NOT, ~a),
+        (OPC_SHL, (au << sh).astype(jnp.int32)),
+        (OPC_SHR, (au >> sh).astype(jnp.int32)),
+        (OPC_SAR, a >> sh.astype(jnp.int32)),
+        (OPC_ABS, jnp.where(a == _I32_MIN, _I32_MIN, jnp.abs(a))),
+        (OPC_NEG, jnp.where(a == _I32_MIN, _I32_MIN, -a)),
+        (OPC_MOV, a),
+        (OPC_SETP, flags),
+        (OPC_SET, jnp.where(cond_mask, -1, 0).astype(jnp.int32)),
+        (OPC_SEL, jnp.where(c != 0, a, b)),
+    ]
+    return jnp.select(
+        [op == code for code, _ in candidates],
+        [val for _, val in candidates],
+        default=jnp.zeros_like(a),
+    )
+
+
+def _warp_alu_kernel(op_ref, cond_ref, a_ref, b_ref, c_ref, out_ref):
+    """Pallas body: one instruction slot, 32 lanes in VMEM."""
+    op = op_ref[0]
+    cond = cond_ref[0]
+    out_ref[...] = alu_lanes(op, cond, a_ref[...], b_ref[...], c_ref[...])
+
+
+def warp_alu(op, cond, a, b, c):
+    """Single-slot warp ALU: op/cond (1,), lanes (32,) int32 -> (32,)."""
+    return pl.pallas_call(
+        _warp_alu_kernel,
+        out_shape=jax.ShapeDtypeStruct((WARP_SIZE,), jnp.int32),
+        interpret=True,
+    )(op, cond, a, b, c)
+
+
+def _warp_alu_batch_kernel(op_ref, cond_ref, a_ref, b_ref, c_ref, out_ref):
+    """Pallas body for one (block, 32) tile of instruction slots."""
+    ops = op_ref[...]  # (blk,)
+    conds = cond_ref[...]
+    a = a_ref[...]  # (blk, 32)
+    b = b_ref[...]
+    c = c_ref[...]
+    out_ref[...] = alu_lanes(ops[:, None], conds[:, None], a, b, c)
+
+
+def warp_alu_batch(ops, conds, a, b, c, *, block=8):
+    """Batched warp ALU: N instruction slots, tiled over a Pallas grid.
+
+    ops/conds (N,), lanes (N, 32). The BlockSpec keeps `block` slots
+    (block x 32 lanes) resident per grid step — the HBM->VMEM schedule a
+    TPU build would use; under interpret=True it exercises identical
+    tiling logic on CPU.
+    """
+    n = ops.shape[0]
+    assert n % block == 0, f"batch {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _warp_alu_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, WARP_SIZE), lambda i: (i, 0)),
+            pl.BlockSpec((block, WARP_SIZE), lambda i: (i, 0)),
+            pl.BlockSpec((block, WARP_SIZE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, WARP_SIZE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, WARP_SIZE), jnp.int32),
+        interpret=True,
+    )(ops, conds, a, b, c)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def warp_alu_jit(op, cond, a, b, c):
+    """Jitted single-slot form (what aot.py lowers)."""
+    return warp_alu(op, cond, a, b, c)

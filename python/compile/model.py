@@ -1,0 +1,62 @@
+"""L2: the compute-graph layer.
+
+The paper's "model" is the SIMT execute stage itself: a decoded warp
+instruction applied to 32 lanes. This module wires the L1 Pallas kernels
+into jittable graphs (single-slot and batched) and exposes the benchmark
+golden models. ``aot.py`` lowers everything here to HLO text; the rust
+runtime executes the artifacts through PJRT. Python never runs on the
+request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bench_refs, warp_alu
+
+
+@jax.jit
+def execute_slot(op, cond, a, b, c):
+    """One warp instruction: op/cond (1,) i32, lanes (32,) i32 -> (32,)."""
+    return (warp_alu.warp_alu(op, cond, a, b, c),)
+
+
+@jax.jit
+def execute_batch(ops, conds, a, b, c):
+    """N instruction slots through the tiled Pallas kernel -> (N, 32)."""
+    return (warp_alu.warp_alu_batch(ops, conds, a, b, c),)
+
+
+@jax.jit
+def golden_matmul(a, b):
+    """C = A @ B (int32, Pallas tiles at L1)."""
+    return (bench_refs.matmul_pallas(a, b),)
+
+
+@jax.jit
+def golden_transpose(a):
+    return (bench_refs.transpose_pallas(a),)
+
+
+@jax.jit
+def golden_autocorr(x):
+    return (bench_refs.autocorr_jnp(x),)
+
+
+@jax.jit
+def golden_reduction(x):
+    return (bench_refs.reduction_jnp(x),)
+
+
+def golden_bitonic(seg):
+    """Segment size is a static lowering parameter."""
+
+    @jax.jit
+    def fn(x):
+        return (bench_refs.bitonic_jnp(x, seg),)
+
+    return fn
+
+
+@jax.jit
+def golden_vecadd(a, b):
+    return (bench_refs.vecadd_jnp(a, b),)

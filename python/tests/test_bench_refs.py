@@ -1,0 +1,86 @@
+"""Golden benchmark models (Pallas/jnp) vs the numpy oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bench_refs as br, ref
+
+SIZES = [32, 64, 128, 256]
+SMALL = st.integers(-100, 100)
+
+
+def rng_mat(n, seed):
+    return np.random.default_rng(seed).integers(-100, 100, (n, n)).astype(np.int32)
+
+
+def rng_vec(n, seed):
+    return np.random.default_rng(seed).integers(-100, 100, n).astype(np.int32)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_matmul_pallas_matches_oracle(n):
+    a, b = rng_mat(n, 1), rng_mat(n, 2)
+    got = np.asarray(br.matmul_pallas(jnp.array(a), jnp.array(b)))
+    np.testing.assert_array_equal(got, ref.matmul_ref(a, b))
+
+
+def test_matmul_pallas_wraps():
+    n = 32
+    a = np.full((n, n), 1 << 20, np.int32)
+    b = np.full((n, n), 1 << 20, np.int32)
+    got = np.asarray(br.matmul_pallas(jnp.array(a), jnp.array(b)))
+    np.testing.assert_array_equal(got, ref.matmul_ref(a, b))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_transpose_pallas_matches_oracle(n):
+    a = rng_mat(n, 3)
+    got = np.asarray(br.transpose_pallas(jnp.array(a)))
+    np.testing.assert_array_equal(got, ref.transpose_ref(a))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_autocorr_matches_oracle(n):
+    x = rng_vec(n, 4)
+    got = np.asarray(br.autocorr_jnp(jnp.array(x)))
+    np.testing.assert_array_equal(got, ref.autocorr_ref(x))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_reduction_matches_oracle(n):
+    x = rng_vec(n, 5)
+    got = np.asarray(br.reduction_jnp(jnp.array(x)))
+    np.testing.assert_array_equal(got, ref.reduction_ref(x))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_bitonic_matches_oracle(n):
+    seg = min(n, 64)
+    x = rng_vec(n, 6)
+    got = np.asarray(br.bitonic_jnp(jnp.array(x), seg))
+    np.testing.assert_array_equal(got, ref.bitonic_ref(x, seg))
+
+
+@settings(max_examples=25, deadline=None)
+@given(xs=st.lists(SMALL, min_size=32, max_size=32))
+def test_autocorr_property_random(xs):
+    x = np.array(xs, np.int32)
+    got = np.asarray(br.autocorr_jnp(jnp.array(x)))
+    np.testing.assert_array_equal(got, ref.autocorr_ref(x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(xs=st.lists(st.integers(-(2**31), 2**31 - 1), min_size=64, max_size=64))
+def test_bitonic_property_full_range(xs):
+    x = np.array(xs, np.int32)
+    got = np.asarray(br.bitonic_jnp(jnp.array(x), 64))
+    assert list(got) == sorted(xs)
+
+
+def test_transpose_involution():
+    a = rng_mat(64, 7)
+    once = br.transpose_pallas(jnp.array(a))
+    twice = np.asarray(br.transpose_pallas(once))
+    np.testing.assert_array_equal(twice, a)

@@ -1,0 +1,51 @@
+"""L2 graph layer: shapes, dtypes, jit-ability, tuple outputs."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref, warp_alu as wa
+
+
+def test_execute_slot_shape_and_tuple():
+    out = model.execute_slot(
+        jnp.array([wa.OPC_ADD], jnp.int32),
+        jnp.array([0], jnp.int32),
+        jnp.ones(32, jnp.int32),
+        jnp.ones(32, jnp.int32),
+        jnp.zeros(32, jnp.int32),
+    )
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (32,) and out[0].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out[0]), np.full(32, 2, np.int32))
+
+
+def test_execute_batch_shape():
+    n = 64
+    out = model.execute_batch(
+        jnp.full((n,), wa.OPC_XOR, jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.ones((n, 32), jnp.int32),
+        jnp.ones((n, 32), jnp.int32),
+        jnp.zeros((n, 32), jnp.int32),
+    )
+    assert out[0].shape == (n, 32)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.zeros((n, 32), np.int32))
+
+
+def test_goldens_return_tuples_with_expected_shapes():
+    n = 32
+    a = jnp.ones((n, n), jnp.int32)
+    x = jnp.arange(n, dtype=jnp.int32)
+    assert model.golden_matmul(a, a)[0].shape == (n, n)
+    assert model.golden_transpose(a)[0].shape == (n, n)
+    assert model.golden_autocorr(x)[0].shape == (n,)
+    assert model.golden_reduction(x)[0].shape == (1,)
+    assert model.golden_bitonic(32)(x)[0].shape == (n,)
+    assert model.golden_vecadd(x, x)[0].shape == (n,)
+
+
+def test_golden_reduction_value():
+    x = np.arange(100, dtype=np.int32)
+    out = model.golden_reduction(jnp.array(x[:32]))
+    np.testing.assert_array_equal(np.asarray(out[0]), ref.reduction_ref(x[:32]))

@@ -1,0 +1,112 @@
+//! `cargo bench --bench hot_path` — microbenchmarks of the simulator's
+//! hot paths (the §Perf targets in EXPERIMENTS.md):
+//!
+//! * SM issue loop throughput (simulated warp-instructions / second)
+//! * native ALU lane throughput
+//! * XLA ALU backend: single-slot vs 64-slot batched artifact
+//! * assembler + pre-decode throughput
+//! * MicroBlaze VM throughput
+
+use flexgrip::asm::assemble;
+use flexgrip::baseline::{self, MbTiming};
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
+use flexgrip::isa::Cond;
+use flexgrip::kernels::{self, BenchId};
+use flexgrip::runtime::{Artifacts, XlaAlu, XlaBatchAlu, XLA_BATCH};
+use flexgrip::sim::{AluBackend, AluFunc, NativeAlu, WarpAluIn};
+use flexgrip::harness::bench;
+use std::sync::Arc;
+
+fn main() {
+    println!("=== hot-path microbenchmarks ===\n");
+
+    // Simulator issue loop: matmul-64 = ~107k warp instructions.
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
+    let w = kernels::prepare(BenchId::MatMul, 64, 1);
+    let instrs = {
+        let mut alu = NativeAlu;
+        let mut g = w.make_gmem();
+        w.run(&gpgpu, &mut g, &mut alu).unwrap().stats.instructions
+    };
+    let r = bench("sim_matmul64_1sm8sp", 10, || {
+        let mut alu = NativeAlu;
+        let mut g = w.make_gmem();
+        w.run(&gpgpu, &mut g, &mut alu).unwrap().cycles
+    });
+    let wi_per_s = instrs as f64 / r.median().as_secs_f64();
+    println!(
+        "  -> {instrs} warp-instrs / run = {:.2} M warp-instrs/s ({:.1} M lane-ops/s)\n",
+        wi_per_s / 1e6,
+        wi_per_s * 32.0 / 1e6
+    );
+
+    // Divergence-heavy path.
+    let wd = kernels::prepare(BenchId::Bitonic, 256, 1);
+    bench("sim_bitonic256_divergent", 10, || {
+        let mut alu = NativeAlu;
+        let mut g = wd.make_gmem();
+        wd.run(&gpgpu, &mut g, &mut alu).unwrap().cycles
+    });
+
+    // Native ALU throughput.
+    let input = WarpAluIn {
+        func: AluFunc::Mad,
+        cond: Cond::Always,
+        a: [7; 32],
+        b: [9; 32],
+        c: [1; 32],
+    };
+    bench("native_alu_1M_mads", 10, || {
+        let mut alu = NativeAlu;
+        let mut acc = 0i64;
+        for _ in 0..1_000_000 {
+            acc += alu.execute(&input)[0] as i64;
+        }
+        acc
+    });
+
+    // XLA backends (needs artifacts).
+    match Artifacts::open_default() {
+        Ok(arts) => {
+            let arts = Arc::new(arts);
+            let mut xla = XlaAlu::new(arts.clone()).unwrap();
+            bench("xla_alu_single_slot_x100", 5, || {
+                let mut acc = 0i64;
+                for _ in 0..100 {
+                    acc += xla.execute(&input)[0] as i64;
+                }
+                acc
+            });
+            let batch = XlaBatchAlu::new(arts).unwrap();
+            let inputs: Vec<WarpAluIn> = (0..XLA_BATCH).map(|_| input.clone()).collect();
+            bench("xla_alu_batch64_x100", 5, || {
+                let mut acc = 0i64;
+                for _ in 0..100 {
+                    acc += batch.execute_batch(&inputs).unwrap()[0][0] as i64;
+                }
+                acc
+            });
+            println!("  -> batch64 amortizes the PJRT call ~64x per slot\n");
+        }
+        Err(e) => println!("skipping XLA benches: {e}"),
+    }
+
+    // Assembler + pre-decode.
+    let src = BenchId::MatMul.source();
+    bench("assemble_matmul_x1000", 10, || {
+        let mut n = 0;
+        for _ in 0..1000 {
+            n += assemble(src).unwrap().instrs.len();
+        }
+        n
+    });
+
+    // MicroBlaze VM.
+    bench("microblaze_matmul64", 10, || {
+        baseline::run_verified(BenchId::MatMul, 64, 1, MbTiming::default())
+            .unwrap()
+            .cycles
+    });
+
+    println!("hot_path bench OK");
+}

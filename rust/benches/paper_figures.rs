@@ -1,0 +1,27 @@
+//! `cargo bench --bench paper_figures` — regenerates Figures 4 and 5
+//! (speedup vs MicroBlaze at size 256 for 1 and 2 SMs across 8/16/32
+//! SPs) plus the §5.1.1 input-size sweep, with timing.
+
+use flexgrip::harness::{bench, tables, Evaluation};
+use flexgrip::kernels::PAPER_SIZES;
+
+fn main() {
+    println!("=== paper figure regeneration (measured | paper) ===\n");
+
+    let _ = bench("fig4_1sm_speedups_size256", 1, || {
+        let mut ev = Evaluation::new(256);
+        tables::fig4(&mut ev).render()
+    });
+    let _ = bench("fig5_2sm_speedups_size256", 1, || {
+        let mut ev = Evaluation::new(256);
+        tables::fig5(&mut ev).render()
+    });
+    let _ = bench("input_size_sweep", 1, || tables::sweep(&PAPER_SIZES).render());
+
+    println!();
+    let mut ev = Evaluation::new(256);
+    println!("{}", tables::fig4(&mut ev).render());
+    println!("{}", tables::fig5(&mut ev).render());
+    println!("{}", tables::sweep(&PAPER_SIZES).render());
+    println!("paper_figures bench OK");
+}

@@ -1,0 +1,41 @@
+//! `cargo bench --bench paper_tables` — regenerates every table in the
+//! paper (Tables 1, 2, 4 from the calibrated models; Tables 3, 5, 6 from
+//! full simulator + baseline runs at the paper's 256 input size) and
+//! times the regeneration. Output mirrors the paper's layout with
+//! measured-vs-paper columns.
+
+use flexgrip::harness::{bench, tables, Evaluation};
+
+fn main() {
+    println!("=== paper table regeneration (measured | paper) ===\n");
+
+    bench("table1_physical_limits", 32, || tables::table1().render());
+    bench("table2_area_model", 32, || tables::table2().render());
+    bench("table4_power_model", 32, || tables::table4().render());
+    println!();
+    println!("{}", tables::table1().render());
+    println!("{}", tables::table2().render());
+    println!("{}", tables::table4().render());
+
+    // End-to-end tables: one timed sample (each regeneration simulates
+    // every benchmark at size 256 on up to 6 configurations).
+    let r3 = bench("table3_2sm_scaling_size256", 1, || {
+        let mut ev = Evaluation::new(256);
+        tables::table3(&mut ev).render()
+    });
+    let r5 = bench("table5_energy_size256", 1, || {
+        let mut ev = Evaluation::new(256);
+        tables::table5(&mut ev).render()
+    });
+    let r6 = bench("table6_customization_size256", 1, || {
+        let mut ev = Evaluation::new(256);
+        tables::table6(&mut ev).render()
+    });
+    println!();
+    let mut ev = Evaluation::new(256);
+    println!("{}", tables::table3(&mut ev).render());
+    println!("{}", tables::table5(&mut ev).render());
+    println!("{}", tables::table6(&mut ev).render());
+    let _ = (r3, r5, r6);
+    println!("paper_tables bench OK");
+}

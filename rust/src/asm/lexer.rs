@@ -1,0 +1,252 @@
+//! Line lexer for the FlexGrip assembly dialect.
+
+use super::error::AsmError;
+
+/// One lexical token. Register-like identifiers are classified here so the
+/// parser stays purely structural.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Token {
+    /// Mnemonic, label name, or special-register name.
+    Ident(String),
+    /// `.entry`, `.regs`, ... (name without the dot).
+    Directive(String),
+    /// General register `R0`..`R63`.
+    Reg(u8),
+    /// Predicate register `P0`..`P3`.
+    PReg(u8),
+    /// Address register `A0`..`A3`.
+    AReg(u8),
+    /// Immediate: `#5`, `#-3`, `#0x1f`, or bare `5` / `0x1f` / `-3`.
+    Imm(i64),
+    Comma,
+    Colon,
+    LBracket,
+    RBracket,
+    Plus,
+    Minus,
+    At,
+    /// `.` separating e.g. `P0.LT` (guard condition suffix).
+    Dot,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex one source line. Comments start with `//` or `;`.
+pub fn lex_line(line: &str, line_no: usize) -> Result<Vec<Token>, AsmError> {
+    let mut toks = Vec::new();
+    let mut chars = line.char_indices().peekable();
+
+    while let Some(&(at, c)) = chars.peek() {
+        match c {
+            ';' => break,
+            '/' => {
+                if line[at..].starts_with("//") {
+                    break;
+                }
+                return Err(AsmError::new(line_no, format!("stray `/` at column {at}")));
+            }
+            c if c.is_whitespace() => {
+                chars.next();
+            }
+            ',' => { chars.next(); toks.push(Token::Comma); }
+            ':' => { chars.next(); toks.push(Token::Colon); }
+            '[' => { chars.next(); toks.push(Token::LBracket); }
+            ']' => { chars.next(); toks.push(Token::RBracket); }
+            '+' => { chars.next(); toks.push(Token::Plus); }
+            '@' => { chars.next(); toks.push(Token::At); }
+            '-' => {
+                chars.next();
+                // Negative literal (lexed as one token; `Minus` only appears
+                // in bracket offsets like `[R1-4]`).
+                if matches!(chars.peek(), Some(&(_, d)) if d.is_ascii_digit()) {
+                    let v = lex_number(line, &mut chars, line_no)?;
+                    toks.push(Token::Imm(-v));
+                } else {
+                    toks.push(Token::Minus);
+                }
+            }
+            '#' => {
+                chars.next();
+                let neg = if matches!(chars.peek(), Some(&(_, '-'))) {
+                    chars.next();
+                    true
+                } else {
+                    false
+                };
+                let v = lex_number(line, &mut chars, line_no)?;
+                toks.push(Token::Imm(if neg { -v } else { v }));
+            }
+            '.' => {
+                chars.next();
+                // Directive at line start, `.cond` suffix elsewhere.
+                let word = take_while(line, &mut chars, is_ident_char);
+                if toks.is_empty() {
+                    if word.is_empty() {
+                        return Err(AsmError::new(line_no, "empty directive"));
+                    }
+                    toks.push(Token::Directive(word));
+                } else {
+                    toks.push(Token::Dot);
+                    if !word.is_empty() {
+                        toks.push(classify_word(word));
+                    }
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let v = lex_number(line, &mut chars, line_no)?;
+                toks.push(Token::Imm(v));
+            }
+            c if is_ident_char(c) => {
+                let word = take_while(line, &mut chars, is_ident_char);
+                toks.push(classify_word(word));
+            }
+            other => {
+                return Err(AsmError::new(
+                    line_no,
+                    format!("unexpected character `{other}` at column {at}"),
+                ));
+            }
+        }
+    }
+    Ok(toks)
+}
+
+fn take_while(
+    line: &str,
+    chars: &mut std::iter::Peekable<std::str::CharIndices<'_>>,
+    pred: fn(char) -> bool,
+) -> String {
+    let start = match chars.peek() {
+        Some(&(i, _)) => i,
+        None => return String::new(),
+    };
+    let mut end = start;
+    while let Some(&(i, c)) = chars.peek() {
+        if pred(c) {
+            end = i + c.len_utf8();
+            chars.next();
+        } else {
+            break;
+        }
+    }
+    line[start..end].to_string()
+}
+
+fn lex_number(
+    line: &str,
+    chars: &mut std::iter::Peekable<std::str::CharIndices<'_>>,
+    line_no: usize,
+) -> Result<i64, AsmError> {
+    let word = take_while(line, chars, |c| c.is_ascii_alphanumeric() || c == '_');
+    let cleaned = word.replace('_', "");
+    let parsed = if let Some(hex) = cleaned.strip_prefix("0x").or(cleaned.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16)
+    } else {
+        cleaned.parse::<i64>()
+    };
+    parsed.map_err(|_| AsmError::new(line_no, format!("bad number `{word}`")))
+}
+
+/// Classify a bare identifier: register names become typed tokens.
+fn classify_word(word: String) -> Token {
+    let bytes = word.as_bytes();
+    if bytes.len() >= 2 && bytes.len() <= 3 {
+        let (kind, rest) = (bytes[0], &word[1..]);
+        if let Ok(n) = rest.parse::<u8>() {
+            match kind {
+                b'R' if n < crate::isa::NUM_REGS => return Token::Reg(n),
+                b'P' if n < crate::isa::NUM_PREGS => return Token::PReg(n),
+                b'A' if n < crate::isa::NUM_AREGS => return Token::AReg(n),
+                _ => {}
+            }
+        }
+    }
+    if word == "RZ" {
+        return Token::Reg(crate::isa::RZ);
+    }
+    Token::Ident(word)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_alu_line() {
+        let t = lex_line("  IADD R1, R2, #0x10 // add", 1).unwrap();
+        assert_eq!(
+            t,
+            vec![
+                Token::Ident("IADD".into()),
+                Token::Reg(1),
+                Token::Comma,
+                Token::Reg(2),
+                Token::Comma,
+                Token::Imm(16),
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_guard_and_mem() {
+        let t = lex_line("@P0.LT GLD R1, [R2+4]", 1).unwrap();
+        assert_eq!(
+            t,
+            vec![
+                Token::At,
+                Token::PReg(0),
+                Token::Dot,
+                Token::Ident("LT".into()),
+                Token::Ident("GLD".into()),
+                Token::Reg(1),
+                Token::Comma,
+                Token::LBracket,
+                Token::Reg(2),
+                Token::Plus,
+                Token::Imm(4),
+                Token::RBracket,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_directive_and_label() {
+        assert_eq!(
+            lex_line(".regs 12", 1).unwrap(),
+            vec![Token::Directive("regs".into()), Token::Imm(12)]
+        );
+        assert_eq!(
+            lex_line("loop:", 1).unwrap(),
+            vec![Token::Ident("loop".into()), Token::Colon]
+        );
+    }
+
+    #[test]
+    fn comments_and_blank() {
+        assert_eq!(lex_line("; nothing", 1).unwrap(), vec![]);
+        assert_eq!(lex_line("   ", 1).unwrap(), vec![]);
+        assert_eq!(lex_line("// x", 1).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn rz_and_negative_imm() {
+        assert_eq!(
+            lex_line("MOV R1, RZ", 1).unwrap(),
+            vec![
+                Token::Ident("MOV".into()),
+                Token::Reg(1),
+                Token::Comma,
+                Token::Reg(crate::isa::RZ)
+            ]
+        );
+        assert_eq!(lex_line("#-42", 1).unwrap(), vec![Token::Imm(-42)]);
+        assert_eq!(lex_line("-42", 1).unwrap(), vec![Token::Imm(-42)]);
+    }
+
+    #[test]
+    fn bad_char_reported() {
+        assert!(lex_line("IADD R1 ! R2", 3).is_err());
+    }
+}

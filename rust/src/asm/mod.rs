@@ -1,0 +1,185 @@
+//! FlexGrip-RS assembler.
+//!
+//! Translates the textual SASS-like assembly (see `docs` in README) into
+//! the binary kernel image the soft GPGPU executes — standing in for the
+//! paper's `nvcc`-to-G80-binary flow ("direct CUDA compilation ... to a
+//! binary which is executable on the FPGA-based GPGPU", §1). Like the
+//! paper's flow, assembly is fast (well under a second) and produces a
+//! binary that runs on *any* simulator configuration without rebuilding
+//! the simulator — the overlay's headline property.
+//!
+//! Two passes:
+//!  1. lex + parse each line, lay out instruction byte addresses, collect
+//!     label definitions;
+//!  2. resolve label references to byte addresses, encode.
+
+mod error;
+mod lexer;
+mod parser;
+
+pub use error::AsmError;
+pub use lexer::{lex_line, Token};
+pub(crate) use parser::parse_line;
+
+use crate::isa::{encode::encode_program, Instr};
+use std::collections::HashMap;
+
+/// An assembled kernel: the binary image plus the launch-relevant resource
+/// metadata the paper's driver passes to the block scheduler (§4.3: "The
+/// allocation of SM shared memory and the number of registers required per
+/// block are ... determined during compilation and stored in GPGPU
+/// configuration registers").
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: String,
+    /// Raw binary image (what instruction memory holds).
+    pub code: Vec<u8>,
+    /// Decoded form, kept for pre-decoded execution and analysis.
+    pub instrs: Vec<(u32, Instr)>,
+    /// General-purpose registers each thread needs.
+    pub regs_per_thread: u32,
+    /// Shared-memory bytes each *block* needs (excluding the parameter
+    /// segment, which the driver always allocates).
+    pub smem_bytes: u32,
+    /// Label name -> byte address (debugging / tests).
+    pub labels: HashMap<String, u32>,
+}
+
+/// Result of parsing one source line (internal between passes).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Line {
+    Empty,
+    Label(String),
+    Directive(Directive),
+    /// Instruction whose label operands are not yet resolved.
+    Instr(parser::PInstr),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Directive {
+    Entry(String),
+    Regs(u32),
+    Smem(u32),
+}
+
+/// Assemble a full program.
+pub fn assemble(source: &str) -> Result<Kernel, AsmError> {
+    let mut name = String::from("kernel");
+    let mut regs_per_thread = 16u32;
+    let mut smem_bytes = 0u32;
+    let mut labels: HashMap<String, u32> = HashMap::new();
+    let mut pinstrs: Vec<(usize, parser::PInstr)> = Vec::new(); // (line_no, instr)
+
+    // Pass 1: parse, lay out, collect labels.
+    let mut pc = 0u32;
+    for (ln, raw) in source.lines().enumerate() {
+        let line_no = ln + 1;
+        for item in parse_line(raw, line_no)? {
+            match item {
+                Line::Empty => {}
+                Line::Label(l) => {
+                    if labels.insert(l.clone(), pc).is_some() {
+                        return Err(AsmError::new(line_no, format!("duplicate label `{l}`")));
+                    }
+                }
+                Line::Directive(Directive::Entry(n)) => name = n,
+                Line::Directive(Directive::Regs(n)) => {
+                    if n == 0 || n > crate::isa::NUM_REGS as u32 {
+                        return Err(AsmError::new(
+                            line_no,
+                            format!(".regs {n} out of range 1..={}", crate::isa::NUM_REGS),
+                        ));
+                    }
+                    regs_per_thread = n;
+                }
+                Line::Directive(Directive::Smem(n)) => smem_bytes = n,
+                Line::Instr(pi) => {
+                    pc += pi.size() as u32;
+                    pinstrs.push((line_no, pi));
+                }
+            }
+        }
+    }
+
+    // Pass 2: resolve label operands, build final Instrs.
+    let mut instrs: Vec<Instr> = Vec::with_capacity(pinstrs.len());
+    let mut addrs: Vec<u32> = Vec::with_capacity(pinstrs.len());
+    let mut at = 0u32;
+    for (line_no, pi) in pinstrs {
+        let i = pi.resolve(&labels, line_no)?;
+        addrs.push(at);
+        at += i.size as u32;
+        instrs.push(i);
+    }
+
+    let code = encode_program(&instrs);
+    let instrs_with_pc: Vec<(u32, Instr)> =
+        addrs.into_iter().zip(instrs.into_iter()).collect();
+
+    // Sanity: the emitted image must decode back to exactly what we built.
+    debug_assert_eq!(
+        crate::isa::decode_stream(&code).expect("self-decode"),
+        instrs_with_pc
+    );
+
+    Ok(Kernel { name, code, instrs: instrs_with_pc, regs_per_thread, smem_bytes, labels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Op;
+
+    #[test]
+    fn assembles_minimal_kernel() {
+        let k = assemble(
+            r#"
+            .entry tiny
+            .regs 4
+                S2R R0, SR_TID
+                IADD R1, R0, #1
+                EXIT
+            "#,
+        )
+        .unwrap();
+        assert_eq!(k.name, "tiny");
+        assert_eq!(k.regs_per_thread, 4);
+        assert_eq!(k.instrs.len(), 3);
+        assert_eq!(k.instrs[2].1.op, Op::Exit);
+        // S2R short (4) + IADD imm (8) + EXIT short (4)
+        assert_eq!(k.code.len(), 16);
+    }
+
+    #[test]
+    fn resolves_forward_and_backward_labels() {
+        let k = assemble(
+            r#"
+            top:
+                ISETP P0, R1, #10
+                @P0.LT BRA top
+                BRA end
+                NOP
+            end:
+                EXIT
+            "#,
+        )
+        .unwrap();
+        // ISETP(8) @0, BRA(8) @8, BRA(8) @16, NOP(4) @24, EXIT @28
+        assert_eq!(k.labels["top"], 0);
+        assert_eq!(k.labels["end"], 28);
+        assert_eq!(k.instrs[1].1.branch_target(), Some(0));
+        assert_eq!(k.instrs[2].1.branch_target(), Some(28));
+    }
+
+    #[test]
+    fn duplicate_label_rejected() {
+        let e = assemble("x:\nx:\nEXIT").unwrap_err();
+        assert!(e.to_string().contains("duplicate label"));
+    }
+
+    #[test]
+    fn unknown_label_rejected() {
+        let e = assemble("BRA nowhere\nEXIT").unwrap_err();
+        assert!(e.to_string().contains("nowhere"));
+    }
+}

@@ -1,0 +1,488 @@
+//! Line parser: tokens -> unresolved instructions / labels / directives.
+
+use super::error::AsmError;
+use super::lexer::{lex_line, Token};
+use super::{Directive, Line};
+use crate::isa::{
+    encode::instr_size, Cond, Guard, Instr, Op, OpClass, Operand, SpecialReg,
+};
+use std::collections::HashMap;
+
+/// Second source operand before label resolution.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum POperand {
+    Resolved(Operand),
+    Label(String),
+}
+
+/// Parsed-but-unresolved instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct PInstr {
+    pub op: Op,
+    pub guard: Guard,
+    pub dst: u8,
+    pub src1: Operand,
+    pub src2: POperand,
+    pub src3: Operand,
+    pub setp_en: bool,
+    pub setp_idx: u8,
+    pub cond: Cond,
+    pub offset: i16,
+}
+
+impl PInstr {
+    fn new(op: Op) -> PInstr {
+        PInstr {
+            op,
+            guard: Guard::NONE,
+            dst: 0,
+            src1: Operand::None,
+            src2: POperand::Resolved(Operand::None),
+            src3: Operand::None,
+            setp_en: false,
+            setp_idx: 0,
+            cond: Cond::Always,
+            offset: 0,
+        }
+    }
+
+    /// Encoded size in bytes (labels resolve to immediates, hence 8).
+    pub fn size(&self) -> u8 {
+        let s2imm = matches!(
+            self.src2,
+            POperand::Resolved(Operand::Imm(_)) | POperand::Label(_)
+        );
+        instr_size(self.op, s2imm)
+    }
+
+    /// Resolve label operands against the symbol table and produce the
+    /// final `Instr`.
+    pub fn resolve(
+        self,
+        labels: &HashMap<String, u32>,
+        line_no: usize,
+    ) -> Result<Instr, AsmError> {
+        let src2 = match self.src2 {
+            POperand::Resolved(o) => o,
+            POperand::Label(l) => match labels.get(&l) {
+                Some(&addr) => Operand::Imm(addr as i32),
+                None => {
+                    return Err(AsmError::new(line_no, format!("unknown label `{l}`")))
+                }
+            },
+        };
+        let size = instr_size(self.op, matches!(src2, Operand::Imm(_)));
+        Ok(Instr {
+            op: self.op,
+            guard: self.guard,
+            dst: self.dst,
+            src1: self.src1,
+            src2,
+            src3: self.src3,
+            setp_en: self.setp_en,
+            setp_idx: self.setp_idx,
+            cond: self.cond,
+            offset: self.offset,
+            size,
+        })
+    }
+}
+
+struct Cursor {
+    toks: Vec<Token>,
+    at: usize,
+    line_no: usize,
+}
+
+impl Cursor {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.at)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.toks.get(self.at).cloned();
+        if t.is_some() {
+            self.at += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: impl Into<String>) -> AsmError {
+        AsmError::new(self.line_no, msg.into())
+    }
+
+    fn expect(&mut self, want: Token) -> Result<(), AsmError> {
+        match self.next() {
+            Some(t) if t == want => Ok(()),
+            other => Err(self.err(format!("expected {want:?}, found {other:?}"))),
+        }
+    }
+
+    fn comma(&mut self) -> Result<(), AsmError> {
+        self.expect(Token::Comma)
+    }
+
+    fn reg(&mut self) -> Result<u8, AsmError> {
+        match self.next() {
+            Some(Token::Reg(r)) => Ok(r),
+            other => Err(self.err(format!("expected register, found {other:?}"))),
+        }
+    }
+
+    fn preg(&mut self) -> Result<u8, AsmError> {
+        match self.next() {
+            Some(Token::PReg(p)) => Ok(p),
+            other => Err(self.err(format!("expected predicate register, found {other:?}"))),
+        }
+    }
+
+    fn areg(&mut self) -> Result<u8, AsmError> {
+        match self.next() {
+            Some(Token::AReg(a)) => Ok(a),
+            other => Err(self.err(format!("expected address register, found {other:?}"))),
+        }
+    }
+
+    fn imm32(&mut self) -> Result<i32, AsmError> {
+        match self.next() {
+            Some(Token::Imm(v)) => i32::try_from(v)
+                .map_err(|_| self.err(format!("immediate {v} out of 32-bit range"))),
+            other => Err(self.err(format!("expected immediate, found {other:?}"))),
+        }
+    }
+
+    /// Register or immediate (the flexible second source).
+    fn reg_or_imm(&mut self) -> Result<Operand, AsmError> {
+        match self.next() {
+            Some(Token::Reg(r)) => Ok(Operand::Reg(r)),
+            Some(Token::Imm(v)) => {
+                let v = i32::try_from(v)
+                    .map_err(|_| self.err(format!("immediate {v} out of 32-bit range")))?;
+                Ok(Operand::Imm(v))
+            }
+            other => Err(self.err(format!("expected register or immediate, found {other:?}"))),
+        }
+    }
+
+    fn cond_name(&mut self) -> Result<Cond, AsmError> {
+        match self.next() {
+            Some(Token::Ident(n)) => Cond::from_name(&n)
+                .ok_or_else(|| self.err(format!("unknown condition `{n}`"))),
+            other => Err(self.err(format!("expected condition, found {other:?}"))),
+        }
+    }
+
+    fn done(&mut self) -> Result<(), AsmError> {
+        match self.peek() {
+            None => Ok(()),
+            Some(t) => Err(self.err(format!("trailing tokens starting at {t:?}"))),
+        }
+    }
+}
+
+/// Parse one line. Returns zero or more items (a label and an instruction
+/// may share a line).
+pub(crate) fn parse_line(raw: &str, line_no: usize) -> Result<Vec<Line>, AsmError> {
+    let toks = lex_line(raw, line_no)?;
+    if toks.is_empty() {
+        return Ok(vec![Line::Empty]);
+    }
+    let mut cur = Cursor { toks, at: 0, line_no };
+    let mut items = Vec::new();
+
+    // Directive?
+    if let Some(Token::Directive(d)) = cur.peek().cloned() {
+        cur.next();
+        let dir = match d.as_str() {
+            "entry" => match cur.next() {
+                Some(Token::Ident(n)) => Directive::Entry(n),
+                other => return Err(cur.err(format!("expected name after .entry, found {other:?}"))),
+            },
+            "regs" => Directive::Regs(cur.imm32()? as u32),
+            "smem" => Directive::Smem(cur.imm32()? as u32),
+            other => return Err(cur.err(format!("unknown directive `.{other}`"))),
+        };
+        cur.done()?;
+        return Ok(vec![Line::Directive(dir)]);
+    }
+
+    // Label? (`ident:`)
+    if let (Some(Token::Ident(name)), Some(Token::Colon)) =
+        (cur.toks.first().cloned(), cur.toks.get(1))
+    {
+        cur.at = 2;
+        items.push(Line::Label(name));
+        if cur.peek().is_none() {
+            return Ok(items);
+        }
+    }
+
+    items.push(Line::Instr(parse_instr(&mut cur)?));
+    Ok(items)
+}
+
+fn parse_instr(cur: &mut Cursor) -> Result<PInstr, AsmError> {
+    // Optional guard `@Pn[.COND]`.
+    let mut guard = Guard::NONE;
+    if cur.peek() == Some(&Token::At) {
+        cur.next();
+        let preg = cur.preg()?;
+        let cond = if cur.peek() == Some(&Token::Dot) {
+            cur.next();
+            cur.cond_name()?
+        } else {
+            Cond::Ne // `@P0` defaults to "predicate true" (nonzero compare)
+        };
+        guard = Guard { preg, cond };
+    }
+
+    let mnemonic = match cur.next() {
+        Some(Token::Ident(m)) => m,
+        other => return Err(cur.err(format!("expected mnemonic, found {other:?}"))),
+    };
+    let op = Op::from_mnemonic(&mnemonic)
+        .ok_or_else(|| cur.err(format!("unknown mnemonic `{mnemonic}`")))?;
+
+    let mut pi = PInstr::new(op);
+    pi.guard = guard;
+
+    match op {
+        Op::Nop | Op::Exit | Op::Join | Op::Bar => {}
+        Op::Mov => {
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            match cur.reg_or_imm()? {
+                Operand::Reg(r) => pi.src1 = Operand::Reg(r),
+                imm @ Operand::Imm(_) => pi.src2 = POperand::Resolved(imm),
+                _ => unreachable!(),
+            }
+        }
+        Op::S2r => {
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            match cur.next() {
+                Some(Token::Ident(n)) => {
+                    let sr = SpecialReg::from_name(&n)
+                        .ok_or_else(|| cur.err(format!("unknown special register `{n}`")))?;
+                    pi.src1 = Operand::Special(sr);
+                }
+                other => return Err(cur.err(format!("expected special register, found {other:?}"))),
+            }
+        }
+        Op::R2a => {
+            pi.dst = cur.areg()?;
+            cur.comma()?;
+            pi.src1 = Operand::Reg(cur.reg()?);
+        }
+        Op::A2r => {
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            pi.src1 = Operand::AReg(cur.areg()?);
+        }
+        Op::Not | Op::Iabs | Op::Ineg => {
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            pi.src1 = Operand::Reg(cur.reg()?);
+        }
+        Op::Iadd | Op::Isub | Op::Imul | Op::Imin | Op::Imax | Op::And
+        | Op::Or | Op::Xor | Op::Shl | Op::Shr | Op::Sar => {
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            pi.src1 = Operand::Reg(cur.reg()?);
+            cur.comma()?;
+            pi.src2 = POperand::Resolved(cur.reg_or_imm()?);
+        }
+        Op::Imad => {
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            pi.src1 = Operand::Reg(cur.reg()?);
+            cur.comma()?;
+            pi.src2 = POperand::Resolved(Operand::Reg(cur.reg()?));
+            cur.comma()?;
+            pi.src3 = Operand::Reg(cur.reg()?);
+        }
+        Op::Isetp => {
+            pi.setp_en = true;
+            pi.setp_idx = cur.preg()?;
+            cur.comma()?;
+            pi.src1 = Operand::Reg(cur.reg()?);
+            cur.comma()?;
+            pi.src2 = POperand::Resolved(cur.reg_or_imm()?);
+        }
+        Op::Iset => {
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            pi.src1 = Operand::Reg(cur.reg()?);
+            cur.comma()?;
+            pi.src2 = POperand::Resolved(cur.reg_or_imm()?);
+            cur.comma()?;
+            pi.cond = cur.cond_name()?;
+        }
+        Op::Sel => {
+            // SEL Rd, Ra, Rb|imm, Pn.COND
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            pi.src1 = Operand::Reg(cur.reg()?);
+            cur.comma()?;
+            pi.src2 = POperand::Resolved(cur.reg_or_imm()?);
+            cur.comma()?;
+            pi.setp_idx = cur.preg()?;
+            cur.expect(Token::Dot)?;
+            pi.cond = cur.cond_name()?;
+        }
+        Op::Bra | Op::Ssy => {
+            match cur.next() {
+                Some(Token::Ident(l)) => pi.src2 = POperand::Label(l),
+                Some(Token::Imm(v)) => {
+                    let v = i32::try_from(v)
+                        .map_err(|_| cur.err("branch target out of range"))?;
+                    pi.src2 = POperand::Resolved(Operand::Imm(v));
+                }
+                other => {
+                    return Err(cur.err(format!("expected label or address, found {other:?}")))
+                }
+            }
+        }
+        Op::Gld | Op::Sld => {
+            pi.dst = cur.reg()?;
+            cur.comma()?;
+            let (base, off) = parse_addr(cur)?;
+            pi.src1 = base;
+            pi.offset = off;
+        }
+        Op::Gst | Op::Sst => {
+            let (base, off) = parse_addr(cur)?;
+            cur.comma()?;
+            pi.src1 = base;
+            pi.offset = off;
+            pi.src2 = POperand::Resolved(Operand::Reg(cur.reg()?));
+        }
+    }
+
+    debug_assert_eq!(
+        pi.op.class(),
+        op.class(),
+        "parser must not change op class"
+    );
+    let _ = OpClass::Control; // (class used in debug assert only)
+    cur.done()?;
+    Ok(pi)
+}
+
+/// `[Rn]`, `[Rn+imm]`, `[Rn-imm]`, `[An+imm]`, or `[imm]` (absolute, RZ base).
+fn parse_addr(cur: &mut Cursor) -> Result<(Operand, i16), AsmError> {
+    cur.expect(Token::LBracket)?;
+    let base = match cur.next() {
+        Some(Token::Reg(r)) => Operand::Reg(r),
+        Some(Token::AReg(a)) => Operand::AReg(a),
+        Some(Token::Imm(v)) => {
+            // absolute address: RZ base + offset
+            let off = i16::try_from(v)
+                .map_err(|_| cur.err(format!("address offset {v} out of i16 range")))?;
+            cur.expect(Token::RBracket)?;
+            return Ok((Operand::Reg(crate::isa::RZ), off));
+        }
+        other => return Err(cur.err(format!("expected base register, found {other:?}"))),
+    };
+    let mut off: i16 = 0;
+    match cur.next() {
+        Some(Token::RBracket) => {}
+        Some(Token::Plus) => {
+            let v = cur.imm32()?;
+            off = i16::try_from(v)
+                .map_err(|_| cur.err(format!("address offset {v} out of i16 range")))?;
+            cur.expect(Token::RBracket)?;
+        }
+        Some(Token::Imm(v)) if v < 0 => {
+            off = i16::try_from(v)
+                .map_err(|_| cur.err(format!("address offset {v} out of i16 range")))?;
+            cur.expect(Token::RBracket)?;
+        }
+        Some(Token::Minus) => {
+            let v = cur.imm32()?;
+            off = i16::try_from(-v)
+                .map_err(|_| cur.err(format!("address offset -{v} out of i16 range")))?;
+            cur.expect(Token::RBracket)?;
+        }
+        other => return Err(cur.err(format!("bad address syntax at {other:?}"))),
+    }
+    Ok((base, off))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_instr(src: &str) -> PInstr {
+        match parse_line(src, 1).unwrap().pop().unwrap() {
+            Line::Instr(i) => i,
+            other => panic!("expected instr, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_imad() {
+        let i = one_instr("IMAD R4, R1, R2, R4");
+        assert_eq!(i.op, Op::Imad);
+        assert_eq!(i.dst, 4);
+        assert_eq!(i.src3, Operand::Reg(4));
+        assert_eq!(i.size(), 8);
+    }
+
+    #[test]
+    fn parses_guarded_branch_with_label() {
+        let i = one_instr("@P1.GE BRA done");
+        assert_eq!(i.guard, Guard { preg: 1, cond: Cond::Ge });
+        assert_eq!(i.src2, POperand::Label("done".into()));
+    }
+
+    #[test]
+    fn bare_guard_defaults_to_ne() {
+        let i = one_instr("@P0 IADD R1, R1, #1");
+        assert_eq!(i.guard.cond, Cond::Ne);
+    }
+
+    #[test]
+    fn parses_store_with_negative_offset() {
+        let i = one_instr("GST [R2-8], R3");
+        assert_eq!(i.offset, -8);
+        assert_eq!(i.src1, Operand::Reg(2));
+        assert_eq!(i.src2, POperand::Resolved(Operand::Reg(3)));
+    }
+
+    #[test]
+    fn parses_areg_base_and_absolute() {
+        let i = one_instr("SLD R1, [A2+16]");
+        assert_eq!(i.src1, Operand::AReg(2));
+        assert_eq!(i.offset, 16);
+        let i = one_instr("SLD R1, [8]");
+        assert_eq!(i.src1, Operand::Reg(crate::isa::RZ));
+        assert_eq!(i.offset, 8);
+    }
+
+    #[test]
+    fn parses_sel_with_predicate() {
+        let i = one_instr("SEL R1, R2, R3, P2.LT");
+        assert_eq!(i.setp_idx, 2);
+        assert_eq!(i.cond, Cond::Lt);
+    }
+
+    #[test]
+    fn label_plus_instr_on_one_line() {
+        let items = parse_line("loop: IADD R1, R1, #1", 1).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0], Line::Label("loop".into()));
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic_and_trailing() {
+        assert!(parse_line("FMUL R1, R2, R3", 1).is_err());
+        assert!(parse_line("EXIT R1", 1).is_err());
+    }
+
+    #[test]
+    fn mov_imm_is_long_mov_reg_is_short() {
+        assert_eq!(one_instr("MOV R1, #7").size(), 8);
+        assert_eq!(one_instr("MOV R1, R2").size(), 4);
+    }
+}

@@ -1,0 +1,110 @@
+//! The MicroBlaze-class scalar soft-core baseline (paper §5.1: "a Xilinx
+//! MicroBlaze soft-core processor with 3,252 LUTs running at 100 MHz using
+//! C versions of the same benchmarks").
+//!
+//! We model an in-order single-issue core executing from board DDR with
+//! no caches — the configuration the paper's absolute numbers imply (its
+//! matmul-256 takes 186 s at 100 MHz, i.e. ~1.1 kcycles per inner-loop
+//! iteration, which only an uncached-instruction-fetch MicroBlaze
+//! exhibits; see DESIGN.md). Every instruction pays an instruction-fetch
+//! latency from DDR; loads/stores pay a data latency on top.
+
+pub mod programs;
+pub mod vm;
+
+pub use programs::build_program;
+pub use vm::{MbBuilder, MbError, MbOp, MbProgram, MbStats, MbTiming, MicroBlaze, Reg};
+
+use crate::kernels::{golden, BenchId, IN_BASE};
+use crate::rng::XorShift64;
+
+/// Run benchmark `id` at problem size `n` on the scalar baseline and
+/// verify its output against the golden reference. Returns cycle stats.
+pub fn run_verified(id: BenchId, n: u32, seed: u64, timing: MbTiming) -> Result<MbStats, MbError> {
+    assert!(
+        n.is_power_of_two() && (32..=256).contains(&n),
+        "problem size must be a power of two in 32..=256 (got {n})"
+    );
+    let mut rng = XorShift64::new(seed ^ (id as u64) << 32);
+    let input: Vec<i32> = (0..id.input_elems(n)).map(|_| rng.small_i32()).collect();
+
+    let prog = build_program(id, n);
+    let mem_bytes = (IN_BASE + 4 * (id.input_elems(n) as u32 + (n * n).max(n) + 64))
+        .next_power_of_two();
+    let mut mb = MicroBlaze::new(mem_bytes, timing);
+    mb.write_words(IN_BASE, &input);
+    let stats = mb.run(&prog)?;
+
+    // Verify against the same golden references the GPGPU uses.
+    let nn = n as usize;
+    let b = |v: u32| IN_BASE + 4 * v;
+    let ok = match id {
+        BenchId::Autocorr => mb.read_words(b(n), nn) == golden::autocorr(&input),
+        BenchId::Bitonic => {
+            let seg = n.min(64) as usize;
+            mb.read_words(IN_BASE, nn) == golden::bitonic_segments(&input, seg)
+        }
+        BenchId::MatMul => {
+            mb.read_words(b(2 * n * n), nn * nn)
+                == golden::matmul(&input[..nn * nn], &input[nn * nn..], nn)
+        }
+        BenchId::Reduction => mb.read_words(b(n), 1) == vec![golden::reduction(&input)],
+        BenchId::Transpose => {
+            mb.read_words(b(n * n), nn * nn) == golden::transpose(&input, nn)
+        }
+        BenchId::VecAdd => {
+            mb.read_words(b(2 * n), nn) == golden::vecadd(&input[..nn], &input[nn..])
+        }
+    };
+    if !ok {
+        return Err(MbError::WrongResult(id.name()));
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_benchmarks_verify_on_baseline() {
+        for id in BenchId::ALL {
+            for n in [32u32, 64] {
+                let s = run_verified(id, n, 0xF00D, MbTiming::default())
+                    .unwrap_or_else(|e| panic!("{} n={n}: {e}", id.name()));
+                assert!(s.cycles > 0, "{} n={n}", id.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cycles_grow_with_problem_size() {
+        for id in BenchId::PAPER {
+            let a = run_verified(id, 32, 1, MbTiming::default()).unwrap();
+            let b = run_verified(id, 64, 1, MbTiming::default()).unwrap();
+            assert!(b.cycles > a.cycles, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn matmul_scales_cubically() {
+        let a = run_verified(BenchId::MatMul, 32, 1, MbTiming::default()).unwrap();
+        let b = run_verified(BenchId::MatMul, 64, 1, MbTiming::default()).unwrap();
+        let ratio = b.cycles as f64 / a.cycles as f64;
+        assert!((6.0..10.0).contains(&ratio), "expected ~8x, got {ratio}");
+    }
+
+    #[test]
+    fn faster_timing_fewer_cycles() {
+        let slow = run_verified(BenchId::VecAdd, 64, 1, MbTiming::default()).unwrap();
+        let fast = run_verified(
+            BenchId::VecAdd,
+            64,
+            1,
+            MbTiming { ifetch: 1, ..MbTiming::default() },
+        )
+        .unwrap();
+        // vecadd is memory-heavy, so cutting ifetch 35 -> 1 gives ~3.3x.
+        assert!(fast.cycles < slow.cycles / 3);
+    }
+}

@@ -1,0 +1,247 @@
+//! C-equivalent scalar programs for the paper's benchmarks, built with
+//! `MbBuilder` — these are what `gcc -O2` would emit for the C versions
+//! the paper ran on the MicroBlaze (§5.1), structured loop-for-loop.
+//!
+//! Memory layout matches the GPGPU workloads (`kernels::prepare`):
+//! inputs at `IN_BASE`, outputs following, so both machines are verified
+//! against the same golden references.
+
+use super::vm::{MbBuilder, MbOp, MbProgram};
+use crate::kernels::{BenchId, IN_BASE};
+
+const IB: i32 = IN_BASE as i32;
+
+/// Build the scalar program for `id` at problem size `n`.
+pub fn build_program(id: BenchId, n: u32) -> MbProgram {
+    match id {
+        BenchId::VecAdd => vecadd(n),
+        BenchId::Autocorr => autocorr(n),
+        BenchId::Bitonic => bitonic(n),
+        BenchId::MatMul => matmul(n),
+        BenchId::Reduction => reduction(n),
+        BenchId::Transpose => transpose(n),
+    }
+}
+
+/// out[i] = a[i] + b[i]
+fn vecadd(n: u32) -> MbProgram {
+    let n = n as i32;
+    let mut b = MbBuilder::new();
+    let top = b.label();
+    b.push(MbOp::Li(10, IB)); // a
+    b.push(MbOp::Li(11, IB + 4 * n)); // b
+    b.push(MbOp::Li(12, IB + 8 * n)); // out
+    b.push(MbOp::Li(1, 0)); // i
+    b.push(MbOp::Li(2, n));
+    b.bind(top);
+    b.push(MbOp::Slli(3, 1, 2));
+    b.push(MbOp::Lw(4, 10, 3));
+    b.push(MbOp::Lw(5, 11, 3));
+    b.push(MbOp::Add(6, 4, 5));
+    b.push(MbOp::Sw(6, 12, 3));
+    b.push(MbOp::Addi(1, 1, 1));
+    b.branch(MbOp::Blt(1, 2, 0), top);
+    b.push(MbOp::Halt);
+    b.build()
+}
+
+/// r[k] = sum_{i=0}^{n-1-k} x[i]*x[i+k]
+fn autocorr(n: u32) -> MbProgram {
+    let n = n as i32;
+    let mut b = MbBuilder::new();
+    let lk = b.label();
+    let li = b.label();
+    let istore = b.label();
+    b.push(MbOp::Li(10, IB)); // x
+    b.push(MbOp::Li(11, IB + 4 * n)); // r
+    b.push(MbOp::Li(4, n));
+    b.push(MbOp::Li(1, 0)); // k
+    b.bind(lk);
+    b.push(MbOp::Li(3, 0)); // acc
+    b.push(MbOp::Li(2, 0)); // i
+    b.push(MbOp::Sub(5, 4, 1)); // trips = n - k
+    b.branch(MbOp::Ble(5, 0, 0), istore);
+    b.bind(li);
+    b.push(MbOp::Slli(6, 2, 2));
+    b.push(MbOp::Lw(7, 10, 6)); // x[i]
+    b.push(MbOp::Add(6, 2, 1));
+    b.push(MbOp::Slli(6, 6, 2));
+    b.push(MbOp::Lw(8, 10, 6)); // x[i+k]
+    b.push(MbOp::Mul(7, 7, 8));
+    b.push(MbOp::Add(3, 3, 7));
+    b.push(MbOp::Addi(2, 2, 1));
+    b.branch(MbOp::Blt(2, 5, 0), li);
+    b.bind(istore);
+    b.push(MbOp::Slli(6, 1, 2));
+    b.push(MbOp::Sw(3, 11, 6)); // r[k] = acc
+    b.push(MbOp::Addi(1, 1, 1));
+    b.branch(MbOp::Blt(1, 4, 0), lk);
+    b.push(MbOp::Halt);
+    b.build()
+}
+
+/// Segmented in-place bitonic sort, ascending per segment — the same
+/// contract as the GPGPU kernel.
+fn bitonic(n: u32) -> MbProgram {
+    let seg = n.min(64) as i32;
+    let n = n as i32;
+    let mut b = MbBuilder::new();
+    let lsb = b.label(); // segment loop
+    let lk = b.label();
+    let lj = b.label();
+    let lt = b.label();
+    let ldesc = b.label();
+    let ldoswap = b.label();
+    let lskip = b.label();
+    b.push(MbOp::Li(10, IB)); // data
+    b.push(MbOp::Li(11, seg));
+    b.push(MbOp::Li(12, n));
+    b.push(MbOp::Li(1, 0)); // sb (segment base element)
+    b.bind(lsb);
+    b.push(MbOp::Li(2, 2)); // k
+    b.bind(lk);
+    b.push(MbOp::Srli(3, 2, 1)); // j = k/2
+    b.bind(lj);
+    b.push(MbOp::Li(4, 0)); // t
+    b.bind(lt);
+    b.push(MbOp::Xor(5, 4, 3)); // partner
+    b.branch(MbOp::Ble(5, 4, 0), lskip);
+    b.push(MbOp::Add(8, 1, 4));
+    b.push(MbOp::Slli(8, 8, 2));
+    b.push(MbOp::Add(13, 8, 10)); // &data[sb+t]
+    b.push(MbOp::Lwi(6, 13, 0));
+    b.push(MbOp::Add(8, 1, 5));
+    b.push(MbOp::Slli(8, 8, 2));
+    b.push(MbOp::Add(14, 8, 10)); // &data[sb+p]
+    b.push(MbOp::Lwi(7, 14, 0));
+    b.push(MbOp::And(8, 4, 2)); // direction
+    b.branch(MbOp::Bne(8, 0, 0), ldesc);
+    b.branch(MbOp::Ble(6, 7, 0), lskip); // ascending, already ordered
+    b.branch(MbOp::Br(0), ldoswap);
+    b.bind(ldesc);
+    b.branch(MbOp::Bge(6, 7, 0), lskip); // descending, already ordered
+    b.bind(ldoswap);
+    b.push(MbOp::Swi(7, 13, 0));
+    b.push(MbOp::Swi(6, 14, 0));
+    b.bind(lskip);
+    b.push(MbOp::Addi(4, 4, 1));
+    b.branch(MbOp::Blt(4, 11, 0), lt);
+    b.push(MbOp::Srli(3, 3, 1));
+    b.branch(MbOp::Bgt(3, 0, 0), lj);
+    b.push(MbOp::Slli(2, 2, 1));
+    b.branch(MbOp::Ble(2, 11, 0), lk);
+    b.push(MbOp::Addi(1, 1, seg));
+    b.branch(MbOp::Blt(1, 12, 0), lsb);
+    b.push(MbOp::Halt);
+    b.build()
+}
+
+/// C[i][j] = sum_k A[i][k]*B[k][j]
+fn matmul(n: u32) -> MbProgram {
+    let n = n as i32;
+    let mut b = MbBuilder::new();
+    let li = b.label();
+    let lj = b.label();
+    let lk = b.label();
+    b.push(MbOp::Li(10, IB)); // A
+    b.push(MbOp::Li(11, IB + 4 * n * n)); // B
+    b.push(MbOp::Li(12, IB + 8 * n * n)); // C
+    b.push(MbOp::Li(4, n));
+    b.push(MbOp::Li(1, 0)); // i
+    b.bind(li);
+    b.push(MbOp::Mul(5, 1, 4)); // i*n
+    b.push(MbOp::Li(2, 0)); // j
+    b.bind(lj);
+    b.push(MbOp::Li(3, 0)); // acc
+    b.push(MbOp::Li(6, 0)); // k
+    b.bind(lk);
+    b.push(MbOp::Add(7, 5, 6)); // i*n + k
+    b.push(MbOp::Slli(7, 7, 2));
+    b.push(MbOp::Lw(8, 10, 7)); // A[i][k]
+    b.push(MbOp::Mul(9, 6, 4)); // k*n
+    b.push(MbOp::Add(9, 9, 2));
+    b.push(MbOp::Slli(9, 9, 2));
+    b.push(MbOp::Lw(13, 11, 9)); // B[k][j]
+    b.push(MbOp::Mul(8, 8, 13));
+    b.push(MbOp::Add(3, 3, 8));
+    b.push(MbOp::Addi(6, 6, 1));
+    b.branch(MbOp::Blt(6, 4, 0), lk);
+    b.push(MbOp::Add(7, 5, 2));
+    b.push(MbOp::Slli(7, 7, 2));
+    b.push(MbOp::Sw(3, 12, 7)); // C[i][j]
+    b.push(MbOp::Addi(2, 2, 1));
+    b.branch(MbOp::Blt(2, 4, 0), lj);
+    b.push(MbOp::Addi(1, 1, 1));
+    b.branch(MbOp::Blt(1, 4, 0), li);
+    b.push(MbOp::Halt);
+    b.build()
+}
+
+/// out = sum(x)
+fn reduction(n: u32) -> MbProgram {
+    let n = n as i32;
+    let mut b = MbBuilder::new();
+    let top = b.label();
+    b.push(MbOp::Li(10, IB));
+    b.push(MbOp::Li(4, n));
+    b.push(MbOp::Li(1, 0)); // i
+    b.push(MbOp::Li(3, 0)); // acc
+    b.bind(top);
+    b.push(MbOp::Slli(6, 1, 2));
+    b.push(MbOp::Lw(7, 10, 6));
+    b.push(MbOp::Add(3, 3, 7));
+    b.push(MbOp::Addi(1, 1, 1));
+    b.branch(MbOp::Blt(1, 4, 0), top);
+    b.push(MbOp::Swi(3, 10, 4 * n)); // out at IN + 4n
+    b.push(MbOp::Halt);
+    b.build()
+}
+
+/// B[j][i] = A[i][j]
+fn transpose(n: u32) -> MbProgram {
+    let n = n as i32;
+    let mut b = MbBuilder::new();
+    let li = b.label();
+    let lj = b.label();
+    b.push(MbOp::Li(10, IB)); // A
+    b.push(MbOp::Li(11, IB + 4 * n * n)); // B
+    b.push(MbOp::Li(4, n));
+    b.push(MbOp::Li(1, 0)); // i
+    b.bind(li);
+    b.push(MbOp::Mul(5, 1, 4)); // i*n
+    b.push(MbOp::Li(2, 0)); // j
+    b.bind(lj);
+    b.push(MbOp::Add(7, 5, 2)); // i*n + j
+    b.push(MbOp::Slli(7, 7, 2));
+    b.push(MbOp::Lw(8, 10, 7));
+    b.push(MbOp::Mul(9, 2, 4)); // j*n
+    b.push(MbOp::Add(9, 9, 1));
+    b.push(MbOp::Slli(9, 9, 2));
+    b.push(MbOp::Sw(8, 11, 9));
+    b.push(MbOp::Addi(2, 2, 1));
+    b.branch(MbOp::Blt(2, 4, 0), lj);
+    b.push(MbOp::Addi(1, 1, 1));
+    b.branch(MbOp::Blt(1, 4, 0), li);
+    b.push(MbOp::Halt);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_programs_build() {
+        for id in BenchId::ALL {
+            for n in [32u32, 64, 128, 256] {
+                let p = build_program(id, n);
+                assert!(!p.ops.is_empty(), "{} n={n}", id.name());
+                assert!(
+                    matches!(p.ops.last(), Some(MbOp::Halt)),
+                    "{} must end in Halt",
+                    id.name()
+                );
+            }
+        }
+    }
+}

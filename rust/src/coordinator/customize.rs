@@ -1,0 +1,169 @@
+//! Application-class customization analyzer (paper §4.2, §5.2).
+//!
+//! "By performing an instruction analysis, we can determine the minimal
+//! set of functions needed to support each benchmark" — this module does
+//! both halves: *static* analysis of the kernel binary (does it encode
+//! IMUL/IMAD at all?) and *dynamic* profiling ("profiling the application
+//! with representative data sets", §4.1) to find the warp-stack
+//! high-water mark. It then recommends the minimal FlexGrip variant and
+//! quantifies the Table-6 area/energy savings with the implementation
+//! models.
+
+use crate::asm::Kernel;
+use crate::gpgpu::{Gpgpu, GpgpuConfig};
+use crate::kernels::{self, BenchId};
+use crate::model::{area::area, power::power, ArchParams};
+use crate::sim::{NativeAlu, SimError};
+
+/// Static instruction analysis of an assembled kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StaticAnalysis {
+    /// Kernel encodes IMUL or IMAD -> multiplier required.
+    pub uses_multiplier: bool,
+    /// Kernel encodes IMAD -> third read operand required.
+    pub uses_third_operand: bool,
+    /// Kernel encodes SSY/BRA -> conditional hardware required at all.
+    pub uses_branches: bool,
+    pub instruction_count: usize,
+}
+
+pub fn analyze_kernel(k: &Kernel) -> StaticAnalysis {
+    use crate::isa::Op;
+    let mut a = StaticAnalysis {
+        uses_multiplier: false,
+        uses_third_operand: false,
+        uses_branches: false,
+        instruction_count: k.instrs.len(),
+    };
+    for (_, i) in &k.instrs {
+        a.uses_multiplier |= i.op.uses_multiplier();
+        a.uses_third_operand |= i.op == Op::Imad;
+        a.uses_branches |= matches!(i.op, Op::Bra | Op::Ssy);
+    }
+    a
+}
+
+/// A customization recommendation with its modelled savings.
+#[derive(Debug, Clone)]
+pub struct CustomizationReport {
+    pub bench: BenchId,
+    pub n: u32,
+    pub analysis: StaticAnalysis,
+    /// Warp-stack high-water mark measured by the profiling run.
+    pub measured_stack_depth: u32,
+    /// Dynamic IMUL/IMAD count from the profiling run.
+    pub multiplier_ops: u64,
+    pub recommended: ArchParams,
+    pub lut_reduction_pct: f64,
+    pub dynamic_power_reduction_pct: f64,
+}
+
+/// Profile `bench` at size `n` on the baseline 1 SM / 8 SP FlexGrip and
+/// derive the minimal configuration (paper §5.2 methodology).
+pub fn profile(bench: BenchId, n: u32, seed: u64) -> Result<CustomizationReport, SimError> {
+    let workload = kernels::prepare(bench, n, seed);
+    let analysis = analyze_kernel(&workload.kernel);
+
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
+    let mut alu = NativeAlu;
+    let mut gmem = workload.make_gmem();
+    let run = workload.run(&gpgpu, &mut gmem, &mut alu)?;
+    if let Err(e) = workload.verify(&gmem) {
+        return Err(SimError::LimitExceeded(format!("profiling run invalid: {e}")));
+    }
+
+    let needs_mul = analysis.uses_multiplier && run.stats.multiplier_ops() > 0;
+    let recommended = ArchParams {
+        num_sms: 1,
+        num_sp: 8,
+        warp_stack_depth: run.stats.max_stack_depth,
+        has_multiplier: needs_mul,
+    };
+    let base = ArchParams::baseline();
+    let lut_red = area(&recommended).lut_reduction_pct(&area(&base));
+    let dyn_red =
+        100.0 * (1.0 - power(&recommended).dynamic_w / power(&base).dynamic_w);
+    Ok(CustomizationReport {
+        bench,
+        n,
+        analysis,
+        measured_stack_depth: run.stats.max_stack_depth,
+        multiplier_ops: run.stats.multiplier_ops(),
+        recommended,
+        lut_reduction_pct: lut_red,
+        dynamic_power_reduction_pct: dyn_red,
+    })
+}
+
+/// Re-run the benchmark on the *recommended* configuration to prove the
+/// customized hardware still executes it (the paper's embedded-bitstream
+/// scenario: the right variant must be functionally sufficient).
+pub fn validate(report: &CustomizationReport, seed: u64) -> Result<(), SimError> {
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.warp_stack_depth = report.recommended.warp_stack_depth;
+    cfg.sm.has_multiplier = report.recommended.has_multiplier;
+    if !report.recommended.has_multiplier {
+        cfg.sm.read_operands = 2;
+    }
+    let gpgpu = Gpgpu::new(cfg);
+    let mut alu = NativeAlu;
+    kernels::run_verified(report.bench, report.n, &gpgpu, &mut alu, seed)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitonic_gets_multiplier_free_shallow_stack() {
+        let r = profile(BenchId::Bitonic, 64, 7).unwrap();
+        assert!(!r.recommended.has_multiplier, "bitonic needs no multiplier");
+        assert_eq!(r.recommended.warp_stack_depth, 2, "Table 6");
+        assert!(r.lut_reduction_pct > 50.0, "paper: 62%");
+        validate(&r, 7).unwrap();
+    }
+
+    #[test]
+    fn matmul_keeps_multiplier_drops_stack() {
+        let r = profile(BenchId::MatMul, 32, 7).unwrap();
+        assert!(r.recommended.has_multiplier);
+        assert_eq!(r.recommended.warp_stack_depth, 0, "uniform loops only");
+        validate(&r, 7).unwrap();
+    }
+
+    #[test]
+    fn autocorr_needs_deep_stack() {
+        let r = profile(BenchId::Autocorr, 64, 7).unwrap();
+        assert_eq!(r.recommended.warp_stack_depth, 16, "Table 6");
+        assert!(r.recommended.has_multiplier);
+        validate(&r, 7).unwrap();
+    }
+
+    #[test]
+    fn static_analysis_spots_branches_and_mads() {
+        let w = kernels::prepare(BenchId::MatMul, 32, 0);
+        let a = analyze_kernel(&w.kernel);
+        assert!(a.uses_multiplier && a.uses_third_operand && a.uses_branches);
+        let w = kernels::prepare(BenchId::VecAdd, 32, 0);
+        let a = analyze_kernel(&w.kernel);
+        assert!(!a.uses_branches, "vecadd is straight-line");
+    }
+
+    #[test]
+    fn recommended_config_fails_wrong_application() {
+        // The bitonic-customized (multiplier-less) FlexGrip must REJECT
+        // matmul — exactly why the paper stores several bitstreams.
+        let r = profile(BenchId::Bitonic, 64, 7).unwrap();
+        let mut cfg = GpgpuConfig::new(1, 8);
+        cfg.sm.warp_stack_depth = r.recommended.warp_stack_depth;
+        cfg.sm.has_multiplier = false;
+        cfg.sm.read_operands = 2;
+        let gpgpu = Gpgpu::new(cfg);
+        let mut alu = NativeAlu;
+        let w = kernels::prepare(BenchId::MatMul, 32, 7);
+        let mut gmem = w.make_gmem();
+        let err = w.run(&gpgpu, &mut gmem, &mut alu).unwrap_err();
+        assert!(matches!(err, SimError::NoMultiplier { .. }));
+    }
+}

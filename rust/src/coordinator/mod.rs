@@ -1,0 +1,195 @@
+//! The coordinator: the paper's "MicroBlaze driver" role (§3.1) as a
+//! long-lived service — it owns the soft GPGPU, accepts kernel-launch
+//! requests over a channel, DMAs data in and out of device memory, and
+//! reports per-job and aggregate metrics.
+//!
+//! tokio is unavailable in this offline image (DESIGN.md §substitutions),
+//! so the service uses a dedicated worker thread + std::sync::mpsc; the
+//! API shape (submit -> ticket -> await) is what an async driver would
+//! expose.
+
+pub mod customize;
+
+pub use customize::{analyze_kernel, profile, CustomizationReport, StaticAnalysis};
+
+use crate::asm::Kernel;
+use crate::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use crate::kernels::{self, BenchId};
+use crate::sim::{GlobalMem, NativeAlu, SmStats};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+/// A kernel-launch request.
+pub enum Request {
+    /// Run a prepared paper benchmark (data generation + verification
+    /// handled by the service).
+    Bench { id: BenchId, n: u32, seed: u64 },
+    /// Launch an arbitrary assembled kernel: the driver writes `inputs`
+    /// into device memory, launches, and reads `read_back` words out.
+    Kernel {
+        kernel: Box<Kernel>,
+        launch: LaunchConfig,
+        params: Vec<i32>,
+        gmem_bytes: u32,
+        inputs: Vec<(u32, Vec<i32>)>,
+        read_back: (u32, usize),
+    },
+}
+
+/// What a completed job returns.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    pub label: String,
+    pub cycles: u64,
+    pub exec_time_ms: f64,
+    pub stats: SmStats,
+    /// For `Request::Kernel`: the words read back from device memory.
+    pub data: Vec<i32>,
+    /// For `Request::Bench`: golden verification outcome.
+    pub verified: bool,
+}
+
+/// Handle to an in-flight job.
+pub struct JobTicket {
+    rx: mpsc::Receiver<Result<JobOutput, String>>,
+}
+
+impl JobTicket {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobOutput, String> {
+        self.rx.recv().map_err(|_| "coordinator shut down".to_string())?
+    }
+}
+
+/// Aggregate service counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub total_cycles: AtomicU64,
+    pub total_instructions: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub total_cycles: u64,
+    pub total_instructions: u64,
+}
+
+/// The GPGPU service: one worker thread owning the device.
+pub struct GpgpuService {
+    tx: Option<mpsc::Sender<(Request, mpsc::Sender<Result<JobOutput, String>>)>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    pub cfg: GpgpuConfig,
+}
+
+impl GpgpuService {
+    pub fn start(cfg: GpgpuConfig) -> GpgpuService {
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        let (tx, rx) =
+            mpsc::channel::<(Request, mpsc::Sender<Result<JobOutput, String>>)>();
+        let worker = std::thread::spawn(move || {
+            let gpgpu = Gpgpu::new(cfg);
+            let mut alu = NativeAlu;
+            while let Ok((req, reply)) = rx.recv() {
+                let result = Self::run_one(&gpgpu, &mut alu, req);
+                match &result {
+                    Ok(out) => {
+                        m.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                        m.total_cycles.fetch_add(out.cycles, Ordering::Relaxed);
+                        m.total_instructions
+                            .fetch_add(out.stats.instructions, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        m.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let _ = reply.send(result);
+            }
+        });
+        GpgpuService { tx: Some(tx), worker: Some(worker), metrics, cfg }
+    }
+
+    fn run_one(
+        gpgpu: &Gpgpu,
+        alu: &mut NativeAlu,
+        req: Request,
+    ) -> Result<JobOutput, String> {
+        match req {
+            Request::Bench { id, n, seed } => {
+                let w = kernels::prepare(id, n, seed);
+                let mut gmem = w.make_gmem();
+                let run = w.run(gpgpu, &mut gmem, alu).map_err(|e| e.to_string())?;
+                let verified = w.verify(&gmem).map(|_| true).map_err(|e| e)?;
+                Ok(JobOutput {
+                    label: format!("{} n={n}", id.name()),
+                    cycles: run.cycles,
+                    exec_time_ms: run.exec_time_ms(),
+                    stats: run.stats,
+                    data: Vec::new(),
+                    verified,
+                })
+            }
+            Request::Kernel {
+                kernel,
+                launch,
+                params,
+                gmem_bytes,
+                inputs,
+                read_back,
+            } => {
+                let mut gmem = GlobalMem::new(gmem_bytes);
+                for (addr, words) in &inputs {
+                    gmem.write_words(*addr, words).map_err(|e| e.to_string())?;
+                }
+                let r = gpgpu
+                    .launch(&kernel, launch, &params, &mut gmem, alu)
+                    .map_err(|e| e.to_string())?;
+                let data =
+                    gmem.read_words(read_back.0, read_back.1).map_err(|e| e.to_string())?;
+                Ok(JobOutput {
+                    label: kernel.name.clone(),
+                    cycles: r.total.cycles,
+                    exec_time_ms: r.exec_time_ms(),
+                    stats: r.total,
+                    data,
+                    verified: true,
+                })
+            }
+        }
+    }
+
+    /// Queue a job; returns immediately with a ticket.
+    pub fn submit(&self, req: Request) -> JobTicket {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send((req, reply_tx))
+            .expect("worker alive");
+        JobTicket { rx: reply_rx }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_completed: self.metrics.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.metrics.jobs_failed.load(Ordering::Relaxed),
+            total_cycles: self.metrics.total_cycles.load(Ordering::Relaxed),
+            total_instructions: self.metrics.total_instructions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for GpgpuService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}

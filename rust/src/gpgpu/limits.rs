@@ -1,0 +1,129 @@
+//! FlexGrip physical limits — paper **Table 1**, verbatim:
+//!
+//! | Parameter                                | Constraint |
+//! |------------------------------------------|-----------|
+//! | Threads per warp                         | 32        |
+//! | Warps per SM                             | 24        |
+//! | Threads per SM                           | 768       |
+//! | Thread blocks per SM                     | 8         |
+//! | Total 32-bit registers per SM            | 8,192     |
+//! | Shared memory per SM (bytes)             | 16,384    |
+//!
+//! The block scheduler computes, at the start of kernel execution, "the
+//! maximum number of thread blocks that can be scheduled ... limited by
+//! the number of allocated warps per SM, the number of registers per SM,
+//! and the size of the shared memory per SM" (paper §4.3).
+
+use crate::sim::{SimError, PARAM_SEG_BYTES};
+
+pub const THREADS_PER_WARP: u32 = 32;
+pub const WARPS_PER_SM: u32 = 24;
+pub const THREADS_PER_SM: u32 = 768;
+pub const BLOCKS_PER_SM: u32 = 8;
+pub const REGS_PER_SM: u32 = 8192;
+pub const SMEM_PER_SM_BYTES: u32 = 16384;
+/// Paper §4.3: "A thread block of up to 256 threads can be assigned to any
+/// available SM".
+pub const MAX_BLOCK_THREADS: u32 = 256;
+
+/// Per-kernel resource requirements, as stored in the GPGPU configuration
+/// registers at launch.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelResources {
+    pub regs_per_thread: u32,
+    /// Kernel scratch shared memory per block (excluding the param segment).
+    pub smem_bytes: u32,
+    pub block_threads: u32,
+}
+
+impl KernelResources {
+    /// Shared memory actually allocated per block (scratch + param segment).
+    pub fn smem_alloc_bytes(&self) -> u32 {
+        self.smem_bytes + PARAM_SEG_BYTES
+    }
+
+    /// Validate against the hard physical limits (fail the launch early,
+    /// as the hardware driver would).
+    pub fn validate(&self) -> Result<(), SimError> {
+        if self.block_threads == 0 {
+            return Err(SimError::LimitExceeded("empty thread block".into()));
+        }
+        if self.block_threads > MAX_BLOCK_THREADS {
+            return Err(SimError::LimitExceeded(format!(
+                "block of {} threads > {MAX_BLOCK_THREADS}",
+                self.block_threads
+            )));
+        }
+        if self.regs_per_thread * self.block_threads > REGS_PER_SM {
+            return Err(SimError::LimitExceeded(format!(
+                "block needs {} registers > {REGS_PER_SM} per SM",
+                self.regs_per_thread * self.block_threads
+            )));
+        }
+        if self.smem_alloc_bytes() > SMEM_PER_SM_BYTES {
+            return Err(SimError::LimitExceeded(format!(
+                "block needs {} shared bytes > {SMEM_PER_SM_BYTES} per SM",
+                self.smem_alloc_bytes()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Maximum concurrently-resident blocks per SM (paper §4.3).
+    pub fn max_resident_blocks(&self) -> u32 {
+        let warps_per_block = self.block_threads.div_ceil(THREADS_PER_WARP);
+        let by_warps = WARPS_PER_SM / warps_per_block;
+        let by_threads = THREADS_PER_SM / self.block_threads;
+        let by_regs = REGS_PER_SM / (self.regs_per_thread * self.block_threads).max(1);
+        let by_smem = SMEM_PER_SM_BYTES / self.smem_alloc_bytes().max(1);
+        BLOCKS_PER_SM
+            .min(by_warps)
+            .min(by_threads)
+            .min(by_regs)
+            .min(by_smem)
+            .max(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(regs: u32, smem: u32, threads: u32) -> KernelResources {
+        KernelResources { regs_per_thread: regs, smem_bytes: smem, block_threads: threads }
+    }
+
+    #[test]
+    fn small_blocks_hit_the_eight_block_cap() {
+        // 32-thread, 8-reg blocks: warps allow 24, threads allow 24,
+        // regs allow 32 -> capped at 8 (Table 1).
+        assert_eq!(res(8, 0, 32).max_resident_blocks(), 8);
+    }
+
+    #[test]
+    fn thread_limit_dominates_for_256_thread_blocks() {
+        // 768 / 256 = 3 resident blocks.
+        assert_eq!(res(8, 0, 256).max_resident_blocks(), 3);
+    }
+
+    #[test]
+    fn register_pressure_limits_residency() {
+        // 32 regs x 256 threads = 8192 -> exactly 1 block.
+        assert_eq!(res(32, 0, 256).max_resident_blocks(), 1);
+    }
+
+    #[test]
+    fn shared_memory_limits_residency() {
+        // ~8KB/block -> 2 blocks per 16KB SM? (8128+64)*2 = 16384 -> 2.
+        assert_eq!(res(4, 8128, 64).max_resident_blocks(), 2);
+    }
+
+    #[test]
+    fn oversized_block_rejected() {
+        assert!(res(8, 0, 257).validate().is_err());
+        assert!(res(64, 0, 256).validate().is_err()); // 16384 regs
+        assert!(res(8, 16384, 64).validate().is_err()); // smem + params
+        assert!(res(8, 0, 0).validate().is_err());
+        assert!(res(8, 0, 256).validate().is_ok());
+    }
+}

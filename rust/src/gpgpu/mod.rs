@@ -1,0 +1,256 @@
+//! The FlexGrip GPGPU top level: block scheduler + one or more streaming
+//! multiprocessors (paper §3.1, §4.3).
+
+pub mod limits;
+
+pub use limits::KernelResources;
+
+use crate::asm::Kernel;
+use crate::sim::{
+    AluBackend, BlockDesc, GlobalMem, PreDecoded, SimError, Sm, SmConfig, SmStats,
+};
+
+/// Overlay clock: "All designs were evaluated at 100 MHz" (paper §5.1).
+pub const CLOCK_HZ: f64 = 100e6;
+
+/// Whole-GPGPU configuration: the SM microarchitecture plus how many SMs
+/// are instantiated (the paper evaluates 1 and 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpgpuConfig {
+    pub sm: SmConfig,
+    pub num_sms: u32,
+}
+
+impl GpgpuConfig {
+    pub fn new(num_sms: u32, num_sp: u32) -> GpgpuConfig {
+        GpgpuConfig { sm: SmConfig::baseline().with_sp(num_sp), num_sms }
+    }
+
+    pub fn validate(&self) -> Result<(), SimError> {
+        if self.num_sms == 0 {
+            return Err(SimError::LimitExceeded("at least one SM required".into()));
+        }
+        self.sm.validate()
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} SM, {} SP", self.num_sms, self.sm.num_sp)
+    }
+}
+
+impl Default for GpgpuConfig {
+    fn default() -> Self {
+        GpgpuConfig::new(1, 8)
+    }
+}
+
+/// Kernel launch geometry (grid may be 2-D; blocks are linear, <=256
+/// threads, paper §4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchConfig {
+    pub grid_x: u32,
+    pub grid_y: u32,
+    pub block_threads: u32,
+}
+
+impl LaunchConfig {
+    pub fn linear(grid: u32, block_threads: u32) -> LaunchConfig {
+        LaunchConfig { grid_x: grid, grid_y: 1, block_threads }
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.grid_x * self.grid_y
+    }
+
+    pub fn total_threads(&self) -> u64 {
+        self.num_blocks() as u64 * self.block_threads as u64
+    }
+}
+
+/// Result of one kernel launch.
+#[derive(Debug, Clone)]
+pub struct LaunchResult {
+    /// Per-SM statistics (index = SM id).
+    pub per_sm: Vec<SmStats>,
+    /// Aggregate: `cycles` = max over SMs (they run concurrently),
+    /// counters summed.
+    pub total: SmStats,
+    /// Resident-block limit the scheduler computed (paper §4.3).
+    pub max_resident_blocks: u32,
+}
+
+impl LaunchResult {
+    /// Kernel execution time in milliseconds at the 100 MHz overlay clock.
+    pub fn exec_time_ms(&self) -> f64 {
+        self.total.exec_time_ms(CLOCK_HZ)
+    }
+}
+
+/// The soft GPGPU.
+pub struct Gpgpu {
+    pub cfg: GpgpuConfig,
+}
+
+impl Gpgpu {
+    pub fn new(cfg: GpgpuConfig) -> Gpgpu {
+        Gpgpu { cfg }
+    }
+
+    /// Launch `kernel` over `launch` geometry. The block scheduler deals
+    /// blocks round-robin across SMs ("the block scheduler logic equally
+    /// and automatically distributed thread blocks to the 2 SMs", §5.1.1);
+    /// each SM then keeps up to the Table-1 residency limit in flight.
+    ///
+    /// SMs are simulated sequentially against the shared global memory;
+    /// kernel time is the max of the per-SM busy times. Inter-SM memory
+    /// contention is not modelled (DESIGN.md §5).
+    pub fn launch(
+        &self,
+        kernel: &Kernel,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<LaunchResult, SimError> {
+        self.cfg.validate()?;
+        let res = KernelResources {
+            regs_per_thread: kernel.regs_per_thread,
+            smem_bytes: kernel.smem_bytes,
+            block_threads: launch.block_threads,
+        };
+        res.validate()?;
+        if launch.num_blocks() == 0 {
+            return Err(SimError::LimitExceeded("empty grid".into()));
+        }
+        let max_resident = res.max_resident_blocks();
+        debug_assert!(max_resident >= 1);
+
+        // Round-robin block distribution across SMs.
+        let mut assignments: Vec<Vec<BlockDesc>> =
+            vec![Vec::new(); self.cfg.num_sms as usize];
+        let mut i = 0usize;
+        for by in 0..launch.grid_y {
+            for bx in 0..launch.grid_x {
+                assignments[i % self.cfg.num_sms as usize].push(BlockDesc {
+                    ctaid_x: bx,
+                    ctaid_y: by,
+                    nctaid_x: launch.grid_x,
+                    nctaid_y: launch.grid_y,
+                    ntid: launch.block_threads,
+                });
+                i += 1;
+            }
+        }
+
+        let pre = PreDecoded::from_kernel(kernel);
+        let mut per_sm = Vec::with_capacity(self.cfg.num_sms as usize);
+        for (sm_id, blocks) in assignments.iter().enumerate() {
+            let sm = Sm::new(self.cfg.sm, sm_id as u32);
+            let stats = if blocks.is_empty() {
+                SmStats::default()
+            } else {
+                sm.run(
+                    &pre,
+                    kernel.regs_per_thread,
+                    kernel.smem_bytes,
+                    params,
+                    blocks,
+                    max_resident as usize,
+                    gmem,
+                    alu,
+                )?
+            };
+            per_sm.push(stats);
+        }
+
+        let mut total = SmStats::default();
+        for s in &per_sm {
+            total.merge(s);
+        }
+        Ok(LaunchResult { per_sm, total, max_resident_blocks: max_resident })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::sim::NativeAlu;
+
+    /// out[gtid] = gtid * 2 (multi-block).
+    const SRC: &str = r#"
+        .entry double
+        .regs 6
+            S2R R1, SR_GTID
+            SHL R2, R1, #2
+            IADD R3, R1, R1
+            GST [R2], R3
+            EXIT
+    "#;
+
+    fn launch(cfg: GpgpuConfig, grid: u32, block: u32) -> (GlobalMem, LaunchResult) {
+        let k = assemble(SRC).unwrap();
+        let mut g = GlobalMem::new(grid * block * 4 + 64);
+        let mut alu = NativeAlu;
+        let r = Gpgpu::new(cfg)
+            .launch(&k, LaunchConfig::linear(grid, block), &[], &mut g, &mut alu)
+            .unwrap();
+        (g, r)
+    }
+
+    #[test]
+    fn multi_block_kernel_covers_grid() {
+        let (g, r) = launch(GpgpuConfig::new(1, 8), 8, 64);
+        for t in 0..512 {
+            assert_eq!(g.load(t * 4).unwrap(), (t * 2) as i32);
+        }
+        assert_eq!(r.total.blocks, 8);
+    }
+
+    #[test]
+    fn two_sms_split_blocks_and_halve_time() {
+        let (_, r1) = launch(GpgpuConfig::new(1, 8), 8, 64);
+        let (g2, r2) = launch(GpgpuConfig::new(2, 8), 8, 64);
+        for t in 0..512 {
+            assert_eq!(g2.load(t * 4).unwrap(), (t * 2) as i32);
+        }
+        assert_eq!(r2.per_sm[0].blocks, 4);
+        assert_eq!(r2.per_sm[1].blocks, 4);
+        let speedup = r1.total.cycles as f64 / r2.total.cycles as f64;
+        assert!(
+            speedup > 1.5 && speedup <= 2.05,
+            "2 SM speedup out of range: {speedup}"
+        );
+    }
+
+    #[test]
+    fn odd_block_count_distributes_round_robin() {
+        let (_, r) = launch(GpgpuConfig::new(2, 8), 5, 64);
+        assert_eq!(r.per_sm[0].blocks, 3);
+        assert_eq!(r.per_sm[1].blocks, 2);
+    }
+
+    #[test]
+    fn residency_limit_reported() {
+        let (_, r) = launch(GpgpuConfig::new(1, 8), 4, 256);
+        assert_eq!(r.max_resident_blocks, 3); // 768 threads / 256
+    }
+
+    #[test]
+    fn launch_rejects_oversized_block() {
+        let k = assemble(SRC).unwrap();
+        let mut g = GlobalMem::new(1024);
+        let mut alu = NativeAlu;
+        let err = Gpgpu::new(GpgpuConfig::default())
+            .launch(&k, LaunchConfig::linear(1, 512), &[], &mut g, &mut alu)
+            .unwrap_err();
+        assert!(matches!(err, SimError::LimitExceeded(_)));
+    }
+
+    #[test]
+    fn exec_time_uses_100mhz_clock() {
+        let (_, r) = launch(GpgpuConfig::new(1, 8), 1, 32);
+        let want = r.total.cycles as f64 / 100e6 * 1e3;
+        assert!((r.exec_time_ms() - want).abs() < 1e-12);
+    }
+}

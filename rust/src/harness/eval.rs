@@ -1,0 +1,94 @@
+//! Shared evaluation engine: runs (and caches) FlexGrip and MicroBlaze
+//! benchmark executions so Tables 3/5 and Figures 4/5 reuse the same
+//! simulations.
+
+use crate::baseline::{self, MbStats, MbTiming};
+use crate::gpgpu::{Gpgpu, GpgpuConfig};
+use crate::kernels::{self, BenchId, BenchRun};
+use crate::sim::NativeAlu;
+use std::collections::HashMap;
+
+/// Default seed for all reported experiments (EXPERIMENTS.md records it).
+pub const EVAL_SEED: u64 = 0xF1E6;
+
+/// Lazily-computed, cached benchmark executions at one problem size.
+pub struct Evaluation {
+    pub size: u32,
+    pub seed: u64,
+    fg: HashMap<(BenchId, u32, u32), BenchRun>,
+    mb: HashMap<BenchId, MbStats>,
+}
+
+impl Evaluation {
+    pub fn new(size: u32) -> Evaluation {
+        Evaluation { size, seed: EVAL_SEED, fg: HashMap::new(), mb: HashMap::new() }
+    }
+
+    /// FlexGrip run (verified against the host golden) on `sms` x `sp`.
+    pub fn fg(&mut self, id: BenchId, sms: u32, sp: u32) -> &BenchRun {
+        let size = self.size;
+        let seed = self.seed;
+        self.fg.entry((id, sms, sp)).or_insert_with(|| {
+            let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, sp));
+            let mut alu = NativeAlu;
+            kernels::run_verified(id, size, &gpgpu, &mut alu, seed)
+                .unwrap_or_else(|e| panic!("{} n={size} {sms}x{sp}: {e}", id.name()))
+        })
+    }
+
+    /// MicroBlaze run (verified) with the calibrated timing.
+    pub fn mb(&mut self, id: BenchId) -> &MbStats {
+        let size = self.size;
+        let seed = self.seed;
+        self.mb.entry(id).or_insert_with(|| {
+            baseline::run_verified(id, size, seed, MbTiming::default())
+                .unwrap_or_else(|e| panic!("{} n={size} baseline: {e}", id.name()))
+        })
+    }
+
+    /// Speedup of a FlexGrip config vs the MicroBlaze (same 100 MHz clock).
+    pub fn speedup(&mut self, id: BenchId, sms: u32, sp: u32) -> f64 {
+        let mb_cycles = self.mb(id).cycles as f64;
+        let fg_cycles = self.fg(id, sms, sp).cycles as f64;
+        mb_cycles / fg_cycles
+    }
+
+    /// Speedup of the 2 SM configuration over 1 SM (Table 3).
+    pub fn sm_scaling(&mut self, id: BenchId, sp: u32) -> f64 {
+        let one = self.fg(id, 1, sp).cycles as f64;
+        let two = self.fg(id, 2, sp).cycles as f64;
+        one / two
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_runs() {
+        let mut ev = Evaluation::new(32);
+        let a = ev.fg(BenchId::VecAdd, 1, 8).cycles;
+        let b = ev.fg(BenchId::VecAdd, 1, 8).cycles;
+        assert_eq!(a, b);
+        assert_eq!(ev.fg.len(), 1);
+    }
+
+    #[test]
+    fn speedup_exceeds_one_for_all_benchmarks_small() {
+        let mut ev = Evaluation::new(64);
+        for id in BenchId::PAPER {
+            let s = ev.speedup(id, 1, 8);
+            assert!(s > 1.0, "{}: {s}", id.name());
+        }
+    }
+
+    #[test]
+    fn two_sm_scaling_in_paper_band_small() {
+        let mut ev = Evaluation::new(128);
+        for id in [BenchId::MatMul, BenchId::Transpose] {
+            let s = ev.sm_scaling(id, 8);
+            assert!((1.5..=2.05).contains(&s), "{}: {s}", id.name());
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Minimal criterion-style micro-benchmark helper (criterion is not
+//! available offline; `cargo bench` binaries use this instead).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    pub fn mean(&self) -> Duration {
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    /// One-line criterion-style report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>12?}  mean {:>12?}  min {:>12?}  ({} samples)",
+            self.name,
+            self.median(),
+            self.mean(),
+            self.min(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Run `f` for `samples` timed iterations (after one warm-up) and report.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    let _warmup = std::hint::black_box(f());
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed());
+    }
+    let r = BenchResult { name: name.to_string(), samples: out };
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let r = bench("noop", 5, || 1 + 1);
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.median() >= r.min());
+    }
+}

@@ -1,0 +1,14 @@
+//! Evaluation harness: regenerates every table and figure in the paper's
+//! §5 (see DESIGN.md §Per-experiment index) and provides the
+//! criterion-style micro-benchmark helper used by `cargo bench`
+//! (criterion itself is not available in this offline image).
+
+pub mod eval;
+pub mod microbench;
+pub mod paper;
+pub mod tables;
+pub mod text;
+
+pub use eval::Evaluation;
+pub use microbench::{bench, BenchResult};
+pub use text::TextTable;

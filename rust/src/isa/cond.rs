@@ -1,0 +1,155 @@
+//! Condition-code flags and branch/guard conditions.
+//!
+//! Paper §4.1 / Fig. 2: "The execution of a conditional (predicate)
+//! instruction results in the generation of a four-bit predicate for each
+//! instruction (sign, zero, carry, and overflow). ... the value in the
+//! selected predicate register and the condition for the instruction
+//! (e.g. <, >, =) are used as an index into a lookup table to generate an
+//! instruction mask." `Flags::eval` is exactly that lookup table.
+
+/// The FlexGrip four-bit predicate: sign, zero, carry, overflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Flags {
+    pub sign: bool,
+    pub zero: bool,
+    pub carry: bool,
+    pub overflow: bool,
+}
+
+impl Flags {
+    /// Flags of the subtraction `a - b`, the comparison primitive used by
+    /// `ISETP`/`ISET` (signed compare semantics derive from sign/overflow).
+    pub fn of_sub(a: i32, b: i32) -> Flags {
+        let (res, ovf) = a.overflowing_sub(b);
+        // Borrow convention: carry set when no borrow occurred (x86-style
+        // inverted borrow keeps unsigned comparisons simple).
+        let borrow = (a as u32) < (b as u32);
+        Flags { sign: res < 0, zero: res == 0, carry: !borrow, overflow: ovf }
+    }
+
+    /// Pack into the 4-bit hardware representation (bit0=sign, bit1=zero,
+    /// bit2=carry, bit3=overflow) — the format stored in the predicate
+    /// register file and interchanged with the XLA ALU backend.
+    pub fn pack(self) -> u8 {
+        (self.sign as u8)
+            | (self.zero as u8) << 1
+            | (self.carry as u8) << 2
+            | (self.overflow as u8) << 3
+    }
+
+    pub fn unpack(bits: u8) -> Flags {
+        Flags {
+            sign: bits & 1 != 0,
+            zero: bits & 2 != 0,
+            carry: bits & 4 != 0,
+            overflow: bits & 8 != 0,
+        }
+    }
+
+    /// The condition lookup table (Fig. 2): one mask bit per thread.
+    pub fn eval(self, cond: Cond) -> bool {
+        let lt = self.sign != self.overflow; // signed less-than
+        match cond {
+            Cond::Always => true,
+            Cond::Eq => self.zero,
+            Cond::Ne => !self.zero,
+            Cond::Lt => lt,
+            Cond::Le => self.zero || lt,
+            Cond::Gt => !self.zero && !lt,
+            Cond::Ge => !lt,
+            Cond::Never => false,
+        }
+    }
+}
+
+/// Branch / guard conditions (3-bit field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Cond {
+    /// Unconditional (no guard).
+    Always = 0,
+    Eq = 1,
+    Ne = 2,
+    Lt = 3,
+    Le = 4,
+    Gt = 5,
+    Ge = 6,
+    /// Never true — exists so failure-injection tests can encode dead code.
+    Never = 7,
+}
+
+impl Cond {
+    pub const ALL: [Cond; 8] = [
+        Cond::Always, Cond::Eq, Cond::Ne, Cond::Lt, Cond::Le, Cond::Gt,
+        Cond::Ge, Cond::Never,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<Cond> {
+        Cond::ALL.get(v as usize).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Cond::Always => "T", Cond::Eq => "EQ", Cond::Ne => "NE",
+            Cond::Lt => "LT", Cond::Le => "LE", Cond::Gt => "GT",
+            Cond::Ge => "GE", Cond::Never => "NEVER",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Cond> {
+        Cond::ALL.iter().copied().find(|c| c.name() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(a: i32, b: i32) {
+        let f = Flags::of_sub(a, b);
+        assert_eq!(f.eval(Cond::Eq), a == b, "{a} EQ {b}");
+        assert_eq!(f.eval(Cond::Ne), a != b, "{a} NE {b}");
+        assert_eq!(f.eval(Cond::Lt), a < b, "{a} LT {b}");
+        assert_eq!(f.eval(Cond::Le), a <= b, "{a} LE {b}");
+        assert_eq!(f.eval(Cond::Gt), a > b, "{a} GT {b}");
+        assert_eq!(f.eval(Cond::Ge), a >= b, "{a} GE {b}");
+        assert!(f.eval(Cond::Always));
+        assert!(!f.eval(Cond::Never));
+    }
+
+    #[test]
+    fn signed_compare_table_matches_rust_semantics() {
+        let vals = [
+            i32::MIN, i32::MIN + 1, -100, -1, 0, 1, 7, 100, i32::MAX - 1,
+            i32::MAX,
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                check(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for bits in 0..16u8 {
+            assert_eq!(Flags::unpack(bits).pack(), bits);
+        }
+    }
+
+    #[test]
+    fn cond_u8_roundtrip() {
+        for (i, c) in Cond::ALL.iter().enumerate() {
+            assert_eq!(*c as u8, i as u8);
+            assert_eq!(Cond::from_u8(i as u8), Some(*c));
+        }
+    }
+
+    #[test]
+    fn overflow_case() {
+        // i32::MIN - 1 overflows; signed LT must still be correct.
+        let f = Flags::of_sub(i32::MIN, 1);
+        assert!(f.eval(Cond::Lt));
+        assert!(f.overflow);
+    }
+}

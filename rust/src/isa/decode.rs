@@ -1,0 +1,262 @@
+//! Instruction decoder — the simulator's Decode stage (paper §3.2: "decodes
+//! the binary instruction to generate several output tokens such as the
+//! operation code, predicate data, source and destination operands").
+
+use super::{Cond, Guard, Instr, Op, OpClass, Operand, SpecialReg};
+
+/// Decode failures are architectural faults: the hardware would raise an
+/// error condition to the driver; the simulator surfaces them to the
+/// coordinator, which fails the kernel launch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Opcode field does not name an implemented instruction.
+    BadOpcode(u8),
+    /// An 8-byte instruction was truncated by the end of instruction memory.
+    Truncated { pc: u32 },
+    /// A short encoding was used for an op that requires 8 bytes.
+    BadShortForm(Op),
+    /// S2R names a nonexistent special register.
+    BadSpecial(u8),
+    /// R2A/A2R/memory base names a nonexistent address register.
+    BadAReg(u8),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::BadOpcode(v) => write!(f, "illegal opcode {v:#x}"),
+            DecodeError::Truncated { pc } => {
+                write!(f, "truncated 8-byte instruction at pc={pc:#x}")
+            }
+            DecodeError::BadShortForm(op) => {
+                write!(f, "4-byte form illegal for {}", op.mnemonic())
+            }
+            DecodeError::BadSpecial(v) => write!(f, "bad special register {v}"),
+            DecodeError::BadAReg(v) => write!(f, "bad address register {v}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Decode the instruction starting at `pc` in `code`.
+pub fn decode(code: &[u8], pc: u32) -> Result<Instr, DecodeError> {
+    let at = pc as usize;
+    if at + 4 > code.len() {
+        return Err(DecodeError::Truncated { pc });
+    }
+    let word0 = u32::from_le_bytes(code[at..at + 4].try_into().unwrap());
+    let opbits = (word0 & 0x7f) as u8;
+    let op = Op::from_u8(opbits).ok_or(DecodeError::BadOpcode(opbits))?;
+    let size8 = word0 & (1 << 7) != 0;
+    if !size8 && !op.short_encodable() {
+        return Err(DecodeError::BadShortForm(op));
+    }
+    let guard = Guard {
+        preg: ((word0 >> 8) & 0x3) as u8,
+        cond: Cond::from_u8(((word0 >> 10) & 0x7) as u8).unwrap(),
+    };
+    let dst_raw = ((word0 >> 13) & 0x3f) as u8;
+    let s1_raw = ((word0 >> 19) & 0x3f) as u8;
+    let s2imm = word0 & (1 << 25) != 0;
+    let setp_en = word0 & (1 << 26) != 0;
+    let setp_idx = ((word0 >> 27) & 0x3) as u8;
+    let cond = Cond::from_u8(((word0 >> 29) & 0x7) as u8).unwrap();
+
+    let (word1, size) = if size8 {
+        if at + 8 > code.len() {
+            return Err(DecodeError::Truncated { pc });
+        }
+        (u32::from_le_bytes(code[at + 4..at + 8].try_into().unwrap()), 8u8)
+    } else {
+        (0, 4)
+    };
+
+    // Raw word1 fields (non-immediate layout).
+    let s2_raw = (word1 & 0x3f) as u8;
+    let s3_raw = ((word1 >> 6) & 0x3f) as u8;
+    let offset = ((word1 >> 12) & 0xffff) as u16 as i16;
+    let use_areg = word1 & (1 << 28) != 0;
+    let areg = ((word1 >> 29) & 0x3) as u8;
+
+    let src2_imm = || Operand::Imm(word1 as i32);
+
+    let mut i = Instr {
+        op,
+        guard,
+        dst: dst_raw,
+        src1: Operand::None,
+        src2: Operand::None,
+        src3: Operand::None,
+        setp_en,
+        setp_idx,
+        cond,
+        offset: 0,
+        size,
+    };
+
+    match op.class() {
+        OpClass::Control => {
+            i.dst = 0;
+            i.setp_en = false;
+            i.setp_idx = 0;
+            i.cond = Cond::Always;
+        }
+        OpClass::Unary => {
+            i.src1 = match op {
+                Op::S2r => Operand::Special(
+                    SpecialReg::from_u8(s1_raw).ok_or(DecodeError::BadSpecial(s1_raw))?,
+                ),
+                Op::A2r => {
+                    if s1_raw >= super::NUM_AREGS {
+                        return Err(DecodeError::BadAReg(s1_raw));
+                    }
+                    Operand::AReg(s1_raw)
+                }
+                _ => Operand::Reg(s1_raw),
+            };
+            if op == Op::R2a && dst_raw >= super::NUM_AREGS {
+                return Err(DecodeError::BadAReg(dst_raw));
+            }
+            // MOV with an immediate is the MVI form.
+            if op == Op::Mov && s2imm {
+                i.src1 = Operand::None;
+                i.src2 = src2_imm();
+            }
+        }
+        OpClass::Binary => {
+            i.src1 = Operand::Reg(s1_raw);
+            i.src2 = if s2imm { src2_imm() } else { Operand::Reg(s2_raw) };
+        }
+        OpClass::Ternary => {
+            i.src1 = Operand::Reg(s1_raw);
+            i.src2 = Operand::Reg(s2_raw);
+            i.src3 = Operand::Reg(s3_raw);
+        }
+        OpClass::Branch => {
+            i.dst = 0;
+            i.src2 = src2_imm();
+        }
+        OpClass::Mem => {
+            let base = if use_areg {
+                if areg >= super::NUM_AREGS {
+                    return Err(DecodeError::BadAReg(areg));
+                }
+                Operand::AReg(areg)
+            } else {
+                Operand::Reg(s1_raw)
+            };
+            i.src1 = base;
+            i.offset = offset;
+            if i.is_store() {
+                i.dst = 0;
+                i.src2 = Operand::Reg(s2_raw);
+            }
+        }
+    }
+    Ok(i)
+}
+
+/// Decode an entire code image into (byte_pc -> Instr), validating every
+/// reachable encoding up front. Used by the simulator to pre-decode
+/// kernels once per launch (performance: the Decode stage then indexes a
+/// flat table instead of re-parsing bytes each issue).
+pub fn decode_stream(code: &[u8]) -> Result<Vec<(u32, Instr)>, DecodeError> {
+    let mut out = Vec::new();
+    let mut pc = 0u32;
+    while (pc as usize) < code.len() {
+        let i = decode(code, pc)?;
+        out.push((pc, i));
+        pc += i.size as u32;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::{encode, encode_program};
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple_alu() {
+        let i = Instr {
+            op: Op::Imad,
+            dst: 5,
+            src1: Operand::Reg(1),
+            src2: Operand::Reg(2),
+            src3: Operand::Reg(3),
+            size: 8,
+            ..Instr::NOP
+        };
+        assert_eq!(decode(&encode(&i), 0).unwrap(), i);
+    }
+
+    #[test]
+    fn roundtrip_mem_with_areg_base() {
+        let i = Instr {
+            op: Op::Sst,
+            src1: Operand::AReg(2),
+            src2: Operand::Reg(9),
+            offset: -64,
+            size: 8,
+            ..Instr::NOP
+        };
+        assert_eq!(decode(&encode(&i), 0).unwrap(), i);
+    }
+
+    #[test]
+    fn roundtrip_mov_imm() {
+        let i = Instr {
+            op: Op::Mov,
+            dst: 7,
+            src2: Operand::Imm(i32::MIN),
+            size: 8,
+            ..Instr::NOP
+        };
+        assert_eq!(decode(&encode(&i), 0).unwrap(), i);
+    }
+
+    #[test]
+    fn bad_opcode_detected() {
+        let bytes = 0x7fu32.to_le_bytes();
+        assert!(matches!(decode(&bytes, 0), Err(DecodeError::BadOpcode(0x7f))));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let i = Instr {
+            op: Op::Bra,
+            src2: Operand::Imm(0),
+            size: 8,
+            ..Instr::NOP
+        };
+        let b = encode(&i);
+        assert!(matches!(
+            decode(&b[..6], 0),
+            Err(DecodeError::Truncated { pc: 0 })
+        ));
+    }
+
+    #[test]
+    fn stream_decoding_walks_mixed_sizes() {
+        let prog = vec![
+            Instr::NOP,
+            Instr {
+                op: Op::Iadd,
+                dst: 1,
+                src1: Operand::Reg(1),
+                src2: Operand::Imm(1),
+                size: 8,
+                ..Instr::NOP
+            },
+            Instr { op: Op::Exit, ..Instr::NOP },
+        ];
+        let code = encode_program(&prog);
+        let decoded = decode_stream(&code).unwrap();
+        assert_eq!(decoded.len(), 3);
+        assert_eq!(decoded[0].0, 0);
+        assert_eq!(decoded[1].0, 4);
+        assert_eq!(decoded[2].0, 12);
+        assert_eq!(decoded[2].1.op, Op::Exit);
+    }
+}

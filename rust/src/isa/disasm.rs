@@ -1,0 +1,134 @@
+//! Disassembler: decoded instructions back to assembler syntax. The
+//! round-trip `assemble(disassemble(k)) == k.code` is tested below and
+//! in the asm integration suite — the usual toolchain closure property.
+
+use super::{Cond, Guard, Instr, Op, OpClass, Operand};
+
+fn guard_str(g: Guard) -> String {
+    if g.is_unconditional() {
+        String::new()
+    } else {
+        format!("@P{}.{} ", g.preg, g.cond.name())
+    }
+}
+
+fn src(o: Operand) -> String {
+    match o {
+        Operand::Reg(r) if r == super::RZ => "RZ".into(),
+        Operand::Reg(r) => format!("R{r}"),
+        Operand::Imm(v) => format!("#{v}"),
+        Operand::Special(s) => s.name().into(),
+        Operand::AReg(a) => format!("A{a}"),
+        Operand::None => "<none>".into(),
+    }
+}
+
+fn addr(i: &Instr) -> String {
+    let base = src(i.src1);
+    if i.offset == 0 {
+        format!("[{base}]")
+    } else if i.offset > 0 {
+        format!("[{base}+{}]", i.offset)
+    } else {
+        format!("[{base}{}]", i.offset)
+    }
+}
+
+/// Disassemble one instruction. Branch targets print as absolute-address
+/// immediates (`BRA #64`), which the assembler accepts.
+pub fn disassemble(i: &Instr) -> String {
+    let g = guard_str(i.guard);
+    let m = i.op.mnemonic();
+    let body = match i.op.class() {
+        OpClass::Control => m.to_string(),
+        OpClass::Unary => match i.op {
+            Op::Mov if matches!(i.src2, Operand::Imm(_)) => {
+                format!("{m} R{}, {}", i.dst, src(i.src2))
+            }
+            Op::R2a => format!("{m} A{}, {}", i.dst, src(i.src1)),
+            _ => format!("{m} R{}, {}", i.dst, src(i.src1)),
+        },
+        OpClass::Binary => match i.op {
+            Op::Isetp => format!("{m} P{}, {}, {}", i.setp_idx, src(i.src1), src(i.src2)),
+            Op::Iset => format!(
+                "{m} R{}, {}, {}, {}",
+                i.dst, src(i.src1), src(i.src2), i.cond.name()
+            ),
+            Op::Sel => format!(
+                "{m} R{}, {}, {}, P{}.{}",
+                i.dst, src(i.src1), src(i.src2), i.setp_idx, i.cond.name()
+            ),
+            _ => format!("{m} R{}, {}, {}", i.dst, src(i.src1), src(i.src2)),
+        },
+        OpClass::Ternary => format!(
+            "{m} R{}, {}, {}, {}",
+            i.dst, src(i.src1), src(i.src2), src(i.src3)
+        ),
+        OpClass::Branch => format!("{m} {}", src(i.src2)),
+        OpClass::Mem => {
+            if i.is_store() {
+                format!("{m} {}, {}", addr(i), src(i.src2))
+            } else {
+                format!("{m} R{}, {}", i.dst, addr(i))
+            }
+        }
+    };
+    format!("{g}{body}")
+}
+
+/// Disassemble a whole decoded program as a listing with byte addresses.
+pub fn disassemble_listing(instrs: &[(u32, Instr)]) -> String {
+    instrs
+        .iter()
+        .map(|(pc, i)| format!("{pc:#06x}:  {}", disassemble(i)))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+
+    #[test]
+    fn roundtrip_all_benchmark_kernels() {
+        for id in crate::kernels::BenchId::ALL {
+            let k = assemble(id.source()).unwrap();
+            // Re-assemble the disassembly (plus resource directives) and
+            // compare binaries.
+            let listing: String = k
+                .instrs
+                .iter()
+                .map(|(_, i)| disassemble(i))
+                .collect::<Vec<_>>()
+                .join("\n");
+            let src = format!(".regs {}\n.smem {}\n{listing}\n", k.regs_per_thread, k.smem_bytes);
+            let k2 = assemble(&src)
+                .unwrap_or_else(|e| panic!("{}: {e}\n{src}", id.name()));
+            assert_eq!(k.code, k2.code, "{} binary differs after roundtrip", id.name());
+        }
+    }
+
+    #[test]
+    fn formats_representative_instructions() {
+        let k = assemble(
+            "@P1.GE SEL R1, R2, #7, P3.LT\nGST [A2-8], R5\nSSY #16\nS2R R0, SR_TID\nEXIT",
+        )
+        .unwrap();
+        let lines: Vec<String> = k.instrs.iter().map(|(_, i)| disassemble(i)).collect();
+        assert_eq!(lines[0], "@P1.GE SEL R1, R2, #7, P3.LT");
+        assert_eq!(lines[1], "GST [A2-8], R5");
+        assert_eq!(lines[2], "SSY #16");
+        assert_eq!(lines[3], "S2R R0, SR_TID");
+        assert_eq!(lines[4], "EXIT");
+    }
+
+    #[test]
+    fn listing_has_addresses() {
+        let k = assemble("NOP\nMOV R1, #5\nEXIT").unwrap();
+        let l = disassemble_listing(&k.instrs);
+        assert!(l.contains("0x0000:  NOP"));
+        assert!(l.contains("0x0004:  MOV R1, #5"));
+        assert!(l.contains("0x000c:  EXIT"));
+    }
+}

@@ -1,0 +1,157 @@
+//! Instruction encoder: `Instr` -> 4/8 binary bytes.
+//!
+//! The encoder is the assembler's backend and the decoder's test oracle —
+//! `decode(encode(i)) == i` is property-tested in `rust/tests/isa_roundtrip.rs`.
+
+use super::{Cond, Instr, Op, Operand};
+
+fn src_reg_bits(op: Operand) -> u32 {
+    match op {
+        Operand::Reg(r) => r as u32,
+        Operand::Special(s) => s as u32,
+        Operand::AReg(a) => a as u32,
+        Operand::None => super::RZ as u32,
+        Operand::Imm(_) => panic!("immediate cannot occupy a register field"),
+    }
+}
+
+/// Encode one instruction, appending 4 or 8 bytes to `out`.
+///
+/// Panics on malformed instructions (e.g. an immediate in src1); the
+/// assembler only constructs well-formed `Instr`s, and the panic paths are
+/// exercised by unit tests.
+pub fn encode(i: &Instr) -> Vec<u8> {
+    let mut word0: u32 = i.op as u32 & 0x7f;
+    let size8 = i.size == 8;
+    word0 |= (size8 as u32) << 7;
+    word0 |= (i.guard.preg as u32 & 0x3) << 8;
+    word0 |= (i.guard.cond as u32 & 0x7) << 10;
+    word0 |= (i.dst as u32 & 0x3f) << 13;
+    word0 |= (src_reg_bits(i.src1) & 0x3f) << 19;
+    let s2imm = matches!(i.src2, Operand::Imm(_));
+    word0 |= (s2imm as u32) << 25;
+    word0 |= (i.setp_en as u32) << 26;
+    word0 |= (i.setp_idx as u32 & 0x3) << 27;
+    word0 |= (i.cond as u32 & 0x7) << 29;
+
+    let mut out = word0.to_le_bytes().to_vec();
+    if !size8 {
+        assert!(
+            i.op.short_encodable() && !s2imm,
+            "op {:?} cannot use the 4-byte form",
+            i.op
+        );
+        return out;
+    }
+
+    let word1: u32 = if let Operand::Imm(v) = i.src2 {
+        v as u32
+    } else {
+        let use_areg = matches!(i.src1, Operand::AReg(_));
+        let areg = match i.src1 {
+            Operand::AReg(a) => a as u32,
+            _ => 0,
+        };
+        (src_reg_bits(i.src2) & 0x3f)
+            | (src_reg_bits(i.src3) & 0x3f) << 6
+            | ((i.offset as u16) as u32) << 12
+            | (use_areg as u32) << 28
+            | (areg & 0x3) << 29
+    };
+    out.extend_from_slice(&word1.to_le_bytes());
+    out
+}
+
+/// Encode a whole program (already laid out: branch targets are byte
+/// offsets into the emitted stream).
+pub fn encode_program(instrs: &[Instr]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(instrs.len() * 8);
+    for i in instrs {
+        out.extend_from_slice(&encode(i));
+    }
+    out
+}
+
+/// Compute each instruction's byte size without encoding — used by the
+/// assembler's first pass for label layout.
+pub fn instr_size(op: Op, src2_is_imm: bool) -> u8 {
+    if op.short_encodable() && !src2_is_imm {
+        4
+    } else {
+        8
+    }
+}
+
+#[allow(unused)]
+fn _cond_assert(c: Cond) -> u8 {
+    c as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Guard;
+    use super::*;
+
+    #[test]
+    fn nop_is_four_bytes() {
+        assert_eq!(encode(&Instr::NOP).len(), 4);
+    }
+
+    #[test]
+    fn imm_forces_eight_bytes() {
+        let i = Instr {
+            op: Op::Iadd,
+            dst: 1,
+            src1: Operand::Reg(2),
+            src2: Operand::Imm(-7),
+            size: 8,
+            ..Instr::NOP
+        };
+        let b = encode(&i);
+        assert_eq!(b.len(), 8);
+        assert_eq!(i32::from_le_bytes(b[4..8].try_into().unwrap()), -7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn short_form_rejects_binary_ops() {
+        let i = Instr {
+            op: Op::Iadd,
+            src1: Operand::Reg(0),
+            src2: Operand::Reg(1),
+            size: 4,
+            ..Instr::NOP
+        };
+        encode(&i);
+    }
+
+    #[test]
+    fn guard_bits_land_in_word0() {
+        let i = Instr {
+            op: Op::Exit,
+            guard: Guard { preg: 3, cond: Cond::Ge },
+            ..Instr::NOP
+        };
+        let b = encode(&i);
+        let w0 = u32::from_le_bytes(b[0..4].try_into().unwrap());
+        assert_eq!((w0 >> 8) & 0x3, 3);
+        assert_eq!((w0 >> 10) & 0x7, Cond::Ge as u32);
+    }
+
+    #[test]
+    fn program_layout_is_packed() {
+        let prog = vec![
+            Instr::NOP,
+            Instr {
+                op: Op::Mov,
+                dst: 1,
+                src1: Operand::Reg(0),
+                src2: Operand::Imm(5),
+                size: 8,
+                ..Instr::NOP
+            },
+            Instr { op: Op::Exit, ..Instr::NOP },
+        ];
+        assert_eq!(encode_program(&prog).len(), 4 + 8 + 4);
+    }
+}

@@ -1,0 +1,199 @@
+//! Decoded instruction representation — the output of the Decode stage
+//! ("operation code, predicate data, source and destination operands",
+//! paper §3.2).
+
+use super::{Cond, Op};
+
+/// Special registers readable through `S2R`. FlexGrip's GPGPU controller
+/// "initializes registers in the vector register file with respective
+/// thread IDs" (paper §3.1); we expose the full CUDA-1.0 set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpecialReg {
+    /// Linear thread index within the block.
+    TidX = 0,
+    /// Threads per block.
+    NtidX = 1,
+    /// Block index, x dimension.
+    CtaidX = 2,
+    /// Grid size, x dimension.
+    NctaidX = 3,
+    /// Block index, y dimension.
+    CtaidY = 4,
+    /// Grid size, y dimension.
+    NctaidY = 5,
+    /// Lane within the warp (0..32).
+    LaneId = 6,
+    /// Warp index within the block.
+    WarpId = 7,
+    /// Streaming multiprocessor executing the thread.
+    SmId = 8,
+    /// Global linear thread id: (ctaid.y * nctaid.x + ctaid.x) * ntid + tid.
+    GtId = 9,
+}
+
+impl SpecialReg {
+    pub const ALL: [SpecialReg; 10] = [
+        SpecialReg::TidX, SpecialReg::NtidX, SpecialReg::CtaidX,
+        SpecialReg::NctaidX, SpecialReg::CtaidY, SpecialReg::NctaidY,
+        SpecialReg::LaneId, SpecialReg::WarpId, SpecialReg::SmId,
+        SpecialReg::GtId,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<SpecialReg> {
+        SpecialReg::ALL.get(v as usize).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpecialReg::TidX => "SR_TID", SpecialReg::NtidX => "SR_NTID",
+            SpecialReg::CtaidX => "SR_CTAID", SpecialReg::NctaidX => "SR_NCTAID",
+            SpecialReg::CtaidY => "SR_CTAID_Y", SpecialReg::NctaidY => "SR_NCTAID_Y",
+            SpecialReg::LaneId => "SR_LANEID", SpecialReg::WarpId => "SR_WARPID",
+            SpecialReg::SmId => "SR_SMID", SpecialReg::GtId => "SR_GTID",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SpecialReg> {
+        SpecialReg::ALL.iter().copied().find(|r| r.name() == s)
+    }
+}
+
+/// A source operand after decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    /// General-purpose register (R63 = RZ reads zero).
+    Reg(u8),
+    /// 32-bit immediate (second source slot only).
+    Imm(i32),
+    /// Special register (S2R source).
+    Special(SpecialReg),
+    /// Address register (A2R source / memory base).
+    AReg(u8),
+    /// Unused slot.
+    None,
+}
+
+/// Execution guard: `@Pn.cond` — evaluated per-thread against the 4-bit
+/// predicate register (paper Fig. 2 lookup table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Guard {
+    pub preg: u8,
+    pub cond: Cond,
+}
+
+impl Guard {
+    pub const NONE: Guard = Guard { preg: 0, cond: Cond::Always };
+
+    pub fn is_unconditional(self) -> bool {
+        self.cond == Cond::Always
+    }
+}
+
+/// Which memory a `Gld/Gst/Sld/Sst` touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemSpace {
+    Global,
+    Shared,
+}
+
+/// Fully decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Op,
+    pub guard: Guard,
+    /// Destination register (GP reg for ALU/loads; A-reg index for R2A;
+    /// ignored for stores/branches/control).
+    pub dst: u8,
+    pub src1: Operand,
+    pub src2: Operand,
+    pub src3: Operand,
+    /// Predicate register written by `ISETP` (also the predicate *read* by
+    /// `SEL`), when `setp_en`.
+    pub setp_en: bool,
+    pub setp_idx: u8,
+    /// Embedded condition for `ISET` / `SEL`.
+    pub cond: Cond,
+    /// Byte offset for memory operands / branch target for `BRA`/`SSY`
+    /// (branch targets live in `src2` as `Imm`).
+    pub offset: i16,
+    /// Encoded size in bytes (4 or 8) — the Fetch stage advances PC by this.
+    pub size: u8,
+}
+
+impl Instr {
+    /// A canonical NOP (also the default).
+    pub const NOP: Instr = Instr {
+        op: Op::Nop,
+        guard: Guard::NONE,
+        dst: 0,
+        src1: Operand::None,
+        src2: Operand::None,
+        src3: Operand::None,
+        setp_en: false,
+        setp_idx: 0,
+        cond: Cond::Always,
+        offset: 0,
+        size: 4,
+    };
+
+    /// Branch target in code bytes (BRA/SSY only).
+    pub fn branch_target(&self) -> Option<u32> {
+        match (self.op, self.src2) {
+            (Op::Bra | Op::Ssy, Operand::Imm(t)) => Some(t as u32),
+            _ => None,
+        }
+    }
+
+    pub fn mem_space(&self) -> Option<MemSpace> {
+        match self.op {
+            Op::Gld | Op::Gst => Some(MemSpace::Global),
+            Op::Sld | Op::Sst => Some(MemSpace::Shared),
+            _ => None,
+        }
+    }
+
+    pub fn is_store(&self) -> bool {
+        matches!(self.op, Op::Gst | Op::Sst)
+    }
+
+    pub fn is_load(&self) -> bool {
+        matches!(self.op, Op::Gld | Op::Sld)
+    }
+}
+
+impl Default for Instr {
+    fn default() -> Self {
+        Instr::NOP
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn special_reg_roundtrip() {
+        for (i, r) in SpecialReg::ALL.iter().enumerate() {
+            assert_eq!(*r as u8, i as u8);
+            assert_eq!(SpecialReg::from_u8(i as u8), Some(*r));
+            assert_eq!(SpecialReg::from_name(r.name()), Some(*r));
+        }
+    }
+
+    #[test]
+    fn nop_is_short() {
+        assert_eq!(Instr::NOP.size, 4);
+        assert!(Instr::NOP.guard.is_unconditional());
+    }
+
+    #[test]
+    fn branch_target_extraction() {
+        let mut i = Instr::NOP;
+        i.op = Op::Bra;
+        i.src2 = Operand::Imm(0x40);
+        assert_eq!(i.branch_target(), Some(0x40));
+        i.op = Op::Iadd;
+        assert_eq!(i.branch_target(), None);
+    }
+}

@@ -1,0 +1,63 @@
+//! FlexGrip-RS instruction set architecture.
+//!
+//! A G80-subset integer SASS, mirroring the 27+ integer CUDA instructions
+//! the paper reports testing (§5: "We tested 27 integer CUDA instructions").
+//! Instructions are 4 or 8 bytes (paper §3.2: "fetching four or eight-byte
+//! CUDA binary instructions"), fully predicated via 4-bit condition-code
+//! predicate registers (paper §4.1, Fig. 2), with explicit divergence
+//! management instructions (`SSY`/`JOIN`) driving the per-warp stack.
+//!
+//! Layout of the 8-byte encoding (little-endian words):
+//!
+//! ```text
+//! word0: [0..7)  opcode      [7]      size8 flag
+//!        [8..10) guard preg  [10..13) guard cond (0 = always)
+//!        [13..19) dst reg    [19..25) src1 reg
+//!        [25]    src2-is-imm [26]     set-predicate enable
+//!        [27..29) set-pred idx        [29..32) embedded cond (ISET/SEL)
+//! word1: imm32                        if src2-is-imm
+//!        [0..6) src2  [6..12) src3  [12..28) off16  [28] use-areg
+//!        [29..31) areg                       otherwise
+//! ```
+//!
+//! Short (4-byte) forms carry only word0 (`NOP`, `EXIT`, `JOIN`, `BAR`,
+//! `MOV` reg-reg, `NOT`, `S2R`, `R2A`, `A2R`).
+
+mod cond;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+mod instr;
+mod op;
+
+pub use cond::{Cond, Flags};
+pub use decode::{decode, decode_stream, DecodeError};
+pub use disasm::{disassemble, disassemble_listing};
+pub use encode::encode;
+pub use instr::{Guard, Instr, MemSpace, Operand, SpecialReg};
+pub use op::{Op, OpClass};
+
+/// General-purpose registers per thread (R0..=R62 usable, R63 is RZ).
+pub const NUM_REGS: u8 = 64;
+/// Register index that always reads zero and discards writes (like sm_2x RZ).
+pub const RZ: u8 = 63;
+/// Address registers per thread (FlexGrip address register file).
+pub const NUM_AREGS: u8 = 4;
+/// Predicate (condition-code) registers per thread (paper Fig. 2: p0..p3).
+pub const NUM_PREGS: u8 = 4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_count_covers_paper_claim() {
+        // Paper §5: 27 integer instructions tested. We implement a superset.
+        assert!(Op::ALL.len() >= 27, "ISA must cover the paper's 27 ops");
+    }
+
+    #[test]
+    fn rz_is_last_register() {
+        assert_eq!(RZ, NUM_REGS - 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Opcode definitions and static properties.
+
+/// Operation codes. Mnemonics follow decuda/G80 conventions where one
+/// exists; the set covers every instruction class the paper's five
+/// benchmarks require (integer ALU, predicate set, branch/sync, memory).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Op {
+    // -- no/short operand control --
+    Nop = 0,
+    /// Thread termination (sets the Finished bit in the warp's thread mask).
+    Exit = 1,
+    /// Pop the warp stack: DIV entry -> jump to taken path with saved mask;
+    /// SYNC entry -> reconverge (paper §4.1).
+    Join = 2,
+    /// Block-wide barrier (`bar.sync 0`).
+    Bar = 3,
+
+    // -- moves --
+    /// Rd = Rs | imm32.
+    Mov = 4,
+    /// Rd = special register (thread id, block id, dims...). FlexGrip's
+    /// GPGPU controller seeds thread ids this way (paper §3.1).
+    S2r = 5,
+    /// Address-register transfer: A[n] = Rs.
+    R2a = 6,
+    /// Rd = A[n].
+    A2r = 7,
+
+    // -- integer arithmetic --
+    Iadd = 8,
+    Isub = 9,
+    /// Low 32 bits of the signed product.
+    Imul = 10,
+    /// Rd = Ra * Rb + Rc (the only three-source-operand instruction; the
+    /// paper's §4.2 operand-removal optimization hinges on this).
+    Imad = 11,
+    Imin = 12,
+    Imax = 13,
+    /// Rd = |Ra| (wrapping at i32::MIN, like CUDA).
+    Iabs = 14,
+    /// Rd = -Ra.
+    Ineg = 15,
+
+    // -- bitwise / shifts --
+    And = 16,
+    Or = 17,
+    Xor = 18,
+    Not = 19,
+    Shl = 20,
+    /// Logical right shift.
+    Shr = 21,
+    /// Arithmetic right shift.
+    Sar = 22,
+
+    // -- comparisons / predication --
+    /// Set condition-code flags of (Ra - Srcb) into predicate register Pn.
+    Isetp = 23,
+    /// Rd = cond(Ra - Srcb) ? 0xFFFF_FFFF : 0 (CUDA integer set).
+    Iset = 24,
+    /// Rd = P[n].cond ? Ra : Srcb (predicate-select; the cond/setp fields
+    /// name the source predicate, independent of the execution guard).
+    Sel = 25,
+
+    // -- control flow --
+    /// Guarded branch; mixed per-lane outcome pushes a DIV warp-stack entry.
+    Bra = 26,
+    /// Push the SYNC reconvergence point (address operand) onto the stack.
+    Ssy = 27,
+
+    // -- memory --
+    /// Global load: Rd = g[base + off16] (base = Ra or A[n]).
+    Gld = 28,
+    /// Global store: g[base + off16] = Rsrc2.
+    Gst = 29,
+    /// Shared load: Rd = s[base + off16].
+    Sld = 30,
+    /// Shared store: s[base + off16] = Rsrc2.
+    Sst = 31,
+}
+
+/// Structural class of an opcode — drives decode field extraction, the
+/// read-stage operand-fetch plan, and the customization analyzer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// No data operands (NOP, EXIT, JOIN, BAR).
+    Control,
+    /// dst + one source (MOV, NOT, IABS, INEG, S2R, R2A, A2R).
+    Unary,
+    /// dst + two sources (most ALU ops, ISETP, ISET).
+    Binary,
+    /// dst + three sources (IMAD only).
+    Ternary,
+    /// Branch-like with a code address (BRA, SSY).
+    Branch,
+    /// Memory access (GLD/GST/SLD/SST).
+    Mem,
+}
+
+impl Op {
+    /// Every opcode, in encoding order.
+    pub const ALL: [Op; 32] = [
+        Op::Nop, Op::Exit, Op::Join, Op::Bar, Op::Mov, Op::S2r, Op::R2a,
+        Op::A2r, Op::Iadd, Op::Isub, Op::Imul, Op::Imad, Op::Imin, Op::Imax,
+        Op::Iabs, Op::Ineg, Op::And, Op::Or, Op::Xor, Op::Not, Op::Shl,
+        Op::Shr, Op::Sar, Op::Isetp, Op::Iset, Op::Sel, Op::Bra, Op::Ssy,
+        Op::Gld, Op::Gst, Op::Sld, Op::Sst,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<Op> {
+        Op::ALL.get(v as usize).copied()
+    }
+
+    pub fn class(self) -> OpClass {
+        use Op::*;
+        match self {
+            Nop | Exit | Join | Bar => OpClass::Control,
+            Mov | S2r | R2a | A2r | Not | Iabs | Ineg => OpClass::Unary,
+            Iadd | Isub | Imul | Imin | Imax | And | Or | Xor | Shl | Shr
+            | Sar | Isetp | Iset | Sel => OpClass::Binary,
+            Imad => OpClass::Ternary,
+            Bra | Ssy => OpClass::Branch,
+            Gld | Gst | Sld | Sst => OpClass::Mem,
+        }
+    }
+
+    /// Number of source operands the read stage must fetch — the paper's
+    /// §4.2 read-operand-unit count (3 for MAD, otherwise <= 2).
+    pub fn num_source_operands(self) -> u8 {
+        match self.class() {
+            OpClass::Control => 0,
+            OpClass::Unary => 1,
+            OpClass::Binary => 2,
+            OpClass::Ternary => 3,
+            OpClass::Branch => 0,
+            OpClass::Mem => match self {
+                Op::Gst | Op::Sst => 2, // base + store data
+                _ => 1,                 // base
+            },
+        }
+    }
+
+    /// Does this op use the SP multiplier (the DSP48E blocks in hardware)?
+    pub fn uses_multiplier(self) -> bool {
+        matches!(self, Op::Imul | Op::Imad)
+    }
+
+    /// Can this op be encoded in the 4-byte short form (operands fit word0)?
+    pub fn short_encodable(self) -> bool {
+        matches!(self.class(), OpClass::Control | OpClass::Unary)
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        use Op::*;
+        match self {
+            Nop => "NOP", Exit => "EXIT", Join => "JOIN", Bar => "BAR",
+            Mov => "MOV", S2r => "S2R", R2a => "R2A", A2r => "A2R",
+            Iadd => "IADD", Isub => "ISUB", Imul => "IMUL", Imad => "IMAD",
+            Imin => "IMIN", Imax => "IMAX", Iabs => "IABS", Ineg => "INEG",
+            And => "AND", Or => "OR", Xor => "XOR", Not => "NOT",
+            Shl => "SHL", Shr => "SHR", Sar => "SAR",
+            Isetp => "ISETP", Iset => "ISET", Sel => "SEL",
+            Bra => "BRA", Ssy => "SSY",
+            Gld => "GLD", Gst => "GST", Sld => "SLD", Sst => "SST",
+        }
+    }
+
+    pub fn from_mnemonic(s: &str) -> Option<Op> {
+        Op::ALL.iter().copied().find(|o| o.mnemonic() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u8_roundtrip() {
+        for (i, op) in Op::ALL.iter().enumerate() {
+            assert_eq!(*op as u8, i as u8);
+            assert_eq!(Op::from_u8(i as u8), Some(*op));
+        }
+        assert_eq!(Op::from_u8(32), None);
+    }
+
+    #[test]
+    fn mnemonic_roundtrip() {
+        for op in Op::ALL {
+            assert_eq!(Op::from_mnemonic(op.mnemonic()), Some(op));
+        }
+        assert_eq!(Op::from_mnemonic("FADD"), None);
+    }
+
+    #[test]
+    fn imad_is_only_three_operand_op() {
+        for op in Op::ALL {
+            assert_eq!(op.num_source_operands() == 3, op == Op::Imad);
+        }
+    }
+
+    #[test]
+    fn multiplier_ops() {
+        let muls: Vec<Op> = Op::ALL.iter().copied().filter(|o| o.uses_multiplier()).collect();
+        assert_eq!(muls, vec![Op::Imul, Op::Imad]);
+    }
+}

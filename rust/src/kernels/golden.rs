@@ -1,0 +1,110 @@
+//! Host-side golden references for the benchmark kernels, with the exact
+//! wrapping-i32 semantics of the SP datapath. These are the first line of
+//! verification; the XLA-executed JAX/Pallas golden models
+//! (`runtime::golden`) independently cross-check the same outputs.
+
+/// `r[k] = sum_{i=0}^{n-1-k} x[i] * x[i+k]` (wrapping).
+pub fn autocorr(x: &[i32]) -> Vec<i32> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = 0i32;
+            for i in 0..n - k {
+                acc = acc.wrapping_add(x[i].wrapping_mul(x[i + k]));
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Each `seg`-sized chunk sorted ascending (the segmented bitonic kernel's
+/// contract).
+pub fn bitonic_segments(data: &[i32], seg: usize) -> Vec<i32> {
+    assert_eq!(data.len() % seg, 0);
+    let mut out = data.to_vec();
+    for chunk in out.chunks_mut(seg) {
+        chunk.sort_unstable();
+    }
+    out
+}
+
+/// `C = A x B`, n x n row-major, wrapping i32.
+pub fn matmul(a: &[i32], b: &[i32], n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                c[i * n + j] =
+                    c[i * n + j].wrapping_add(aik.wrapping_mul(b[k * n + j]));
+            }
+        }
+    }
+    c
+}
+
+/// Wrapping sum.
+pub fn reduction(x: &[i32]) -> i32 {
+    x.iter().fold(0i32, |a, &v| a.wrapping_add(v))
+}
+
+/// `B = A^T`, n x n row-major.
+pub fn transpose(a: &[i32], n: usize) -> Vec<i32> {
+    let mut b = vec![0i32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            b[j * n + i] = a[i * n + j];
+        }
+    }
+    b
+}
+
+/// Element-wise wrapping add.
+pub fn vecadd(a: &[i32], b: &[i32]) -> Vec<i32> {
+    a.iter().zip(b).map(|(&x, &y)| x.wrapping_add(y)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autocorr_known_values() {
+        // x = [1,2,3]: r0=1+4+9=14, r1=1*2+2*3=8, r2=1*3=3
+        assert_eq!(autocorr(&[1, 2, 3]), vec![14, 8, 3]);
+    }
+
+    #[test]
+    fn bitonic_sorts_per_segment() {
+        let got = bitonic_segments(&[4, 1, 3, 2, 9, 7, 8, 6], 4);
+        assert_eq!(got, vec![1, 2, 3, 4, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let n = 4;
+        let mut id = vec![0; 16];
+        for i in 0..n {
+            id[i * n + i] = 1;
+        }
+        let a: Vec<i32> = (0..16).collect();
+        assert_eq!(matmul(&a, &id, n), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a: Vec<i32> = (0..16).collect();
+        assert_eq!(transpose(&transpose(&a, 4), 4), a);
+    }
+
+    #[test]
+    fn reduction_wraps() {
+        assert_eq!(reduction(&[i32::MAX, 1]), i32::MIN);
+        assert_eq!(reduction(&[1, 2, 3]), 6);
+    }
+
+    #[test]
+    fn vecadd_elementwise() {
+        assert_eq!(vecadd(&[1, 2], &[10, 20]), vec![11, 22]);
+    }
+}

@@ -1,0 +1,444 @@
+//! The paper's five CUDA benchmarks (§5: bitonic sort, autocorrelation,
+//! matrix multiplication, parallel reduction, transpose — from ERCBench
+//! and the NVIDIA Programmer's Guide) plus a vecadd quickstart, each as
+//! FlexGrip assembly with a host-side workload harness (data generation,
+//! launch geometry, golden verification).
+
+pub mod golden;
+
+use crate::asm::{assemble, Kernel};
+use crate::gpgpu::{Gpgpu, LaunchConfig, LaunchResult};
+use crate::rng::XorShift64;
+use crate::sim::{AluBackend, GlobalMem, SimError, SmStats};
+
+/// Device byte address where benchmark inputs begin.
+pub const IN_BASE: u32 = 0x1000;
+
+/// Benchmark identifiers. `PAPER` lists the five evaluated in the paper,
+/// in its plot order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BenchId {
+    Autocorr,
+    Bitonic,
+    MatMul,
+    Reduction,
+    Transpose,
+    VecAdd,
+}
+
+impl BenchId {
+    pub const PAPER: [BenchId; 5] = [
+        BenchId::Autocorr,
+        BenchId::Bitonic,
+        BenchId::MatMul,
+        BenchId::Reduction,
+        BenchId::Transpose,
+    ];
+
+    pub const ALL: [BenchId; 6] = [
+        BenchId::Autocorr,
+        BenchId::Bitonic,
+        BenchId::MatMul,
+        BenchId::Reduction,
+        BenchId::Transpose,
+        BenchId::VecAdd,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BenchId::Autocorr => "autocorr",
+            BenchId::Bitonic => "bitonic",
+            BenchId::MatMul => "matmul",
+            BenchId::Reduction => "reduction",
+            BenchId::Transpose => "transpose",
+            BenchId::VecAdd => "vecadd",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BenchId> {
+        BenchId::ALL.iter().copied().find(|b| b.name() == s)
+    }
+
+    /// Assembly source (embedded; assembled on demand).
+    pub fn source(self) -> &'static str {
+        match self {
+            BenchId::Autocorr => include_str!("asm/autocorr.flex"),
+            BenchId::Bitonic => include_str!("asm/bitonic.flex"),
+            BenchId::MatMul => include_str!("asm/matmul.flex"),
+            BenchId::Reduction => include_str!("asm/reduction.flex"),
+            BenchId::Transpose => include_str!("asm/transpose.flex"),
+            BenchId::VecAdd => include_str!("asm/vecadd.flex"),
+        }
+    }
+
+    /// Is the workload 2-D (`n` means an n x n matrix)?
+    pub fn is_matrix(self) -> bool {
+        matches!(self, BenchId::MatMul | BenchId::Transpose)
+    }
+
+    /// Number of input elements for problem size `n` (paper §5.1.1: sizes
+    /// 32..256, matrices n x n).
+    pub fn input_elems(self, n: u32) -> usize {
+        match self {
+            BenchId::Autocorr | BenchId::Bitonic | BenchId::Reduction => n as usize,
+            BenchId::MatMul => 2 * (n * n) as usize, // A and B
+            BenchId::Transpose => (n * n) as usize,
+            BenchId::VecAdd => 2 * n as usize,
+        }
+    }
+}
+
+/// One kernel launch of a (possibly multi-phase) workload.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub launch: LaunchConfig,
+    pub params: Vec<i32>,
+}
+
+/// A fully-prepared workload: assembled kernel, input data, launch phases,
+/// and everything needed to verify the output.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub id: BenchId,
+    pub n: u32,
+    pub seed: u64,
+    pub kernel: Kernel,
+    pub phases: Vec<Phase>,
+    pub gmem_bytes: u32,
+    /// Input blob written at `IN_BASE` (layout is benchmark-specific).
+    pub input: Vec<i32>,
+    /// Byte address and length of the output region.
+    out_base: u32,
+    out_len: usize,
+    /// Bitonic segment size (needed by verification).
+    seg: u32,
+}
+
+/// Merged result of a multi-phase benchmark run. Phase launches are
+/// sequential on the device, so cycles add.
+#[derive(Debug, Clone)]
+pub struct BenchRun {
+    pub phases: Vec<LaunchResult>,
+    pub cycles: u64,
+    /// Aggregated counters across phases and SMs (cycles = summed phase
+    /// critical paths).
+    pub stats: SmStats,
+}
+
+impl BenchRun {
+    pub fn exec_time_ms(&self) -> f64 {
+        self.cycles as f64 / crate::gpgpu::CLOCK_HZ * 1e3
+    }
+}
+
+/// Supported problem sizes (paper §5.1.1).
+pub const PAPER_SIZES: [u32; 4] = [32, 64, 128, 256];
+
+/// Build a workload for benchmark `id` at problem size `n` (power of two,
+/// 32..=256) with deterministic `seed`.
+pub fn prepare(id: BenchId, n: u32, seed: u64) -> Workload {
+    assert!(
+        n.is_power_of_two() && (32..=256).contains(&n),
+        "problem size must be a power of two in 32..=256 (got {n})"
+    );
+    let kernel = assemble(id.source()).expect("benchmark kernels must assemble");
+    let mut rng = XorShift64::new(seed ^ (id as u64) << 32);
+    let input: Vec<i32> = (0..id.input_elems(n)).map(|_| rng.small_i32()).collect();
+
+    let b = |v: u32| IN_BASE + 4 * v; // element -> byte helper
+    let (phases, out_base, out_len, seg) = match id {
+        BenchId::VecAdd => {
+            let (a, bb, out) = (IN_BASE, b(n), b(2 * n));
+            let block = n.min(64);
+            (
+                vec![Phase {
+                    launch: LaunchConfig::linear(n / block, block),
+                    params: vec![a as i32, bb as i32, out as i32],
+                }],
+                out,
+                n as usize,
+                0,
+            )
+        }
+        BenchId::Autocorr => {
+            let (x, r) = (IN_BASE, b(n));
+            (
+                vec![Phase {
+                    launch: LaunchConfig::linear(n / 16, 16),
+                    params: vec![x as i32, r as i32, n as i32],
+                }],
+                r,
+                n as usize,
+                0,
+            )
+        }
+        BenchId::Bitonic => {
+            let seg = n.min(64);
+            (
+                vec![Phase {
+                    launch: LaunchConfig::linear(n / seg, seg),
+                    params: vec![IN_BASE as i32, seg.trailing_zeros() as i32],
+                }],
+                IN_BASE, // sorts in place
+                n as usize,
+                seg,
+            )
+        }
+        BenchId::MatMul => {
+            let (a, bb, c) = (IN_BASE, b(n * n), b(2 * n * n));
+            let tiles = n / 16;
+            (
+                vec![Phase {
+                    launch: LaunchConfig { grid_x: tiles, grid_y: tiles, block_threads: 256 },
+                    params: vec![a as i32, bb as i32, c as i32, n as i32],
+                }],
+                c,
+                (n * n) as usize,
+                0,
+            )
+        }
+        BenchId::Transpose => {
+            let (a, out) = (IN_BASE, b(n * n));
+            let tiles = n / 16;
+            (
+                vec![Phase {
+                    launch: LaunchConfig { grid_x: tiles, grid_y: tiles, block_threads: 256 },
+                    params: vec![a as i32, out as i32, n as i32],
+                }],
+                out,
+                (n * n) as usize,
+                0,
+            )
+        }
+        BenchId::Reduction => {
+            // Phase 1: each 32-thread block reduces 64 elements (n < 64:
+            // one n/2-thread block). Phase 2 (grid > 1): one block reduces
+            // the partials.
+            let partials = b(n);
+            let (grid1, block1) = if n < 64 { (1, n / 2) } else { (n / 64, 32) };
+            let mut phases = vec![Phase {
+                launch: LaunchConfig::linear(grid1, block1),
+                params: vec![IN_BASE as i32, partials as i32],
+            }];
+            let mut out = partials;
+            if grid1 > 1 {
+                let fin = partials + 4 * grid1;
+                phases.push(Phase {
+                    launch: LaunchConfig::linear(1, grid1 / 2),
+                    params: vec![partials as i32, fin as i32],
+                });
+                out = fin;
+            }
+            (phases, out, 1, 0)
+        }
+    };
+
+    // Room for inputs + outputs + slack.
+    let high = out_base + 4 * out_len as u32;
+    let gmem_bytes = (high + 4096).next_power_of_two();
+
+    Workload {
+        id,
+        n,
+        seed,
+        kernel,
+        phases,
+        gmem_bytes,
+        input,
+        out_base,
+        out_len,
+        seg,
+    }
+}
+
+impl Workload {
+    /// Allocate device memory and DMA the inputs in (driver behaviour).
+    pub fn make_gmem(&self) -> GlobalMem {
+        let mut g = GlobalMem::new(self.gmem_bytes);
+        g.write_words(IN_BASE, &self.input).expect("input fits");
+        g
+    }
+
+    /// Execute all phases on `gpgpu`, returning merged statistics.
+    pub fn run(
+        &self,
+        gpgpu: &Gpgpu,
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<BenchRun, SimError> {
+        let mut phases = Vec::with_capacity(self.phases.len());
+        let mut cycles = 0u64;
+        let mut stats = SmStats::default();
+        for ph in &self.phases {
+            let r = gpgpu.launch(&self.kernel, ph.launch, &ph.params, gmem, alu)?;
+            cycles += r.total.cycles;
+            stats.merge(&r.total);
+            phases.push(r);
+        }
+        stats.cycles = cycles;
+        Ok(BenchRun { phases, cycles, stats })
+    }
+
+    /// Expected output (golden reference on the host).
+    pub fn expected(&self) -> Vec<i32> {
+        let n = self.n as usize;
+        match self.id {
+            BenchId::Autocorr => golden::autocorr(&self.input),
+            BenchId::Bitonic => golden::bitonic_segments(&self.input, self.seg as usize),
+            BenchId::MatMul => {
+                golden::matmul(&self.input[..n * n], &self.input[n * n..], n)
+            }
+            BenchId::Reduction => vec![golden::reduction(&self.input)],
+            BenchId::Transpose => golden::transpose(&self.input, n),
+            BenchId::VecAdd => golden::vecadd(&self.input[..n], &self.input[n..]),
+        }
+    }
+
+    /// Compare device output against the golden reference.
+    pub fn verify(&self, gmem: &GlobalMem) -> Result<(), String> {
+        let got = gmem
+            .read_words(self.out_base, self.out_len)
+            .map_err(|e| format!("reading output: {e}"))?;
+        let want = self.expected();
+        if got == want {
+            return Ok(());
+        }
+        let idx = got
+            .iter()
+            .zip(&want)
+            .position(|(g, w)| g != w)
+            .unwrap_or(0);
+        Err(format!(
+            "{} n={}: output mismatch at element {idx}: got {} want {} \
+             ({} of {} wrong)",
+            self.id.name(),
+            self.n,
+            got[idx],
+            want[idx],
+            got.iter().zip(&want).filter(|(g, w)| g != w).count(),
+            want.len(),
+        ))
+    }
+}
+
+/// Convenience: prepare + run + verify in one call. Returns the merged run
+/// statistics; panics on verification failure (tests/benches want loud
+/// failures).
+pub fn run_verified(
+    id: BenchId,
+    n: u32,
+    gpgpu: &Gpgpu,
+    alu: &mut dyn AluBackend,
+    seed: u64,
+) -> Result<BenchRun, SimError> {
+    let w = prepare(id, n, seed);
+    let mut gmem = w.make_gmem();
+    let run = w.run(gpgpu, &mut gmem, alu)?;
+    if let Err(e) = w.verify(&gmem) {
+        panic!("verification failed: {e}");
+    }
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpgpu::GpgpuConfig;
+    use crate::sim::NativeAlu;
+
+    fn run(id: BenchId, n: u32, sms: u32, sp: u32) -> BenchRun {
+        let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, sp));
+        let mut alu = NativeAlu;
+        run_verified(id, n, &gpgpu, &mut alu, 0xF00D).unwrap()
+    }
+
+    #[test]
+    fn all_benchmarks_assemble() {
+        for id in BenchId::ALL {
+            let k = assemble(id.source()).unwrap();
+            assert_eq!(k.name, id.name(), "entry name matches");
+            assert!(k.regs_per_thread <= 16);
+        }
+    }
+
+    #[test]
+    fn vecadd_32_correct() {
+        let r = run(BenchId::VecAdd, 32, 1, 8);
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn autocorr_32_correct() {
+        let r = run(BenchId::Autocorr, 32, 1, 8);
+        // divergent loop exits must be observed
+        assert!(r.stats.divergences > 0, "autocorr must diverge");
+    }
+
+    #[test]
+    fn autocorr_stack_depth_is_paper_16() {
+        let r = run(BenchId::Autocorr, 64, 1, 8);
+        assert_eq!(r.stats.max_stack_depth, 16, "Table 6: autocorr depth 16");
+    }
+
+    #[test]
+    fn bitonic_64_correct_depth_2() {
+        let r = run(BenchId::Bitonic, 64, 1, 8);
+        assert_eq!(r.stats.max_stack_depth, 2, "Table 6: bitonic depth 2");
+        assert!(r.stats.divergences > 0);
+    }
+
+    #[test]
+    fn bitonic_needs_no_multiplier() {
+        let r = run(BenchId::Bitonic, 64, 1, 8);
+        assert_eq!(r.stats.multiplier_ops(), 0, "paper §5.2");
+    }
+
+    #[test]
+    fn matmul_32_correct_depth_0() {
+        let r = run(BenchId::MatMul, 32, 1, 8);
+        assert_eq!(r.stats.max_stack_depth, 0, "Table 6: matmul depth 0");
+        assert_eq!(r.stats.divergences, 0);
+    }
+
+    #[test]
+    fn reduction_two_phase_correct() {
+        let r = run(BenchId::Reduction, 256, 1, 8);
+        assert_eq!(r.phases.len(), 2, "256 elements need a partials pass");
+        assert_eq!(r.stats.max_stack_depth, 0, "Table 6: reduction depth 0");
+    }
+
+    #[test]
+    fn reduction_single_phase_small() {
+        let r = run(BenchId::Reduction, 32, 1, 8);
+        assert_eq!(r.phases.len(), 1);
+    }
+
+    #[test]
+    fn transpose_32_correct_depth_0() {
+        let r = run(BenchId::Transpose, 32, 1, 8);
+        assert_eq!(r.stats.max_stack_depth, 0, "Table 6: transpose depth 0");
+    }
+
+    #[test]
+    fn all_benchmarks_verify_on_two_sms() {
+        for id in BenchId::PAPER {
+            let r = run(id, 64, 2, 16);
+            assert!(r.cycles > 0, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn seeds_change_data_not_correctness() {
+        for seed in [1u64, 2, 3] {
+            let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 32));
+            let mut alu = NativeAlu;
+            run_verified(BenchId::Bitonic, 128, &gpgpu, &mut alu, seed).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn bad_size_rejected() {
+        prepare(BenchId::VecAdd, 48, 0);
+    }
+}

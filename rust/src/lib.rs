@@ -1,0 +1,32 @@
+//! # FlexGrip-RS
+//!
+//! A production-grade reproduction of *"Soft GPGPUs for Embedded FPGAs:
+//! An Architectural Evaluation"* (Andryc, Thomas, Tessier, 2016) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the soft-GPGPU architecture itself: a
+//!   cycle-driven simulator of the FlexGrip streaming multiprocessor
+//!   (5-stage pipeline, warp unit, divergence stack), the multi-SM block
+//!   scheduler, the MicroBlaze-class scalar baseline, calibrated
+//!   area/power/energy models, and the evaluation harness that
+//!   regenerates every table and figure in the paper.
+//! * **L2/L1 (python/, build-time only)** — the SIMT execute stage
+//!   expressed as a JAX graph calling a Pallas warp-ALU kernel, AOT-lowered
+//!   to HLO text artifacts which this crate loads and runs through the
+//!   PJRT CPU client (`runtime`), plus XLA-executed golden models for the
+//!   five paper benchmarks.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod asm;
+pub mod baseline;
+pub mod coordinator;
+pub mod gpgpu;
+pub mod harness;
+pub mod kernels;
+pub mod model;
+pub mod runtime;
+pub mod rng;
+pub mod sim;
+pub mod isa;

@@ -1,0 +1,284 @@
+//! `flexgrip` — the leader binary: CLI over the soft-GPGPU coordinator.
+//!
+//! Subcommands (clap is unavailable offline; parsing is hand-rolled):
+//!   run        run one benchmark on a chosen configuration
+//!   report     regenerate the paper's tables and figures
+//!   customize  profile a benchmark and print its minimal configuration
+//!   limits     print the Table-1 physical limits
+//!   asm        assemble a .flex file and dump the binary layout
+
+use flexgrip::coordinator::{self, GpgpuService, Request};
+use flexgrip::gpgpu::GpgpuConfig;
+use flexgrip::harness::{tables, Evaluation};
+use flexgrip::kernels::{self, BenchId};
+use flexgrip::model::{area::area, power::power, ArchParams};
+use flexgrip::runtime::{Artifacts, XlaAlu};
+use flexgrip::sim::NativeAlu;
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  \
+         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla]\n  \
+         flexgrip report [--all] [--table 1..6] [--fig 4|5] [--sweep] [--size 256]\n  \
+         flexgrip customize --bench <name> [--n 64]\n  \
+         flexgrip limits\n  \
+         flexgrip asm --file <kernel.flex>\n\n\
+         benchmarks: autocorr bitonic matmul reduction transpose vecadd"
+    );
+    std::process::exit(2);
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
+            match val {
+                Some(v) => {
+                    out.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                None => {
+                    out.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            }
+        } else {
+            eprintln!("unexpected argument `{a}`");
+            usage();
+        }
+    }
+    out
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    match flags.get(key) {
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!("bad value for --{key}: {v}");
+            std::process::exit(2);
+        }),
+        None => default,
+    }
+}
+
+fn bench_id(flags: &HashMap<String, String>) -> BenchId {
+    let name = flags.get("bench").unwrap_or_else(|| usage());
+    BenchId::from_name(name).unwrap_or_else(|| {
+        eprintln!("unknown benchmark `{name}`");
+        usage();
+    })
+}
+
+fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
+    let id = bench_id(&flags);
+    let n: u32 = get(&flags, "n", 256);
+    let sms: u32 = get(&flags, "sms", 1);
+    let sp: u32 = get(&flags, "sp", 8);
+    let seed: u64 = get(&flags, "seed", flexgrip::harness::eval::EVAL_SEED);
+    let backend = flags.get("backend").map(String::as_str).unwrap_or("native");
+
+    let cfg = GpgpuConfig::new(sms, sp);
+    let gpgpu = flexgrip::gpgpu::Gpgpu::new(cfg);
+    let w = kernels::prepare(id, n, seed);
+    let mut gmem = w.make_gmem();
+    let run = match backend {
+        "native" => {
+            let mut alu = NativeAlu;
+            w.run(&gpgpu, &mut gmem, &mut alu)
+        }
+        "xla" => {
+            let arts = std::sync::Arc::new(
+                Artifacts::open_default().expect("run `make artifacts` first"),
+            );
+            let mut alu = XlaAlu::new(arts).expect("warp_alu artifact");
+            w.run(&gpgpu, &mut gmem, &mut alu)
+        }
+        other => {
+            eprintln!("unknown backend `{other}`");
+            usage();
+        }
+    };
+    let run = match run {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("launch failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match w.verify(&gmem) {
+        Ok(()) => println!("verification: OK (host golden reference)"),
+        Err(e) => {
+            eprintln!("verification FAILED: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    let s = &run.stats;
+    println!(
+        "{} n={n} on {} [{backend}]: {} cycles = {:.3} ms @100MHz",
+        id.name(),
+        cfg.label(),
+        run.cycles,
+        run.exec_time_ms()
+    );
+    println!(
+        "  warp instrs {}  thread instrs {}  divergences {}  max stack {}  blocks {}",
+        s.instructions, s.thread_instructions, s.divergences, s.max_stack_depth, s.blocks
+    );
+    println!(
+        "  global txns {}/{}  shared txns {}/{}  barriers {}",
+        s.global_load_txns, s.global_store_txns, s.shared_load_txns, s.shared_store_txns,
+        s.barriers
+    );
+    let p = power(&ArchParams::from_config(&cfg));
+    println!(
+        "  model: {:.2} W dynamic -> {:.2} mJ dynamic energy",
+        p.dynamic_w,
+        p.dynamic_w * run.exec_time_ms()
+    );
+    ExitCode::SUCCESS
+}
+
+fn cmd_report(flags: HashMap<String, String>) -> ExitCode {
+    let size: u32 = get(&flags, "size", 256);
+    let all = flags.contains_key("all") || flags.len() <= 1;
+    let mut ev = Evaluation::new(size);
+
+    let want_table = |n: u32| all || flags.get("table").is_some_and(|v| v.parse() == Ok(n));
+    let want_fig = |n: u32| all || flags.get("fig").is_some_and(|v| v.parse() == Ok(n));
+
+    if want_table(1) {
+        println!("{}", tables::table1().render());
+    }
+    if want_table(2) {
+        println!("{}", tables::table2().render());
+    }
+    if want_table(3) {
+        println!("{}", tables::table3(&mut ev).render());
+    }
+    if want_table(4) {
+        println!("{}", tables::table4().render());
+    }
+    if want_table(5) {
+        println!("{}", tables::table5(&mut ev).render());
+    }
+    if want_table(6) {
+        println!("{}", tables::table6(&mut ev).render());
+    }
+    if want_fig(4) {
+        println!("{}", tables::fig4(&mut ev).render());
+    }
+    if want_fig(5) {
+        println!("{}", tables::fig5(&mut ev).render());
+    }
+    if all || flags.contains_key("sweep") {
+        println!("{}", tables::sweep(&kernels::PAPER_SIZES).render());
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_customize(flags: HashMap<String, String>) -> ExitCode {
+    let id = bench_id(&flags);
+    let n: u32 = get(&flags, "n", 64);
+    let seed: u64 = get(&flags, "seed", flexgrip::harness::eval::EVAL_SEED);
+    let r = match coordinator::profile(id, n, seed) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("profiling failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("customization report: {} (n={n})", id.name());
+    println!(
+        "  static analysis: multiplier={} third-operand={} branches={} ({} instrs)",
+        r.analysis.uses_multiplier,
+        r.analysis.uses_third_operand,
+        r.analysis.uses_branches,
+        r.analysis.instruction_count
+    );
+    println!(
+        "  profiled: warp-stack high-water {}  dynamic mul/mad ops {}",
+        r.measured_stack_depth, r.multiplier_ops
+    );
+    println!("  recommended: {}", r.recommended.label());
+    let a = area(&r.recommended);
+    println!(
+        "  model: {} LUTs / {} DSP ({:.0}% LUT reduction), {:.0}% dynamic power reduction",
+        a.luts, a.dsp, r.lut_reduction_pct, r.dynamic_power_reduction_pct
+    );
+    match coordinator::customize::validate(&r, seed) {
+        Ok(()) => println!("  validation: benchmark verified on the customized configuration"),
+        Err(e) => {
+            eprintln!("  validation FAILED: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_asm(flags: HashMap<String, String>) -> ExitCode {
+    let path = flags.get("file").unwrap_or_else(|| usage());
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match flexgrip::asm::assemble(&src) {
+        Ok(k) => {
+            println!(
+                ".entry {}  ({} bytes, {} instructions, {} regs/thread, {} smem bytes)",
+                k.name,
+                k.code.len(),
+                k.instrs.len(),
+                k.regs_per_thread,
+                k.smem_bytes
+            );
+            println!("{}", flexgrip::isa::disassemble_listing(&k.instrs));
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("assembly error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => usage(),
+    };
+    match cmd {
+        "run" => cmd_run(parse_flags(&rest)),
+        "report" => cmd_report(parse_flags(&rest)),
+        "customize" => cmd_customize(parse_flags(&rest)),
+        "limits" => {
+            println!("{}", tables::table1().render());
+            ExitCode::SUCCESS
+        }
+        "asm" => cmd_asm(parse_flags(&rest)),
+        "service-demo" => {
+            // Minimal coordinator smoke: submit two jobs through the
+            // service API and print metrics.
+            let svc = GpgpuService::start(GpgpuConfig::new(1, 8));
+            let t1 = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 64, seed: 1 });
+            let t2 = svc.submit(Request::Bench { id: BenchId::Reduction, n: 64, seed: 1 });
+            for t in [t1, t2] {
+                match t.wait() {
+                    Ok(o) => println!("{}: {} cycles, verified={}", o.label, o.cycles, o.verified),
+                    Err(e) => eprintln!("job failed: {e}"),
+                }
+            }
+            let m = svc.metrics();
+            println!("service metrics: {m:?}");
+            ExitCode::SUCCESS
+        }
+        _ => usage(),
+    }
+}

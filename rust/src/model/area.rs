@@ -1,0 +1,245 @@
+//! FPGA area model (Virtex-6 VLX240T, Xilinx ISE 14.2 synthesis).
+//!
+//! Calibration (paper Table 2, baseline depth-32 MAD-capable designs):
+//!
+//! | config      | LUTs    | FFs     | BRAM | DSP48E |
+//! |-------------|---------|---------|------|--------|
+//! | 1 SM - 8 SP | 60,375  | 103,776 | 124  | 156    |
+//! | 1 SM - 16 SP| 113,504 | 149,297 | 132  | 300    |
+//! | 1 SM - 32 SP| 231,436 | 240,230 | 156  | 588    |
+//! | 2 SM - 8 SP | 135,392 | 196,063 | 238  | 306    |
+//! | 2 SM - 16 SP| 232,064 | 287,042 | 262  | 594    |
+//! | 2 SM - 32 SP| 413,094 | 468,959 | 310  | 1,170  |
+//!
+//! DSP48Es follow `n_sm * (12 + 18*sp) - 6*(n_sm - 1)` *exactly* (the 12
+//! is the paper's "12 DSP blocks ... used for address calculation in the
+//! FlexGrip control circuitry"). LUT/FF/BRAM use the calibration table at
+//! the published points and interpolate elsewhere.
+//!
+//! Customization deltas come from Table 6 (1 SM, 8 SP):
+//! * warp stack: linear, (60,375 - 42,536)/32 ≈ 557 LUTs and
+//!   (103,776 - 60,161)/32 ≈ 1,363 FFs per stack entry per SM;
+//! * multiplier + third read operand (bitonic 3-op → 2-op rows):
+//!   −16,252 LUTs, −30,165 FFs, −4 BRAM, −18·SP DSPs at 8 SP, scaled
+//!   per SP.
+//!
+//! Known paper inconsistency, reproduced as-is: Table 6 lists bitonic at
+//! depth 2 with *fewer* LUTs (39,189) than the depth-0 rows (42,536). A
+//! monotonic component model cannot hit both; we stay linear in depth and
+//! accept ~11% error on that one row (asserted in the calibration tests).
+
+use super::ArchParams;
+
+/// Paper §5.1: MicroBlaze baseline footprint.
+pub const MICROBLAZE_LUTS: u32 = 3252;
+
+/// FPGA resource usage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Area {
+    pub luts: u32,
+    pub ffs: u32,
+    pub bram: u32,
+    pub dsp: u32,
+}
+
+impl Area {
+    /// LUT reduction vs. another (baseline) area, in percent.
+    pub fn lut_reduction_pct(&self, baseline: &Area) -> f64 {
+        100.0 * (1.0 - self.luts as f64 / baseline.luts as f64)
+    }
+}
+
+/// Table 2 calibration rows: (sp, luts, ffs, bram) for one SM including
+/// its share of the top-level control.
+const SM1: [(u32, u32, u32, u32); 3] =
+    [(8, 60_375, 103_776, 124), (16, 113_504, 149_297, 132), (32, 231_436, 240_230, 156)];
+/// Two-SM totals at the same SP counts.
+const SM2: [(u32, u32, u32, u32); 3] =
+    [(8, 135_392, 196_063, 238), (16, 232_064, 287_042, 262), (32, 413_094, 468_959, 310)];
+
+/// Per-stack-entry LUT/FF cost per SM (Table 6 derivation).
+const LUT_PER_STACK_ENTRY: f64 = (60_375.0 - 42_536.0) / 32.0;
+const FF_PER_STACK_ENTRY: f64 = (103_776.0 - 60_161.0) / 32.0;
+/// Multiplier + third-operand removal at 8 SP (Table 6 bitonic rows),
+/// scaled per SP.
+const LUT_PER_MUL_SP: f64 = (39_189.0 - 22_937.0) / 8.0;
+const FF_PER_MUL_SP: f64 = (57_301.0 - 27_136.0) / 8.0;
+const BRAM_MUL_REMOVAL: u32 = 4;
+
+fn interp(table: &[(u32, u32, u32, u32); 3], sp: u32, field: fn(&(u32, u32, u32, u32)) -> u32) -> f64 {
+    // Exact at table points, linear between / beyond.
+    let pts: Vec<(f64, f64)> =
+        table.iter().map(|row| (row.0 as f64, field(row) as f64)).collect();
+    let x = sp as f64;
+    if x <= pts[1].0 {
+        let (x0, y0) = pts[0];
+        let (x1, y1) = pts[1];
+        y0 + (y1 - y0) * (x - x0) / (x1 - x0)
+    } else {
+        let (x0, y0) = pts[1];
+        let (x1, y1) = pts[2];
+        y0 + (y1 - y0) * (x - x0) / (x1 - x0)
+    }
+}
+
+/// Estimate the FPGA area of a FlexGrip configuration.
+pub fn area(p: &ArchParams) -> Area {
+    assert!(matches!(p.num_sp, 8 | 16 | 32), "calibrated for 8/16/32 SP");
+    // Baseline (depth 32, with multiplier) at the requested SM/SP point.
+    let (mut luts, mut ffs, mut bram) = match p.num_sms {
+        1 => (
+            interp(&SM1, p.num_sp, |r| r.1),
+            interp(&SM1, p.num_sp, |r| r.2),
+            interp(&SM1, p.num_sp, |r| r.3),
+        ),
+        2 => (
+            interp(&SM2, p.num_sp, |r| r.1),
+            interp(&SM2, p.num_sp, |r| r.2),
+            interp(&SM2, p.num_sp, |r| r.3),
+        ),
+        n => {
+            // Beyond the paper's evaluation: replicate the marginal cost of
+            // the second SM.
+            let one = (
+                interp(&SM1, p.num_sp, |r| r.1),
+                interp(&SM1, p.num_sp, |r| r.2),
+                interp(&SM1, p.num_sp, |r| r.3),
+            );
+            let two = (
+                interp(&SM2, p.num_sp, |r| r.1),
+                interp(&SM2, p.num_sp, |r| r.2),
+                interp(&SM2, p.num_sp, |r| r.3),
+            );
+            let k = (n - 2) as f64;
+            (
+                two.0 + k * (two.0 - one.0),
+                two.1 + k * (two.1 - one.1),
+                two.2 + k * (two.2 - one.2),
+            )
+        }
+    };
+
+    // Customizations scale per SM.
+    let sms = p.num_sms as f64;
+    let removed_entries = (32 - p.warp_stack_depth) as f64;
+    luts -= sms * removed_entries * LUT_PER_STACK_ENTRY;
+    ffs -= sms * removed_entries * FF_PER_STACK_ENTRY;
+    if !p.has_multiplier {
+        luts -= sms * p.num_sp as f64 * LUT_PER_MUL_SP;
+        ffs -= sms * p.num_sp as f64 * FF_PER_MUL_SP;
+        bram -= sms * BRAM_MUL_REMOVAL as f64;
+    }
+
+    // DSP48E closed form (exact on all Table 2 points + Table 6 rows).
+    let dsp_per_sm = 12 + if p.has_multiplier { 18 * p.num_sp } else { 0 };
+    let dsp = p.num_sms * dsp_per_sm - 6 * (p.num_sms - 1);
+
+    Area { luts: luts.round() as u32, ffs: ffs.round() as u32, bram: bram.round() as u32, dsp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(sms: u32, sp: u32) -> ArchParams {
+        ArchParams { num_sms: sms, num_sp: sp, warp_stack_depth: 32, has_multiplier: true }
+    }
+
+    #[test]
+    fn table2_exact_at_calibration_points() {
+        for (rows, sms) in [(SM1, 1u32), (SM2, 2u32)] {
+            for (sp, luts, ffs, bram) in rows {
+                let a = area(&params(sms, sp));
+                assert_eq!(a.luts, luts, "{sms} SM {sp} SP LUTs");
+                assert_eq!(a.ffs, ffs, "{sms} SM {sp} SP FFs");
+                assert_eq!(a.bram, bram, "{sms} SM {sp} SP BRAM");
+            }
+        }
+    }
+
+    #[test]
+    fn dsp_closed_form_matches_table2() {
+        for (sms, sp, want) in [
+            (1u32, 8u32, 156u32), (1, 16, 300), (1, 32, 588),
+            (2, 8, 306), (2, 16, 594), (2, 32, 1170),
+        ] {
+            assert_eq!(area(&params(sms, sp)).dsp, want, "{sms} SM {sp} SP");
+        }
+    }
+
+    #[test]
+    fn table6_stack_rows_within_tolerance() {
+        // (depth, paper LUTs, paper FFs, tolerance %)
+        for (depth, luts, ffs, tol) in [
+            (16u32, 52_121u32, 82_017u32, 2.0),
+            (0, 42_536, 60_161, 0.5),
+            (2, 39_189, 57_301, 12.0), // the paper's non-monotonic row
+        ] {
+            let mut p = params(1, 8);
+            p.warp_stack_depth = depth;
+            let a = area(&p);
+            let lut_err = 100.0 * (a.luts as f64 - luts as f64).abs() / luts as f64;
+            let ff_err = 100.0 * (a.ffs as f64 - ffs as f64).abs() / ffs as f64;
+            assert!(lut_err <= tol, "depth {depth}: LUT err {lut_err:.1}% > {tol}%");
+            assert!(ff_err <= tol + 5.0, "depth {depth}: FF err {ff_err:.1}%");
+        }
+    }
+
+    #[test]
+    fn table6_no_multiplier_row() {
+        // Bitonic 2-operand row: 22,937 LUTs / 27,136 FFs / 120 BRAM / 12 DSP.
+        let p = ArchParams {
+            num_sms: 1,
+            num_sp: 8,
+            warp_stack_depth: 2,
+            has_multiplier: false,
+        };
+        let a = area(&p);
+        assert_eq!(a.dsp, 12, "only the address-calculation DSPs remain");
+        assert_eq!(a.bram, 120);
+        // The absolute LUT count inherits the paper's non-monotonic
+        // depth-2 anomaly (see module docs); the *multiplier-removal
+        // delta* itself is exact (16,252 LUTs), so the row lands within
+        // ~20% while every monotonic row is within 2%.
+        let err = 100.0 * (a.luts as f64 - 22_937.0).abs() / 22_937.0;
+        assert!(err < 20.0, "no-mul LUT err {err:.1}%");
+        let delta = area(&ArchParams { has_multiplier: true, ..p }).luts - a.luts;
+        assert_eq!(delta, 39_189 - 22_937, "mul-removal delta is exact");
+    }
+
+    #[test]
+    fn area_monotonic_in_every_axis() {
+        let base = area(&params(1, 8));
+        assert!(area(&params(1, 16)).luts > base.luts);
+        assert!(area(&params(2, 8)).luts > base.luts);
+        let mut shallow = params(1, 8);
+        shallow.warp_stack_depth = 4;
+        assert!(area(&shallow).luts < base.luts);
+        let mut nomul = shallow;
+        nomul.has_multiplier = false;
+        assert!(area(&nomul).luts < area(&shallow).luts);
+    }
+
+    #[test]
+    fn lut_reduction_pct_sanity() {
+        // Paper conclusion: customization reduces LUT area by 33% on
+        // average, up to 62% (bitonic no-mul).
+        let base = area(&params(1, 8));
+        let nomul = area(&ArchParams {
+            num_sms: 1,
+            num_sp: 8,
+            warp_stack_depth: 2,
+            has_multiplier: false,
+        });
+        let red = nomul.lut_reduction_pct(&base);
+        assert!((50.0..70.0).contains(&red), "bitonic-style reduction {red:.0}%");
+    }
+
+    #[test]
+    fn extrapolates_beyond_two_sms() {
+        let a2 = area(&params(2, 8));
+        let a4 = area(&params(4, 8));
+        assert!(a4.luts > a2.luts);
+        assert_eq!(a4.dsp, 4 * 156 - 18);
+    }
+}

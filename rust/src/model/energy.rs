@@ -1,0 +1,49 @@
+//! Energy model — the paper's §5.1.2 methodology verbatim: "Since static
+//! power is largely a function of the device size, we evaluate the dynamic
+//! energy consumption ... determined by multiplying dynamic power by
+//! application execution time." Table 5's numbers check out exactly under
+//! this formula (e.g. autocorr 8 SP: 40.28 ms x 0.84 W = 33.84 mJ).
+
+/// Dynamic energy in millijoules: `P_dyn [W] x t [ms]`.
+pub fn dynamic_energy_mj(dynamic_w: f64, exec_time_ms: f64) -> f64 {
+    dynamic_w * exec_time_ms
+}
+
+/// Percentage energy reduction of `ours` vs a `baseline` (Table 5's
+/// "Ene. Red." column).
+pub fn energy_reduction_pct(baseline_mj: f64, ours_mj: f64) -> f64 {
+    100.0 * (1.0 - ours_mj / baseline_mj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table5_rows_check_out() {
+        // Verify the paper's own arithmetic (MicroBlaze dyn = 0.37 W,
+        // FlexGrip 8 SP dyn = 0.84 W).
+        // Autocorr: MB 277 ms -> 102.49 mJ; FG 40.28 ms -> 33.84 mJ, 67%.
+        let mb = dynamic_energy_mj(0.37, 277.0);
+        assert!((mb - 102.49).abs() < 0.01);
+        let fg = dynamic_energy_mj(0.84, 40.28);
+        assert!((fg - 33.84).abs() < 0.01);
+        let red = energy_reduction_pct(mb, fg);
+        assert!((red - 67.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn reduction_of_equal_is_zero() {
+        assert_eq!(energy_reduction_pct(10.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn bitonic_row_checks_out() {
+        // Bitonic: MB 118 ms -> 43.66 mJ; FG 16 SP 5.95 ms x 1.08 = 6.43, 85%.
+        let mb = dynamic_energy_mj(0.37, 118.0);
+        assert!((mb - 43.66).abs() < 0.01);
+        let fg = dynamic_energy_mj(1.08, 5.95);
+        assert!((fg - 6.43).abs() < 0.01);
+        assert!((energy_reduction_pct(mb, fg) - 85.0).abs() < 0.5);
+    }
+}

@@ -1,0 +1,54 @@
+//! FPGA implementation models: area (LUT/FF/BRAM/DSP), dynamic/static
+//! power, and energy — the quantities Xilinx ISE and XPower produced for
+//! the paper (Tables 2, 4, 5, 6). Component-based, calibrated to the
+//! paper's published points; every calibration point is asserted in
+//! `rust/tests/models_calibration.rs`.
+
+pub mod area;
+pub mod energy;
+pub mod power;
+
+pub use area::{Area, MICROBLAZE_LUTS};
+pub use energy::{dynamic_energy_mj, energy_reduction_pct};
+pub use power::{PowerEstimate, MICROBLAZE_DYNAMIC_W, MICROBLAZE_STATIC_W};
+
+use crate::gpgpu::GpgpuConfig;
+
+/// The architectural parameters the implementation models depend on —
+/// exactly the paper's customization axes (§4, §5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArchParams {
+    pub num_sms: u32,
+    pub num_sp: u32,
+    /// Warp-stack depth 0..=32 (Table 6).
+    pub warp_stack_depth: u32,
+    /// Multiplier + third read-operand unit present (§4.2).
+    pub has_multiplier: bool,
+}
+
+impl ArchParams {
+    /// The paper's baseline FlexGrip (Table 2 row 1).
+    pub fn baseline() -> ArchParams {
+        ArchParams { num_sms: 1, num_sp: 8, warp_stack_depth: 32, has_multiplier: true }
+    }
+
+    pub fn from_config(cfg: &GpgpuConfig) -> ArchParams {
+        ArchParams {
+            num_sms: cfg.num_sms,
+            num_sp: cfg.sm.num_sp,
+            warp_stack_depth: cfg.sm.warp_stack_depth,
+            has_multiplier: cfg.sm.has_multiplier,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = format!("{} SM - {} SP", self.num_sms, self.num_sp);
+        if self.warp_stack_depth != 32 {
+            s += &format!(", stack {}", self.warp_stack_depth);
+        }
+        if !self.has_multiplier {
+            s += ", no mul";
+        }
+        s
+    }
+}

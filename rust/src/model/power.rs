@@ -1,0 +1,141 @@
+//! Power model (Xilinx XPower methodology, 100 MHz).
+//!
+//! Calibration (paper Table 4):
+//!
+//! | design       | dynamic (W) | static (W) |
+//! |--------------|-------------|------------|
+//! | 1 SM, 8 SP   | 0.84        | 3.45       |
+//! | 1 SM, 16 SP  | 1.08        | 3.46       |
+//! | 1 SM, 32 SP  | 1.39        | 3.46       |
+//! | MicroBlaze   | 0.37        | 3.45       |
+//!
+//! Customization effects come from Table 6's "% Dyn. Red." column for the
+//! 1 SM / 8 SP system: removing the full 32-entry warp stack saves ~9% of
+//! baseline dynamic power; removing the multiplier + third read operand
+//! saves a further ~23 percentage points (the paper's §5.2 text), scaled
+//! per SP.
+
+use super::ArchParams;
+
+/// Paper Table 4, MicroBlaze row.
+pub const MICROBLAZE_DYNAMIC_W: f64 = 0.37;
+pub const MICROBLAZE_STATIC_W: f64 = 3.45;
+
+/// Dynamic-power calibration points for one SM (full stack, multiplier).
+const SM1_DYN: [(u32, f64); 3] = [(8, 0.84), (16, 1.08), (32, 1.39)];
+/// Top-level (block scheduler + AXI + clocking) share of the 1-SM number;
+/// the remainder replicates per SM.
+const TOP_LEVEL_W: f64 = 0.20;
+
+/// Warp-stack dynamic power at full depth, as a fraction of the 1 SM/8 SP
+/// baseline (Table 6 depth-0 rows: 9% reduction).
+const STACK_FULL_FRACTION: f64 = 0.09;
+/// Multiplier + third-operand dynamic power, fraction of baseline per
+/// 8 SP (Table 6 / §5.2: 38% − 15% = 23 points at 8 SP).
+const MUL_FRACTION_8SP: f64 = 0.23;
+const BASE_8SP_W: f64 = 0.84;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerEstimate {
+    pub dynamic_w: f64,
+    pub static_w: f64,
+}
+
+impl PowerEstimate {
+    pub fn total_w(&self) -> f64 {
+        self.dynamic_w + self.static_w
+    }
+}
+
+fn sm_dyn_baseline(sp: u32) -> f64 {
+    // Exact at the calibration points, linear between/beyond.
+    let pts = SM1_DYN;
+    let x = sp as f64;
+    let seg = if x <= pts[1].0 as f64 { (pts[0], pts[1]) } else { (pts[1], pts[2]) };
+    let ((x0, y0), (x1, y1)) = ((seg.0 .0 as f64, seg.0 .1), (seg.1 .0 as f64, seg.1 .1));
+    y0 + (y1 - y0) * (x - x0) / (x1 - x0)
+}
+
+/// Dynamic + static power estimate for a FlexGrip configuration.
+pub fn power(p: &ArchParams) -> PowerEstimate {
+    let per_sm_full = sm_dyn_baseline(p.num_sp) - TOP_LEVEL_W;
+
+    // Customization deltas, per SM.
+    let stack_w = STACK_FULL_FRACTION * BASE_8SP_W * (p.warp_stack_depth as f64 / 32.0)
+        - STACK_FULL_FRACTION * BASE_8SP_W; // relative to full depth
+    let mul_w = if p.has_multiplier {
+        0.0
+    } else {
+        -MUL_FRACTION_8SP * BASE_8SP_W * (p.num_sp as f64 / 8.0)
+    };
+
+    let dynamic_w = TOP_LEVEL_W + p.num_sms as f64 * (per_sm_full + stack_w + mul_w);
+    // Static power is a device property, essentially flat (Table 4).
+    let static_w = if p.num_sp >= 16 || p.num_sms >= 2 { 3.46 } else { 3.45 };
+    PowerEstimate { dynamic_w: dynamic_w.max(0.05), static_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(sp: u32) -> ArchParams {
+        ArchParams { num_sms: 1, num_sp: sp, warp_stack_depth: 32, has_multiplier: true }
+    }
+
+    #[test]
+    fn table4_exact_at_calibration_points() {
+        for (sp, want) in SM1_DYN {
+            let got = power(&base(sp)).dynamic_w;
+            assert!((got - want).abs() < 1e-9, "{sp} SP: {got} != {want}");
+        }
+        assert_eq!(power(&base(8)).static_w, 3.45);
+        assert_eq!(power(&base(16)).static_w, 3.46);
+    }
+
+    #[test]
+    fn table6_stack_reductions_in_band() {
+        // depth 16 -> paper 3%; depth 0 -> paper 9%.
+        let b = power(&base(8)).dynamic_w;
+        let mut p = base(8);
+        p.warp_stack_depth = 16;
+        let red16 = 100.0 * (1.0 - power(&p).dynamic_w / b);
+        assert!((2.0..6.0).contains(&red16), "depth 16: {red16:.1}%");
+        p.warp_stack_depth = 0;
+        let red0 = 100.0 * (1.0 - power(&p).dynamic_w / b);
+        assert!((red0 - 9.0).abs() < 0.5, "depth 0: {red0:.1}%");
+    }
+
+    #[test]
+    fn table6_no_multiplier_reduction() {
+        // Bitonic 2-op row: 38% total vs baseline (stack 2 + no mul).
+        let b = power(&base(8)).dynamic_w;
+        let p = ArchParams {
+            num_sms: 1,
+            num_sp: 8,
+            warp_stack_depth: 2,
+            has_multiplier: false,
+        };
+        let red = 100.0 * (1.0 - power(&p).dynamic_w / b);
+        assert!((28.0..42.0).contains(&red), "no-mul total reduction {red:.1}%");
+    }
+
+    #[test]
+    fn two_sm_power_exceeds_one_sm() {
+        let one = power(&base(8)).dynamic_w;
+        let two = power(&ArchParams { num_sms: 2, ..base(8) }).dynamic_w;
+        assert!(two > 1.4 * one && two < 2.0 * one, "2 SM = {two:.2} W");
+    }
+
+    #[test]
+    fn power_monotonic_in_sp() {
+        assert!(power(&base(16)).dynamic_w > power(&base(8)).dynamic_w);
+        assert!(power(&base(32)).dynamic_w > power(&base(16)).dynamic_w);
+    }
+
+    #[test]
+    fn microblaze_constants_match_table4() {
+        assert_eq!(MICROBLAZE_DYNAMIC_W, 0.37);
+        assert_eq!(MICROBLAZE_STATIC_W, 3.45);
+    }
+}

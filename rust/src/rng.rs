@@ -1,0 +1,85 @@
+//! Deterministic xorshift64* PRNG — used for benchmark data generation and
+//! randomized property tests (the image has no `rand` crate; determinism
+//! is a feature here: every experiment in EXPERIMENTS.md is reproducible
+//! from its seed).
+
+/// xorshift64* (Vigna). Not cryptographic; plenty for workload synthesis.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> XorShift64 {
+        // Avoid the all-zero fixed point.
+        XorShift64 { state: seed.wrapping_mul(2685821657736338717).max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, bound)`.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        self.next_u64() % bound.max(1)
+    }
+
+    /// Small signed values for integer benchmark inputs.
+    #[inline]
+    pub fn small_i32(&mut self) -> i32 {
+        (self.below(201) as i32) - 100
+    }
+
+    /// Uniform in `[lo, hi]`.
+    #[inline]
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn small_values_bounded() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..1000 {
+            let v = r.small_i32();
+            assert!((-100..=100).contains(&v));
+        }
+    }
+
+    #[test]
+    fn zero_seed_not_stuck() {
+        let mut r = XorShift64::new(0);
+        assert_ne!(r.next_u64(), r.next_u64());
+    }
+}

@@ -1,0 +1,67 @@
+//! XLA-executed golden models: the JAX/Pallas benchmark references
+//! (`python/compile/kernels/bench_refs.py`), AOT-lowered and run through
+//! PJRT. The end-to-end examples use these to cross-check the soft
+//! GPGPU's output against an entirely independent compute stack —
+//! assembler + simulator + native ALU on one side, JAX + Pallas + XLA on
+//! the other.
+
+use super::{Artifacts, RuntimeError};
+use crate::kernels::BenchId;
+
+/// Compute the golden output of `bench` at size `n` via the AOT artifact.
+///
+/// `input` uses the same layout as `kernels::Workload::input` (matmul:
+/// A then B; vecadd: a then b; otherwise the single array).
+pub fn golden_output(
+    arts: &Artifacts,
+    bench: BenchId,
+    n: u32,
+    input: &[i32],
+) -> Result<Vec<i32>, RuntimeError> {
+    let name = format!("bench_{}_n{}", bench.name(), n);
+    let nn = (n * n) as usize;
+    let nu = n as usize;
+    match bench {
+        BenchId::MatMul => arts.run_i32(
+            &name,
+            &[(&input[..nn], &[nu, nu]), (&input[nn..], &[nu, nu])],
+        ),
+        BenchId::Transpose => arts.run_i32(&name, &[(input, &[nu, nu])]),
+        BenchId::VecAdd => arts.run_i32(
+            &name,
+            &[(&input[..nu], &[nu]), (&input[nu..], &[nu])],
+        ),
+        BenchId::Autocorr | BenchId::Reduction | BenchId::Bitonic => {
+            arts.run_i32(&name, &[(input, &[nu])])
+        }
+    }
+}
+
+/// Cross-check a workload's expected output against the XLA golden model.
+/// Returns `Ok(len)` (elements compared) on agreement.
+pub fn crosscheck(
+    arts: &Artifacts,
+    bench: BenchId,
+    n: u32,
+    input: &[i32],
+    expected: &[i32],
+) -> Result<usize, String> {
+    let got = golden_output(arts, bench, n, input).map_err(|e| e.to_string())?;
+    if got.len() != expected.len() {
+        return Err(format!(
+            "{} n={n}: XLA golden returned {} elements, host golden {}",
+            bench.name(),
+            got.len(),
+            expected.len()
+        ));
+    }
+    if let Some(i) = got.iter().zip(expected).position(|(a, b)| a != b) {
+        return Err(format!(
+            "{} n={n}: XLA golden diverges from host golden at {i}: {} vs {}",
+            bench.name(),
+            got[i],
+            expected[i]
+        ));
+    }
+    Ok(got.len())
+}

@@ -1,0 +1,247 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (produced once by
+//! `make artifacts` from the JAX/Pallas layers) and execute them from the
+//! Rust request path. Python never runs here.
+//!
+//! * [`Artifacts`] — lazy-loading, caching artifact store over one PJRT
+//!   CPU client;
+//! * [`XlaAlu`] — the L1 Pallas warp-ALU kernel as an [`AluBackend`]: the
+//!   simulator's Execute stage running on XLA (select with
+//!   `--alu-backend xla`);
+//! * [`golden`] — XLA-executed benchmark golden models for end-to-end
+//!   output cross-checking.
+
+pub mod golden;
+
+use crate::sim::{AluBackend, WarpAluIn, WarpAluOut, WARP_SIZE};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Runtime faults: artifact IO, HLO parsing, PJRT compile/execute.
+#[derive(Debug)]
+pub enum RuntimeError {
+    MissingArtifact { path: PathBuf },
+    Xla(xla::Error),
+    Io(std::io::Error),
+    /// Executable returned a shape we did not expect.
+    BadOutput { artifact: String, detail: String },
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::MissingArtifact { path } => write!(
+                f,
+                "missing AOT artifact {} — run `make artifacts` first",
+                path.display()
+            ),
+            RuntimeError::Xla(e) => write!(f, "xla: {e}"),
+            RuntimeError::Io(e) => write!(f, "io: {e}"),
+            RuntimeError::BadOutput { artifact, detail } => {
+                write!(f, "artifact {artifact} returned unexpected output: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
+}
+
+/// Default artifact directory (relative to the repo root / CWD), or
+/// `$FLEXGRIP_ARTIFACTS`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("FLEXGRIP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A PJRT CPU client plus a cache of compiled executables, keyed by
+/// artifact name. Compilation happens once per artifact per process.
+pub struct Artifacts {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Artifacts {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Artifacts, RuntimeError> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Artifacts {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn open_default() -> Result<Artifacts, RuntimeError> {
+        Artifacts::open(default_artifact_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch from cache) the named artifact.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact { path });
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 artifact path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on int32 inputs; returns the flattened int32
+    /// output (artifacts are lowered with `return_tuple=True`, 1 result).
+    pub fn run_i32(
+        &self,
+        name: &str,
+        inputs: &[(&[i32], &[usize])],
+    ) -> Result<Vec<i32>, RuntimeError> {
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+            })
+            .collect::<Result<_, _>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple1()?;
+        tuple.to_vec::<i32>().map_err(|e| RuntimeError::BadOutput {
+            artifact: name.to_string(),
+            detail: e.to_string(),
+        })
+    }
+}
+
+/// The AOT-compiled JAX/Pallas warp ALU as a simulator execute-stage
+/// backend: every ALU-class warp instruction crosses into XLA. Slower
+/// than the native datapath (one PJRT call per instruction) but proves
+/// the full three-layer stack composes; differentially tested in
+/// `rust/tests/xla_runtime.rs`.
+pub struct XlaAlu {
+    arts: std::sync::Arc<Artifacts>,
+    calls: u64,
+}
+
+impl XlaAlu {
+    pub fn new(arts: std::sync::Arc<Artifacts>) -> Result<XlaAlu, RuntimeError> {
+        // Compile eagerly so launch-time faults surface immediately.
+        arts.executable("warp_alu")?;
+        Ok(XlaAlu { arts, calls: 0 })
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+impl AluBackend for XlaAlu {
+    fn execute(&mut self, input: &WarpAluIn) -> WarpAluOut {
+        self.calls += 1;
+        let op = [input.func as i32];
+        let cond = [input.cond as i32];
+        let shape1 = [1usize];
+        let lanes = [WARP_SIZE];
+        let out = self
+            .arts
+            .run_i32(
+                "warp_alu",
+                &[
+                    (&op, &shape1),
+                    (&cond, &shape1),
+                    (&input.a, &lanes),
+                    (&input.b, &lanes),
+                    (&input.c, &lanes),
+                ],
+            )
+            .expect("warp_alu artifact execution");
+        let mut result = [0i32; WARP_SIZE];
+        result.copy_from_slice(&out);
+        result
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Batched interface over the `warp_alu_batch64` artifact: amortizes the
+/// PJRT call across 64 instruction slots (the §Perf configuration).
+pub struct XlaBatchAlu {
+    arts: std::sync::Arc<Artifacts>,
+}
+
+pub const XLA_BATCH: usize = 64;
+
+impl XlaBatchAlu {
+    pub fn new(arts: std::sync::Arc<Artifacts>) -> Result<XlaBatchAlu, RuntimeError> {
+        arts.executable("warp_alu_batch64")?;
+        Ok(XlaBatchAlu { arts })
+    }
+
+    /// Execute 64 independent instruction slots in one PJRT call.
+    pub fn execute_batch(
+        &self,
+        inputs: &[WarpAluIn],
+    ) -> Result<Vec<WarpAluOut>, RuntimeError> {
+        assert_eq!(inputs.len(), XLA_BATCH);
+        let ops: Vec<i32> = inputs.iter().map(|i| i.func as i32).collect();
+        let conds: Vec<i32> = inputs.iter().map(|i| i.cond as i32).collect();
+        let mut a = Vec::with_capacity(XLA_BATCH * WARP_SIZE);
+        let mut b = Vec::with_capacity(XLA_BATCH * WARP_SIZE);
+        let mut c = Vec::with_capacity(XLA_BATCH * WARP_SIZE);
+        for i in inputs {
+            a.extend_from_slice(&i.a);
+            b.extend_from_slice(&i.b);
+            c.extend_from_slice(&i.c);
+        }
+        let n = [XLA_BATCH];
+        let nl = [XLA_BATCH, WARP_SIZE];
+        let flat = self.arts.run_i32(
+            "warp_alu_batch64",
+            &[(&ops, &n), (&conds, &n), (&a, &nl), (&b, &nl), (&c, &nl)],
+        )?;
+        if flat.len() != XLA_BATCH * WARP_SIZE {
+            return Err(RuntimeError::BadOutput {
+                artifact: "warp_alu_batch64".into(),
+                detail: format!("len {}", flat.len()),
+            });
+        }
+        Ok(flat
+            .chunks_exact(WARP_SIZE)
+            .map(|ch| {
+                let mut r = [0i32; WARP_SIZE];
+                r.copy_from_slice(ch);
+                r
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,266 @@
+//! The scalar-processor ALU datapath — the Execute stage's arithmetic
+//! portion (paper Fig. 3, right).
+//!
+//! A warp row of lanes executes one decoded operation in lock-step. The
+//! datapath contract is defined once here (`AluFunc`, `WarpAluIn/Out`) and
+//! implemented twice:
+//!
+//! * [`NativeAlu`] — plain Rust, the default high-speed path;
+//! * `runtime::XlaAlu` — the AOT-compiled JAX/Pallas warp-ALU kernel
+//!   executed through PJRT, proving the three-layer stack composes.
+//!
+//! The two are differentially tested against each other. **The `AluFunc`
+//! discriminants are ABI**: they must match `OPC_*` in
+//! `python/compile/kernels/warp_alu.py`.
+
+use crate::isa::{Cond, Flags, Op};
+
+/// Warp width — fixed at 32 by the architecture (paper Table 1).
+pub const WARP_SIZE: usize = 32;
+
+/// ALU function selector (ABI shared with the Pallas kernel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(i32)]
+pub enum AluFunc {
+    Add = 0,
+    Sub = 1,
+    Mul = 2,
+    /// a*b + c.
+    Mad = 3,
+    Min = 4,
+    Max = 5,
+    And = 6,
+    Or = 7,
+    Xor = 8,
+    Not = 9,
+    Shl = 10,
+    /// Logical right shift.
+    Shr = 11,
+    /// Arithmetic right shift.
+    Sar = 12,
+    Abs = 13,
+    Neg = 14,
+    /// Pass-through of `a` (register/immediate moves).
+    Mov = 15,
+    /// Flags of `a - b`, packed S|Z<<1|C<<2|O<<3 in the output lane.
+    Setp = 16,
+    /// `cond(a - b) ? -1 : 0`.
+    Set = 17,
+    /// `c != 0 ? a : b`.
+    Sel = 18,
+}
+
+impl AluFunc {
+    pub const COUNT: usize = 19;
+
+    /// Map an ISA opcode to its ALU function (None for non-ALU ops).
+    pub fn from_op(op: Op) -> Option<AluFunc> {
+        Some(match op {
+            Op::Iadd => AluFunc::Add,
+            Op::Isub => AluFunc::Sub,
+            Op::Imul => AluFunc::Mul,
+            Op::Imad => AluFunc::Mad,
+            Op::Imin => AluFunc::Min,
+            Op::Imax => AluFunc::Max,
+            Op::And => AluFunc::And,
+            Op::Or => AluFunc::Or,
+            Op::Xor => AluFunc::Xor,
+            Op::Not => AluFunc::Not,
+            Op::Shl => AluFunc::Shl,
+            Op::Shr => AluFunc::Shr,
+            Op::Sar => AluFunc::Sar,
+            Op::Iabs => AluFunc::Abs,
+            Op::Ineg => AluFunc::Neg,
+            Op::Mov => AluFunc::Mov,
+            Op::Isetp => AluFunc::Setp,
+            Op::Iset => AluFunc::Set,
+            Op::Sel => AluFunc::Sel,
+            _ => return None,
+        })
+    }
+}
+
+/// One warp's operand bundle for a single instruction.
+#[derive(Debug, Clone)]
+pub struct WarpAluIn {
+    pub func: AluFunc,
+    /// Comparison condition (SET only; encoded as `Cond as i32`).
+    pub cond: Cond,
+    pub a: [i32; WARP_SIZE],
+    pub b: [i32; WARP_SIZE],
+    /// Third source: MAD addend / SEL selector.
+    pub c: [i32; WARP_SIZE],
+}
+
+/// Lane results. For `Setp` each lane holds the packed 4-bit flags.
+pub type WarpAluOut = [i32; WARP_SIZE];
+
+/// The pluggable SP-array datapath.
+pub trait AluBackend {
+    /// Execute one warp instruction across all 32 lanes. Lanes outside the
+    /// active mask are computed anyway (lock-step hardware does the same;
+    /// the writeback stage discards them).
+    fn execute(&mut self, input: &WarpAluIn) -> WarpAluOut;
+
+    /// Backend name for metrics / CLI display.
+    fn name(&self) -> &'static str;
+}
+
+/// Scalar-evaluated reference datapath. Also the semantic ground truth for
+/// the Pallas kernel's `ref.py` oracle (the Python side mirrors these
+/// exact semantics: wrapping arithmetic, shift counts masked to 5 bits).
+#[derive(Debug, Default, Clone)]
+pub struct NativeAlu;
+
+/// Scalar ALU semantics, shared by the native backend and the baseline VM.
+#[inline]
+pub fn eval_lane(func: AluFunc, cond: Cond, a: i32, b: i32, c: i32) -> i32 {
+    match func {
+        AluFunc::Add => a.wrapping_add(b),
+        AluFunc::Sub => a.wrapping_sub(b),
+        AluFunc::Mul => a.wrapping_mul(b),
+        AluFunc::Mad => a.wrapping_mul(b).wrapping_add(c),
+        AluFunc::Min => a.min(b),
+        AluFunc::Max => a.max(b),
+        AluFunc::And => a & b,
+        AluFunc::Or => a | b,
+        AluFunc::Xor => a ^ b,
+        AluFunc::Not => !a,
+        AluFunc::Shl => ((a as u32) << (b as u32 & 31)) as i32,
+        AluFunc::Shr => ((a as u32) >> (b as u32 & 31)) as i32,
+        AluFunc::Sar => a >> (b as u32 & 31),
+        AluFunc::Abs => a.wrapping_abs(),
+        AluFunc::Neg => a.wrapping_neg(),
+        AluFunc::Mov => a,
+        AluFunc::Setp => Flags::of_sub(a, b).pack() as i32,
+        AluFunc::Set => {
+            if Flags::of_sub(a, b).eval(cond) {
+                -1
+            } else {
+                0
+            }
+        }
+        AluFunc::Sel => {
+            if c != 0 {
+                a
+            } else {
+                b
+            }
+        }
+    }
+}
+
+impl AluBackend for NativeAlu {
+    fn execute(&mut self, input: &WarpAluIn) -> WarpAluOut {
+        // Function dispatch is hoisted out of the lane loop (one `match`
+        // per warp instruction, not 32) — the same structure the Pallas
+        // kernel's select tree gives the VPU, and worth ~15% end-to-end
+        // on the simulator (EXPERIMENTS.md §Perf).
+        let mut out = [0i32; WARP_SIZE];
+        let (a, b, c) = (&input.a, &input.b, &input.c);
+        macro_rules! lanes {
+            (|$x:ident, $y:ident, $z:ident| $e:expr) => {
+                for i in 0..WARP_SIZE {
+                    let ($x, $y, $z) = (a[i], b[i], c[i]);
+                    let _ = ($y, $z);
+                    out[i] = $e;
+                }
+            };
+        }
+        match input.func {
+            AluFunc::Add => lanes!(|x, y, z| x.wrapping_add(y)),
+            AluFunc::Sub => lanes!(|x, y, z| x.wrapping_sub(y)),
+            AluFunc::Mul => lanes!(|x, y, z| x.wrapping_mul(y)),
+            AluFunc::Mad => lanes!(|x, y, z| x.wrapping_mul(y).wrapping_add(z)),
+            AluFunc::Min => lanes!(|x, y, z| x.min(y)),
+            AluFunc::Max => lanes!(|x, y, z| x.max(y)),
+            AluFunc::And => lanes!(|x, y, z| x & y),
+            AluFunc::Or => lanes!(|x, y, z| x | y),
+            AluFunc::Xor => lanes!(|x, y, z| x ^ y),
+            AluFunc::Not => lanes!(|x, y, z| !x),
+            AluFunc::Shl => lanes!(|x, y, z| ((x as u32) << (y as u32 & 31)) as i32),
+            AluFunc::Shr => lanes!(|x, y, z| ((x as u32) >> (y as u32 & 31)) as i32),
+            AluFunc::Sar => lanes!(|x, y, z| x >> (y as u32 & 31)),
+            AluFunc::Abs => lanes!(|x, y, z| x.wrapping_abs()),
+            AluFunc::Neg => lanes!(|x, y, z| x.wrapping_neg()),
+            AluFunc::Mov => lanes!(|x, y, z| x),
+            AluFunc::Setp => lanes!(|x, y, z| Flags::of_sub(x, y).pack() as i32),
+            AluFunc::Set => {
+                let cond = input.cond;
+                lanes!(|x, y, z| if Flags::of_sub(x, y).eval(cond) { -1 } else { 0 })
+            }
+            AluFunc::Sel => lanes!(|x, y, z| if z != 0 { x } else { y }),
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle(func: AluFunc, a: i32, b: i32, c: i32) -> WarpAluIn {
+        WarpAluIn { func, cond: Cond::Lt, a: [a; 32], b: [b; 32], c: [c; 32] }
+    }
+
+    #[test]
+    fn wrapping_semantics() {
+        let mut alu = NativeAlu;
+        let out = alu.execute(&bundle(AluFunc::Add, i32::MAX, 1, 0));
+        assert_eq!(out[0], i32::MIN);
+        let out = alu.execute(&bundle(AluFunc::Mul, i32::MAX, 2, 0));
+        assert_eq!(out[17], -2);
+        let out = alu.execute(&bundle(AluFunc::Mad, 1 << 20, 1 << 20, 5));
+        assert_eq!(out[0], 5); // 2^40 wraps to 0
+    }
+
+    #[test]
+    fn shift_count_masking() {
+        let mut alu = NativeAlu;
+        assert_eq!(alu.execute(&bundle(AluFunc::Shl, 1, 33, 0))[0], 2);
+        assert_eq!(alu.execute(&bundle(AluFunc::Shr, -1, 1, 0))[0], i32::MAX);
+        assert_eq!(alu.execute(&bundle(AluFunc::Sar, -8, 2, 0))[0], -2);
+    }
+
+    #[test]
+    fn setp_packs_flags() {
+        let mut alu = NativeAlu;
+        let out = alu.execute(&bundle(AluFunc::Setp, 3, 7, 0));
+        let f = Flags::unpack(out[0] as u8);
+        assert!(f.eval(Cond::Lt));
+        assert!(!f.eval(Cond::Eq));
+    }
+
+    #[test]
+    fn set_honours_condition() {
+        let mut alu = NativeAlu;
+        let lt = WarpAluIn { cond: Cond::Lt, ..bundle(AluFunc::Set, 3, 7, 0) };
+        assert_eq!(alu.execute(&lt)[0], -1);
+        let gt = WarpAluIn { cond: Cond::Gt, ..bundle(AluFunc::Set, 3, 7, 0) };
+        assert_eq!(alu.execute(&gt)[0], 0);
+    }
+
+    #[test]
+    fn sel_selects_by_c() {
+        let mut alu = NativeAlu;
+        assert_eq!(alu.execute(&bundle(AluFunc::Sel, 10, 20, 1))[0], 10);
+        assert_eq!(alu.execute(&bundle(AluFunc::Sel, 10, 20, 0))[0], 20);
+    }
+
+    #[test]
+    fn every_alu_op_maps_and_back() {
+        use crate::isa::Op;
+        let alu_ops: Vec<Op> = Op::ALL
+            .iter()
+            .copied()
+            .filter(|o| AluFunc::from_op(*o).is_some())
+            .collect();
+        assert_eq!(alu_ops.len(), 19);
+        assert_eq!(AluFunc::from_op(Op::Bra), None);
+        assert_eq!(AluFunc::from_op(Op::Gld), None);
+    }
+}

@@ -1,0 +1,205 @@
+//! Memory subsystem: global memory (board DDR behind the AXI bus) and
+//! per-block shared memory (FPGA block RAM, 16 KB/SM — paper Table 1).
+//!
+//! All accesses are 32-bit and must be 4-byte aligned, matching the
+//! integer-only G80 subset FlexGrip implements. Misaligned or
+//! out-of-bounds accesses are architectural faults surfaced to the
+//! coordinator (exercised by the failure-injection tests).
+
+use super::SimError;
+
+/// Byte offset where kernel scratch shared memory begins; the driver
+/// copies kernel parameters into `s[0..64)` at block launch (the G80
+/// param-segment convention). Kernels address scratch at `PARAM_SEG_BYTES+`.
+pub const PARAM_SEG_BYTES: u32 = 64;
+
+fn word_index(addr: u32, len_words: usize, what: &'static str) -> Result<usize, SimError> {
+    if addr % 4 != 0 {
+        return Err(SimError::MemFault { space: what, addr, reason: "misaligned" });
+    }
+    let idx = (addr / 4) as usize;
+    if idx >= len_words {
+        return Err(SimError::MemFault { space: what, addr, reason: "out of bounds" });
+    }
+    Ok(idx)
+}
+
+/// Global (device) memory. One instance per kernel launch, shared by all
+/// SMs — the paper's DDR behind the AXI interconnect.
+#[derive(Debug, Clone)]
+pub struct GlobalMem {
+    words: Vec<i32>,
+}
+
+impl GlobalMem {
+    pub fn new(bytes: u32) -> GlobalMem {
+        GlobalMem { words: vec![0; (bytes as usize).div_ceil(4)] }
+    }
+
+    pub fn size_bytes(&self) -> u32 {
+        (self.words.len() * 4) as u32
+    }
+
+    pub fn load(&self, addr: u32) -> Result<i32, SimError> {
+        Ok(self.words[word_index(addr, self.words.len(), "global")?])
+    }
+
+    pub fn store(&mut self, addr: u32, value: i32) -> Result<(), SimError> {
+        let idx = word_index(addr, self.words.len(), "global")?;
+        self.words[idx] = value;
+        Ok(())
+    }
+
+    /// Host-side bulk write (the driver's DMA into device memory).
+    pub fn write_words(&mut self, byte_addr: u32, data: &[i32]) -> Result<(), SimError> {
+        for (i, &w) in data.iter().enumerate() {
+            self.store(byte_addr + (i as u32) * 4, w)?;
+        }
+        Ok(())
+    }
+
+    /// Host-side bulk read (the driver's DMA out of device memory).
+    pub fn read_words(&self, byte_addr: u32, count: usize) -> Result<Vec<i32>, SimError> {
+        (0..count).map(|i| self.load(byte_addr + (i as u32) * 4)).collect()
+    }
+}
+
+/// Per-resident-block shared memory (allocated out of the SM's 16 KB).
+#[derive(Debug, Clone)]
+pub struct SharedMem {
+    words: Vec<i32>,
+}
+
+impl SharedMem {
+    /// `bytes` includes the parameter segment.
+    pub fn new(bytes: u32) -> SharedMem {
+        SharedMem { words: vec![0; (bytes as usize).div_ceil(4)] }
+    }
+
+    pub fn size_bytes(&self) -> u32 {
+        (self.words.len() * 4) as u32
+    }
+
+    pub fn load(&self, addr: u32) -> Result<i32, SimError> {
+        Ok(self.words[word_index(addr, self.words.len(), "shared")?])
+    }
+
+    pub fn store(&mut self, addr: u32, value: i32) -> Result<(), SimError> {
+        let idx = word_index(addr, self.words.len(), "shared")?;
+        self.words[idx] = value;
+        Ok(())
+    }
+
+    /// Copy kernel parameters into the param segment (driver behaviour at
+    /// block launch, paper §3.1).
+    pub fn write_params(&mut self, params: &[i32]) -> Result<(), SimError> {
+        assert!(
+            params.len() * 4 <= PARAM_SEG_BYTES as usize,
+            "at most {} kernel parameters",
+            PARAM_SEG_BYTES / 4
+        );
+        for (i, &p) in params.iter().enumerate() {
+            self.store((i as u32) * 4, p)?;
+        }
+        Ok(())
+    }
+}
+
+/// Memory-path timing parameters (cycles at the 100 MHz overlay clock).
+///
+/// FlexGrip's Read/Write stages move data through a single AXI master one
+/// warp **row** at a time (paper Fig. 3), blocking the pipeline while the
+/// access drains. Each row pays a transaction-setup overhead (AXI
+/// handshake + DDR access through the MIG) plus a per-thread streaming
+/// beat. The defaults are calibrated against the paper's own Table 5
+/// matmul times at 8/16/32 SP (2674/1667/1318 cycles per warp-iteration),
+/// which fit `rows x 200 + threads x 15` almost exactly — see DESIGN.md
+/// §Calibration and EXPERIMENTS.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemTiming {
+    /// Global memory: per-row AXI transaction setup.
+    pub global_row_overhead: u32,
+    /// Global memory: per-thread streaming beat.
+    pub global_per_thread: u32,
+    /// Shared memory (BRAM): per-row overhead.
+    pub shared_row_overhead: u32,
+    /// Shared memory (BRAM): per-thread beat (banked, 1 port per SP).
+    pub shared_per_thread: u32,
+}
+
+impl Default for MemTiming {
+    fn default() -> Self {
+        MemTiming {
+            global_row_overhead: 200,
+            global_per_thread: 15,
+            shared_row_overhead: 4,
+            shared_per_thread: 2,
+        }
+    }
+}
+
+impl MemTiming {
+    /// Pipeline-blocking cycles for one memory instruction touching
+    /// `threads` active lanes across `rows` warp rows.
+    #[inline]
+    pub fn blocking_cycles(&self, global: bool, rows: u32, threads: u32) -> u64 {
+        let (row, per) = if global {
+            (self.global_row_overhead, self.global_per_thread)
+        } else {
+            (self.shared_row_overhead, self.shared_per_thread)
+        };
+        rows as u64 * row as u64 + threads as u64 * per as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_roundtrip() {
+        let mut m = GlobalMem::new(64);
+        m.store(0, 7).unwrap();
+        m.store(60, -1).unwrap();
+        assert_eq!(m.load(0).unwrap(), 7);
+        assert_eq!(m.load(60).unwrap(), -1);
+    }
+
+    #[test]
+    fn misaligned_fault() {
+        let m = GlobalMem::new(64);
+        assert!(matches!(
+            m.load(2),
+            Err(SimError::MemFault { reason: "misaligned", .. })
+        ));
+    }
+
+    #[test]
+    fn oob_fault() {
+        let mut m = GlobalMem::new(64);
+        assert!(m.store(64, 0).is_err());
+        assert!(m.load(1 << 30).is_err());
+    }
+
+    #[test]
+    fn params_land_at_zero() {
+        let mut s = SharedMem::new(PARAM_SEG_BYTES + 16);
+        s.write_params(&[10, 20, 30]).unwrap();
+        assert_eq!(s.load(0).unwrap(), 10);
+        assert_eq!(s.load(8).unwrap(), 30);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_params_panics() {
+        let mut s = SharedMem::new(256);
+        s.write_params(&[0; 17]).unwrap();
+    }
+
+    #[test]
+    fn bulk_io() {
+        let mut m = GlobalMem::new(128);
+        m.write_words(16, &[1, 2, 3]).unwrap();
+        assert_eq!(m.read_words(16, 3).unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Execution statistics collected by the SM — the observability surface
+//! used by the harness (cycle counts feed every speedup/energy number) and
+//! by the customization analyzer (dynamic op mix, stack high-water mark).
+
+use crate::isa::Op;
+
+/// Counters for one SM over one kernel launch.
+#[derive(Debug, Clone, Default)]
+pub struct SmStats {
+    /// Total cycles this SM was busy (its clock when its last block retired).
+    pub cycles: u64,
+    /// Warp-instructions issued.
+    pub instructions: u64,
+    /// Thread-instructions executed (sum of active lanes per issue).
+    pub thread_instructions: u64,
+    /// Divergent branches (mixed per-lane outcome -> DIV push).
+    pub divergences: u64,
+    /// Warp-stack high-water mark across all warps.
+    pub max_stack_depth: u32,
+    /// Global-memory row transactions (loads, stores).
+    pub global_load_txns: u64,
+    pub global_store_txns: u64,
+    /// Shared-memory row transactions.
+    pub shared_load_txns: u64,
+    pub shared_store_txns: u64,
+    /// Barrier releases.
+    pub barriers: u64,
+    /// Thread blocks retired by this SM.
+    pub blocks: u64,
+    /// Cycles the issue port idled waiting on memory/pipeline.
+    pub stall_cycles: u64,
+    /// Dynamic opcode histogram (indexed by `Op as u8`).
+    pub op_histogram: [u64; 32],
+}
+
+impl SmStats {
+    #[inline]
+    pub fn count_op(&mut self, op: Op, active_lanes: u32) {
+        self.instructions += 1;
+        self.thread_instructions += active_lanes as u64;
+        self.op_histogram[op as usize] += 1;
+    }
+
+    /// Merge another SM's stats (for whole-GPGPU aggregates; `cycles`
+    /// takes the max — SMs run concurrently in hardware).
+    pub fn merge(&mut self, other: &SmStats) {
+        self.cycles = self.cycles.max(other.cycles);
+        self.instructions += other.instructions;
+        self.thread_instructions += other.thread_instructions;
+        self.divergences += other.divergences;
+        self.max_stack_depth = self.max_stack_depth.max(other.max_stack_depth);
+        self.global_load_txns += other.global_load_txns;
+        self.global_store_txns += other.global_store_txns;
+        self.shared_load_txns += other.shared_load_txns;
+        self.shared_store_txns += other.shared_store_txns;
+        self.barriers += other.barriers;
+        self.blocks += other.blocks;
+        self.stall_cycles += other.stall_cycles;
+        for i in 0..32 {
+            self.op_histogram[i] += other.op_histogram[i];
+        }
+    }
+
+    /// Dynamic count of multiplier-consuming instructions (IMUL/IMAD) —
+    /// drives the §4.2 multiplier-removal decision.
+    pub fn multiplier_ops(&self) -> u64 {
+        Op::ALL
+            .iter()
+            .filter(|o| o.uses_multiplier())
+            .map(|o| self.op_histogram[*o as usize])
+            .sum()
+    }
+
+    /// Execution time in milliseconds at the overlay clock.
+    pub fn exec_time_ms(&self, clock_hz: f64) -> f64 {
+        self.cycles as f64 / clock_hz * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_takes_max_cycles_sums_counts() {
+        let mut a = SmStats { cycles: 100, instructions: 10, ..Default::default() };
+        let b = SmStats { cycles: 80, instructions: 7, blocks: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 100);
+        assert_eq!(a.instructions, 17);
+        assert_eq!(a.blocks, 2);
+    }
+
+    #[test]
+    fn multiplier_counting() {
+        let mut s = SmStats::default();
+        s.count_op(Op::Imul, 32);
+        s.count_op(Op::Imad, 32);
+        s.count_op(Op::Iadd, 32);
+        assert_eq!(s.multiplier_ops(), 2);
+        assert_eq!(s.thread_instructions, 96);
+    }
+
+    #[test]
+    fn exec_time_at_100mhz() {
+        let s = SmStats { cycles: 1_000_000, ..Default::default() };
+        assert!((s.exec_time_ms(100e6) - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,209 @@
+//! The FlexGrip streaming-multiprocessor simulator.
+//!
+//! Cycle-driven, functionally atomic: each issued warp-instruction
+//! executes architecturally in one step, while the cycle accounting models
+//! the paper's microarchitecture — a 5-stage pipeline issuing one warp
+//! *row* (`32 / num_sp` threads) per cycle, round-robin across ready
+//! warps, with memory latencies overlapped across warps (paper §3.2).
+
+pub mod alu;
+pub mod mem;
+pub mod metrics;
+pub mod regfile;
+pub mod sm;
+pub mod stack;
+pub mod warp;
+
+pub use alu::{eval_lane, AluBackend, AluFunc, NativeAlu, WarpAluIn, WarpAluOut, WARP_SIZE};
+pub use mem::{GlobalMem, MemTiming, SharedMem, PARAM_SEG_BYTES};
+pub use metrics::SmStats;
+pub use regfile::RegFile;
+pub use sm::{BlockDesc, PreDecoded, Sm};
+pub use stack::{EntryType, StackEntry, WarpStack};
+pub use warp::{Warp, WarpStatus};
+
+use crate::isa::DecodeError;
+
+/// Architectural faults. In hardware these would be raised to the
+/// MicroBlaze driver over AXI; the simulator propagates them to the
+/// coordinator, which fails the launch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    Decode(DecodeError),
+    MemFault { space: &'static str, addr: u32, reason: &'static str },
+    /// Warp-stack push beyond the configured depth — the failure mode of
+    /// running a control-heavy kernel on an over-customized FlexGrip
+    /// (paper §5.2).
+    StackOverflow { warp: u32, pc: u32, depth: u32 },
+    /// `JOIN` on an empty warp stack (codegen bug).
+    StackUnderflow { warp: u32, pc: u32 },
+    /// PC left the code image without reaching `EXIT`.
+    RanOffCode { warp: u32, pc: u32 },
+    /// All live warps parked at a barrier that can never release
+    /// (e.g. a barrier inside a divergent region).
+    BarrierDeadlock { block: u32 },
+    /// IMUL/IMAD issued on a configuration without the multiplier
+    /// (paper §4.2 customization).
+    NoMultiplier { pc: u32 },
+    /// IMAD issued on a two-read-operand configuration (§4.2).
+    NoThirdOperand { pc: u32 },
+    /// Kernel exceeds a physical limit (Table 1) — raised by the block
+    /// scheduler before execution starts.
+    LimitExceeded(String),
+    /// Watchdog: simulation exceeded the configured cycle budget.
+    Watchdog { cycles: u64 },
+}
+
+impl From<DecodeError> for SimError {
+    fn from(e: DecodeError) -> SimError {
+        SimError::Decode(e)
+    }
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Decode(e) => write!(f, "decode fault: {e}"),
+            SimError::MemFault { space, addr, reason } => {
+                write!(f, "{space} memory fault at {addr:#x}: {reason}")
+            }
+            SimError::StackOverflow { warp, pc, depth } => write!(
+                f,
+                "warp {warp} stack overflow at pc={pc:#x} (configured depth {depth})"
+            ),
+            SimError::StackUnderflow { warp, pc } => {
+                write!(f, "warp {warp} popped empty warp stack at pc={pc:#x}")
+            }
+            SimError::RanOffCode { warp, pc } => {
+                write!(f, "warp {warp} ran off code image at pc={pc:#x}")
+            }
+            SimError::BarrierDeadlock { block } => {
+                write!(f, "barrier deadlock in block {block}")
+            }
+            SimError::NoMultiplier { pc } => write!(
+                f,
+                "multiply instruction at pc={pc:#x} on a multiplier-less configuration"
+            ),
+            SimError::NoThirdOperand { pc } => write!(
+                f,
+                "IMAD at pc={pc:#x} on a two-read-operand configuration"
+            ),
+            SimError::LimitExceeded(s) => write!(f, "physical limit exceeded: {s}"),
+            SimError::Watchdog { cycles } => {
+                write!(f, "watchdog expired after {cycles} cycles")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Streaming-multiprocessor configuration — the architectural parameters
+/// the paper varies (§5: SP count; §4/Table 6: warp-stack depth,
+/// multiplier & third read-operand removal).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SmConfig {
+    /// Scalar processors per SM: 8, 16 or 32 (warp rows = 32 / num_sp).
+    pub num_sp: u32,
+    /// Warp-stack depth, 0..=32 (Table 6 customization).
+    pub warp_stack_depth: u32,
+    /// §4.2: multiplier present? (false also removes MAD support).
+    pub has_multiplier: bool,
+    /// §4.2: parallel read-operand units (3 baseline, 2 without MAD).
+    pub read_operands: u8,
+    /// Execution pipeline depth (Fetch/Decode/Read/Execute/Write).
+    pub pipeline_depth: u32,
+    /// Memory timing parameters.
+    pub mem: MemTiming,
+    /// Simulation watchdog (cycles); guards against runaway kernels.
+    pub watchdog_cycles: u64,
+}
+
+impl SmConfig {
+    /// The paper's baseline: 8 SP, full 32-deep stack, MAD-capable.
+    pub fn baseline() -> SmConfig {
+        SmConfig {
+            num_sp: 8,
+            warp_stack_depth: 32,
+            has_multiplier: true,
+            read_operands: 3,
+            pipeline_depth: 5,
+            mem: MemTiming::default(),
+            watchdog_cycles: 50_000_000_000,
+        }
+    }
+
+    pub fn with_sp(mut self, num_sp: u32) -> SmConfig {
+        self.num_sp = num_sp;
+        self
+    }
+
+    /// Threads per warp row; one row issues per cycle (paper §3.2:
+    /// "a warp with 32 threads would be arranged in four rows" at 8 SP).
+    pub fn rows_per_warp(&self) -> u32 {
+        (WARP_SIZE as u32).div_ceil(self.num_sp)
+    }
+
+    pub fn validate(&self) -> Result<(), SimError> {
+        if !matches!(self.num_sp, 8 | 16 | 32) {
+            return Err(SimError::LimitExceeded(format!(
+                "num_sp must be 8, 16 or 32 (got {})",
+                self.num_sp
+            )));
+        }
+        if self.warp_stack_depth > 32 {
+            return Err(SimError::LimitExceeded(format!(
+                "warp stack depth {} > 32",
+                self.warp_stack_depth
+            )));
+        }
+        if !matches!(self.read_operands, 2 | 3) {
+            return Err(SimError::LimitExceeded(format!(
+                "read_operands must be 2 or 3 (got {})",
+                self.read_operands
+            )));
+        }
+        if self.has_multiplier && self.read_operands < 3 {
+            // Paper §5.2: "only the multiply-add (MAD) instruction requires
+            // three operands, therefore by eliminating the multiply unit
+            // the need for support of a third operand is removed" — the
+            // converse configuration is not manufacturable.
+            return Err(SimError::LimitExceeded(
+                "a multiplier-equipped SM requires 3 read operands (MAD)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for SmConfig {
+    fn default() -> Self {
+        SmConfig::baseline()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_per_warp_matches_paper() {
+        assert_eq!(SmConfig::baseline().with_sp(8).rows_per_warp(), 4);
+        assert_eq!(SmConfig::baseline().with_sp(16).rows_per_warp(), 2);
+        assert_eq!(SmConfig::baseline().with_sp(32).rows_per_warp(), 1);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(SmConfig::baseline().validate().is_ok());
+        assert!(SmConfig::baseline().with_sp(12).validate().is_err());
+        let mut c = SmConfig::baseline();
+        c.warp_stack_depth = 33;
+        assert!(c.validate().is_err());
+        let mut c = SmConfig::baseline();
+        c.read_operands = 2; // keeps multiplier -> invalid
+        assert!(c.validate().is_err());
+        c.has_multiplier = false;
+        assert!(c.validate().is_ok());
+    }
+}

@@ -1,0 +1,169 @@
+//! Register files: the partitioned vector register file ("each thread
+//! assigned a set of general-purpose registers", paper §3.2), the address
+//! register file, and the predicate register file (4 × 4-bit per thread,
+//! paper Fig. 2).
+//!
+//! Storage is flat `Vec`s indexed arithmetically — this is the hottest
+//! data structure in the simulator, so no hashing, no bounds recomputation
+//! beyond the construction-time invariants.
+
+use crate::isa::{Flags, NUM_AREGS, NUM_PREGS, RZ};
+
+/// Vector register file for one resident block: `threads × regs_per_thread`
+/// general registers, plus address and predicate files.
+#[derive(Debug, Clone)]
+pub struct RegFile {
+    regs_per_thread: u32,
+    gp: Vec<i32>,
+    addr: Vec<i32>,
+    /// Packed 4-bit flags: pred[thread * NUM_PREGS + n].
+    pred: Vec<u8>,
+}
+
+impl RegFile {
+    pub fn new(threads: u32, regs_per_thread: u32) -> RegFile {
+        RegFile {
+            regs_per_thread,
+            gp: vec![0; (threads * regs_per_thread) as usize],
+            addr: vec![0; (threads * NUM_AREGS as u32) as usize],
+            pred: vec![0; (threads * NUM_PREGS as u32) as usize],
+        }
+    }
+
+    pub fn regs_per_thread(&self) -> u32 {
+        self.regs_per_thread
+    }
+
+    /// Read general register `r` of `thread`. RZ reads zero; registers
+    /// above the kernel's declared count read zero (hardware would simply
+    /// not allocate them; reading is a benign codegen bug).
+    #[inline]
+    pub fn read(&self, thread: u32, r: u8) -> i32 {
+        if r == RZ || r as u32 >= self.regs_per_thread {
+            return 0;
+        }
+        self.gp[(thread * self.regs_per_thread + r as u32) as usize]
+    }
+
+    /// Write general register `r` of `thread`. Writes to RZ or beyond the
+    /// declared allocation are discarded.
+    #[inline]
+    pub fn write(&mut self, thread: u32, r: u8, v: i32) {
+        if r == RZ || r as u32 >= self.regs_per_thread {
+            return;
+        }
+        self.gp[(thread * self.regs_per_thread + r as u32) as usize] = v;
+    }
+
+    /// Gather register `r` for `count` consecutive threads starting at
+    /// `base_thread` into `out[..count]` — the Read stage's vector fetch
+    /// (one stride computation per warp instead of per lane; §Perf).
+    #[inline]
+    pub fn read_vec(&self, base_thread: u32, count: usize, r: u8, out: &mut [i32; 32]) {
+        if r == RZ || r as u32 >= self.regs_per_thread {
+            out[..count].fill(0);
+            return;
+        }
+        let stride = self.regs_per_thread as usize;
+        let mut idx = base_thread as usize * stride + r as usize;
+        for slot in out.iter_mut().take(count) {
+            *slot = self.gp[idx];
+            idx += stride;
+        }
+    }
+
+    /// Scatter `vals` into register `r` for the threads selected by
+    /// `mask` (bit i -> thread `base_thread + i`) — the Write stage.
+    #[inline]
+    pub fn write_vec(
+        &mut self,
+        base_thread: u32,
+        count: usize,
+        r: u8,
+        mask: u32,
+        vals: &[i32; 32],
+    ) {
+        if r == RZ || r as u32 >= self.regs_per_thread {
+            return;
+        }
+        let stride = self.regs_per_thread as usize;
+        let mut idx = base_thread as usize * stride + r as usize;
+        for lane in 0..count {
+            if mask & (1 << lane) != 0 {
+                self.gp[idx] = vals[lane];
+            }
+            idx += stride;
+        }
+    }
+
+    #[inline]
+    pub fn read_areg(&self, thread: u32, a: u8) -> i32 {
+        debug_assert!(a < NUM_AREGS);
+        self.addr[(thread * NUM_AREGS as u32 + a as u32) as usize]
+    }
+
+    #[inline]
+    pub fn write_areg(&mut self, thread: u32, a: u8, v: i32) {
+        debug_assert!(a < NUM_AREGS);
+        self.addr[(thread * NUM_AREGS as u32 + a as u32) as usize] = v;
+    }
+
+    #[inline]
+    pub fn read_pred(&self, thread: u32, p: u8) -> Flags {
+        debug_assert!(p < NUM_PREGS);
+        Flags::unpack(self.pred[(thread * NUM_PREGS as u32 + p as u32) as usize])
+    }
+
+    #[inline]
+    pub fn write_pred(&mut self, thread: u32, p: u8, f: Flags) {
+        debug_assert!(p < NUM_PREGS);
+        self.pred[(thread * NUM_PREGS as u32 + p as u32) as usize] = f.pack();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Cond;
+
+    #[test]
+    fn rz_reads_zero_discards_writes() {
+        let mut rf = RegFile::new(4, 8);
+        rf.write(1, RZ, 42);
+        assert_eq!(rf.read(1, RZ), 0);
+    }
+
+    #[test]
+    fn per_thread_isolation() {
+        let mut rf = RegFile::new(4, 8);
+        rf.write(0, 3, 10);
+        rf.write(1, 3, 20);
+        assert_eq!(rf.read(0, 3), 10);
+        assert_eq!(rf.read(1, 3), 20);
+        assert_eq!(rf.read(2, 3), 0);
+    }
+
+    #[test]
+    fn over_allocation_reads_zero() {
+        let mut rf = RegFile::new(2, 4);
+        rf.write(0, 5, 99); // beyond .regs 4 -> discarded
+        assert_eq!(rf.read(0, 5), 0);
+    }
+
+    #[test]
+    fn predicate_flags_roundtrip() {
+        let mut rf = RegFile::new(2, 4);
+        let f = Flags::of_sub(3, 7); // 3 - 7 < 0
+        rf.write_pred(1, 2, f);
+        assert!(rf.read_pred(1, 2).eval(Cond::Lt));
+        assert!(!rf.read_pred(0, 2).eval(Cond::Lt));
+    }
+
+    #[test]
+    fn aregs_isolated_per_thread() {
+        let mut rf = RegFile::new(2, 4);
+        rf.write_areg(0, 1, 100);
+        assert_eq!(rf.read_areg(0, 1), 100);
+        assert_eq!(rf.read_areg(1, 1), 0);
+    }
+}

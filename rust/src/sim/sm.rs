@@ -1,0 +1,807 @@
+//! The streaming multiprocessor: warp unit + 5-stage pipeline + control
+//! flow unit (paper Fig. 1).
+//!
+//! Execution is functionally atomic per issued warp-instruction; timing
+//! follows the paper's microarchitecture:
+//!
+//! * one warp **row** (`32 / num_sp` threads) enters the pipeline per
+//!   cycle, so issuing one warp-instruction occupies the issue port for
+//!   `rows` cycles;
+//! * the same warp cannot issue again until its previous instruction
+//!   clears the 5-stage pipeline (no forwarding) — round-robin across
+//!   ready warps hides this, exactly the warp unit's job (§3.2);
+//! * memory instructions park the warp for the AXI/BRAM latency while
+//!   other warps keep issuing (latency hiding);
+//! * `BAR` parks warps until every live warp of the block arrives.
+
+use super::alu::{AluBackend, AluFunc, WarpAluIn, WARP_SIZE};
+use super::mem::{GlobalMem, SharedMem, PARAM_SEG_BYTES};
+use super::metrics::SmStats;
+use super::regfile::RegFile;
+use super::stack::{EntryType, StackEntry};
+use super::warp::{Warp, WarpStatus};
+use super::{SimError, SmConfig};
+use crate::asm::Kernel;
+use crate::isa::{Instr, Op, Operand, SpecialReg};
+
+/// Pre-decoded kernel image: the Decode stage run once per launch. The
+/// issue loop then indexes a flat table — the single biggest simulator
+/// speedup (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct PreDecoded {
+    /// Indexed by `pc / 4`; instructions are 4-byte aligned.
+    by_pc: Vec<Option<Instr>>,
+}
+
+impl PreDecoded {
+    pub fn from_kernel(k: &Kernel) -> PreDecoded {
+        let words = k.code.len().div_ceil(4);
+        let mut by_pc = vec![None; words];
+        for &(pc, instr) in &k.instrs {
+            by_pc[(pc / 4) as usize] = Some(instr);
+        }
+        PreDecoded { by_pc }
+    }
+
+    #[inline]
+    fn fetch(&self, warp: u32, pc: u32) -> Result<Instr, SimError> {
+        self.by_pc
+            .get((pc / 4) as usize)
+            .copied()
+            .flatten()
+            .ok_or(SimError::RanOffCode { warp, pc })
+    }
+}
+
+/// One thread block as handed to an SM by the block scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockDesc {
+    pub ctaid_x: u32,
+    pub ctaid_y: u32,
+    pub nctaid_x: u32,
+    pub nctaid_y: u32,
+    /// Threads in this block (<= 256, paper §4.3).
+    pub ntid: u32,
+}
+
+/// A resident (scheduled) block: its register file partition, shared
+/// memory allocation, and warps.
+struct Resident {
+    desc: BlockDesc,
+    regs: RegFile,
+    shared: SharedMem,
+    warps: Vec<Warp>,
+}
+
+impl Resident {
+    fn all_done(&self) -> bool {
+        self.warps.iter().all(|w| w.done)
+    }
+}
+
+/// A streaming multiprocessor.
+#[derive(Debug, Clone)]
+pub struct Sm {
+    pub cfg: SmConfig,
+    pub sm_id: u32,
+}
+
+impl Sm {
+    pub fn new(cfg: SmConfig, sm_id: u32) -> Sm {
+        Sm { cfg, sm_id }
+    }
+
+    /// Execute `blocks` to completion, keeping at most `max_resident`
+    /// blocks scheduled at once (the Table 1 limit computed by the block
+    /// scheduler). Returns per-SM statistics; `stats.cycles` is this SM's
+    /// busy time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        kernel: &PreDecoded,
+        regs_per_thread: u32,
+        smem_bytes: u32,
+        params: &[i32],
+        blocks: &[BlockDesc],
+        max_resident: usize,
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<SmStats, SimError> {
+        self.cfg.validate()?;
+        assert!(max_resident >= 1, "block scheduler must allow one resident block");
+
+        let mut stats = SmStats::default();
+        let mut cycle: u64 = 0;
+        let rows = self.cfg.rows_per_warp() as u64;
+        let mut next_block = 0usize;
+        let mut resident: Vec<Resident> = Vec::new();
+        let mut rr: usize = 0;
+
+        loop {
+            // Block scheduler interface: fill free slots (§4.3 — "control
+            // signals from the SM notify the block scheduler when all
+            // thread blocks have completed and scheduling ... can begin").
+            while resident.len() < max_resident && next_block < blocks.len() {
+                resident.push(self.make_resident(
+                    blocks[next_block],
+                    regs_per_thread,
+                    smem_bytes,
+                    params,
+                )?);
+                next_block += 1;
+            }
+            if resident.is_empty() {
+                break;
+            }
+
+            // Warp unit: round-robin pick of a ready warp. The scan is
+            // allocation-free and indexes (slot, warp) directly — this
+            // loop runs once per issued instruction (§Perf: the previous
+            // Vec-per-issue version cost ~2x end-to-end).
+            let total: usize = resident.iter().map(|r| r.warps.len()).sum();
+            let mut chosen = None;
+            {
+                let mut flat = if rr >= total { 0 } else { rr };
+                // locate starting slot/warp for `flat`
+                let (mut s0, mut w0) = (0usize, flat);
+                while w0 >= resident[s0].warps.len() {
+                    w0 -= resident[s0].warps.len();
+                    s0 += 1;
+                }
+                let (mut s, mut w) = (s0, w0);
+                for _ in 0..total {
+                    if resident[s].warps[w].status(cycle) == WarpStatus::Ready {
+                        chosen = Some((s, w));
+                        rr = flat + 1;
+                        break;
+                    }
+                    flat += 1;
+                    w += 1;
+                    if w == resident[s].warps.len() {
+                        w = 0;
+                        s += 1;
+                        if s == resident.len() {
+                            s = 0;
+                            flat = 0;
+                        }
+                    }
+                }
+            }
+
+            match chosen {
+                Some((s, w)) => {
+                    cycle += rows;
+                    // Memory instructions drain through the single AXI
+                    // master / BRAM port and block the pipeline (Fig. 3);
+                    // `step` returns those extra cycles.
+                    cycle +=
+                        self.step(&mut resident[s], w, kernel, gmem, alu, &mut stats, cycle)?;
+                    let r = &mut resident[s];
+                    // Barrier release: all live warps of the block arrived?
+                    if r.warps.iter().any(|w| w.at_barrier)
+                        && r.warps.iter().all(|w| w.done || w.at_barrier)
+                    {
+                        for w in &mut r.warps {
+                            w.at_barrier = false;
+                        }
+                        stats.barriers += 1;
+                    }
+                    // Retire the issued block if it just completed (only
+                    // the block that issued can change state).
+                    if r.warps[w].done && r.all_done() {
+                        for w in &r.warps {
+                            stats.max_stack_depth =
+                                stats.max_stack_depth.max(w.stack.max_depth());
+                        }
+                        resident.swap_remove(s);
+                        stats.blocks += 1;
+                        rr = 0;
+                    }
+                }
+                None => {
+                    // No warp ready: advance to the earliest wake-up.
+                    let wake = resident
+                        .iter()
+                        .flat_map(|r| r.warps.iter())
+                        .filter(|w| w.status(cycle) == WarpStatus::Waiting)
+                        .map(|w| w.ready_at)
+                        .min();
+                    match wake {
+                        Some(t) => {
+                            stats.stall_cycles += t - cycle;
+                            cycle = t;
+                        }
+                        None => {
+                            // Everything is Done or AtBarrier, yet the block
+                            // didn't retire and the barrier didn't release.
+                            let block = resident
+                                .iter()
+                                .position(|r| !r.all_done())
+                                .unwrap_or(0);
+                            return Err(SimError::BarrierDeadlock { block: block as u32 });
+                        }
+                    }
+                }
+            }
+
+            if cycle > self.cfg.watchdog_cycles {
+                return Err(SimError::Watchdog { cycles: cycle });
+            }
+        }
+
+        stats.cycles = cycle;
+        Ok(stats)
+    }
+
+    fn make_resident(
+        &self,
+        desc: BlockDesc,
+        regs_per_thread: u32,
+        smem_bytes: u32,
+        params: &[i32],
+    ) -> Result<Resident, SimError> {
+        let mut regs = RegFile::new(desc.ntid, regs_per_thread);
+        // GPGPU controller seeds thread ids into the vector register file
+        // (paper §3.1).
+        for t in 0..desc.ntid {
+            regs.write(t, 0, t as i32);
+        }
+        let mut shared = SharedMem::new(PARAM_SEG_BYTES + smem_bytes);
+        shared.write_params(params)?;
+        let n_warps = desc.ntid.div_ceil(WARP_SIZE as u32);
+        let warps = (0..n_warps)
+            .map(|id| {
+                let lanes = desc.ntid - id * WARP_SIZE as u32;
+                let enabled = if lanes >= WARP_SIZE as u32 {
+                    u32::MAX
+                } else {
+                    (1u32 << lanes) - 1
+                };
+                Warp::new(id, enabled, self.cfg.warp_stack_depth)
+            })
+            .collect();
+        Ok(Resident { desc, regs, shared, warps })
+    }
+
+    /// Execute one instruction for warp `wi` of `slot`. `issue_done` is
+    /// the cycle at which the instruction's last row entered the pipeline.
+    /// Returns extra pipeline-blocking cycles (memory serialization).
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        slot: &mut Resident,
+        wi: usize,
+        kernel: &PreDecoded,
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+        stats: &mut SmStats,
+        issue_done: u64,
+    ) -> Result<u64, SimError> {
+        let Resident { desc, regs, shared, warps } = slot;
+        let w = &mut warps[wi];
+        let instr = kernel.fetch(w.id, w.pc)?;
+        let eff = w.effective();
+        debug_assert_ne!(eff, 0, "scheduler must not issue an empty warp");
+
+        // Customization faults (§4.2): hardware without the multiplier /
+        // third read-operand unit cannot execute these encodings.
+        if instr.op.uses_multiplier() && !self.cfg.has_multiplier {
+            return Err(SimError::NoMultiplier { pc: w.pc });
+        }
+        if instr.op == Op::Imad && self.cfg.read_operands < 3 {
+            return Err(SimError::NoThirdOperand { pc: w.pc });
+        }
+
+        // Guard evaluation (Fig. 2: predicate LUT -> instruction mask,
+        // combined with the thread mask).
+        let exec = if instr.guard.is_unconditional() {
+            eff
+        } else {
+            let mut m = 0u32;
+            for lane in 0..WARP_SIZE as u32 {
+                if eff & (1 << lane) != 0 {
+                    let t = w.id * WARP_SIZE as u32 + lane;
+                    if regs.read_pred(t, instr.guard.preg).eval(instr.guard.cond) {
+                        m |= 1 << lane;
+                    }
+                }
+            }
+            m
+        };
+        stats.count_op(instr.op, exec.count_ones());
+
+        // Default hazard: same warp re-issues only after the pipeline
+        // drains (write-back of this instruction).
+        w.ready_at = issue_done + (self.cfg.pipeline_depth as u64 - 1);
+        let mut next_pc = w.pc + instr.size as u32;
+        let mut blocking: u64 = 0;
+
+        match instr.op {
+            Op::Nop => {}
+            Op::Exit => {
+                w.finished |= exec;
+            }
+            Op::Join => match w.stack.pop() {
+                Some(e) => {
+                    w.active = e.mask;
+                    next_pc = e.addr;
+                }
+                None => return Err(SimError::StackUnderflow { warp: w.id, pc: w.pc }),
+            },
+            Op::Bar => {
+                w.at_barrier = true;
+            }
+            Op::Ssy => {
+                let target = instr.branch_target().expect("SSY target");
+                let entry = StackEntry { typ: EntryType::Sync, addr: target, mask: eff };
+                w.stack.push(entry).map_err(|_| SimError::StackOverflow {
+                    warp: w.id,
+                    pc: w.pc,
+                    depth: self.cfg.warp_stack_depth,
+                })?;
+            }
+            Op::Bra => {
+                let target = instr.branch_target().expect("BRA target");
+                let taken = exec;
+                let not_taken = eff & !exec;
+                if taken == 0 {
+                    // uniform not-taken: fall through
+                } else if not_taken == 0 {
+                    next_pc = target;
+                } else {
+                    // Divergence (§4.1): save the taken path, run the
+                    // not-taken path first.
+                    stats.divergences += 1;
+                    let entry =
+                        StackEntry { typ: EntryType::Div, addr: target, mask: taken };
+                    w.stack.push(entry).map_err(|_| SimError::StackOverflow {
+                        warp: w.id,
+                        pc: w.pc,
+                        depth: self.cfg.warp_stack_depth,
+                    })?;
+                    w.active = not_taken;
+                }
+            }
+            Op::S2r => {
+                let sr = match instr.src1 {
+                    Operand::Special(sr) => sr,
+                    _ => unreachable!("decoder guarantees S2R source"),
+                };
+                for lane in 0..WARP_SIZE as u32 {
+                    if exec & (1 << lane) != 0 {
+                        let t = w.id * WARP_SIZE as u32 + lane;
+                        regs.write(t, instr.dst, special_value(sr, desc, w.id, lane, t, self.sm_id));
+                    }
+                }
+            }
+            Op::R2a => {
+                for lane in 0..WARP_SIZE as u32 {
+                    if exec & (1 << lane) != 0 {
+                        let t = w.id * WARP_SIZE as u32 + lane;
+                        let v = match instr.src1 {
+                            Operand::Reg(r) => regs.read(t, r),
+                            _ => unreachable!(),
+                        };
+                        regs.write_areg(t, instr.dst, v);
+                    }
+                }
+            }
+            Op::A2r => {
+                for lane in 0..WARP_SIZE as u32 {
+                    if exec & (1 << lane) != 0 {
+                        let t = w.id * WARP_SIZE as u32 + lane;
+                        let v = match instr.src1 {
+                            Operand::AReg(a) => regs.read_areg(t, a),
+                            _ => unreachable!(),
+                        };
+                        regs.write(t, instr.dst, v);
+                    }
+                }
+            }
+            Op::Gld | Op::Sld | Op::Gst | Op::Sst => {
+                let is_global = matches!(instr.op, Op::Gld | Op::Gst);
+                // Read stage: one vector fetch of the address base, one of
+                // the store data; the per-lane loop then touches memory for
+                // exec lanes only (operand dispatch hoisted; §Perf).
+                let wbase = w.id * WARP_SIZE as u32;
+                let count = WARP_SIZE.min((desc.ntid - wbase) as usize);
+                let mut base = [0i32; WARP_SIZE];
+                match instr.src1 {
+                    Operand::Reg(r) => regs.read_vec(wbase, count, r, &mut base),
+                    Operand::AReg(a) => {
+                        for (lane, slot) in base.iter_mut().enumerate().take(count) {
+                            *slot = regs.read_areg(wbase + lane as u32, a);
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+                let addr =
+                    |lane: usize| base[lane].wrapping_add(instr.offset as i32) as u32;
+                match instr.op {
+                    Op::Gld | Op::Sld => {
+                        let mut out = [0i32; WARP_SIZE];
+                        for (lane, slot) in out.iter_mut().enumerate().take(count) {
+                            if exec & (1 << lane) != 0 {
+                                *slot = if is_global {
+                                    gmem.load(addr(lane))?
+                                } else {
+                                    shared.load(addr(lane))?
+                                };
+                            }
+                        }
+                        regs.write_vec(wbase, count, instr.dst, exec, &out);
+                    }
+                    _ => {
+                        let mut data = [0i32; WARP_SIZE];
+                        if let Operand::Reg(r) = instr.src2 {
+                            regs.read_vec(wbase, count, r, &mut data);
+                        } else {
+                            unreachable!("stores carry a register source");
+                        }
+                        for lane in 0..count {
+                            if exec & (1 << lane) != 0 {
+                                if is_global {
+                                    gmem.store(addr(lane), data[lane])?;
+                                } else {
+                                    shared.store(addr(lane), data[lane])?;
+                                }
+                            }
+                        }
+                    }
+                }
+                // Timing: accesses drain through the single AXI master /
+                // BRAM ports row by row and block the pipeline (Fig. 3;
+                // see MemTiming docs for the calibration).
+                let txns = exec.count_ones() as u64;
+                blocking = self.cfg.mem.blocking_cycles(
+                    is_global,
+                    self.cfg.rows_per_warp(),
+                    exec.count_ones(),
+                );
+                w.ready_at = issue_done + blocking + (self.cfg.pipeline_depth as u64 - 1);
+                match instr.op {
+                    Op::Gld => stats.global_load_txns += txns,
+                    Op::Gst => stats.global_store_txns += txns,
+                    Op::Sld => stats.shared_load_txns += txns,
+                    Op::Sst => stats.shared_store_txns += txns,
+                    _ => unreachable!(),
+                }
+            }
+            // Everything else is the SP-array datapath.
+            _ => {
+                let func = AluFunc::from_op(instr.op)
+                    .expect("non-ALU ops handled above");
+                // Read stage: operand kind is resolved once per warp
+                // instruction, then each source is a strided vector fetch
+                // (one read-operand unit per source, exactly Fig. 3; also
+                // the simulator's hottest loop — see EXPERIMENTS.md §Perf).
+                let mut input = WarpAluIn {
+                    func,
+                    cond: instr.cond,
+                    a: [0; WARP_SIZE],
+                    b: [0; WARP_SIZE],
+                    c: [0; WARP_SIZE],
+                };
+                let wbase = w.id * WARP_SIZE as u32;
+                let count = WARP_SIZE.min((desc.ntid - wbase) as usize);
+                match instr.src1 {
+                    Operand::Reg(r) => regs.read_vec(wbase, count, r, &mut input.a),
+                    // MOV #imm carries its immediate in src2.
+                    Operand::None => {
+                        if let Operand::Imm(v) = instr.src2 {
+                            input.a[..count].fill(v);
+                        }
+                    }
+                    _ => {}
+                }
+                match instr.src2 {
+                    Operand::Reg(r) => regs.read_vec(wbase, count, r, &mut input.b),
+                    Operand::Imm(v) => input.b[..count].fill(v),
+                    _ => {}
+                }
+                if let Operand::Reg(r) = instr.src3 {
+                    regs.read_vec(wbase, count, r, &mut input.c);
+                }
+                if func == AluFunc::Sel {
+                    // Selector lanes from the predicate register file.
+                    for lane in 0..count {
+                        input.c[lane] = regs
+                            .read_pred(wbase + lane as u32, instr.setp_idx)
+                            .eval(instr.cond) as i32;
+                    }
+                }
+                let out = alu.execute(&input);
+                // Write stage: masked vector scatter.
+                if func == AluFunc::Setp {
+                    for lane in 0..count {
+                        if exec & (1 << lane) != 0 {
+                            regs.write_pred(
+                                wbase + lane as u32,
+                                instr.setp_idx,
+                                crate::isa::Flags::unpack(out[lane] as u8),
+                            );
+                        }
+                    }
+                } else {
+                    regs.write_vec(wbase, count, instr.dst, exec, &out);
+                }
+            }
+        }
+
+        // Reconvergence drain: if every lane on the current path finished
+        // or diverged away, pop saved paths until live lanes appear — or
+        // the warp retires.
+        while w.effective() == 0 && !w.done {
+            match w.stack.pop() {
+                Some(StackEntry { addr, mask, .. }) => {
+                    w.active = mask;
+                    next_pc = addr;
+                }
+                None => {
+                    w.done = true;
+                }
+            }
+        }
+        if !w.done {
+            w.pc = next_pc;
+        }
+        Ok(blocking)
+    }
+}
+
+fn special_value(
+    sr: SpecialReg,
+    desc: &BlockDesc,
+    warp_id: u32,
+    lane: u32,
+    tid: u32,
+    sm_id: u32,
+) -> i32 {
+    (match sr {
+        SpecialReg::TidX => tid,
+        SpecialReg::NtidX => desc.ntid,
+        SpecialReg::CtaidX => desc.ctaid_x,
+        SpecialReg::NctaidX => desc.nctaid_x,
+        SpecialReg::CtaidY => desc.ctaid_y,
+        SpecialReg::NctaidY => desc.nctaid_y,
+        SpecialReg::LaneId => lane,
+        SpecialReg::WarpId => warp_id,
+        SpecialReg::SmId => sm_id,
+        SpecialReg::GtId => {
+            (desc.ctaid_y * desc.nctaid_x + desc.ctaid_x) * desc.ntid + tid
+        }
+    }) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::sim::NativeAlu;
+
+    fn run_one_block(
+        src: &str,
+        params: &[i32],
+        ntid: u32,
+        gmem: &mut GlobalMem,
+    ) -> Result<SmStats, SimError> {
+        run_one_block_cfg(src, params, ntid, gmem, SmConfig::baseline())
+    }
+
+    fn run_one_block_cfg(
+        src: &str,
+        params: &[i32],
+        ntid: u32,
+        gmem: &mut GlobalMem,
+        cfg: SmConfig,
+    ) -> Result<SmStats, SimError> {
+        let k = assemble(src).expect("assemble");
+        let pre = PreDecoded::from_kernel(&k);
+        let sm = Sm::new(cfg, 0);
+        let blocks = [BlockDesc { ctaid_x: 0, ctaid_y: 0, nctaid_x: 1, nctaid_y: 1, ntid }];
+        let mut alu = NativeAlu;
+        sm.run(&pre, k.regs_per_thread, k.smem_bytes, params, &blocks, 8, gmem, &mut alu)
+    }
+
+    /// out[tid] = tid * 3 + param0
+    const SCALE_SRC: &str = r#"
+        .entry scale
+        .regs 8
+            S2R R0, SR_TID
+            MOV R1, #3
+            IMUL R2, R0, R1
+            SLD R3, [0]       ; param0 = scalar addend
+            IADD R2, R2, R3
+            SLD R4, [4]       ; param1 = out base addr
+            SHL R5, R0, #2
+            IADD R4, R4, R5
+            GST [R4], R2
+            EXIT
+    "#;
+
+    #[test]
+    fn simt_scale_kernel_writes_every_thread() {
+        let mut g = GlobalMem::new(4096);
+        let stats = run_one_block(SCALE_SRC, &[100, 0], 64, &mut g).unwrap();
+        for t in 0..64 {
+            assert_eq!(g.load(t * 4).unwrap(), (t as i32) * 3 + 100, "thread {t}");
+        }
+        assert_eq!(stats.blocks, 1);
+        assert!(stats.cycles > 0);
+        assert_eq!(stats.max_stack_depth, 0);
+    }
+
+    #[test]
+    fn partial_warp_only_writes_existing_threads() {
+        let mut g = GlobalMem::new(4096);
+        run_one_block(SCALE_SRC, &[7, 0], 40, &mut g).unwrap();
+        assert_eq!(g.load(39 * 4).unwrap(), 39 * 3 + 7);
+        assert_eq!(g.load(40 * 4).unwrap(), 0, "thread 40 must not exist");
+    }
+
+    /// if (tid < 4) out[tid] = 111; else out[tid] = 222; then all: +=1
+    const DIVERGE_SRC: &str = r#"
+        .entry diverge
+        .regs 8
+            S2R R0, SR_TID
+            SHL R4, R0, #2       ; addr = tid*4
+            ISETP P0, R0, #4
+            SSY reconv
+            @P0.LT BRA then
+            MOV R1, #222         ; else path (not-taken lanes run first)
+            JOIN
+        then:
+            MOV R1, #111
+            JOIN
+        reconv:
+            IADD R1, R1, #1
+            GST [R4], R1
+            EXIT
+    "#;
+
+    #[test]
+    fn divergent_branch_both_paths_and_reconvergence() {
+        let mut g = GlobalMem::new(4096);
+        let stats = run_one_block(DIVERGE_SRC, &[], 32, &mut g).unwrap();
+        for t in 0..32 {
+            let want = if t < 4 { 112 } else { 223 };
+            assert_eq!(g.load(t * 4).unwrap(), want, "thread {t}");
+        }
+        assert_eq!(stats.divergences, 1);
+        assert_eq!(stats.max_stack_depth, 2); // SSY + DIV
+    }
+
+    #[test]
+    fn uniform_branch_uses_no_stack() {
+        // All 32 threads satisfy tid < 100 -> no divergence.
+        let src = DIVERGE_SRC.replace("#4", "#100");
+        let mut g = GlobalMem::new(4096);
+        let stats = run_one_block(&src, &[], 32, &mut g).unwrap();
+        assert_eq!(stats.divergences, 0);
+        assert_eq!(g.load(0).unwrap(), 112);
+        // SSY still pushes; uniform-taken path's JOIN pops it.
+        assert_eq!(stats.max_stack_depth, 1);
+    }
+
+    #[test]
+    fn stack_overflow_on_shallow_config() {
+        let mut cfg = SmConfig::baseline();
+        cfg.warp_stack_depth = 1; // SSY fits; the DIV push must overflow
+        let mut g = GlobalMem::new(4096);
+        let err = run_one_block_cfg(DIVERGE_SRC, &[], 32, &mut g, cfg).unwrap_err();
+        assert!(matches!(err, SimError::StackOverflow { depth: 1, .. }));
+    }
+
+    #[test]
+    fn multiplier_less_config_faults_on_imul() {
+        let mut cfg = SmConfig::baseline();
+        cfg.has_multiplier = false;
+        cfg.read_operands = 2;
+        let mut g = GlobalMem::new(4096);
+        let err = run_one_block_cfg(SCALE_SRC, &[0, 0], 32, &mut g, cfg).unwrap_err();
+        assert!(matches!(err, SimError::NoMultiplier { .. }));
+    }
+
+    /// Two warps exchange data through shared memory across a barrier:
+    /// out[tid] = in_shared[ntid-1-tid].
+    const BARRIER_SRC: &str = r#"
+        .entry reverse
+        .regs 8
+        .smem 256
+            S2R R0, SR_TID
+            S2R R1, SR_NTID
+            SHL R2, R0, #2
+            IADD R2, R2, #64     ; scratch base (after param segment)
+            SST [R2], R0         ; shared[tid] = tid
+            BAR
+            ISUB R3, R1, R0
+            ISUB R3, R3, #1      ; ntid-1-tid
+            SHL R3, R3, #2
+            IADD R3, R3, #64
+            SLD R4, [R3]         ; shared[ntid-1-tid]
+            SHL R5, R0, #2
+            GST [R5], R4
+            EXIT
+    "#;
+
+    #[test]
+    fn barrier_synchronizes_warps() {
+        let mut g = GlobalMem::new(4096);
+        let stats = run_one_block(BARRIER_SRC, &[], 64, &mut g).unwrap();
+        for t in 0..64i32 {
+            assert_eq!(g.load(t as u32 * 4).unwrap(), 63 - t, "thread {t}");
+        }
+        assert_eq!(stats.barriers, 1);
+    }
+
+    #[test]
+    fn join_on_empty_stack_faults() {
+        let mut g = GlobalMem::new(64);
+        let err = run_one_block("JOIN\nEXIT", &[], 32, &mut g).unwrap_err();
+        assert!(matches!(err, SimError::StackUnderflow { .. }));
+    }
+
+    #[test]
+    fn run_off_code_faults() {
+        let mut g = GlobalMem::new(64);
+        let err = run_one_block("NOP", &[], 32, &mut g).unwrap_err();
+        assert!(matches!(err, SimError::RanOffCode { .. }));
+    }
+
+    #[test]
+    fn more_sps_fewer_cycles() {
+        let mut cycles = Vec::new();
+        for sp in [8u32, 16, 32] {
+            let mut g = GlobalMem::new(4096);
+            let stats = run_one_block_cfg(
+                SCALE_SRC,
+                &[0, 0],
+                256,
+                &mut g,
+                SmConfig::baseline().with_sp(sp),
+            )
+            .unwrap();
+            cycles.push(stats.cycles);
+        }
+        assert!(cycles[0] > cycles[1], "8 SP slower than 16 SP: {cycles:?}");
+        assert!(cycles[1] > cycles[2], "16 SP slower than 32 SP: {cycles:?}");
+    }
+
+    #[test]
+    fn r0_seeded_with_tid() {
+        // Paper §3.1: controller initializes thread ids in the regfile.
+        let src = r#"
+            .regs 4
+            SHL R1, R0, #2
+            GST [R1], R0
+            EXIT
+        "#;
+        let mut g = GlobalMem::new(1024);
+        run_one_block(src, &[], 32, &mut g).unwrap();
+        assert_eq!(g.load(5 * 4).unwrap(), 5);
+    }
+
+    #[test]
+    fn exit_under_divergence_drains_stack() {
+        // Lanes < 16 exit inside the taken path; others continue.
+        let src = r#"
+            .regs 8
+            S2R R0, SR_TID
+            ISETP P0, R0, #16
+            SSY reconv
+            @P0.LT BRA then
+            JOIN
+        then:
+            EXIT                 ; 16 lanes die inside divergent region
+        reconv:
+            SHL R1, R0, #2
+            MOV R2, #5
+            GST [R1], R2
+            EXIT
+        "#;
+        let mut g = GlobalMem::new(4096);
+        run_one_block(src, &[], 32, &mut g).unwrap();
+        assert_eq!(g.load(3 * 4).unwrap(), 0, "exited lane must not store");
+        assert_eq!(g.load(20 * 4).unwrap(), 5, "surviving lane stores");
+    }
+}

@@ -1,0 +1,122 @@
+//! The per-warp divergence stack (paper §4.1, Fig. 2): entries of
+//! `{instruction address (32b), type identifier (2b), active-thread mask
+//! (32b)}`, one stack per warp. Its depth is the paper's headline
+//! customization parameter (Table 6: 32 → 16 → 2 → 0).
+
+/// Entry type identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryType {
+    /// Pushed by a divergent branch: `addr` is the start of the taken
+    /// path, `mask` the taken lanes ("the instruction address of the taken
+    /// branch and the active-thread mask prior to evaluation ... are
+    /// stored on a warp stack for safekeeping").
+    Div,
+    /// Pushed by `SSY`: `addr` is the reconvergence point, `mask` the
+    /// active mask to restore there.
+    Sync,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StackEntry {
+    pub typ: EntryType,
+    pub addr: u32,
+    pub mask: u32,
+}
+
+/// Fixed-capacity warp stack. In hardware this is `depth` registers of
+/// 66 bits each (paper §5.2); a push beyond capacity is an architectural
+/// fault — exactly what would go wrong if an application with deep control
+/// nesting ran on an over-customized FlexGrip variant.
+#[derive(Debug, Clone)]
+pub struct WarpStack {
+    entries: Vec<StackEntry>,
+    capacity: u32,
+    /// High-water mark, reported by the customization analyzer to pick the
+    /// minimum viable depth (paper: "profiling the application with
+    /// representative data sets").
+    max_depth: u32,
+}
+
+impl WarpStack {
+    pub fn new(capacity: u32) -> WarpStack {
+        WarpStack { entries: Vec::with_capacity(capacity as usize), capacity, max_depth: 0 }
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    pub fn depth(&self) -> u32 {
+        self.entries.len() as u32
+    }
+
+    pub fn max_depth(&self) -> u32 {
+        self.max_depth
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Push; `Err(())` on overflow (capacity exceeded).
+    pub fn push(&mut self, e: StackEntry) -> Result<(), ()> {
+        if self.entries.len() as u32 >= self.capacity {
+            return Err(());
+        }
+        self.entries.push(e);
+        self.max_depth = self.max_depth.max(self.entries.len() as u32);
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<StackEntry> {
+        self.entries.pop()
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(addr: u32) -> StackEntry {
+        StackEntry { typ: EntryType::Div, addr, mask: 0xff }
+    }
+
+    #[test]
+    fn lifo_order() {
+        let mut s = WarpStack::new(4);
+        s.push(e(1)).unwrap();
+        s.push(e(2)).unwrap();
+        assert_eq!(s.pop().unwrap().addr, 2);
+        assert_eq!(s.pop().unwrap().addr, 1);
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn overflow_at_capacity() {
+        let mut s = WarpStack::new(2);
+        s.push(e(1)).unwrap();
+        s.push(e(2)).unwrap();
+        assert!(s.push(e(3)).is_err());
+        assert_eq!(s.depth(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_rejects_all() {
+        let mut s = WarpStack::new(0);
+        assert!(s.push(e(1)).is_err());
+    }
+
+    #[test]
+    fn high_water_mark_tracks() {
+        let mut s = WarpStack::new(8);
+        s.push(e(1)).unwrap();
+        s.push(e(2)).unwrap();
+        s.pop();
+        s.push(e(3)).unwrap();
+        assert_eq!(s.max_depth(), 2);
+    }
+}

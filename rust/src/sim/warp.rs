@@ -1,0 +1,109 @@
+//! Warp state: "Each warp includes a program counter (PC), a thread mask,
+//! and state. Each warp maintains its own PC and can follow its own
+//! conditional path." (paper §3.2)
+
+use super::stack::WarpStack;
+
+/// Scheduling status of a warp, as the warp unit sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarpStatus {
+    /// Eligible for issue.
+    Ready,
+    /// Waiting for a memory transaction / pipeline hazard to clear.
+    Waiting,
+    /// Parked at a block barrier.
+    AtBarrier,
+    /// All threads finished.
+    Done,
+}
+
+/// One warp of 32 threads.
+#[derive(Debug, Clone)]
+pub struct Warp {
+    /// Warp index within its block.
+    pub id: u32,
+    pub pc: u32,
+    /// Threads that exist (a block whose size is not a multiple of 32 has
+    /// a partial last warp).
+    pub enabled: u32,
+    /// Current SIMT active mask (manipulated by the divergence stack).
+    pub active: u32,
+    /// Threads that executed `EXIT` ("Finished" in the paper's Fig. 2
+    /// thread mask).
+    pub finished: u32,
+    pub at_barrier: bool,
+    /// Earliest cycle at which this warp may issue again.
+    pub ready_at: u64,
+    pub done: bool,
+    pub stack: WarpStack,
+}
+
+impl Warp {
+    pub fn new(id: u32, enabled: u32, stack_depth: u32) -> Warp {
+        Warp {
+            id,
+            pc: 0,
+            enabled,
+            active: enabled,
+            finished: 0,
+            at_barrier: false,
+            ready_at: 0,
+            done: false,
+            stack: WarpStack::new(stack_depth),
+        }
+    }
+
+    /// The lanes that would execute an unguarded instruction now —
+    /// the paper's "active-thread mask" (Fig. 2): active, not finished,
+    /// existing.
+    #[inline]
+    pub fn effective(&self) -> u32 {
+        self.active & !self.finished & self.enabled
+    }
+
+    pub fn status(&self, now: u64) -> WarpStatus {
+        if self.done {
+            WarpStatus::Done
+        } else if self.at_barrier {
+            WarpStatus::AtBarrier
+        } else if self.ready_at > now {
+            WarpStatus::Waiting
+        } else {
+            WarpStatus::Ready
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_mask_excludes_finished() {
+        let mut w = Warp::new(0, 0xffff_ffff, 32);
+        w.finished = 0x0000_00ff;
+        assert_eq!(w.effective(), 0xffff_ff00);
+        w.active = 0x0000_ffff;
+        assert_eq!(w.effective(), 0x0000_ff00);
+    }
+
+    #[test]
+    fn partial_warp_enabled_mask() {
+        // 40-thread block -> warp 1 has 8 threads.
+        let w = Warp::new(1, 0xff, 32);
+        assert_eq!(w.effective(), 0xff);
+    }
+
+    #[test]
+    fn status_transitions() {
+        let mut w = Warp::new(0, 1, 32);
+        assert_eq!(w.status(0), WarpStatus::Ready);
+        w.ready_at = 10;
+        assert_eq!(w.status(5), WarpStatus::Waiting);
+        assert_eq!(w.status(10), WarpStatus::Ready);
+        w.at_barrier = true;
+        assert_eq!(w.status(10), WarpStatus::AtBarrier);
+        w.done = true;
+        assert_eq!(w.status(10), WarpStatus::Done);
+    }
+}

@@ -1,0 +1,111 @@
+//! Assembler integration: source-level programs, diagnostics, and
+//! binary-layout invariants.
+
+use flexgrip::asm::{assemble, AsmError};
+use flexgrip::isa::{Cond, Op, Operand};
+
+#[test]
+fn benchmark_sources_all_assemble_and_predecode() {
+    for id in flexgrip::kernels::BenchId::ALL {
+        let k = assemble(id.source()).unwrap_or_else(|e| panic!("{}: {e}", id.name()));
+        // Pre-decode must accept everything the assembler emits.
+        let pre = flexgrip::isa::decode_stream(&k.code).unwrap();
+        assert_eq!(pre.len(), k.instrs.len(), "{}", id.name());
+        // Every kernel ends with EXIT on all paths we emit.
+        assert!(
+            k.instrs.iter().any(|(_, i)| i.op == Op::Exit),
+            "{} must contain EXIT",
+            id.name()
+        );
+    }
+}
+
+#[test]
+fn labels_resolve_across_long_programs() {
+    // 1000 instructions with branches spanning the whole image.
+    let mut src = String::from("start:\n");
+    for i in 0..500 {
+        src.push_str(&format!("IADD R1, R1, #{i}\n"));
+    }
+    src.push_str("ISETP P0, R1, #0\n@P0.GT BRA start\nBRA end\n");
+    for _ in 0..500 {
+        src.push_str("NOP\n");
+    }
+    src.push_str("end:\nEXIT\n");
+    let k = assemble(&src).unwrap();
+    assert_eq!(k.labels["start"], 0);
+    let bra_end = k
+        .instrs
+        .iter()
+        .find(|(_, i)| i.op == Op::Bra && i.guard.is_unconditional())
+        .unwrap();
+    assert_eq!(bra_end.1.branch_target(), Some(k.labels["end"]));
+}
+
+#[test]
+fn diagnostics_carry_line_numbers() {
+    let cases: [(&str, &str); 6] = [
+        ("IADD R1, R2", "expected"),
+        ("BOGUS R1, R2, R3", "unknown mnemonic"),
+        ("IADD R99, R1, R2", "expected register"), // R99 lexes as ident
+        ("@P9 IADD R1, R1, #1", "expected predicate register"),
+        (".regs 200", "out of range"),
+        ("GLD R1, [R2+99999]", "out of i16 range"),
+    ];
+    for (src, want) in cases {
+        let full = format!("NOP\nNOP\n{src}\nEXIT");
+        let err: AsmError = assemble(&full).unwrap_err();
+        assert_eq!(err.line, 3, "line for `{src}`");
+        assert!(
+            err.msg.contains(want),
+            "`{src}` -> `{}` (wanted `{want}`)",
+            err.msg
+        );
+    }
+}
+
+#[test]
+fn immediates_all_radixes_and_signs() {
+    let k = assemble(
+        "MOV R1, #0x7fffffff\nMOV R2, #-2147483648\nMOV R3, #1_000_000\nEXIT",
+    )
+    .unwrap();
+    let imm = |i: usize| match k.instrs[i].1.src2 {
+        Operand::Imm(v) => v,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(imm(0), i32::MAX);
+    assert_eq!(imm(1), i32::MIN);
+    assert_eq!(imm(2), 1_000_000);
+}
+
+#[test]
+fn guard_conditions_parse_each_variant() {
+    for cond in ["EQ", "NE", "LT", "LE", "GT", "GE"] {
+        let k = assemble(&format!("@P2.{cond} IADD R1, R1, #1\nEXIT")).unwrap();
+        let g = k.instrs[0].1.guard;
+        assert_eq!(g.preg, 2);
+        assert_eq!(g.cond, Cond::from_name(cond).unwrap());
+    }
+}
+
+#[test]
+fn mixed_size_layout_matches_spec() {
+    // short(4): NOP, MOV reg, S2R, NOT, EXIT; long(8): imm/mem/branch ops.
+    let k = assemble(
+        "NOP\nMOV R1, R2\nS2R R3, SR_TID\nNOT R4, R4\nMOV R5, #9\nGLD R6, [R1]\nBRA fin\nfin:\nEXIT",
+    )
+    .unwrap();
+    let pcs: Vec<u32> = k.instrs.iter().map(|(pc, _)| *pc).collect();
+    assert_eq!(pcs, vec![0, 4, 8, 12, 16, 24, 32, 40]);
+    assert_eq!(k.code.len(), 44);
+}
+
+#[test]
+fn comments_and_blank_lines_ignored_everywhere() {
+    let k = assemble(
+        "; header\n\n  // indented comment\nNOP ; trailing\nEXIT // done\n\n",
+    )
+    .unwrap();
+    assert_eq!(k.instrs.len(), 2);
+}

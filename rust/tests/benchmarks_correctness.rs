@@ -1,0 +1,98 @@
+//! Cross-configuration benchmark correctness: every paper benchmark, at
+//! every paper input size, on every (SM, SP) configuration the paper
+//! evaluates — all verified against the host golden references, plus
+//! output equivalence across configurations (the overlay promise: same
+//! binary, same answer, any hardware configuration).
+
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
+use flexgrip::kernels::{self, BenchId, PAPER_SIZES};
+use flexgrip::sim::NativeAlu;
+
+#[test]
+fn every_benchmark_every_size_every_config() {
+    // 5 benchmarks x 4 sizes x 4 configs (256-size matmul on the two big
+    // configs is exercised in the release-mode harness; debug tests cap
+    // the largest combination to keep CI time sane).
+    for id in BenchId::PAPER {
+        for n in PAPER_SIZES {
+            for (sms, sp) in [(1u32, 8u32), (1, 32), (2, 8), (2, 16)] {
+                if id == BenchId::MatMul && n == 256 {
+                    continue; // covered in harness + release benches
+                }
+                let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, sp));
+                let mut alu = NativeAlu;
+                let run = kernels::run_verified(id, n, &gpgpu, &mut alu, 0xC0FFEE)
+                    .unwrap_or_else(|e| panic!("{} n={n} {sms}x{sp}: {e}", id.name()));
+                assert!(run.cycles > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn outputs_identical_across_configurations() {
+    // The same kernel binary must produce bit-identical results on any
+    // configuration (only timing may differ).
+    for id in BenchId::PAPER {
+        let mut outputs: Vec<Vec<i32>> = Vec::new();
+        for (sms, sp) in [(1u32, 8u32), (2, 32)] {
+            let w = kernels::prepare(id, 64, 7);
+            let mut g = w.make_gmem();
+            let mut alu = NativeAlu;
+            w.run(&Gpgpu::new(GpgpuConfig::new(sms, sp)), &mut g, &mut alu).unwrap();
+            outputs.push(g.read_words(0x1000, id.input_elems(64)).unwrap());
+        }
+        assert_eq!(outputs[0], outputs[1], "{}", id.name());
+    }
+}
+
+#[test]
+fn timing_shape_matmul_scales_cubically() {
+    let cycles = |n: u32| {
+        let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
+        let mut alu = NativeAlu;
+        kernels::run_verified(BenchId::MatMul, n, &gpgpu, &mut alu, 1).unwrap().cycles
+    };
+    let (c32, c64) = (cycles(32), cycles(64));
+    let ratio = c64 as f64 / c32 as f64;
+    assert!((6.0..10.0).contains(&ratio), "~8x expected, got {ratio:.1}");
+}
+
+#[test]
+fn divergence_statistics_match_paper_characterization() {
+    // Table 6 characterization at a non-trivial size on 2 SMs.
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(2, 8));
+    let stats = |id| {
+        let mut alu = NativeAlu;
+        kernels::run_verified(id, 128, &gpgpu, &mut alu, 5).unwrap().stats
+    };
+    assert_eq!(stats(BenchId::MatMul).max_stack_depth, 0);
+    assert_eq!(stats(BenchId::Reduction).max_stack_depth, 0);
+    assert_eq!(stats(BenchId::Transpose).max_stack_depth, 0);
+    assert_eq!(stats(BenchId::Bitonic).max_stack_depth, 2);
+    assert_eq!(stats(BenchId::Autocorr).max_stack_depth, 16);
+    assert_eq!(stats(BenchId::Bitonic).multiplier_ops(), 0);
+    assert!(stats(BenchId::MatMul).multiplier_ops() > 0);
+}
+
+#[test]
+fn workload_memory_is_self_contained() {
+    // Inputs + outputs fit the declared gmem size for all benchmarks/sizes.
+    for id in BenchId::ALL {
+        for n in PAPER_SIZES {
+            let w = kernels::prepare(id, n, 9);
+            let g = w.make_gmem();
+            assert!(g.size_bytes() >= 0x1000 + 4 * id.input_elems(n) as u32, "{} {n}", id.name());
+        }
+    }
+}
+
+#[test]
+fn expected_values_stable_for_fixed_seed() {
+    // Golden pinning: data generation is part of the experiment contract.
+    let w = kernels::prepare(BenchId::Reduction, 32, 0xF1E6);
+    let total: i64 = w.input.iter().map(|&v| v as i64).sum();
+    assert_eq!(w.expected(), vec![total as i32]);
+    let w2 = kernels::prepare(BenchId::Reduction, 32, 0xF1E6);
+    assert_eq!(w.input, w2.input);
+}

@@ -1,0 +1,99 @@
+//! Coordinator service: job queue, driver-style kernel submission,
+//! metrics, failure isolation.
+
+use flexgrip::asm::assemble;
+use flexgrip::coordinator::{GpgpuService, Request};
+use flexgrip::gpgpu::{GpgpuConfig, LaunchConfig};
+use flexgrip::kernels::BenchId;
+
+#[test]
+fn bench_jobs_complete_and_verify() {
+    let svc = GpgpuService::start(GpgpuConfig::new(1, 16));
+    let tickets: Vec<_> = BenchId::PAPER
+        .iter()
+        .map(|id| svc.submit(Request::Bench { id: *id, n: 32, seed: 3 }))
+        .collect();
+    for t in tickets {
+        let out = t.wait().expect("job succeeds");
+        assert!(out.verified);
+        assert!(out.cycles > 0);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.jobs_completed, 5);
+    assert_eq!(m.jobs_failed, 0);
+    assert!(m.total_cycles > 0 && m.total_instructions > 0);
+}
+
+#[test]
+fn driver_style_kernel_submission_roundtrip() {
+    let svc = GpgpuService::start(GpgpuConfig::new(1, 8));
+    let kernel = assemble(
+        r#"
+        .entry addone
+        .regs 6
+            S2R R1, SR_GTID
+            SHL R2, R1, #2
+            IADD R2, R2, #4096
+            GLD R3, [R2]
+            IADD R3, R3, #1
+            GST [R2], R3
+            EXIT
+        "#,
+    )
+    .unwrap();
+    let data: Vec<i32> = (0..64).map(|v| v * 10).collect();
+    let t = svc.submit(Request::Kernel {
+        kernel: Box::new(kernel),
+        launch: LaunchConfig::linear(1, 64),
+        params: vec![],
+        gmem_bytes: 1 << 14,
+        inputs: vec![(4096, data.clone())],
+        read_back: (4096, 64),
+    });
+    let out = t.wait().unwrap();
+    assert_eq!(out.label, "addone");
+    let want: Vec<i32> = data.iter().map(|v| v + 1).collect();
+    assert_eq!(out.data, want);
+}
+
+#[test]
+fn failed_jobs_do_not_take_down_the_service() {
+    let svc = GpgpuService::start(GpgpuConfig::new(1, 8));
+    let bad = assemble("JOIN\nEXIT").unwrap();
+    let t_bad = svc.submit(Request::Kernel {
+        kernel: Box::new(bad),
+        launch: LaunchConfig::linear(1, 32),
+        params: vec![],
+        gmem_bytes: 4096,
+        inputs: vec![],
+        read_back: (0, 1),
+    });
+    assert!(t_bad.wait().is_err());
+    // The service keeps accepting work.
+    let t_ok = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 });
+    assert!(t_ok.wait().unwrap().verified);
+    let m = svc.metrics();
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.jobs_completed, 1);
+}
+
+#[test]
+fn many_queued_jobs_fifo_complete() {
+    let svc = GpgpuService::start(GpgpuConfig::new(2, 8));
+    let tickets: Vec<_> = (0..20)
+        .map(|i| svc.submit(Request::Bench { id: BenchId::Reduction, n: 32, seed: i }))
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().unwrap_or_else(|e| panic!("job {i}: {e}"));
+        assert!(out.verified);
+    }
+    assert_eq!(svc.metrics().jobs_completed, 20);
+}
+
+#[test]
+fn shutdown_joins_worker() {
+    let svc = GpgpuService::start(GpgpuConfig::new(1, 8));
+    let t = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 });
+    t.wait().unwrap();
+    drop(svc); // must join cleanly, not hang
+}

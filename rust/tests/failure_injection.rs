@@ -1,0 +1,160 @@
+//! Failure injection: every architectural fault class must surface as a
+//! structured error (never a panic, never silent corruption) — the
+//! driver-facing error contract of §3.1.
+
+use flexgrip::asm::assemble;
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use flexgrip::sim::{GlobalMem, NativeAlu, SimError, SmConfig};
+
+fn launch_src(src: &str, cfg: GpgpuConfig, block: u32) -> Result<(), SimError> {
+    let k = assemble(src).unwrap();
+    let mut g = GlobalMem::new(4096);
+    let mut alu = NativeAlu;
+    Gpgpu::new(cfg)
+        .launch(&k, LaunchConfig::linear(1, block), &[], &mut g, &mut alu)
+        .map(|_| ())
+}
+
+#[test]
+fn global_oob_load_faults_with_address() {
+    let err = launch_src("MOV R1, #0x100000\nGLD R2, [R1]\nEXIT", GpgpuConfig::default(), 32)
+        .unwrap_err();
+    match err {
+        SimError::MemFault { space, addr, reason } => {
+            assert_eq!(space, "global");
+            assert_eq!(addr, 0x100000);
+            assert_eq!(reason, "out of bounds");
+        }
+        other => panic!("{other}"),
+    }
+}
+
+#[test]
+fn misaligned_store_faults() {
+    let err = launch_src("MOV R1, #6\nMOV R2, #1\nGST [R1], R2\nEXIT", GpgpuConfig::default(), 32)
+        .unwrap_err();
+    assert!(matches!(err, SimError::MemFault { reason: "misaligned", .. }));
+}
+
+#[test]
+fn shared_oob_faults_independently_of_global() {
+    let err = launch_src("MOV R1, #0x2000\nSLD R2, [R1]\nEXIT", GpgpuConfig::default(), 32)
+        .unwrap_err();
+    assert!(matches!(err, SimError::MemFault { space: "shared", .. }));
+}
+
+#[test]
+fn stack_overflow_names_warp_and_depth() {
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.warp_stack_depth = 2;
+    // 3 nested SSYs overflow a depth-2 stack before any branch.
+    let err = launch_src(
+        "SSY a\nSSY a\nSSY a\na:\nJOIN\nJOIN\nJOIN\nEXIT",
+        cfg,
+        32,
+    )
+    .unwrap_err();
+    assert!(matches!(err, SimError::StackOverflow { depth: 2, .. }), "{err}");
+}
+
+#[test]
+fn stack_underflow_detected() {
+    let err = launch_src("JOIN\nEXIT", GpgpuConfig::default(), 32).unwrap_err();
+    assert!(matches!(err, SimError::StackUnderflow { pc: 0, .. }));
+}
+
+#[test]
+fn barrier_is_warp_granular_like_hardware() {
+    // A BAR reached inside a divergent region synchronizes at *warp*
+    // granularity (the warp unit tracks warps, not lanes — same as the
+    // FPGA hardware and G80). With one warp the barrier releases
+    // immediately and the kernel completes; it must not deadlock or
+    // corrupt the divergence stack.
+    let src = r#"
+        S2R R0, SR_TID
+        ISETP P0, R0, #16
+        SSY end
+        @P0.LT BRA exit_path
+        BAR                  ; upper half arrives as "the warp"
+        JOIN
+    exit_path:
+        EXIT
+    end:
+        EXIT
+    "#;
+    launch_src(src, GpgpuConfig::default(), 32).expect("warp-granular barrier releases");
+}
+
+#[test]
+fn watchdog_stops_infinite_loops() {
+    let mut cfg = GpgpuConfig::default();
+    cfg.sm.watchdog_cycles = 10_000;
+    let err = launch_src("top:\nBRA top\nEXIT", cfg, 32).unwrap_err();
+    assert!(matches!(err, SimError::Watchdog { .. }));
+}
+
+#[test]
+fn run_off_code_end_detected() {
+    let err = launch_src("NOP\nNOP", GpgpuConfig::default(), 32).unwrap_err();
+    assert!(matches!(err, SimError::RanOffCode { .. }));
+}
+
+#[test]
+fn illegal_opcode_in_binary_faults_at_fetch() {
+    // Corrupt an encoded image: overwrite an opcode with 0x7f.
+    let mut k = assemble("NOP\nNOP\nEXIT").unwrap();
+    k.code[4] = 0x7f;
+    let err = flexgrip::isa::decode_stream(&k.code).unwrap_err();
+    assert!(matches!(err, flexgrip::isa::DecodeError::BadOpcode(0x7f)));
+}
+
+#[test]
+fn multiplier_and_third_operand_faults_are_distinct() {
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.has_multiplier = false;
+    cfg.sm.read_operands = 2;
+    let err = launch_src("IMUL R1, R2, R3\nEXIT", cfg, 32).unwrap_err();
+    assert!(matches!(err, SimError::NoMultiplier { .. }));
+    let err = launch_src("IMAD R1, R2, R3, R4\nEXIT", cfg, 32).unwrap_err();
+    // IMAD is caught by the multiplier check first (it multiplies).
+    assert!(matches!(err, SimError::NoMultiplier { .. } | SimError::NoThirdOperand { .. }));
+}
+
+#[test]
+fn invalid_configs_rejected_before_execution() {
+    let bad_sp = GpgpuConfig::new(1, 9);
+    assert!(matches!(bad_sp.validate(), Err(SimError::LimitExceeded(_))));
+    let mut bad_stack = GpgpuConfig::default();
+    bad_stack.sm.warp_stack_depth = 64;
+    assert!(bad_stack.validate().is_err());
+    let zero_sms = GpgpuConfig { num_sms: 0, sm: SmConfig::baseline() };
+    assert!(zero_sms.validate().is_err());
+}
+
+#[test]
+fn empty_grid_and_oversized_block_rejected() {
+    let k = assemble("EXIT").unwrap();
+    let mut g = GlobalMem::new(1024);
+    let mut alu = NativeAlu;
+    let gp = Gpgpu::new(GpgpuConfig::default());
+    assert!(matches!(
+        gp.launch(&k, LaunchConfig::linear(0, 32), &[], &mut g, &mut alu),
+        Err(SimError::LimitExceeded(_))
+    ));
+    assert!(matches!(
+        gp.launch(&k, LaunchConfig::linear(1, 300), &[], &mut g, &mut alu),
+        Err(SimError::LimitExceeded(_))
+    ));
+}
+
+#[test]
+fn faults_do_not_poison_subsequent_launches() {
+    let gp = Gpgpu::new(GpgpuConfig::default());
+    let mut alu = NativeAlu;
+    let bad = assemble("JOIN\nEXIT").unwrap();
+    let good = assemble("S2R R1, SR_GTID\nSHL R2, R1, #2\nGST [R2], R1\nEXIT").unwrap();
+    let mut g = GlobalMem::new(4096);
+    assert!(gp.launch(&bad, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu).is_err());
+    gp.launch(&good, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu).unwrap();
+    assert_eq!(g.load(31 * 4).unwrap(), 31);
+}

@@ -1,0 +1,119 @@
+//! Whole-model calibration against every published number, plus the
+//! *shape* acceptance criteria from DESIGN.md §4 (who wins, by roughly
+//! what factor, where the orderings fall).
+
+use flexgrip::harness::{paper, Evaluation};
+use flexgrip::kernels::BenchId;
+use flexgrip::model::{area::area, power::power, ArchParams};
+
+#[test]
+fn table2_all_cells_within_tolerance() {
+    for ((sms, sp), (luts, ffs, bram, dsp)) in paper::TABLE2 {
+        let a = area(&ArchParams { num_sms: sms, num_sp: sp, ..ArchParams::baseline() });
+        assert_eq!(a.luts, luts, "{sms}x{sp} LUT");
+        assert_eq!(a.ffs, ffs, "{sms}x{sp} FF");
+        assert_eq!(a.bram, bram, "{sms}x{sp} BRAM");
+        assert_eq!(a.dsp, dsp, "{sms}x{sp} DSP");
+    }
+}
+
+#[test]
+fn table4_dynamic_power_exact() {
+    for (label, dyn_w, _) in paper::TABLE4 {
+        if label == "MicroBlaze" {
+            continue;
+        }
+        let sp: u32 = label.split(", ").nth(1).unwrap().split(' ').next().unwrap().parse().unwrap();
+        let got = power(&ArchParams { num_sp: sp, ..ArchParams::baseline() }).dynamic_w;
+        assert!((got - dyn_w).abs() < 1e-9, "{label}: {got} vs {dyn_w}");
+    }
+}
+
+#[test]
+fn shape_flexgrip_beats_microblaze_everywhere() {
+    let mut ev = Evaluation::new(128);
+    for id in BenchId::PAPER {
+        for (sms, sp) in [(1u32, 8u32), (1, 32), (2, 8), (2, 32)] {
+            let s = ev.speedup(id, sms, sp);
+            assert!(s > 1.0, "{} {sms}x{sp}: {s:.2}", id.name());
+        }
+    }
+}
+
+#[test]
+fn shape_speedup_monotonic_in_sp_and_sm() {
+    let mut ev = Evaluation::new(128);
+    for id in BenchId::PAPER {
+        let s8 = ev.speedup(id, 1, 8);
+        let s16 = ev.speedup(id, 1, 16);
+        let s32 = ev.speedup(id, 1, 32);
+        assert!(s8 < s16 && s16 < s32, "{}: {s8:.1}/{s16:.1}/{s32:.1}", id.name());
+        assert!(ev.speedup(id, 2, 8) > s8, "{}", id.name());
+    }
+}
+
+#[test]
+fn shape_table3_sm_scaling_band_and_ordering() {
+    // Paper: 1.77 (reduction) .. 1.98 (matmul/transpose); the low-diverg
+    // benchmarks split most evenly.
+    let mut ev = Evaluation::new(256);
+    let mut vals = Vec::new();
+    for id in BenchId::PAPER {
+        let s = ev.sm_scaling(id, 8);
+        assert!((1.4..=2.05).contains(&s), "{}: {s:.2}", id.name());
+        vals.push((id, s));
+    }
+    let matmul = vals.iter().find(|(i, _)| *i == BenchId::MatMul).unwrap().1;
+    let transpose = vals.iter().find(|(i, _)| *i == BenchId::Transpose).unwrap().1;
+    assert!(matmul > 1.9 && transpose > 1.9, "paper: ~1.98 for both");
+}
+
+#[test]
+fn shape_energy_reduction_band() {
+    // Paper Table 5: 66-87% dynamic energy reduction. Accept 50-95%.
+    let mut ev = Evaluation::new(256);
+    for id in BenchId::PAPER {
+        let mb_ms = ev.mb(id).exec_time_ms(flexgrip::gpgpu::CLOCK_HZ);
+        let mb_mj = mb_ms * flexgrip::model::MICROBLAZE_DYNAMIC_W;
+        let fg_ms = ev.fg(id, 1, 8).exec_time_ms();
+        let fg_mj = fg_ms * power(&ArchParams::baseline()).dynamic_w;
+        let red = flexgrip::model::energy_reduction_pct(mb_mj, fg_mj);
+        assert!((50.0..95.0).contains(&red), "{}: {red:.0}%", id.name());
+    }
+}
+
+#[test]
+fn shape_customization_reductions_ordered_like_table6() {
+    // bitonic(2-op) > matmul-class (depth 0) > autocorr (depth 16) in
+    // LUT reduction, as in the paper.
+    let base = area(&ArchParams::baseline());
+    let lut_red = |depth: u32, mul: bool| {
+        area(&ArchParams { num_sms: 1, num_sp: 8, warp_stack_depth: depth, has_multiplier: mul })
+            .lut_reduction_pct(&base)
+    };
+    let autocorr = lut_red(16, true);
+    let matclass = lut_red(0, true);
+    let bitonic2 = lut_red(2, false);
+    assert!(bitonic2 > matclass && matclass > autocorr);
+    assert!((10.0..20.0).contains(&autocorr), "paper 14%: {autocorr:.0}");
+    assert!((25.0..35.0).contains(&matclass), "paper 30%: {matclass:.0}");
+    assert!((50.0..70.0).contains(&bitonic2), "paper 62%: {bitonic2:.0}");
+}
+
+#[test]
+fn paper_conclusion_averages() {
+    // "architectural optimization can reduce dynamic energy consumption by
+    // 14% and LUT area by 33%, on average" over the Table 6 configs.
+    let base = area(&ArchParams::baseline());
+    let base_p = power(&ArchParams::baseline()).dynamic_w;
+    let configs = [(16u32, true), (0, true), (0, true), (0, true), (2, false)];
+    let (mut area_sum, mut dyn_sum) = (0.0, 0.0);
+    for (depth, mul) in configs {
+        let p = ArchParams { num_sms: 1, num_sp: 8, warp_stack_depth: depth, has_multiplier: mul };
+        area_sum += area(&p).lut_reduction_pct(&base);
+        dyn_sum += 100.0 * (1.0 - power(&p).dynamic_w / base_p);
+    }
+    let (area_avg, dyn_avg) = (area_sum / 5.0, dyn_sum / 5.0);
+    assert!((25.0..40.0).contains(&area_avg), "paper ~33%: {area_avg:.0}");
+    assert!((8.0..20.0).contains(&dyn_avg), "paper ~14%: {dyn_avg:.0}");
+}

@@ -1,0 +1,140 @@
+//! Randomized block-scheduler properties (proptest-style, seeded):
+//! coverage (every thread of every block executes exactly once),
+//! round-robin balance across SMs, residency-limit respect, and
+//! determinism.
+
+use flexgrip::asm::assemble;
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, KernelResources, LaunchConfig};
+use flexgrip::rng::XorShift64;
+use flexgrip::sim::{GlobalMem, NativeAlu};
+
+/// out[gtid] = gtid * 3 + 1 — written exactly once per thread.
+const COVER: &str = r#"
+    .entry cover
+    .regs 6
+        S2R R1, SR_GTID
+        SHL R2, R1, #2
+        IMUL R3, R1, R1
+        IADD R3, R1, R1
+        IADD R3, R3, R1
+        IADD R3, R3, #1
+        GLD R4, [R2]
+        IADD R3, R3, R4   ; accumulate: double-execution would corrupt
+        GST [R2], R3
+        EXIT
+"#;
+
+#[test]
+fn prop_every_thread_executes_exactly_once_100_geometries() {
+    let mut rng = XorShift64::new(0x5CED);
+    for case in 0..100 {
+        let sms = 1 + rng.below(2) as u32;
+        let sp = [8u32, 16, 32][rng.below(3) as usize];
+        let grid = 1 + rng.below(20) as u32;
+        let block = [17u32, 32, 50, 64, 100, 256][rng.below(6) as usize];
+        let total = grid * block;
+        let k = assemble(COVER).unwrap();
+        let mut g = GlobalMem::new((total * 4 + 4096).next_power_of_two());
+        let mut alu = NativeAlu;
+        let r = Gpgpu::new(GpgpuConfig::new(sms, sp))
+            .launch(&k, LaunchConfig::linear(grid, block), &[], &mut g, &mut alu)
+            .unwrap_or_else(|e| panic!("case {case} ({sms}x{sp} {grid}x{block}): {e}"));
+        for t in 0..total {
+            assert_eq!(
+                g.load(t * 4).unwrap(),
+                (t * 3 + 1) as i32,
+                "case {case} thread {t} ({sms} SM x {sp} SP, grid {grid}, block {block})"
+            );
+        }
+        assert_eq!(r.total.blocks as u32, grid, "case {case}: all blocks retired");
+    }
+}
+
+#[test]
+fn prop_round_robin_balance_across_sms() {
+    let mut rng = XorShift64::new(0xBA1);
+    for _ in 0..50 {
+        let grid = 1 + rng.below(33) as u32;
+        let k = assemble(COVER).unwrap();
+        let mut g = GlobalMem::new((grid * 64 * 4 + 4096).next_power_of_two());
+        let mut alu = NativeAlu;
+        let r = Gpgpu::new(GpgpuConfig::new(2, 8))
+            .launch(&k, LaunchConfig::linear(grid, 64), &[], &mut g, &mut alu)
+            .unwrap();
+        let (a, b) = (r.per_sm[0].blocks, r.per_sm[1].blocks);
+        assert!(a.abs_diff(b) <= 1, "grid {grid}: split {a}/{b}");
+        assert_eq!(a + b, grid as u64);
+    }
+}
+
+#[test]
+fn prop_determinism_same_seed_same_cycles() {
+    for id in flexgrip::kernels::BenchId::PAPER {
+        let run = |seed| {
+            let gpgpu = Gpgpu::new(GpgpuConfig::new(2, 16));
+            let mut alu = NativeAlu;
+            flexgrip::kernels::run_verified(id, 64, &gpgpu, &mut alu, seed)
+                .unwrap()
+                .cycles
+        };
+        assert_eq!(run(42), run(42), "{}", id.name());
+    }
+}
+
+#[test]
+fn prop_residency_limits_hold_for_random_kernels() {
+    let mut rng = XorShift64::new(0x11F);
+    for _ in 0..200 {
+        let res = KernelResources {
+            regs_per_thread: 1 + rng.below(32) as u32,
+            smem_bytes: (rng.below(64) * 256) as u32,
+            block_threads: 1 + rng.below(256) as u32,
+        };
+        if res.validate().is_err() {
+            continue;
+        }
+        let m = res.max_resident_blocks();
+        assert!(m >= 1, "validated kernels must schedule: {res:?}");
+        assert!(m <= 8, "Table 1 cap: {res:?}");
+        assert!(m * res.block_threads <= 768, "threads/SM: {res:?}");
+        assert!(m * res.regs_per_thread * res.block_threads <= 8192, "regs/SM: {res:?}");
+        assert!(m * res.smem_alloc_bytes() <= 16384, "smem/SM: {res:?}");
+    }
+}
+
+#[test]
+fn multi_block_barrier_kernels_interleave_safely() {
+    // Shared-memory reverse with barriers, many blocks resident at once.
+    let src = r#"
+        .regs 8
+        .smem 256
+            S2R R0, SR_TID
+            S2R R1, SR_NTID
+            SHL R2, R0, #2
+            SST [R2+64], R0
+            BAR
+            ISUB R3, R1, R0
+            ISUB R3, R3, #1
+            SHL R3, R3, #2
+            SLD R4, [R3+64]
+            S2R R5, SR_GTID
+            SHL R5, R5, #2
+            GST [R5], R4
+            EXIT
+    "#;
+    let k = assemble(src).unwrap();
+    let mut g = GlobalMem::new(1 << 14);
+    let mut alu = NativeAlu;
+    Gpgpu::new(GpgpuConfig::new(2, 8))
+        .launch(&k, LaunchConfig::linear(6, 64), &[], &mut g, &mut alu)
+        .unwrap();
+    for b in 0..6u32 {
+        for t in 0..64u32 {
+            assert_eq!(
+                g.load((b * 64 + t) * 4).unwrap(),
+                (63 - t) as i32,
+                "block {b} thread {t}"
+            );
+        }
+    }
+}

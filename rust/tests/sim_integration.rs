@@ -1,0 +1,219 @@
+//! SM-level integration: timing-model invariants, nested divergence,
+//! address registers, predicate machinery, multi-block residency.
+
+use flexgrip::asm::assemble;
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use flexgrip::kernels::{self, BenchId};
+use flexgrip::sim::{GlobalMem, MemTiming, NativeAlu};
+
+fn run(src: &str, cfg: GpgpuConfig, grid: u32, block: u32) -> (GlobalMem, u64) {
+    let k = assemble(src).unwrap();
+    let mut g = GlobalMem::new(1 << 16);
+    let mut alu = NativeAlu;
+    let r = Gpgpu::new(cfg)
+        .launch(&k, LaunchConfig::linear(grid, block), &[], &mut g, &mut alu)
+        .unwrap();
+    (g, r.total.cycles)
+}
+
+#[test]
+fn nested_divergence_three_deep() {
+    // 8-way value assignment from 3 nested conditions on tid bits.
+    let src = r#"
+        .regs 10
+        S2R R0, SR_TID
+        MOV R1, #0
+        AND R2, R0, #4
+        ISETP P0, R2, #0
+        SSY e1
+        @P0.EQ BRA b1_then
+        ; bit2 set path
+        AND R2, R0, #2
+        ISETP P1, R2, #0
+        SSY e2a
+        @P1.EQ BRA b2a_then
+        IADD R1, R1, #4
+        JOIN
+    b2a_then:
+        IADD R1, R1, #40
+        JOIN
+    e2a:
+        JOIN
+    b1_then:
+        AND R2, R0, #1
+        ISETP P2, R2, #0
+        SSY e2b
+        @P2.EQ BRA b2b_then
+        IADD R1, R1, #1
+        JOIN
+    b2b_then:
+        IADD R1, R1, #100
+        JOIN
+    e2b:
+        JOIN
+    e1:
+        SHL R3, R0, #2
+        GST [R3], R1
+        EXIT
+    "#;
+    let (g, _) = run(src, GpgpuConfig::new(1, 8), 1, 32);
+    for t in 0..32i32 {
+        let want = if t & 4 != 0 {
+            if t & 2 != 0 { 4 } else { 40 }
+        } else if t & 1 != 0 {
+            1
+        } else {
+            100
+        };
+        assert_eq!(g.load(t as u32 * 4).unwrap(), want, "tid {t}");
+    }
+}
+
+#[test]
+fn address_registers_roundtrip_through_r2a_a2r() {
+    let src = r#"
+        .regs 8
+        .smem 256
+        S2R R0, SR_TID
+        SHL R1, R0, #2
+        IADD R1, R1, #64
+        R2A A1, R1          ; address register holds &shared[tid]
+        IMUL R2, R0, R0
+        SST [A1], R2        ; store via A-reg base
+        SLD R3, [A1]
+        A2R R4, A1
+        GST [R1-64], R3     ; out[tid] = tid^2 (R1-64 = tid*4)
+        SHL R5, R0, #2
+        IADD R5, R5, #512
+        GST [R5], R4        ; out2[tid] = the address itself
+        EXIT
+    "#;
+    let (g, _) = run(src, GpgpuConfig::new(1, 8), 1, 32);
+    for t in 0..32i32 {
+        assert_eq!(g.load(t as u32 * 4).unwrap(), t * t, "sq tid {t}");
+        assert_eq!(g.load(512 + t as u32 * 4).unwrap(), t * 4 + 64, "addr tid {t}");
+    }
+}
+
+#[test]
+fn iset_and_sel_machinery() {
+    let src = r#"
+        .regs 8
+        S2R R0, SR_TID
+        ISET R1, R0, #16, LT      ; -1 if tid<16 else 0
+        ISETP P1, R0, #8
+        SEL R2, R0, R1, P1.GE     ; tid>=8 ? tid : R1
+        SHL R3, R0, #2
+        GST [R3], R2
+        EXIT
+    "#;
+    let (g, _) = run(src, GpgpuConfig::new(1, 8), 1, 32);
+    for t in 0..32i32 {
+        let r1 = if t < 16 { -1 } else { 0 };
+        let want = if t >= 8 { t } else { r1 };
+        assert_eq!(g.load(t as u32 * 4).unwrap(), want, "tid {t}");
+    }
+}
+
+#[test]
+fn cycle_model_invariants_across_sp_counts() {
+    // More SPs -> monotonically fewer (or equal) cycles; halving is the
+    // theoretical best when compute-bound.
+    let compute = r#"
+        .regs 6
+        S2R R0, SR_TID
+        MOV R1, #0
+        MOV R2, #0
+    top:
+        IMAD R1, R0, R0, R1
+        IADD R2, R2, #1
+        ISETP P0, R2, #200
+        @P0.LT BRA top
+        SHL R3, R0, #2
+        GST [R3], R1
+        EXIT
+    "#;
+    let c8 = run(compute, GpgpuConfig::new(1, 8), 4, 256).1;
+    let c16 = run(compute, GpgpuConfig::new(1, 16), 4, 256).1;
+    let c32 = run(compute, GpgpuConfig::new(1, 32), 4, 256).1;
+    assert!(c8 > c16 && c16 > c32, "{c8} > {c16} > {c32}");
+    let ratio = c8 as f64 / c16 as f64;
+    assert!((1.5..=2.05).contains(&ratio), "compute-bound halving: {ratio}");
+}
+
+#[test]
+fn memory_timing_scales_with_latency_parameters() {
+    let src = "S2R R1, SR_GTID\nSHL R2, R1, #2\nGLD R3, [R2]\nGST [R2], R3\nEXIT";
+    let k = assemble(src).unwrap();
+    let mut cycles = Vec::new();
+    for row_overhead in [50u32, 200, 800] {
+        let mut cfg = GpgpuConfig::new(1, 8);
+        cfg.sm.mem = MemTiming { global_row_overhead: row_overhead, ..MemTiming::default() };
+        let mut g = GlobalMem::new(1 << 14);
+        let mut alu = NativeAlu;
+        let r = Gpgpu::new(cfg)
+            .launch(&k, LaunchConfig::linear(2, 64), &[], &mut g, &mut alu)
+            .unwrap();
+        cycles.push(r.total.cycles);
+    }
+    assert!(cycles[0] < cycles[1] && cycles[1] < cycles[2], "{cycles:?}");
+}
+
+#[test]
+fn residency_affects_latency_hiding() {
+    // A shared-memory-light, global-heavy kernel: more resident blocks
+    // cannot make the (blocking) memory path slower.
+    let (_, few) = run(
+        ".regs 30\nS2R R1, SR_GTID\nSHL R2, R1, #2\nGLD R3, [R2]\nGST [R2], R3\nEXIT",
+        GpgpuConfig::new(1, 8),
+        8,
+        64,
+    );
+    let (_, many) = run(
+        ".regs 4\nS2R R1, SR_GTID\nSHL R2, R1, #2\nGLD R3, [R2]\nGST [R2], R3\nEXIT",
+        GpgpuConfig::new(1, 8),
+        8,
+        64,
+    );
+    assert!(many <= few, "more residency must not slow down: {many} vs {few}");
+}
+
+#[test]
+fn per_sm_stats_sum_to_totals() {
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(2, 16));
+    let w = kernels::prepare(BenchId::Transpose, 64, 3);
+    let mut g = w.make_gmem();
+    let mut alu = NativeAlu;
+    let run = w.run(&gpgpu, &mut g, &mut alu).unwrap();
+    let lr = &run.phases[0];
+    let sum: u64 = lr.per_sm.iter().map(|s| s.instructions).sum();
+    assert_eq!(sum, lr.total.instructions);
+    let max = lr.per_sm.iter().map(|s| s.cycles).max().unwrap();
+    assert_eq!(max, lr.total.cycles, "kernel time = slowest SM");
+}
+
+#[test]
+fn gtid_covers_2d_grids() {
+    let src = r#"
+        .regs 6
+        S2R R1, SR_GTID
+        SHL R2, R1, #2
+        GST [R2], R1
+        EXIT
+    "#;
+    let k = assemble(src).unwrap();
+    let mut g = GlobalMem::new(1 << 14);
+    let mut alu = NativeAlu;
+    Gpgpu::new(GpgpuConfig::new(1, 8))
+        .launch(
+            &k,
+            LaunchConfig { grid_x: 3, grid_y: 2, block_threads: 32 },
+            &[],
+            &mut g,
+            &mut alu,
+        )
+        .unwrap();
+    for t in 0..(3 * 2 * 32) {
+        assert_eq!(g.load(t * 4).unwrap(), t as i32);
+    }
+}

@@ -1,0 +1,149 @@
+//! Three-layer integration: the AOT-compiled JAX/Pallas artifacts
+//! executed from Rust through PJRT.
+//!
+//! Requires `make artifacts` (the Makefile guarantees artifacts exist
+//! before `cargo test`).
+
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
+use flexgrip::isa::Cond;
+use flexgrip::kernels::{self, BenchId};
+use flexgrip::rng::XorShift64;
+use flexgrip::runtime::{golden, Artifacts, XlaAlu, XlaBatchAlu, XLA_BATCH};
+use flexgrip::sim::{AluBackend, AluFunc, NativeAlu, WarpAluIn, WARP_SIZE};
+use std::sync::Arc;
+
+fn artifacts() -> Arc<Artifacts> {
+    Arc::new(Artifacts::open_default().expect("run `make artifacts` first"))
+}
+
+const ALL_FUNCS: [AluFunc; 19] = [
+    AluFunc::Add, AluFunc::Sub, AluFunc::Mul, AluFunc::Mad, AluFunc::Min,
+    AluFunc::Max, AluFunc::And, AluFunc::Or, AluFunc::Xor, AluFunc::Not,
+    AluFunc::Shl, AluFunc::Shr, AluFunc::Sar, AluFunc::Abs, AluFunc::Neg,
+    AluFunc::Mov, AluFunc::Setp, AluFunc::Set, AluFunc::Sel,
+];
+
+const ALL_CONDS: [Cond; 8] = [
+    Cond::Always, Cond::Eq, Cond::Ne, Cond::Lt, Cond::Le, Cond::Gt, Cond::Ge,
+    Cond::Never,
+];
+
+fn random_bundle(rng: &mut XorShift64, func: AluFunc, cond: Cond) -> WarpAluIn {
+    let mut mk = |edge: bool| {
+        let mut v = [0i32; WARP_SIZE];
+        for (i, slot) in v.iter_mut().enumerate() {
+            *slot = if edge && i % 7 == 0 {
+                [i32::MIN, i32::MAX, 0, -1, 33][i % 5]
+            } else {
+                rng.next_u64() as i32
+            };
+        }
+        v
+    };
+    WarpAluIn { func, cond, a: mk(true), b: mk(true), c: mk(false) }
+}
+
+#[test]
+fn platform_is_cpu_pjrt() {
+    let arts = artifacts();
+    assert!(!arts.platform().is_empty());
+}
+
+#[test]
+fn xla_alu_differential_vs_native_all_funcs() {
+    let arts = artifacts();
+    let mut xla = XlaAlu::new(arts).unwrap();
+    let mut native = NativeAlu;
+    let mut rng = XorShift64::new(0xA10);
+    for func in ALL_FUNCS {
+        for cond in ALL_CONDS {
+            let input = random_bundle(&mut rng, func, cond);
+            let got = xla.execute(&input);
+            let want = native.execute(&input);
+            assert_eq!(got, want, "func {func:?} cond {cond:?}");
+        }
+    }
+    assert_eq!(xla.calls(), (ALL_FUNCS.len() * ALL_CONDS.len()) as u64);
+}
+
+#[test]
+fn xla_batch_matches_native() {
+    let arts = artifacts();
+    let batch = XlaBatchAlu::new(arts).unwrap();
+    let mut native = NativeAlu;
+    let mut rng = XorShift64::new(0xBA7C);
+    let inputs: Vec<WarpAluIn> = (0..XLA_BATCH)
+        .map(|i| {
+            random_bundle(
+                &mut rng,
+                ALL_FUNCS[i % ALL_FUNCS.len()],
+                ALL_CONDS[i % ALL_CONDS.len()],
+            )
+        })
+        .collect();
+    let got = batch.execute_batch(&inputs).unwrap();
+    for (i, input) in inputs.iter().enumerate() {
+        assert_eq!(got[i], native.execute(input), "slot {i}");
+    }
+}
+
+#[test]
+fn full_benchmark_on_xla_backend() {
+    // The paper's headline property — one binary, any kernel — holds with
+    // the execute stage running on the AOT Pallas artifact end to end.
+    let arts = artifacts();
+    let mut xla = XlaAlu::new(arts).unwrap();
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 32));
+    let run = kernels::run_verified(BenchId::VecAdd, 32, &gpgpu, &mut xla, 0xE2E).unwrap();
+    assert!(run.cycles > 0);
+    assert!(xla.calls() > 0, "ALU work must have crossed into XLA");
+}
+
+#[test]
+fn divergent_kernel_on_xla_backend() {
+    let arts = artifacts();
+    let mut xla = XlaAlu::new(arts).unwrap();
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 32));
+    let run = kernels::run_verified(BenchId::Bitonic, 32, &gpgpu, &mut xla, 0xE2E).unwrap();
+    assert!(run.stats.divergences > 0);
+}
+
+#[test]
+fn golden_models_agree_with_host_references() {
+    let arts = artifacts();
+    for id in BenchId::ALL {
+        for n in [32u32, 64] {
+            let w = kernels::prepare(id, n, 0x601D);
+            let compared = golden::crosscheck(&arts, id, n, &w.input, &w.expected())
+                .unwrap_or_else(|e| panic!("{e}"));
+            assert!(compared > 0, "{} n={n}", id.name());
+        }
+    }
+}
+
+#[test]
+fn golden_models_catch_corruption() {
+    let arts = artifacts();
+    let w = kernels::prepare(BenchId::Reduction, 32, 1);
+    let mut wrong = w.expected();
+    wrong[0] ^= 1;
+    assert!(golden::crosscheck(&arts, BenchId::Reduction, 32, &w.input, &wrong).is_err());
+}
+
+#[test]
+fn missing_artifact_reports_path() {
+    let arts = Artifacts::open("/nonexistent-dir").unwrap();
+    let err = match arts.executable("warp_alu") {
+        Ok(_) => panic!("must fail without artifacts"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn artifact_cache_reuses_executables() {
+    let arts = artifacts();
+    let a = arts.executable("warp_alu").unwrap();
+    let b = arts.executable("warp_alu").unwrap();
+    assert!(Arc::ptr_eq(&a, &b));
+}
