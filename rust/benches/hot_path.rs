@@ -3,24 +3,27 @@
 //!
 //! * SM issue loop throughput (simulated warp-instructions / second)
 //! * native ALU lane throughput
-//! * XLA ALU backend: single-slot vs 64-slot batched artifact
+//! * multi-SM scaling: 1-SM vs 2-SM sequential vs 2-SM parallel vs a
+//!   4-shard coordinator pool on the largest paper benchmark, emitted as
+//!   machine-readable `BENCH_scaling.json` for cross-PR tracking
+//! * XLA ALU backend (skipped gracefully when PJRT is unavailable)
 //! * assembler + pre-decode throughput
 //! * MicroBlaze VM throughput
 
 use flexgrip::asm::assemble;
 use flexgrip::baseline::{self, MbTiming};
 use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
+use flexgrip::harness::{bench, scaling_report};
 use flexgrip::isa::Cond;
 use flexgrip::kernels::{self, BenchId};
 use flexgrip::runtime::{Artifacts, XlaAlu, XlaBatchAlu, XLA_BATCH};
 use flexgrip::sim::{AluBackend, AluFunc, NativeAlu, WarpAluIn};
-use flexgrip::harness::bench;
 use std::sync::Arc;
 
 fn main() {
     println!("=== hot-path microbenchmarks ===\n");
 
-    // Simulator issue loop: matmul-64 = ~107k warp instructions.
+    // Simulator issue loop: matmul-64 on the baseline config.
     let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
     let w = kernels::prepare(BenchId::MatMul, 64, 1);
     let instrs = {
@@ -48,6 +51,27 @@ fn main() {
         wd.run(&gpgpu, &mut g, &mut alu).unwrap().cycles
     });
 
+    // Multi-SM scaling on the largest paper benchmark: sequential vs the
+    // scoped-thread parallel path vs the sharded coordinator pool.
+    println!("\n--- multi-SM / pool scaling (matmul-256) ---");
+    let report = scaling_report(BenchId::MatMul, 256, 1, 3);
+    for p in &report.points {
+        println!(
+            "{:<44} {:>10.1} ms wall  ({} jobs, {} simulated cycles)",
+            p.label, p.wall_ms, p.jobs, p.sim_cycles
+        );
+    }
+    if let Some(s) = report.speedup("2sm_parallel", "2sm_sequential") {
+        println!("  -> 2-SM parallel over 2-SM sequential: {s:.2}x wall-clock");
+    }
+    if let Some(s) = report.speedup("2sm_parallel", "1sm_sequential") {
+        println!("  -> 2-SM parallel over 1-SM sequential: {s:.2}x wall-clock");
+    }
+    report
+        .write_json("BENCH_scaling.json")
+        .expect("write BENCH_scaling.json");
+    println!("  -> wrote BENCH_scaling.json\n");
+
     // Native ALU throughput.
     let input = WarpAluIn {
         func: AluFunc::Mad,
@@ -65,11 +89,12 @@ fn main() {
         acc
     });
 
-    // XLA backends (needs artifacts).
-    match Artifacts::open_default() {
-        Ok(arts) => {
-            let arts = Arc::new(arts);
-            let mut xla = XlaAlu::new(arts.clone()).unwrap();
+    // XLA backends (need AOT artifacts + the PJRT bindings).
+    let xla_ready = Artifacts::open_default()
+        .map(Arc::new)
+        .and_then(|arts| XlaAlu::new(arts.clone()).map(|alu| (arts, alu)));
+    match xla_ready {
+        Ok((arts, mut xla)) => {
             bench("xla_alu_single_slot_x100", 5, || {
                 let mut acc = 0i64;
                 for _ in 0..100 {

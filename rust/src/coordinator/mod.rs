@@ -1,10 +1,26 @@
 //! The coordinator: the paper's "MicroBlaze driver" role (§3.1) as a
-//! long-lived service — it owns the soft GPGPU, accepts kernel-launch
-//! requests over a channel, DMAs data in and out of device memory, and
-//! reports per-job and aggregate metrics.
+//! long-lived service — it owns a pool of soft-GPGPU device shards,
+//! accepts kernel-launch requests over a bounded submit queue, DMAs data
+//! in and out of device memory, and reports per-job, per-shard, and
+//! aggregate metrics.
+//!
+//! # Pool architecture
+//!
+//! `GpgpuService` runs `ServiceConfig::shards` worker threads. Each shard
+//! owns one [`Gpgpu`] device instance and pulls jobs from a single shared
+//! work queue (`Mutex<VecDeque>` + condvars — effectively work stealing:
+//! an idle shard takes the next job the moment it frees up, so one slow
+//! job never blocks the whole pool). `submit` applies backpressure once
+//! `queue_depth` jobs are waiting. Each job's kernel launch itself uses
+//! the parallel multi-SM path (`Gpgpu::launch_parallel`), so a 2-SM shard
+//! simulates its SMs concurrently while other shards run other jobs.
+//!
+//! Shutdown is graceful: dropping the service stops intake, lets the
+//! shards drain every queued job (each ticket still resolves), then joins
+//! the worker threads.
 //!
 //! tokio is unavailable in this offline image (DESIGN.md §substitutions),
-//! so the service uses a dedicated worker thread + std::sync::mpsc; the
+//! so the pool uses plain threads + std::sync::mpsc reply channels; the
 //! API shape (submit -> ticket -> await) is what an async driver would
 //! expose.
 
@@ -15,9 +31,11 @@ pub use customize::{analyze_kernel, profile, CustomizationReport, StaticAnalysis
 use crate::asm::Kernel;
 use crate::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
 use crate::kernels::{self, BenchId};
-use crate::sim::{GlobalMem, NativeAlu, SmStats};
+use crate::sim::{GlobalMem, NativeAlu, SimError, SmStats};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 /// A kernel-launch request.
@@ -27,6 +45,16 @@ pub enum Request {
     Bench { id: BenchId, n: u32, seed: u64 },
     /// Launch an arbitrary assembled kernel: the driver writes `inputs`
     /// into device memory, launches, and reads `read_back` words out.
+    ///
+    /// Executed through `Gpgpu::launch_parallel`. If the kernel's blocks
+    /// overlap writes across SMs, the rejected merge leaves device memory
+    /// untouched and the shard transparently retries on the sequential
+    /// `Gpgpu::launch` (which permits overlapping writes, SM order). One
+    /// contract remains on the caller for multi-SM devices: blocks must
+    /// not *read* data written by blocks on another SM within the same
+    /// launch — that dependency is undetectable (see `gpgpu` module docs)
+    /// and such kernels should be split into phases or run on a 1-SM
+    /// service.
     Kernel {
         kernel: Box<Kernel>,
         launch: LaunchConfig,
@@ -48,6 +76,8 @@ pub struct JobOutput {
     pub data: Vec<i32>,
     /// For `Request::Bench`: golden verification outcome.
     pub verified: bool,
+    /// Pool shard that executed the job.
+    pub shard: u32,
 }
 
 /// Handle to an in-flight job.
@@ -62,7 +92,23 @@ impl JobTicket {
     }
 }
 
-/// Aggregate service counters.
+/// Pool shape: how many device shards serve the queue, and how many jobs
+/// may wait before `submit` applies backpressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Worker threads, each owning one GPGPU device instance.
+    pub shards: u32,
+    /// Maximum queued (not yet running) jobs before `submit` blocks.
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { shards: 1, queue_depth: 64 }
+    }
+}
+
+/// Aggregate counters for one shard.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub jobs_completed: AtomicU64,
@@ -71,7 +117,18 @@ pub struct Metrics {
     pub total_instructions: AtomicU64,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+impl Metrics {
+    fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            total_cycles: self.total_cycles.load(Ordering::Relaxed),
+            total_instructions: self.total_instructions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct MetricsSnapshot {
     pub jobs_completed: u64,
     pub jobs_failed: u64,
@@ -79,117 +136,214 @@ pub struct MetricsSnapshot {
     pub total_instructions: u64,
 }
 
-/// The GPGPU service: one worker thread owning the device.
+impl MetricsSnapshot {
+    /// Element-wise sum — aggregate view over shards.
+    pub fn merged(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_completed: self.jobs_completed + other.jobs_completed,
+            jobs_failed: self.jobs_failed + other.jobs_failed,
+            total_cycles: self.total_cycles + other.total_cycles,
+            total_instructions: self.total_instructions + other.total_instructions,
+        }
+    }
+}
+
+type Job = (Request, mpsc::Sender<Result<JobOutput, String>>);
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    /// Signalled when a job is enqueued (workers wait here).
+    not_empty: Condvar,
+    /// Signalled when a job is dequeued (backpressured submitters wait here).
+    not_full: Condvar,
+    depth: usize,
+}
+
+/// The GPGPU service: a shard pool behind one submit queue.
 pub struct GpgpuService {
-    tx: Option<mpsc::Sender<(Request, mpsc::Sender<Result<JobOutput, String>>)>>,
-    worker: Option<JoinHandle<()>>,
-    metrics: Arc<Metrics>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    shard_metrics: Vec<Arc<Metrics>>,
     pub cfg: GpgpuConfig,
+    pub pool: ServiceConfig,
 }
 
 impl GpgpuService {
+    /// Single-shard service (the seed API — one worker owning one device).
     pub fn start(cfg: GpgpuConfig) -> GpgpuService {
-        let metrics = Arc::new(Metrics::default());
-        let m = metrics.clone();
-        let (tx, rx) =
-            mpsc::channel::<(Request, mpsc::Sender<Result<JobOutput, String>>)>();
-        let worker = std::thread::spawn(move || {
-            let gpgpu = Gpgpu::new(cfg);
-            let mut alu = NativeAlu;
-            while let Ok((req, reply)) = rx.recv() {
-                let result = Self::run_one(&gpgpu, &mut alu, req);
-                match &result {
-                    Ok(out) => {
-                        m.jobs_completed.fetch_add(1, Ordering::Relaxed);
-                        m.total_cycles.fetch_add(out.cycles, Ordering::Relaxed);
-                        m.total_instructions
-                            .fetch_add(out.stats.instructions, Ordering::Relaxed);
-                    }
-                    Err(_) => {
-                        m.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                let _ = reply.send(result);
-            }
+        GpgpuService::start_pool(cfg, ServiceConfig::default())
+    }
+
+    /// Start a pool of `pool.shards` identical device shards.
+    pub fn start_pool(cfg: GpgpuConfig, pool: ServiceConfig) -> GpgpuService {
+        let shards = pool.shards.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth: pool.queue_depth.max(1),
         });
-        GpgpuService { tx: Some(tx), worker: Some(worker), metrics, cfg }
-    }
-
-    fn run_one(
-        gpgpu: &Gpgpu,
-        alu: &mut NativeAlu,
-        req: Request,
-    ) -> Result<JobOutput, String> {
-        match req {
-            Request::Bench { id, n, seed } => {
-                let w = kernels::prepare(id, n, seed);
-                let mut gmem = w.make_gmem();
-                let run = w.run(gpgpu, &mut gmem, alu).map_err(|e| e.to_string())?;
-                let verified = w.verify(&gmem).map(|_| true).map_err(|e| e)?;
-                Ok(JobOutput {
-                    label: format!("{} n={n}", id.name()),
-                    cycles: run.cycles,
-                    exec_time_ms: run.exec_time_ms(),
-                    stats: run.stats,
-                    data: Vec::new(),
-                    verified,
-                })
-            }
-            Request::Kernel {
-                kernel,
-                launch,
-                params,
-                gmem_bytes,
-                inputs,
-                read_back,
-            } => {
-                let mut gmem = GlobalMem::new(gmem_bytes);
-                for (addr, words) in &inputs {
-                    gmem.write_words(*addr, words).map_err(|e| e.to_string())?;
-                }
-                let r = gpgpu
-                    .launch(&kernel, launch, &params, &mut gmem, alu)
-                    .map_err(|e| e.to_string())?;
-                let data =
-                    gmem.read_words(read_back.0, read_back.1).map_err(|e| e.to_string())?;
-                Ok(JobOutput {
-                    label: kernel.name.clone(),
-                    cycles: r.total.cycles,
-                    exec_time_ms: r.exec_time_ms(),
-                    stats: r.total,
-                    data,
-                    verified: true,
-                })
-            }
+        let mut workers = Vec::with_capacity(shards as usize);
+        let mut shard_metrics = Vec::with_capacity(shards as usize);
+        for shard in 0..shards {
+            let metrics = Arc::new(Metrics::default());
+            shard_metrics.push(metrics.clone());
+            let shared = shared.clone();
+            workers.push(std::thread::spawn(move || {
+                shard_worker(shard, cfg, &shared, &metrics);
+            }));
         }
+        GpgpuService { shared, workers, shard_metrics, cfg, pool }
     }
 
-    /// Queue a job; returns immediately with a ticket.
+    /// Queue a job; returns immediately with a ticket unless the queue is
+    /// at `queue_depth`, in which case it blocks until a shard drains it.
     pub fn submit(&self, req: Request) -> JobTicket {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("service running")
-            .send((req, reply_tx))
-            .expect("worker alive");
+        let mut q = self.shared.state.lock().expect("queue poisoned");
+        while q.jobs.len() >= self.shared.depth && !q.shutdown {
+            q = self.shared.not_full.wait(q).expect("queue poisoned");
+        }
+        q.jobs.push_back((req, reply_tx));
+        drop(q);
+        self.shared.not_empty.notify_one();
         JobTicket { rx: reply_rx }
     }
 
+    /// Aggregate metrics over every shard.
     pub fn metrics(&self) -> MetricsSnapshot {
-        MetricsSnapshot {
-            jobs_completed: self.metrics.jobs_completed.load(Ordering::Relaxed),
-            jobs_failed: self.metrics.jobs_failed.load(Ordering::Relaxed),
-            total_cycles: self.metrics.total_cycles.load(Ordering::Relaxed),
-            total_instructions: self.metrics.total_instructions.load(Ordering::Relaxed),
-        }
+        self.shard_metrics
+            .iter()
+            .fold(MetricsSnapshot::default(), |acc, m| acc.merged(&m.snapshot()))
+    }
+
+    /// Per-shard metrics (index = shard id).
+    pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.shard_metrics.iter().map(|m| m.snapshot()).collect()
     }
 }
 
 impl Drop for GpgpuService {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        // Graceful shutdown: stop intake, let shards drain the queue
+        // (every already-submitted ticket still resolves), then join.
+        {
+            let mut q = self.shared.state.lock().expect("queue poisoned");
+            q.shutdown = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+/// One shard: owns a device, pulls jobs until shutdown + empty queue.
+fn shard_worker(shard: u32, cfg: GpgpuConfig, shared: &Shared, metrics: &Metrics) {
+    let gpgpu = Gpgpu::new(cfg);
+    loop {
+        let job = {
+            let mut q = shared.state.lock().expect("queue poisoned");
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break Some(j);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.not_empty.wait(q).expect("queue poisoned");
+            }
+        };
+        let Some((req, reply)) = job else { break };
+        shared.not_full.notify_one();
+        // A panicking job (e.g. a malformed Bench size tripping an assert
+        // in kernels::prepare) must fail its own ticket, not kill the
+        // shard — a dead shard would leave later tickets hanging forever.
+        let result = catch_unwind(AssertUnwindSafe(|| run_one(&gpgpu, shard, req)))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic".to_string());
+                Err(format!("job panicked: {msg}"))
+            });
+        match &result {
+            Ok(out) => {
+                metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                metrics.total_cycles.fetch_add(out.cycles, Ordering::Relaxed);
+                metrics
+                    .total_instructions
+                    .fetch_add(out.stats.instructions, Ordering::Relaxed);
+            }
+            Err(_) => {
+                metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let _ = reply.send(result);
+    }
+}
+
+fn run_one(gpgpu: &Gpgpu, shard: u32, req: Request) -> Result<JobOutput, String> {
+    match req {
+        Request::Bench { id, n, seed } => {
+            let w = kernels::prepare(id, n, seed);
+            let mut gmem = w.make_gmem();
+            let run = w
+                .run_parallel(gpgpu, &mut gmem, &NativeAlu)
+                .map_err(|e| e.to_string())?;
+            let verified = w.verify(&gmem).map(|_| true)?;
+            Ok(JobOutput {
+                label: format!("{} n={n}", id.name()),
+                cycles: run.cycles,
+                exec_time_ms: run.exec_time_ms(),
+                stats: run.stats,
+                data: Vec::new(),
+                verified,
+                shard,
+            })
+        }
+        Request::Kernel {
+            kernel,
+            launch,
+            params,
+            gmem_bytes,
+            inputs,
+            read_back,
+        } => {
+            let mut gmem = GlobalMem::new(gmem_bytes);
+            for (addr, words) in &inputs {
+                gmem.write_words(*addr, words).map_err(|e| e.to_string())?;
+            }
+            let launched = match gpgpu.launch_parallel(&kernel, launch, &params, &mut gmem, &NativeAlu)
+            {
+                Err(SimError::WriteConflict { .. }) => {
+                    // Arbitrary user kernels may legally overlap writes
+                    // across SMs; the rejected merge left gmem untouched,
+                    // so fall back to the sequential reference path.
+                    let mut alu = NativeAlu;
+                    gpgpu.launch(&kernel, launch, &params, &mut gmem, &mut alu)
+                }
+                other => other,
+            };
+            let r = launched.map_err(|e| e.to_string())?;
+            let data =
+                gmem.read_words(read_back.0, read_back.1).map_err(|e| e.to_string())?;
+            Ok(JobOutput {
+                label: kernel.name.clone(),
+                cycles: r.total.cycles,
+                exec_time_ms: r.exec_time_ms(),
+                stats: r.total,
+                data,
+                verified: true,
+                shard,
+            })
         }
     }
 }

@@ -1,5 +1,38 @@
 //! The FlexGrip GPGPU top level: block scheduler + one or more streaming
 //! multiprocessors (paper §3.1, §4.3).
+//!
+//! # Execution model: partition → simulate → merge
+//!
+//! Every kernel launch runs in three phases:
+//!
+//! 1. **Partition** — the block scheduler validates the configuration and
+//!    kernel resources, then deals thread blocks round-robin across SMs
+//!    ("the block scheduler logic equally and automatically distributed
+//!    thread blocks to the 2 SMs", §5.1.1).
+//! 2. **Simulate** — each SM executes its block queue to completion.
+//!    [`Gpgpu::launch`] simulates the SMs sequentially against the shared
+//!    [`GlobalMem`] (the seed reference path, usable with any
+//!    `&mut dyn AluBackend`). [`Gpgpu::launch_parallel`] instead runs each
+//!    SM on its own scoped OS thread: every SM gets a private
+//!    [`GmemSnapshot`] (a read snapshot of launch-time memory plus a write
+//!    log) and its own ALU built from an [`AluFactory`], so no simulation
+//!    state is shared between threads.
+//! 3. **Merge** — per-SM statistics are aggregated (`cycles` = max over
+//!    SMs, since real SMs run concurrently; counters summed). On the
+//!    parallel path the write logs are additionally replayed into the real
+//!    `GlobalMem` in SM-id order, and any global address stored by two
+//!    different SMs raises [`SimError::WriteConflict`].
+//!
+//! The parallel path is bit-equivalent to the sequential path (identical
+//! memory image and identical simulated cycles) for kernels whose SMs
+//! write disjoint addresses and never read another SM's writes within one
+//! launch — true of all five paper benchmarks. The *write-disjointness*
+//! half of that contract is checked per launch by the conflict detector;
+//! a cross-SM read of data another SM wrote in the same launch has no
+//! write overlap, so it is **not** detectable — such kernels read the
+//! launch-time snapshot and must use the sequential [`Gpgpu::launch`]
+//! (or split the dependency across launches, as reduction's two phases
+//! do). Inter-SM memory contention is not modelled (DESIGN.md §5).
 
 pub mod limits;
 
@@ -7,8 +40,10 @@ pub use limits::KernelResources;
 
 use crate::asm::Kernel;
 use crate::sim::{
-    AluBackend, BlockDesc, GlobalMem, PreDecoded, SimError, Sm, SmConfig, SmStats,
+    AluBackend, AluFactory, BlockDesc, GlobalMem, GmemSnapshot, PreDecoded, SimError, Sm,
+    SmConfig, SmStats, WriteRecord,
 };
+use std::collections::HashMap;
 
 /// Overlay clock: "All designs were evaluated at 100 MHz" (paper §5.1).
 pub const CLOCK_HZ: f64 = 100e6;
@@ -96,22 +131,13 @@ impl Gpgpu {
         Gpgpu { cfg }
     }
 
-    /// Launch `kernel` over `launch` geometry. The block scheduler deals
-    /// blocks round-robin across SMs ("the block scheduler logic equally
-    /// and automatically distributed thread blocks to the 2 SMs", §5.1.1);
-    /// each SM then keeps up to the Table-1 residency limit in flight.
-    ///
-    /// SMs are simulated sequentially against the shared global memory;
-    /// kernel time is the max of the per-SM busy times. Inter-SM memory
-    /// contention is not modelled (DESIGN.md §5).
-    pub fn launch(
+    /// Phase 1 (partition): validate, compute the residency limit, and
+    /// deal blocks round-robin across SMs.
+    fn partition(
         &self,
         kernel: &Kernel,
         launch: LaunchConfig,
-        params: &[i32],
-        gmem: &mut GlobalMem,
-        alu: &mut dyn AluBackend,
-    ) -> Result<LaunchResult, SimError> {
+    ) -> Result<(Vec<Vec<BlockDesc>>, u32), SimError> {
         self.cfg.validate()?;
         let res = KernelResources {
             regs_per_thread: kernel.regs_per_thread,
@@ -125,7 +151,6 @@ impl Gpgpu {
         let max_resident = res.max_resident_blocks();
         debug_assert!(max_resident >= 1);
 
-        // Round-robin block distribution across SMs.
         let mut assignments: Vec<Vec<BlockDesc>> =
             vec![Vec::new(); self.cfg.num_sms as usize];
         let mut i = 0usize;
@@ -141,7 +166,31 @@ impl Gpgpu {
                 i += 1;
             }
         }
+        Ok((assignments, max_resident))
+    }
 
+    /// Phase 3 (merge): aggregate per-SM statistics into a launch result.
+    fn merge_stats(per_sm: Vec<SmStats>, max_resident: u32) -> LaunchResult {
+        let mut total = SmStats::default();
+        for s in &per_sm {
+            total.merge(s);
+        }
+        LaunchResult { per_sm, total, max_resident_blocks: max_resident }
+    }
+
+    /// Launch `kernel` over `launch` geometry — the sequential reference
+    /// path: SMs are simulated one after another against the shared global
+    /// memory, all through the single `alu` backend. Kernel time is the
+    /// max of the per-SM busy times.
+    pub fn launch(
+        &self,
+        kernel: &Kernel,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<LaunchResult, SimError> {
+        let (assignments, max_resident) = self.partition(kernel, launch)?;
         let pre = PreDecoded::from_kernel(kernel);
         let mut per_sm = Vec::with_capacity(self.cfg.num_sms as usize);
         for (sm_id, blocks) in assignments.iter().enumerate() {
@@ -162,13 +211,133 @@ impl Gpgpu {
             };
             per_sm.push(stats);
         }
-
-        let mut total = SmStats::default();
-        for s in &per_sm {
-            total.merge(s);
-        }
-        Ok(LaunchResult { per_sm, total, max_resident_blocks: max_resident })
+        Ok(Self::merge_stats(per_sm, max_resident))
     }
+
+    /// Launch `kernel` with each SM simulated on its own scoped thread —
+    /// the wall-clock-parallel path.
+    ///
+    /// Each SM thread owns an ALU built by `factory` and a private
+    /// [`GmemSnapshot`] of `gmem`; after every SM completes, the write
+    /// logs are replayed into `gmem` in SM-id order, raising
+    /// [`SimError::WriteConflict`] if two SMs stored the same address.
+    /// For conflict-free kernels the result (memory image, per-SM stats,
+    /// simulated cycles) is identical to [`Gpgpu::launch`].
+    pub fn launch_parallel(
+        &self,
+        kernel: &Kernel,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<LaunchResult, SimError> {
+        let (assignments, max_resident) = self.partition(kernel, launch)?;
+        let pre = PreDecoded::from_kernel(kernel);
+
+        if self.cfg.num_sms == 1 {
+            // One SM: no partitioning benefit; skip the snapshot copy.
+            let mut alu = factory.make_alu();
+            let sm = Sm::new(self.cfg.sm, 0);
+            let stats = sm.run(
+                &pre,
+                kernel.regs_per_thread,
+                kernel.smem_bytes,
+                params,
+                &assignments[0],
+                max_resident as usize,
+                gmem,
+                alu.as_mut(),
+            )?;
+            return Ok(Self::merge_stats(vec![stats], max_resident));
+        }
+
+        // Phase 2 (simulate): one scoped thread per SM, no shared mutable
+        // state. `base` is the read snapshot source; each thread clones it
+        // into its private view.
+        let base: &GlobalMem = gmem;
+        let cfg = self.cfg;
+        let regs = kernel.regs_per_thread;
+        let smem = kernel.smem_bytes;
+        let results: Vec<Result<(SmStats, Vec<WriteRecord>), SimError>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = assignments
+                    .iter()
+                    .enumerate()
+                    .map(|(sm_id, blocks)| {
+                        let pre = &pre;
+                        scope.spawn(move || {
+                            if blocks.is_empty() {
+                                return Ok((SmStats::default(), Vec::new()));
+                            }
+                            let sm = Sm::new(cfg.sm, sm_id as u32);
+                            let mut alu = factory.make_alu();
+                            let mut view = GmemSnapshot::new(base);
+                            let stats = sm.run(
+                                pre,
+                                regs,
+                                smem,
+                                params,
+                                blocks,
+                                max_resident as usize,
+                                &mut view,
+                                alu.as_mut(),
+                            )?;
+                            Ok((stats, view.into_log()))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("SM simulation thread panicked"))
+                    .collect()
+            });
+
+        // Phase 3 (merge): replay write logs deterministically in SM order,
+        // detecting cross-SM conflicts, then aggregate statistics.
+        let mut per_sm = Vec::with_capacity(results.len());
+        let mut logs = Vec::with_capacity(results.len());
+        for r in results {
+            let (stats, log) = r?;
+            per_sm.push(stats);
+            logs.push(log);
+        }
+        merge_write_logs(gmem, &logs)?;
+        Ok(Self::merge_stats(per_sm, max_resident))
+    }
+}
+
+/// Replay per-SM write logs into `gmem` in SM-id order (within one SM,
+/// program order is preserved by the log itself). An address written by
+/// two different SMs is a violation of the parallel launch's
+/// disjoint-write contract and raises [`SimError::WriteConflict`] —
+/// detected in a scan pass *before* any write is applied, so a rejected
+/// launch leaves `gmem` exactly as it was (callers may recover by falling
+/// back to the sequential [`Gpgpu::launch`] on the same memory).
+fn merge_write_logs(gmem: &mut GlobalMem, logs: &[Vec<WriteRecord>]) -> Result<(), SimError> {
+    let mut writer: HashMap<u32, u32> = HashMap::new();
+    for (sm_id, log) in logs.iter().enumerate() {
+        let sm_id = sm_id as u32;
+        for &(addr, _) in log {
+            match writer.get(&addr) {
+                Some(&first) if first != sm_id => {
+                    return Err(SimError::WriteConflict {
+                        addr,
+                        first_sm: first,
+                        second_sm: sm_id,
+                    });
+                }
+                _ => {
+                    writer.insert(addr, sm_id);
+                }
+            }
+        }
+    }
+    for log in logs {
+        for &(addr, value) in log {
+            gmem.store(addr, value)?;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -194,6 +363,15 @@ mod tests {
         let mut alu = NativeAlu;
         let r = Gpgpu::new(cfg)
             .launch(&k, LaunchConfig::linear(grid, block), &[], &mut g, &mut alu)
+            .unwrap();
+        (g, r)
+    }
+
+    fn launch_par(cfg: GpgpuConfig, grid: u32, block: u32) -> (GlobalMem, LaunchResult) {
+        let k = assemble(SRC).unwrap();
+        let mut g = GlobalMem::new(grid * block * 4 + 64);
+        let r = Gpgpu::new(cfg)
+            .launch_parallel(&k, LaunchConfig::linear(grid, block), &[], &mut g, &NativeAlu)
             .unwrap();
         (g, r)
     }
@@ -252,5 +430,50 @@ mod tests {
         let (_, r) = launch(GpgpuConfig::new(1, 8), 1, 32);
         let want = r.total.cycles as f64 / 100e6 * 1e3;
         assert!((r.exec_time_ms() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_launch_matches_sequential_bit_for_bit() {
+        for (sms, grid, block) in [(1u32, 5u32, 64u32), (2, 8, 64), (2, 5, 50)] {
+            let (gs, rs) = launch(GpgpuConfig::new(sms, 8), grid, block);
+            let (gp, rp) = launch_par(GpgpuConfig::new(sms, 8), grid, block);
+            assert_eq!(rs.total.cycles, rp.total.cycles, "{sms} SM cycles");
+            assert_eq!(rs.total.instructions, rp.total.instructions);
+            for sm in 0..sms as usize {
+                assert_eq!(rs.per_sm[sm].cycles, rp.per_sm[sm].cycles, "SM {sm}");
+                assert_eq!(rs.per_sm[sm].blocks, rp.per_sm[sm].blocks, "SM {sm}");
+            }
+            let words = (gs.size_bytes() / 4) as usize;
+            assert_eq!(
+                gs.read_words(0, words).unwrap(),
+                gp.read_words(0, words).unwrap(),
+                "memory image {sms} SM {grid}x{block}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_launch_detects_cross_sm_write_conflict() {
+        // Every block stores to address 0 — blocks land on both SMs, so
+        // the merge phase must flag the overlapping write.
+        let k = assemble("MOV R1, #0\nMOV R2, #7\nGST [R1], R2\nEXIT").unwrap();
+        let mut g = GlobalMem::new(4096);
+        let err = Gpgpu::new(GpgpuConfig::new(2, 8))
+            .launch_parallel(&k, LaunchConfig::linear(2, 32), &[], &mut g, &NativeAlu)
+            .unwrap_err();
+        assert!(
+            matches!(err, SimError::WriteConflict { addr: 0, .. }),
+            "want WriteConflict, got {err}"
+        );
+    }
+
+    #[test]
+    fn parallel_launch_propagates_sm_faults() {
+        let k = assemble("JOIN\nEXIT").unwrap();
+        let mut g = GlobalMem::new(4096);
+        let err = Gpgpu::new(GpgpuConfig::new(2, 8))
+            .launch_parallel(&k, LaunchConfig::linear(4, 32), &[], &mut g, &NativeAlu)
+            .unwrap_err();
+        assert!(matches!(err, SimError::StackUnderflow { .. }));
     }
 }

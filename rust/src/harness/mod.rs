@@ -6,9 +6,11 @@
 pub mod eval;
 pub mod microbench;
 pub mod paper;
+pub mod scaling;
 pub mod tables;
 pub mod text;
 
 pub use eval::Evaluation;
 pub use microbench::{bench, BenchResult};
+pub use scaling::{scaling_report, ScalingPoint, ScalingReport};
 pub use text::TextTable;

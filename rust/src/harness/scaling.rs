@@ -1,0 +1,156 @@
+//! Wall-clock scaling measurements for the parallel execution paths, with
+//! a machine-readable `BENCH_scaling.json` emitter so successive PRs can
+//! track the host-side scaling trajectory (simulated cycles are asserted
+//! equal across paths elsewhere; this file is about *wall-clock*).
+//!
+//! Four points per report:
+//! * `1sm_sequential`  — seed path, one SM;
+//! * `2sm_sequential`  — seed path, two SMs simulated back-to-back;
+//! * `2sm_parallel`    — `launch_parallel`, one thread per SM;
+//! * `pool_4shard`     — 4-shard coordinator pool absorbing a job batch.
+
+use crate::coordinator::{GpgpuService, Request, ServiceConfig};
+use crate::gpgpu::{Gpgpu, GpgpuConfig};
+use crate::kernels::{self, BenchId};
+use crate::sim::NativeAlu;
+use std::time::Instant;
+
+/// One measured configuration.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub label: &'static str,
+    /// Median wall-clock per run/batch, milliseconds.
+    pub wall_ms: f64,
+    /// Simulated device cycles of one run (summed over pool jobs).
+    pub sim_cycles: u64,
+    /// Jobs per measured batch (1 for the direct launches).
+    pub jobs: u32,
+}
+
+/// A full scaling measurement at one benchmark/size.
+#[derive(Debug, Clone)]
+pub struct ScalingReport {
+    pub bench: &'static str,
+    pub n: u32,
+    pub seed: u64,
+    pub points: Vec<ScalingPoint>,
+}
+
+impl ScalingReport {
+    /// Wall-clock speedup of `num` over `den` (both by label).
+    pub fn speedup(&self, num: &str, den: &str) -> Option<f64> {
+        let f = |l: &str| self.points.iter().find(|p| p.label == l).map(|p| p.wall_ms);
+        match (f(den), f(num)) {
+            (Some(d), Some(n)) if n > 0.0 => Some(d / n),
+            _ => None,
+        }
+    }
+
+    /// Hand-rolled JSON (the image has no serde): stable field order,
+    /// suitable for line-diffing across PRs.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", self.bench));
+        out.push_str(&format!("  \"n\": {},\n", self.n));
+        out.push_str(&format!("  \"seed\": {},\n", self.seed));
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"wall_ms\": {:.3}, \"sim_cycles\": {}, \"jobs\": {}}}{}\n",
+                p.label,
+                p.wall_ms,
+                p.sim_cycles,
+                p.jobs,
+                if i + 1 == self.points.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn median_ms(samples: usize, mut f: impl FnMut() -> u64) -> (f64, u64) {
+    let mut walls = Vec::with_capacity(samples);
+    let mut cycles = 0;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        cycles = f();
+        walls.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    walls.sort_by(|a, b| a.partial_cmp(b).expect("finite wall times"));
+    (walls[walls.len() / 2], cycles)
+}
+
+/// Measure all four scaling points for `id` at size `n`. Every run is
+/// verified against the host golden reference.
+pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> ScalingReport {
+    let samples = samples.max(1);
+    let w = kernels::prepare(id, n, seed);
+    let mut points = Vec::with_capacity(4);
+
+    let mut direct = |label: &'static str, sms: u32, parallel: bool| {
+        let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, 8));
+        let (wall_ms, sim_cycles) = median_ms(samples, || {
+            let mut gmem = w.make_gmem();
+            let result = if parallel {
+                w.run_parallel(&gpgpu, &mut gmem, &NativeAlu)
+            } else {
+                let mut alu = NativeAlu;
+                w.run(&gpgpu, &mut gmem, &mut alu)
+            };
+            let run = result.unwrap_or_else(|e| panic!("{label}: {e}"));
+            w.verify(&gmem).unwrap_or_else(|e| panic!("{label}: {e}"));
+            run.cycles
+        });
+        points.push(ScalingPoint { label, wall_ms, sim_cycles, jobs: 1 });
+    };
+    direct("1sm_sequential", 1, false);
+    direct("2sm_sequential", 2, false);
+    direct("2sm_parallel", 2, true);
+
+    // Pool throughput: 4 shards absorbing 8 concurrent jobs of the same
+    // benchmark (1-SM devices so shard-level parallelism dominates).
+    const POOL_JOBS: u32 = 8;
+    let (wall_ms, sim_cycles) = median_ms(samples, || {
+        let svc = GpgpuService::start_pool(
+            GpgpuConfig::new(1, 8),
+            ServiceConfig { shards: 4, queue_depth: POOL_JOBS as usize },
+        );
+        let tickets: Vec<_> = (0..POOL_JOBS)
+            .map(|i| svc.submit(Request::Bench { id, n, seed: seed + i as u64 }))
+            .collect();
+        let mut cycles = 0;
+        for t in tickets {
+            let out = t.wait().expect("pool job");
+            assert!(out.verified);
+            cycles += out.cycles;
+        }
+        cycles
+    });
+    points.push(ScalingPoint { label: "pool_4shard", wall_ms, sim_cycles, jobs: POOL_JOBS });
+
+    ScalingReport { bench: id.name(), n, seed, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_has_all_points_and_valid_json() {
+        let r = scaling_report(BenchId::VecAdd, 32, 1, 1);
+        assert_eq!(r.points.len(), 4);
+        let json = r.to_json();
+        for label in ["1sm_sequential", "2sm_sequential", "2sm_parallel", "pool_4shard"] {
+            assert!(json.contains(label), "{json}");
+        }
+        assert!(json.contains("\"bench\": \"vecadd\""));
+        assert!(r.points.iter().all(|p| p.sim_cycles > 0));
+        assert!(r.speedup("2sm_parallel", "1sm_sequential").is_some());
+    }
+}

@@ -1,0 +1,36 @@
+; autocorr: r[k] = sum_{i=0}^{n-1-k} x[i] * x[i+k], one thread per lag k.
+; The per-thread trip count (n - k) differs across every lane of a
+; 16-thread block, so lanes retire from the loop one per iteration: each
+; partial exit pushes a DIV entry that parks the exited lanes until the
+; survivors finish. With 16 distinct trip counts per warp this reaches the
+; paper's Table-6 warp-stack high-water mark of 16 (SSY + 15 DIV).
+; params: [0] x base, [4] r base, [8] n
+.entry autocorr
+.regs 11
+    S2R  R0, SR_GTID     ; k
+    SLD  R1, [0]         ; x base
+    SLD  R2, [4]         ; r base
+    SLD  R3, [8]         ; n
+    ISUB R4, R3, R0      ; trips = n - k  (>= 1)
+    SHL  R5, R0, #2
+    IADD R5, R5, R1      ; &x[i+k], i = 0
+    MOV  R6, R1          ; &x[i],   i = 0
+    MOV  R7, #0          ; acc
+    SSY  fin
+loop:
+    GLD  R8, [R6]        ; x[i]
+    GLD  R9, [R5]        ; x[i+k]
+    IMAD R7, R8, R9, R7  ; acc += x[i] * x[i+k]  (wrapping)
+    IADD R6, R6, #4
+    IADD R5, R5, #4
+    ISUB R4, R4, #1
+    ISETP P0, R4, #0
+    @P0.LE BRA done      ; finished lanes take the exit (parked on stack)
+    BRA  loop            ; survivors loop uniformly
+done:
+    SHL  R10, R0, #2
+    IADD R10, R10, R2
+    GST  [R10], R7       ; r[k] = acc
+    JOIN                 ; unwind one parked exit group (or the SSY)
+fin:
+    EXIT

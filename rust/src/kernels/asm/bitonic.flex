@@ -1,0 +1,54 @@
+; bitonic: in-place ascending sort of one seg-element chunk per block
+; (seg = block threads, a power of two). Classic bitonic network: for each
+; (kk, j) step, thread t with (t & j) == 0 compare-exchanges with partner
+; t ^ j in direction (t & kk). The compare-exchange uses a real divergent
+; branch (SSY + BRA + JOIN), giving the paper's Table-6 warp-stack
+; high-water mark of exactly 2; everything else is predicated or uniform.
+; Integer-only address math (no IMUL/IMAD) keeps the multiplier idle, so
+; the 2-operand customization applies (paper §5.2).
+; params: [0] data base, [4] log2(seg)
+.entry bitonic
+.regs 14
+    S2R  R0, SR_TID
+    SLD  R1, [0]         ; data base
+    SLD  R2, [4]         ; log2(seg)
+    MOV  R3, #1
+    SHL  R3, R3, R2      ; seg
+    S2R  R4, SR_CTAID
+    SHL  R4, R4, R2
+    IADD R4, R4, R0
+    SHL  R4, R4, #2
+    IADD R4, R4, R1      ; &data[ctaid*seg + t]  (fixed per thread)
+    MOV  R5, #2          ; kk
+kk_loop:
+    SHR  R6, R5, #1      ; j
+j_loop:
+    AND  R8, R0, R6
+    ISETP P1, R8, #0     ; P1.EQ: this lane owns the pair (partner = t + j)
+    SHL  R9, R6, #2
+    IADD R9, R9, R4      ; &data[... + t + j] (valid for owning lanes)
+    GLD  R10, [R4]       ; a = own element
+    @P1.EQ GLD R11, [R9] ; b = partner element (owners only: stays in-bounds)
+    AND  R12, R0, R5
+    ISETP P2, R12, #0    ; P2.EQ: ascending half
+    ISUB R13, R10, R11   ; a - b
+    INEG R8, R13         ; b - a
+    SEL  R13, R13, R8, P2.EQ   ; s = ascending ? a-b : b-a
+    SEL  R13, R13, RZ, P1.EQ   ; non-owners never swap
+    ISETP P0, R13, #0
+    SSY  step_end
+    @P0.GT BRA do_swap   ; out-of-order pairs take the swap path
+    JOIN
+do_swap:
+    GST  [R4], R11
+    GST  [R9], R10
+    JOIN
+step_end:
+    BAR                  ; network step boundary
+    SHR  R6, R6, #1
+    ISETP P0, R6, #0
+    @P0.GT BRA j_loop    ; uniform
+    SHL  R5, R5, #1
+    ISETP P0, R5, R3
+    @P0.LE BRA kk_loop   ; uniform
+    EXIT

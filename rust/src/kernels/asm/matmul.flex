@@ -1,0 +1,42 @@
+; matmul: C = A x B (n x n, row-major, wrapping i32), 16x16 thread tiles.
+; Thread (r, c) of block (bx, by) computes C[by*16+r][bx*16+c] with a
+; uniform n-iteration MAD loop — no divergence, warp-stack depth 0.
+; params: [0] A base, [4] B base, [8] C base, [12] n
+.entry matmul
+.regs 14
+    S2R  R0, SR_TID
+    SLD  R1, [0]         ; A
+    SLD  R2, [4]         ; B
+    SLD  R3, [8]         ; C
+    SLD  R4, [12]        ; n
+    S2R  R5, SR_CTAID_Y
+    SHL  R5, R5, #4
+    SHR  R6, R0, #4
+    IADD R5, R5, R6      ; i = ctaid.y*16 + tid/16
+    S2R  R6, SR_CTAID
+    SHL  R6, R6, #4
+    AND  R7, R0, #15
+    IADD R6, R6, R7      ; j = ctaid.x*16 + tid%16
+    IMUL R7, R5, R4
+    SHL  R7, R7, #2
+    IADD R7, R7, R1      ; &A[i][0]
+    SHL  R8, R6, #2
+    IADD R8, R8, R2      ; &B[0][j]
+    SHL  R9, R4, #2      ; row stride in bytes
+    MOV  R10, #0         ; acc
+    MOV  R11, R4         ; k = n
+loop:
+    GLD  R12, [R7]       ; A[i][k]
+    GLD  R13, [R8]       ; B[k][j]
+    IMAD R10, R12, R13, R10
+    IADD R7, R7, #4
+    IADD R8, R8, R9
+    ISUB R11, R11, #1
+    ISETP P0, R11, #0
+    @P0.GT BRA loop      ; uniform: every thread runs exactly n iterations
+    IMUL R12, R5, R4
+    IADD R12, R12, R6
+    SHL  R12, R12, #2
+    IADD R12, R12, R3
+    GST  [R12], R10      ; C[i][j]
+    EXIT

@@ -1,0 +1,47 @@
+; reduction: out[ctaid] = sum of 2*ntid consecutive inputs (wrapping).
+; Each block loads two elements per thread, then tree-reduces the partials
+; in shared memory. All conditionals are predicated and every loop trip
+; count is uniform, so the warp stack is never touched (Table 6: depth 0).
+; The host launches a second 1-block pass over the partials when grid > 1.
+; params: [0] in base, [4] out base
+.entry reduction
+.regs 13
+.smem 128
+    S2R  R0, SR_TID
+    S2R  R1, SR_NTID     ; T
+    S2R  R2, SR_CTAID
+    SLD  R3, [0]         ; in
+    SLD  R4, [4]         ; out
+    IMUL R5, R2, R1
+    SHL  R5, R5, #3
+    IADD R5, R5, R3      ; &in[ctaid * 2T]
+    SHL  R6, R0, #2      ; tid*4
+    IADD R7, R5, R6
+    GLD  R8, [R7]        ; in[ctaid*2T + tid]
+    SHL  R9, R1, #2
+    IADD R7, R7, R9
+    GLD  R10, [R7]       ; in[ctaid*2T + T + tid]
+    IADD R8, R8, R10
+    SST  [R6+64], R8     ; shared[tid] = pairwise partial
+    BAR
+    SHR  R11, R1, #1     ; off = T/2
+loop:
+    ISETP P0, R11, #0
+    @P0.LE BRA fin       ; uniform exit — no divergence
+    ISETP P1, R0, R11    ; active half: tid < off
+    SHL  R12, R11, #2
+    IADD R12, R12, R6
+    @P1.LT SLD R10, [R12+64]   ; shared[tid + off]
+    @P1.LT SLD R8, [R6+64]     ; shared[tid]
+    @P1.LT IADD R8, R8, R10
+    @P1.LT SST [R6+64], R8
+    BAR
+    SHR  R11, R11, #1
+    BRA  loop
+fin:
+    SLD  R8, [64]        ; shared[0] = block total
+    SHL  R12, R2, #2
+    IADD R12, R12, R4
+    ISETP P0, R0, #1
+    @P0.LT GST [R12], R8 ; thread 0 writes out[ctaid]
+    EXIT

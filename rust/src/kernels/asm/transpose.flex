@@ -1,0 +1,28 @@
+; transpose: B[j][i] = A[i][j] (n x n, row-major), 16x16 thread tiles.
+; Straight-line per thread — warp-stack depth 0, no divergence.
+; params: [0] A base, [4] B base, [8] n
+.entry transpose
+.regs 10
+    S2R  R0, SR_TID
+    SLD  R1, [0]         ; A
+    SLD  R2, [4]         ; B
+    SLD  R3, [8]         ; n
+    S2R  R4, SR_CTAID_Y
+    SHL  R4, R4, #4
+    SHR  R5, R0, #4
+    IADD R4, R4, R5      ; i = ctaid.y*16 + tid/16
+    S2R  R5, SR_CTAID
+    SHL  R5, R5, #4
+    AND  R6, R0, #15
+    IADD R5, R5, R6      ; j = ctaid.x*16 + tid%16
+    IMUL R6, R4, R3
+    IADD R6, R6, R5
+    SHL  R6, R6, #2
+    IADD R6, R6, R1
+    GLD  R7, [R6]        ; A[i][j]
+    IMUL R8, R5, R3
+    IADD R8, R8, R4
+    SHL  R8, R8, #2
+    IADD R8, R8, R2
+    GST  [R8], R7        ; B[j][i]
+    EXIT

@@ -1,0 +1,19 @@
+; vecadd: out[g] = a[g] + b[g], one thread per element.
+; Straight-line (no branches) — the customization analyzer relies on this
+; being the branch-free reference kernel.
+; params: [0] a base, [4] b base, [8] out base
+.entry vecadd
+.regs 8
+    S2R  R1, SR_GTID
+    SLD  R2, [0]
+    SLD  R3, [4]
+    SLD  R4, [8]
+    SHL  R5, R1, #2
+    IADD R2, R2, R5
+    IADD R3, R3, R5
+    IADD R4, R4, R5
+    GLD  R6, [R2]
+    GLD  R7, [R3]
+    IADD R6, R6, R7
+    GST  [R4], R6
+    EXIT

@@ -9,7 +9,7 @@ pub mod golden;
 use crate::asm::{assemble, Kernel};
 use crate::gpgpu::{Gpgpu, LaunchConfig, LaunchResult};
 use crate::rng::XorShift64;
-use crate::sim::{AluBackend, GlobalMem, SimError, SmStats};
+use crate::sim::{AluBackend, AluFactory, GlobalMem, SimError, SmStats};
 
 /// Device byte address where benchmark inputs begin.
 pub const IN_BASE: u32 = 0x1000;
@@ -271,6 +271,28 @@ impl Workload {
         let mut stats = SmStats::default();
         for ph in &self.phases {
             let r = gpgpu.launch(&self.kernel, ph.launch, &ph.params, gmem, alu)?;
+            cycles += r.total.cycles;
+            stats.merge(&r.total);
+            phases.push(r);
+        }
+        stats.cycles = cycles;
+        Ok(BenchRun { phases, cycles, stats })
+    }
+
+    /// Execute all phases with each SM simulated on its own thread
+    /// (`Gpgpu::launch_parallel`); identical simulated cycles and memory
+    /// image to [`Workload::run`], but wall-clock-parallel across SMs.
+    pub fn run_parallel(
+        &self,
+        gpgpu: &Gpgpu,
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<BenchRun, SimError> {
+        let mut phases = Vec::with_capacity(self.phases.len());
+        let mut cycles = 0u64;
+        let mut stats = SmStats::default();
+        for ph in &self.phases {
+            let r = gpgpu.launch_parallel(&self.kernel, ph.launch, &ph.params, gmem, factory)?;
             cycles += r.total.cycles;
             stats.merge(&r.total);
             phases.push(r);

@@ -7,7 +7,7 @@
 //!   limits     print the Table-1 physical limits
 //!   asm        assemble a .flex file and dump the binary layout
 
-use flexgrip::coordinator::{self, GpgpuService, Request};
+use flexgrip::coordinator::{self, GpgpuService, Request, ServiceConfig};
 use flexgrip::gpgpu::GpgpuConfig;
 use flexgrip::harness::{tables, Evaluation};
 use flexgrip::kernels::{self, BenchId};
@@ -20,11 +20,12 @@ use std::process::ExitCode;
 fn usage() -> ! {
     eprintln!(
         "usage:\n  \
-         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla]\n  \
+         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla] [--parallel]\n  \
          flexgrip report [--all] [--table 1..6] [--fig 4|5] [--sweep] [--size 256]\n  \
          flexgrip customize --bench <name> [--n 64]\n  \
          flexgrip limits\n  \
-         flexgrip asm --file <kernel.flex>\n\n\
+         flexgrip asm --file <kernel.flex>\n  \
+         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1]\n\n\
          benchmarks: autocorr bitonic matmul reduction transpose vecadd"
     );
     std::process::exit(2);
@@ -81,20 +82,37 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
     let seed: u64 = get(&flags, "seed", flexgrip::harness::eval::EVAL_SEED);
     let backend = flags.get("backend").map(String::as_str).unwrap_or("native");
 
+    let parallel = flags.contains_key("parallel");
+    if parallel && backend != "native" {
+        eprintln!("--parallel requires --backend native (no {backend} ALU factory exists)");
+        return ExitCode::FAILURE;
+    }
+
     let cfg = GpgpuConfig::new(sms, sp);
     let gpgpu = flexgrip::gpgpu::Gpgpu::new(cfg);
     let w = kernels::prepare(id, n, seed);
     let mut gmem = w.make_gmem();
     let run = match backend {
+        "native" if parallel => w.run_parallel(&gpgpu, &mut gmem, &NativeAlu),
         "native" => {
             let mut alu = NativeAlu;
             w.run(&gpgpu, &mut gmem, &mut alu)
         }
         "xla" => {
-            let arts = std::sync::Arc::new(
-                Artifacts::open_default().expect("run `make artifacts` first"),
-            );
-            let mut alu = XlaAlu::new(arts).expect("warp_alu artifact");
+            let arts = match Artifacts::open_default() {
+                Ok(a) => std::sync::Arc::new(a),
+                Err(e) => {
+                    eprintln!("xla backend unavailable: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let mut alu = match XlaAlu::new(arts) {
+                Ok(a) => a,
+                Err(e) => {
+                    eprintln!("xla backend unavailable: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
             w.run(&gpgpu, &mut gmem, &mut alu)
         }
         other => {
@@ -248,6 +266,56 @@ fn cmd_asm(flags: HashMap<String, String>) -> ExitCode {
     }
 }
 
+/// Coordinator pool smoke: submit a batch of mixed benchmark jobs across
+/// N device shards and print per-shard + aggregate metrics.
+fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
+    let shards: u32 = get(&flags, "shards", 2);
+    let jobs: u32 = get(&flags, "jobs", 8);
+    let n: u32 = get(&flags, "n", 64);
+    let sms: u32 = get(&flags, "sms", 1);
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(sms, 8),
+        ServiceConfig { shards, queue_depth: 16 },
+    );
+    let mix = [
+        BenchId::VecAdd,
+        BenchId::Reduction,
+        BenchId::Bitonic,
+        BenchId::Transpose,
+        BenchId::Autocorr,
+    ];
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            svc.submit(Request::Bench {
+                id: mix[i as usize % mix.len()],
+                n,
+                seed: i as u64 + 1,
+            })
+        })
+        .collect();
+    for t in tickets {
+        match t.wait() {
+            Ok(o) => println!(
+                "shard {}: {} -> {} cycles, verified={}",
+                o.shard, o.label, o.cycles, o.verified
+            ),
+            Err(e) => eprintln!("job failed: {e}"),
+        }
+    }
+    for (i, m) in svc.shard_metrics().iter().enumerate() {
+        println!(
+            "shard {i}: {} ok / {} failed, {} cycles",
+            m.jobs_completed, m.jobs_failed, m.total_cycles
+        );
+    }
+    let m = svc.metrics();
+    println!(
+        "aggregate: {} ok / {} failed, {} cycles, {} instructions",
+        m.jobs_completed, m.jobs_failed, m.total_cycles, m.total_instructions
+    );
+    ExitCode::SUCCESS
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
@@ -263,22 +331,7 @@ fn main() -> ExitCode {
             ExitCode::SUCCESS
         }
         "asm" => cmd_asm(parse_flags(&rest)),
-        "service-demo" => {
-            // Minimal coordinator smoke: submit two jobs through the
-            // service API and print metrics.
-            let svc = GpgpuService::start(GpgpuConfig::new(1, 8));
-            let t1 = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 64, seed: 1 });
-            let t2 = svc.submit(Request::Bench { id: BenchId::Reduction, n: 64, seed: 1 });
-            for t in [t1, t2] {
-                match t.wait() {
-                    Ok(o) => println!("{}: {} cycles, verified={}", o.label, o.cycles, o.verified),
-                    Err(e) => eprintln!("job failed: {e}"),
-                }
-            }
-            let m = svc.metrics();
-            println!("service metrics: {m:?}");
-            ExitCode::SUCCESS
-        }
+        "service-demo" => cmd_service_demo(parse_flags(&rest)),
         _ => usage(),
     }
 }

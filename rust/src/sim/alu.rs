@@ -106,6 +106,32 @@ pub trait AluBackend {
     fn name(&self) -> &'static str;
 }
 
+/// Per-SM-thread ALU factory for the parallel launch path. The sequential
+/// path threads one `&mut dyn AluBackend` through every SM; the parallel
+/// path instead hands each SM thread its own backend instance built from a
+/// `Sync` factory, so backends never need interior synchronization.
+///
+/// [`NativeAlu`] is its own factory (it is a stateless unit struct).
+/// Backends with heavyweight shared state (e.g. a PJRT client) implement
+/// this by cloning an `Arc` of that state into each instance.
+pub trait AluFactory: Sync {
+    /// Build a fresh backend owned by one SM thread.
+    fn make_alu(&self) -> Box<dyn AluBackend + Send>;
+
+    /// Backend name for metrics / CLI display.
+    fn backend_name(&self) -> &'static str;
+}
+
+impl AluFactory for NativeAlu {
+    fn make_alu(&self) -> Box<dyn AluBackend + Send> {
+        Box::new(NativeAlu)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
 /// Scalar-evaluated reference datapath. Also the semantic ground truth for
 /// the Pallas kernel's `ref.py` oracle (the Python side mirrors these
 /// exact semantics: wrapping arithmetic, shift counts masked to 5 bits).

@@ -64,6 +64,71 @@ impl GlobalMem {
     }
 }
 
+/// Global-memory access port: what an SM executes its `GLD`/`GST` stream
+/// against. The sequential launch path hands every SM the one true
+/// [`GlobalMem`]; the parallel path hands each SM thread a private
+/// [`GmemSnapshot`] so SMs can simulate concurrently without sharing
+/// mutable state (see `gpgpu`'s partition → simulate → merge pipeline).
+pub trait GmemPort {
+    fn load(&self, addr: u32) -> Result<i32, SimError>;
+    fn store(&mut self, addr: u32, value: i32) -> Result<(), SimError>;
+}
+
+impl GmemPort for GlobalMem {
+    #[inline]
+    fn load(&self, addr: u32) -> Result<i32, SimError> {
+        GlobalMem::load(self, addr)
+    }
+
+    #[inline]
+    fn store(&mut self, addr: u32, value: i32) -> Result<(), SimError> {
+        GlobalMem::store(self, addr, value)
+    }
+}
+
+/// One store captured by a [`GmemSnapshot`] during the parallel simulate
+/// phase: `(byte address, value)`, in program order for its SM.
+pub type WriteRecord = (u32, i32);
+
+/// A per-SM view of global memory for the parallel launch path: a private
+/// copy of the launch-time memory image that the SM reads and writes
+/// normally (so its own loads observe its own stores), plus a log of every
+/// store so the merge phase can replay writes deterministically in SM
+/// order and detect cross-SM write conflicts.
+#[derive(Debug, Clone)]
+pub struct GmemSnapshot {
+    snap: GlobalMem,
+    log: Vec<WriteRecord>,
+}
+
+impl GmemSnapshot {
+    pub fn new(base: &GlobalMem) -> GmemSnapshot {
+        GmemSnapshot { snap: base.clone(), log: Vec::new() }
+    }
+
+    pub fn log(&self) -> &[WriteRecord] {
+        &self.log
+    }
+
+    pub fn into_log(self) -> Vec<WriteRecord> {
+        self.log
+    }
+}
+
+impl GmemPort for GmemSnapshot {
+    #[inline]
+    fn load(&self, addr: u32) -> Result<i32, SimError> {
+        self.snap.load(addr)
+    }
+
+    #[inline]
+    fn store(&mut self, addr: u32, value: i32) -> Result<(), SimError> {
+        self.snap.store(addr, value)?;
+        self.log.push((addr, value));
+        Ok(())
+    }
+}
+
 /// Per-resident-block shared memory (allocated out of the SM's 16 KB).
 #[derive(Debug, Clone)]
 pub struct SharedMem {
@@ -201,5 +266,27 @@ mod tests {
         let mut m = GlobalMem::new(128);
         m.write_words(16, &[1, 2, 3]).unwrap();
         assert_eq!(m.read_words(16, 3).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn snapshot_isolates_base_and_logs_stores() {
+        let mut base = GlobalMem::new(64);
+        base.store(0, 11).unwrap();
+        let mut view = GmemSnapshot::new(&base);
+        assert_eq!(GmemPort::load(&view, 0).unwrap(), 11, "snapshot sees base");
+        GmemPort::store(&mut view, 4, 22).unwrap();
+        GmemPort::store(&mut view, 4, 33).unwrap();
+        assert_eq!(GmemPort::load(&view, 4).unwrap(), 33, "own writes visible");
+        assert_eq!(base.load(4).unwrap(), 0, "base untouched until merge");
+        assert_eq!(view.into_log(), vec![(4, 22), (4, 33)], "program order kept");
+    }
+
+    #[test]
+    fn snapshot_propagates_faults_without_logging() {
+        let base = GlobalMem::new(64);
+        let mut view = GmemSnapshot::new(&base);
+        assert!(GmemPort::store(&mut view, 2, 1).is_err());
+        assert!(GmemPort::load(&view, 1 << 20).is_err());
+        assert!(view.log().is_empty());
     }
 }

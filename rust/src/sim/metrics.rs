@@ -56,8 +56,8 @@ impl SmStats {
         self.barriers += other.barriers;
         self.blocks += other.blocks;
         self.stall_cycles += other.stall_cycles;
-        for i in 0..32 {
-            self.op_histogram[i] += other.op_histogram[i];
+        for (mine, theirs) in self.op_histogram.iter_mut().zip(&other.op_histogram) {
+            *mine += theirs;
         }
     }
 

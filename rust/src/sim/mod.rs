@@ -14,8 +14,12 @@ pub mod sm;
 pub mod stack;
 pub mod warp;
 
-pub use alu::{eval_lane, AluBackend, AluFunc, NativeAlu, WarpAluIn, WarpAluOut, WARP_SIZE};
-pub use mem::{GlobalMem, MemTiming, SharedMem, PARAM_SEG_BYTES};
+pub use alu::{
+    eval_lane, AluBackend, AluFactory, AluFunc, NativeAlu, WarpAluIn, WarpAluOut, WARP_SIZE,
+};
+pub use mem::{
+    GlobalMem, GmemPort, GmemSnapshot, MemTiming, SharedMem, WriteRecord, PARAM_SEG_BYTES,
+};
 pub use metrics::SmStats;
 pub use regfile::RegFile;
 pub use sm::{BlockDesc, PreDecoded, Sm};
@@ -50,6 +54,10 @@ pub enum SimError {
     /// Kernel exceeds a physical limit (Table 1) — raised by the block
     /// scheduler before execution starts.
     LimitExceeded(String),
+    /// Two SMs wrote the same global address within one parallel launch —
+    /// the kernel violates the disjoint-write contract the parallel
+    /// simulate phase requires (detected during the merge phase).
+    WriteConflict { addr: u32, first_sm: u32, second_sm: u32 },
     /// Watchdog: simulation exceeded the configured cycle budget.
     Watchdog { cycles: u64 },
 }
@@ -89,6 +97,11 @@ impl std::fmt::Display for SimError {
                 "IMAD at pc={pc:#x} on a two-read-operand configuration"
             ),
             SimError::LimitExceeded(s) => write!(f, "physical limit exceeded: {s}"),
+            SimError::WriteConflict { addr, first_sm, second_sm } => write!(
+                f,
+                "write conflict at {addr:#x}: SM {first_sm} and SM {second_sm} \
+                 both stored there in one parallel launch"
+            ),
             SimError::Watchdog { cycles } => {
                 write!(f, "watchdog expired after {cycles} cycles")
             }

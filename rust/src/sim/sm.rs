@@ -15,7 +15,7 @@
 //! * `BAR` parks warps until every live warp of the block arrives.
 
 use super::alu::{AluBackend, AluFunc, WarpAluIn, WARP_SIZE};
-use super::mem::{GlobalMem, SharedMem, PARAM_SEG_BYTES};
+use super::mem::{GmemPort, SharedMem, PARAM_SEG_BYTES};
 use super::metrics::SmStats;
 use super::regfile::RegFile;
 use super::stack::{EntryType, StackEntry};
@@ -95,6 +95,10 @@ impl Sm {
     /// blocks scheduled at once (the Table 1 limit computed by the block
     /// scheduler). Returns per-SM statistics; `stats.cycles` is this SM's
     /// busy time.
+    ///
+    /// `gmem` is a [`GmemPort`]: the shared [`super::GlobalMem`] on the
+    /// sequential path, or this SM's private [`super::GmemSnapshot`] on
+    /// the parallel path.
     #[allow(clippy::too_many_arguments)]
     pub fn run(
         &self,
@@ -104,7 +108,7 @@ impl Sm {
         params: &[i32],
         blocks: &[BlockDesc],
         max_resident: usize,
-        gmem: &mut GlobalMem,
+        gmem: &mut dyn GmemPort,
         alu: &mut dyn AluBackend,
     ) -> Result<SmStats, SimError> {
         self.cfg.validate()?;
@@ -272,7 +276,7 @@ impl Sm {
         slot: &mut Resident,
         wi: usize,
         kernel: &PreDecoded,
-        gmem: &mut GlobalMem,
+        gmem: &mut dyn GmemPort,
         alu: &mut dyn AluBackend,
         stats: &mut SmStats,
         issue_done: u64,
@@ -577,7 +581,7 @@ fn special_value(
 mod tests {
     use super::*;
     use crate::asm::assemble;
-    use crate::sim::NativeAlu;
+    use crate::sim::{GlobalMem, NativeAlu};
 
     fn run_one_block(
         src: &str,

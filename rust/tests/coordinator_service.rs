@@ -1,8 +1,8 @@
 //! Coordinator service: job queue, driver-style kernel submission,
-//! metrics, failure isolation.
+//! metrics, failure isolation, and the sharded device pool.
 
 use flexgrip::asm::assemble;
-use flexgrip::coordinator::{GpgpuService, Request};
+use flexgrip::coordinator::{GpgpuService, MetricsSnapshot, Request, ServiceConfig};
 use flexgrip::gpgpu::{GpgpuConfig, LaunchConfig};
 use flexgrip::kernels::BenchId;
 
@@ -96,4 +96,156 @@ fn shutdown_joins_worker() {
     let t = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 });
     t.wait().unwrap();
     drop(svc); // must join cleanly, not hang
+}
+
+#[test]
+fn pool_absorbs_concurrent_mixed_jobs_across_shards() {
+    // 32 concurrent mixed jobs over 4 shards: every ticket resolves and
+    // the per-shard metrics sum to the aggregate snapshot.
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(2, 8),
+        ServiceConfig { shards: 4, queue_depth: 8 },
+    );
+    let mix = [
+        BenchId::VecAdd,
+        BenchId::Reduction,
+        BenchId::Bitonic,
+        BenchId::Autocorr,
+        BenchId::Transpose,
+    ];
+    let tickets: Vec<_> = (0..32)
+        .map(|i| {
+            svc.submit(Request::Bench {
+                id: mix[i as usize % mix.len()],
+                n: 32,
+                seed: i + 1,
+            })
+        })
+        .collect();
+    let mut seen_shards = std::collections::HashSet::new();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().unwrap_or_else(|e| panic!("job {i}: {e}"));
+        assert!(out.verified, "job {i}");
+        assert!(out.shard < 4, "job {i} shard {}", out.shard);
+        seen_shards.insert(out.shard);
+    }
+    let shards = svc.shard_metrics();
+    assert_eq!(shards.len(), 4);
+    let summed = shards
+        .iter()
+        .fold(MetricsSnapshot::default(), |acc, s| acc.merged(s));
+    let agg = svc.metrics();
+    assert_eq!(summed, agg, "shard metrics must sum to the aggregate");
+    assert_eq!(agg.jobs_completed, 32);
+    assert_eq!(agg.jobs_failed, 0);
+    assert!(agg.total_cycles > 0 && agg.total_instructions > 0);
+    assert!(
+        seen_shards.len() > 1,
+        "32 jobs on 4 shards must not all land on one worker"
+    );
+}
+
+#[test]
+fn pool_backpressure_blocks_then_completes() {
+    // queue_depth 2 with 1 shard: submits beyond the depth must block
+    // until the worker drains, and every job must still complete.
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 1, queue_depth: 2 },
+    );
+    let tickets: Vec<_> = (0..8)
+        .map(|i| svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: i }))
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().verified);
+    }
+    assert_eq!(svc.metrics().jobs_completed, 8);
+}
+
+#[test]
+fn pool_failures_isolated_per_shard() {
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 2, queue_depth: 8 },
+    );
+    let bad = assemble("JOIN\nEXIT").unwrap();
+    let t_bad = svc.submit(Request::Kernel {
+        kernel: Box::new(bad),
+        launch: LaunchConfig::linear(1, 32),
+        params: vec![],
+        gmem_bytes: 4096,
+        inputs: vec![],
+        read_back: (0, 1),
+    });
+    let t_ok = svc.submit(Request::Bench { id: BenchId::Reduction, n: 64, seed: 2 });
+    assert!(t_bad.wait().is_err());
+    assert!(t_ok.wait().unwrap().verified);
+    let agg = svc.metrics();
+    assert_eq!(agg.jobs_failed, 1);
+    assert_eq!(agg.jobs_completed, 1);
+}
+
+#[test]
+fn kernel_with_overlapping_writes_falls_back_to_sequential() {
+    // Both blocks (one per SM) store their value to the same address:
+    // launch_parallel rejects the merge, and the shard must retry on the
+    // sequential path (SM order, last writer wins) instead of failing.
+    let svc = GpgpuService::start(GpgpuConfig::new(2, 8));
+    let k = assemble(
+        r#"
+        .entry clash
+        .regs 6
+            S2R R1, SR_CTAID
+            MOV R2, #0
+            GST [R2], R1
+            EXIT
+        "#,
+    )
+    .unwrap();
+    let t = svc.submit(Request::Kernel {
+        kernel: Box::new(k),
+        launch: LaunchConfig::linear(2, 32),
+        params: vec![],
+        gmem_bytes: 4096,
+        inputs: vec![],
+        read_back: (0, 1),
+    });
+    let out = t.wait().expect("conflicting kernel must fall back, not fail");
+    // Sequential order: SM 0 runs block 0 (stores 0), then SM 1 runs
+    // block 1 (stores 1) — last writer is block 1.
+    assert_eq!(out.data, vec![1]);
+    assert_eq!(svc.metrics().jobs_failed, 0);
+}
+
+#[test]
+fn panicking_job_fails_its_ticket_but_not_the_shard() {
+    // kernels::prepare asserts on non-power-of-two sizes; that panic must
+    // be contained to the job, leaving the shard alive for later work.
+    let svc = GpgpuService::start(GpgpuConfig::new(1, 8));
+    let t_bad = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 48, seed: 1 });
+    let err = t_bad.wait().expect_err("invalid size must fail the ticket");
+    assert!(err.contains("panicked"), "{err}");
+    let t_ok = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 });
+    assert!(t_ok.wait().expect("shard must survive the panic").verified);
+    let m = svc.metrics();
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.jobs_completed, 1);
+}
+
+#[test]
+fn pool_drop_drains_queued_jobs() {
+    // Tickets taken before shutdown must resolve even if the service is
+    // dropped immediately after submission (graceful drain).
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 2, queue_depth: 16 },
+    );
+    let tickets: Vec<_> = (0..6)
+        .map(|i| svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: i }))
+        .collect();
+    drop(svc);
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().unwrap_or_else(|e| panic!("drained job {i}: {e}"));
+        assert!(out.verified, "drained job {i}");
+    }
 }
