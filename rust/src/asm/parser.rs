@@ -196,7 +196,9 @@ pub(crate) fn parse_line(raw: &str, line_no: usize) -> Result<Vec<Line>, AsmErro
         let dir = match d.as_str() {
             "entry" => match cur.next() {
                 Some(Token::Ident(n)) => Directive::Entry(n),
-                other => return Err(cur.err(format!("expected name after .entry, found {other:?}"))),
+                other => {
+                    return Err(cur.err(format!("expected name after .entry, found {other:?}")))
+                }
             },
             "regs" => Directive::Regs(cur.imm32()? as u32),
             "smem" => Directive::Smem(cur.imm32()? as u32),

@@ -321,7 +321,8 @@ fn run_one(gpgpu: &Gpgpu, shard: u32, req: Request) -> Result<JobOutput, String>
             for (addr, words) in &inputs {
                 gmem.write_words(*addr, words).map_err(|e| e.to_string())?;
             }
-            let launched = match gpgpu.launch_parallel(&kernel, launch, &params, &mut gmem, &NativeAlu)
+            let launched = match gpgpu
+                .launch_parallel(&kernel, launch, &params, &mut gmem, &NativeAlu)
             {
                 Err(SimError::WriteConflict { .. }) => {
                     // Arbitrary user kernels may legally overlap writes

@@ -11,12 +11,19 @@
 //!    thread blocks to the 2 SMs", §5.1.1).
 //! 2. **Simulate** — each SM executes its block queue to completion.
 //!    [`Gpgpu::launch`] simulates the SMs sequentially against the shared
-//!    [`GlobalMem`] (the seed reference path, usable with any
+//!    [`GlobalMem`] (the reference path, usable with any
 //!    `&mut dyn AluBackend`). [`Gpgpu::launch_parallel`] instead runs each
 //!    SM on its own scoped OS thread: every SM gets a private
-//!    [`GmemSnapshot`] (a read snapshot of launch-time memory plus a write
-//!    log) and its own ALU built from an [`AluFactory`], so no simulation
-//!    state is shared between threads.
+//!    copy-on-write [`GmemSnapshot`] (reads fall through to the shared
+//!    launch-time base; the first store to a 1 KiB page faults in a
+//!    private copy; every store is logged) and its own ALU built from an
+//!    [`AluFactory`], so no mutable simulation state is shared between
+//!    threads and per-SM setup is O(touched pages), not O(mem).
+//!
+//!    Trait objects stop at this boundary: inside the simulate phase the
+//!    engine is monomorphized over the concrete memory port and — when
+//!    [`AluBackend::is_native`] — the concrete [`NativeAlu`], so the
+//!    per-lane hot loops inline (EXPERIMENTS.md §Perf).
 //! 3. **Merge** — per-SM statistics are aggregated (`cycles` = max over
 //!    SMs, since real SMs run concurrently; counters summed). On the
 //!    parallel path the write logs are additionally replayed into the real
@@ -40,10 +47,37 @@ pub use limits::KernelResources;
 
 use crate::asm::Kernel;
 use crate::sim::{
-    AluBackend, AluFactory, BlockDesc, GlobalMem, GmemSnapshot, PreDecoded, SimError, Sm,
-    SmConfig, SmStats, WriteRecord,
+    AluBackend, AluFactory, BlockDesc, GlobalMem, GmemPort, GmemSnapshot, NativeAlu, PreDecoded,
+    SimError, Sm, SmConfig, SmStats, WriteRecord,
 };
 use std::collections::HashMap;
+
+/// Run one SM with the hot path monomorphized as far as the boundary
+/// allows: `G` is always a concrete memory port here (the shared
+/// [`GlobalMem`] or a per-thread [`GmemSnapshot`]), and a backend that
+/// reports [`AluBackend::is_native`] is swapped for a concrete
+/// [`NativeAlu`] so the default configuration runs fully inlined. Only
+/// genuinely foreign backends (e.g. the XLA executor) pay dyn dispatch —
+/// once per warp instruction, never per lane.
+#[allow(clippy::too_many_arguments)]
+fn run_sm<G: GmemPort>(
+    sm: &Sm,
+    pre: &PreDecoded,
+    regs_per_thread: u32,
+    smem_bytes: u32,
+    params: &[i32],
+    blocks: &[BlockDesc],
+    max_resident: usize,
+    gmem: &mut G,
+    alu: &mut dyn AluBackend,
+) -> Result<SmStats, SimError> {
+    if alu.is_native() {
+        let mut native = NativeAlu;
+        sm.run(pre, regs_per_thread, smem_bytes, params, blocks, max_resident, gmem, &mut native)
+    } else {
+        sm.run(pre, regs_per_thread, smem_bytes, params, blocks, max_resident, gmem, alu)
+    }
+}
 
 /// Overlay clock: "All designs were evaluated at 100 MHz" (paper §5.1).
 pub const CLOCK_HZ: f64 = 100e6;
@@ -198,7 +232,8 @@ impl Gpgpu {
             let stats = if blocks.is_empty() {
                 SmStats::default()
             } else {
-                sm.run(
+                run_sm(
+                    &sm,
                     &pre,
                     kernel.regs_per_thread,
                     kernel.smem_bytes,
@@ -235,10 +270,11 @@ impl Gpgpu {
         let pre = PreDecoded::from_kernel(kernel);
 
         if self.cfg.num_sms == 1 {
-            // One SM: no partitioning benefit; skip the snapshot copy.
+            // One SM: no partitioning benefit; skip the snapshot entirely.
             let mut alu = factory.make_alu();
             let sm = Sm::new(self.cfg.sm, 0);
-            let stats = sm.run(
+            let stats = run_sm(
+                &sm,
                 &pre,
                 kernel.regs_per_thread,
                 kernel.smem_bytes,
@@ -252,8 +288,8 @@ impl Gpgpu {
         }
 
         // Phase 2 (simulate): one scoped thread per SM, no shared mutable
-        // state. `base` is the read snapshot source; each thread clones it
-        // into its private view.
+        // state. `base` is the shared launch-time image; each thread reads
+        // it through a private copy-on-write view.
         let base: &GlobalMem = gmem;
         let cfg = self.cfg;
         let regs = kernel.regs_per_thread;
@@ -271,8 +307,12 @@ impl Gpgpu {
                             }
                             let sm = Sm::new(cfg.sm, sm_id as u32);
                             let mut alu = factory.make_alu();
+                            // Copy-on-write view: setup is O(touched
+                            // pages), not O(mem) — reads fall through to
+                            // the shared base.
                             let mut view = GmemSnapshot::new(base);
-                            let stats = sm.run(
+                            let stats = run_sm(
+                                &sm,
                                 pre,
                                 regs,
                                 smem,

@@ -1,0 +1,106 @@
+//! Engine-throughput report (`BENCH_hot_path.json`): simulated
+//! warp-instructions per second on the paper benchmarks — the ISSUE-2
+//! acceptance metric, tracked across PRs (EXPERIMENTS.md §Perf).
+//!
+//! The measurement itself lives in `benches/hot_path.rs` (it needs the
+//! wall-clock bench helper); this module owns the data shape and the
+//! hand-rolled JSON emitter (no serde in the offline image — same
+//! convention as [`super::scaling::ScalingReport`]) so the schema is
+//! unit-tested and not duplicated inside a bench binary.
+
+/// One engine-throughput measurement.
+#[derive(Debug, Clone)]
+pub struct HotPathPoint {
+    pub bench: &'static str,
+    pub n: u32,
+    /// Simulated warp-instructions of one full (multi-phase) run.
+    pub warp_instrs: u64,
+    /// Active thread-instructions of one run (lane-level work).
+    pub thread_instrs: u64,
+    /// Median wall-clock of one run, milliseconds.
+    pub wall_ms: f64,
+    /// `warp_instrs` / median wall-clock.
+    pub instrs_per_sec: f64,
+}
+
+/// A full engine-throughput report.
+#[derive(Debug, Clone)]
+pub struct HotPathReport {
+    /// Measured at `FLEXGRIP_BENCH_FAST=1` smoke sizes?
+    pub fast: bool,
+    pub points: Vec<HotPathPoint>,
+}
+
+impl HotPathReport {
+    /// Geometric mean of per-benchmark throughput — the headline number.
+    pub fn geomean_instrs_per_sec(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        let log_sum: f64 = self.points.iter().map(|p| p.instrs_per_sec.ln()).sum();
+        (log_sum / self.points.len() as f64).exp()
+    }
+
+    /// Hand-rolled JSON: stable field order, suitable for line-diffing
+    /// across PRs (framing shared with `ScalingReport` via
+    /// `super::jsonfmt`).
+    pub fn to_json(&self) -> String {
+        let header = [format!("\"fast\": {}", self.fast)];
+        let points: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"bench\": \"{}\", \"n\": {}, \"warp_instrs\": {}, \
+                     \"thread_instrs\": {}, \"wall_ms\": {:.3}, \"instrs_per_sec\": {:.0}}}",
+                    p.bench, p.n, p.warp_instrs, p.thread_instrs, p.wall_ms, p.instrs_per_sec
+                )
+            })
+            .collect();
+        super::jsonfmt::frame(&header, &points)
+    }
+
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(bench: &'static str, ips: f64) -> HotPathPoint {
+        HotPathPoint {
+            bench,
+            n: 64,
+            warp_instrs: 1000,
+            thread_instrs: 32_000,
+            wall_ms: 1.5,
+            instrs_per_sec: ips,
+        }
+    }
+
+    #[test]
+    fn json_schema_is_stable() {
+        let r = HotPathReport {
+            fast: true,
+            points: vec![point("matmul", 2e6), point("bitonic", 1e6)],
+        };
+        let json = r.to_json();
+        assert!(json.starts_with("{\n  \"fast\": true,\n  \"points\": [\n"));
+        assert!(json.contains(
+            "{\"bench\": \"matmul\", \"n\": 64, \"warp_instrs\": 1000, \
+             \"thread_instrs\": 32000, \"wall_ms\": 1.500, \"instrs_per_sec\": 2000000},"
+        ));
+        assert!(json.ends_with("  ]\n}\n"));
+        assert_eq!(json.matches("\"bench\"").count(), 2);
+    }
+
+    #[test]
+    fn geomean_of_two_points() {
+        let r = HotPathReport { fast: false, points: vec![point("a", 1e6), point("b", 4e6)] };
+        assert!((r.geomean_instrs_per_sec() - 2e6).abs() < 1.0);
+        let empty = HotPathReport { fast: false, points: vec![] };
+        assert_eq!(empty.geomean_instrs_per_sec(), 0.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! Shared framing for the hand-rolled machine-readable reports
+//! (`BENCH_scaling.json`, `BENCH_hot_path.json`). The offline image has
+//! no serde, so each report formats its own fields — but the document
+//! shape (header fields, then a `points` array with trailing-comma
+//! handling) lives here once so the two schemas cannot drift in framing.
+
+/// Build `{ header_fields..., "points": [ point_lines... ] }` with the
+/// stable indentation/trailing-comma conventions the cross-PR diffing
+/// relies on. `header_fields` are preformatted `"key": value` strings;
+/// `point_lines` are preformatted one-line JSON objects.
+pub(crate) fn frame(header_fields: &[String], point_lines: &[String]) -> String {
+    let mut out = String::from("{\n");
+    for f in header_fields {
+        out.push_str(&format!("  {f},\n"));
+    }
+    out.push_str("  \"points\": [\n");
+    for (i, p) in point_lines.iter().enumerate() {
+        let comma = if i + 1 == point_lines.len() { "" } else { "," };
+        out.push_str(&format!("    {p}{comma}\n"));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_header_and_points_with_trailing_commas() {
+        let doc = frame(
+            &["\"a\": 1".into(), "\"b\": \"x\"".into()],
+            &["{\"p\": 1}".into(), "{\"p\": 2}".into()],
+        );
+        assert_eq!(
+            doc,
+            "{\n  \"a\": 1,\n  \"b\": \"x\",\n  \"points\": [\n    {\"p\": 1},\n    {\"p\": 2}\n  ]\n}\n"
+        );
+    }
+
+    #[test]
+    fn empty_points_array_is_valid() {
+        let doc = frame(&["\"a\": 1".into()], &[]);
+        assert_eq!(doc, "{\n  \"a\": 1,\n  \"points\": [\n  ]\n}\n");
+    }
+}

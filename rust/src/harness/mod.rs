@@ -4,6 +4,8 @@
 //! (criterion itself is not available in this offline image).
 
 pub mod eval;
+pub mod hotpath;
+mod jsonfmt;
 pub mod microbench;
 pub mod paper;
 pub mod scaling;
@@ -11,6 +13,7 @@ pub mod tables;
 pub mod text;
 
 pub use eval::Evaluation;
+pub use hotpath::{HotPathPoint, HotPathReport};
 pub use microbench::{bench, BenchResult};
 pub use scaling::{scaling_report, ScalingPoint, ScalingReport};
 pub use text::TextTable;

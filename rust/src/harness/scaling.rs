@@ -3,15 +3,21 @@
 //! track the host-side scaling trajectory (simulated cycles are asserted
 //! equal across paths elsewhere; this file is about *wall-clock*).
 //!
-//! Four points per report:
-//! * `1sm_sequential`  — seed path, one SM;
-//! * `2sm_sequential`  — seed path, two SMs simulated back-to-back;
+//! Six points per report:
+//! * `1sm_sequential`  — reference path, one SM;
+//! * `2sm_sequential`  — reference path, two SMs simulated back-to-back;
 //! * `2sm_parallel`    — `launch_parallel`, one thread per SM;
+//! * `4sm_parallel` / `8sm_parallel` — the >2-SM scaling study (ROADMAP):
+//!   configurations beyond the paper's 2-SM evaluation, feasible to sweep
+//!   because per-SM memory setup is copy-on-write (O(touched pages));
+//!   each point carries the extrapolated FPGA area from `model/area.rs`
+//!   so simulated speedup can be read against LUT cost;
 //! * `pool_4shard`     — 4-shard coordinator pool absorbing a job batch.
 
 use crate::coordinator::{GpgpuService, Request, ServiceConfig};
 use crate::gpgpu::{Gpgpu, GpgpuConfig};
 use crate::kernels::{self, BenchId};
+use crate::model::{area::area, ArchParams};
 use crate::sim::NativeAlu;
 use std::time::Instant;
 
@@ -25,6 +31,10 @@ pub struct ScalingPoint {
     pub sim_cycles: u64,
     /// Jobs per measured batch (1 for the direct launches).
     pub jobs: u32,
+    /// FPGA area-model LUT estimate for the device configuration (the
+    /// Table 2 calibration for 1/2 SM, the marginal-SM extrapolation
+    /// beyond; a pool of shards counts each shard's device once).
+    pub luts: u32,
 }
 
 /// A full scaling measurement at one benchmark/size.
@@ -37,36 +47,47 @@ pub struct ScalingReport {
 }
 
 impl ScalingReport {
-    /// Wall-clock speedup of `num` over `den` (both by label).
-    pub fn speedup(&self, num: &str, den: &str) -> Option<f64> {
-        let f = |l: &str| self.points.iter().find(|p| p.label == l).map(|p| p.wall_ms);
+    /// den-metric / num-metric for two labelled points (None if either
+    /// label is missing or the numerator's metric is zero).
+    fn ratio(&self, num: &str, den: &str, metric: fn(&ScalingPoint) -> f64) -> Option<f64> {
+        let f = |l: &str| self.points.iter().find(|p| p.label == l).map(metric);
         match (f(den), f(num)) {
             (Some(d), Some(n)) if n > 0.0 => Some(d / n),
             _ => None,
         }
     }
 
+    /// Wall-clock speedup of `num` over `den` (both by label).
+    pub fn speedup(&self, num: &str, den: &str) -> Option<f64> {
+        self.ratio(num, den, |p| p.wall_ms)
+    }
+
+    /// Simulated-cycle speedup of `num` over `den` (both by label) — the
+    /// architectural scaling the >2-SM study reads against area cost.
+    pub fn sim_speedup(&self, num: &str, den: &str) -> Option<f64> {
+        self.ratio(num, den, |p| p.sim_cycles as f64)
+    }
+
     /// Hand-rolled JSON (the image has no serde): stable field order,
     /// suitable for line-diffing across PRs.
     pub fn to_json(&self) -> String {
-        let mut out = String::new();
-        out.push_str("{\n");
-        out.push_str(&format!("  \"bench\": \"{}\",\n", self.bench));
-        out.push_str(&format!("  \"n\": {},\n", self.n));
-        out.push_str(&format!("  \"seed\": {},\n", self.seed));
-        out.push_str("  \"points\": [\n");
-        for (i, p) in self.points.iter().enumerate() {
-            out.push_str(&format!(
-                "    {{\"label\": \"{}\", \"wall_ms\": {:.3}, \"sim_cycles\": {}, \"jobs\": {}}}{}\n",
-                p.label,
-                p.wall_ms,
-                p.sim_cycles,
-                p.jobs,
-                if i + 1 == self.points.len() { "" } else { "," }
-            ));
-        }
-        out.push_str("  ]\n}\n");
-        out
+        let header = [
+            format!("\"bench\": \"{}\"", self.bench),
+            format!("\"n\": {}", self.n),
+            format!("\"seed\": {}", self.seed),
+        ];
+        let points: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"label\": \"{}\", \"wall_ms\": {:.3}, \"sim_cycles\": {}, \
+                     \"jobs\": {}, \"luts\": {}}}",
+                    p.label, p.wall_ms, p.sim_cycles, p.jobs, p.luts
+                )
+            })
+            .collect();
+        super::jsonfmt::frame(&header, &points)
     }
 
     pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
@@ -86,12 +107,18 @@ fn median_ms(samples: usize, mut f: impl FnMut() -> u64) -> (f64, u64) {
     (walls[walls.len() / 2], cycles)
 }
 
-/// Measure all four scaling points for `id` at size `n`. Every run is
+/// Area-model LUT estimate for an `sms`-SM, 8-SP device (exact at the
+/// paper's 1/2-SM calibration points, marginal-cost extrapolation beyond).
+fn luts_for(sms: u32) -> u32 {
+    area(&ArchParams { num_sms: sms, ..ArchParams::baseline() }).luts
+}
+
+/// Measure all six scaling points for `id` at size `n`. Every run is
 /// verified against the host golden reference.
 pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> ScalingReport {
     let samples = samples.max(1);
     let w = kernels::prepare(id, n, seed);
-    let mut points = Vec::with_capacity(4);
+    let mut points = Vec::with_capacity(6);
 
     let mut direct = |label: &'static str, sms: u32, parallel: bool| {
         let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, 8));
@@ -107,19 +134,24 @@ pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> Scaling
             w.verify(&gmem).unwrap_or_else(|e| panic!("{label}: {e}"));
             run.cycles
         });
-        points.push(ScalingPoint { label, wall_ms, sim_cycles, jobs: 1 });
+        points.push(ScalingPoint { label, wall_ms, sim_cycles, jobs: 1, luts: luts_for(sms) });
     };
     direct("1sm_sequential", 1, false);
     direct("2sm_sequential", 2, false);
     direct("2sm_parallel", 2, true);
+    // ROADMAP >2-SM study: beyond the paper's largest configuration,
+    // priced by the area model's marginal-SM extrapolation.
+    direct("4sm_parallel", 4, true);
+    direct("8sm_parallel", 8, true);
 
     // Pool throughput: 4 shards absorbing 8 concurrent jobs of the same
     // benchmark (1-SM devices so shard-level parallelism dominates).
     const POOL_JOBS: u32 = 8;
+    const POOL_SHARDS: u32 = 4;
     let (wall_ms, sim_cycles) = median_ms(samples, || {
         let svc = GpgpuService::start_pool(
             GpgpuConfig::new(1, 8),
-            ServiceConfig { shards: 4, queue_depth: POOL_JOBS as usize },
+            ServiceConfig { shards: POOL_SHARDS as usize, queue_depth: POOL_JOBS as usize },
         );
         let tickets: Vec<_> = (0..POOL_JOBS)
             .map(|i| svc.submit(Request::Bench { id, n, seed: seed + i as u64 }))
@@ -132,7 +164,13 @@ pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> Scaling
         }
         cycles
     });
-    points.push(ScalingPoint { label: "pool_4shard", wall_ms, sim_cycles, jobs: POOL_JOBS });
+    points.push(ScalingPoint {
+        label: "pool_4shard",
+        wall_ms,
+        sim_cycles,
+        jobs: POOL_JOBS,
+        luts: POOL_SHARDS * luts_for(1),
+    });
 
     ScalingReport { bench: id.name(), n, seed, points }
 }
@@ -144,13 +182,44 @@ mod tests {
     #[test]
     fn report_has_all_points_and_valid_json() {
         let r = scaling_report(BenchId::VecAdd, 32, 1, 1);
-        assert_eq!(r.points.len(), 4);
+        assert_eq!(r.points.len(), 6);
         let json = r.to_json();
-        for label in ["1sm_sequential", "2sm_sequential", "2sm_parallel", "pool_4shard"] {
+        for label in [
+            "1sm_sequential",
+            "2sm_sequential",
+            "2sm_parallel",
+            "4sm_parallel",
+            "8sm_parallel",
+            "pool_4shard",
+        ] {
             assert!(json.contains(label), "{json}");
         }
         assert!(json.contains("\"bench\": \"vecadd\""));
+        assert!(json.contains("\"luts\""));
         assert!(r.points.iter().all(|p| p.sim_cycles > 0));
+        assert!(r.points.iter().all(|p| p.luts > 0));
         assert!(r.speedup("2sm_parallel", "1sm_sequential").is_some());
+    }
+
+    #[test]
+    fn area_grows_with_extrapolated_sm_count() {
+        let by_label = |r: &ScalingReport, l: &str| {
+            r.points.iter().find(|p| p.label == l).map(|p| p.luts).unwrap()
+        };
+        let r = scaling_report(BenchId::VecAdd, 32, 2, 1);
+        let (l1, l2) = (by_label(&r, "1sm_sequential"), by_label(&r, "2sm_parallel"));
+        let (l4, l8) = (by_label(&r, "4sm_parallel"), by_label(&r, "8sm_parallel"));
+        assert!(l1 < l2 && l2 < l4 && l4 < l8, "{l1}/{l2}/{l4}/{l8}");
+    }
+
+    #[test]
+    fn multi_sm_simulated_cycles_shrink_on_a_parallel_benchmark() {
+        // vecadd-256 has 4 blocks: 4 SMs split them 1:1; the 8-SM device
+        // leaves SMs idle but must not be slower.
+        let r = scaling_report(BenchId::VecAdd, 256, 3, 1);
+        let s4 = r.sim_speedup("4sm_parallel", "1sm_sequential").unwrap();
+        let s8 = r.sim_speedup("8sm_parallel", "1sm_sequential").unwrap();
+        assert!(s4 > 1.5, "4-SM simulated speedup: {s4:.2}");
+        assert!(s8 >= s4 * 0.99, "8-SM must not regress: {s8:.2} vs {s4:.2}");
     }
 }

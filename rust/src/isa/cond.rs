@@ -90,9 +90,14 @@ impl Cond {
 
     pub fn name(self) -> &'static str {
         match self {
-            Cond::Always => "T", Cond::Eq => "EQ", Cond::Ne => "NE",
-            Cond::Lt => "LT", Cond::Le => "LE", Cond::Gt => "GT",
-            Cond::Ge => "GE", Cond::Never => "NEVER",
+            Cond::Always => "T",
+            Cond::Eq => "EQ",
+            Cond::Ne => "NE",
+            Cond::Lt => "LT",
+            Cond::Le => "LE",
+            Cond::Gt => "GT",
+            Cond::Ge => "GE",
+            Cond::Never => "NEVER",
         }
     }
 

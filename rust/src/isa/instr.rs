@@ -46,11 +46,16 @@ impl SpecialReg {
 
     pub fn name(self) -> &'static str {
         match self {
-            SpecialReg::TidX => "SR_TID", SpecialReg::NtidX => "SR_NTID",
-            SpecialReg::CtaidX => "SR_CTAID", SpecialReg::NctaidX => "SR_NCTAID",
-            SpecialReg::CtaidY => "SR_CTAID_Y", SpecialReg::NctaidY => "SR_NCTAID_Y",
-            SpecialReg::LaneId => "SR_LANEID", SpecialReg::WarpId => "SR_WARPID",
-            SpecialReg::SmId => "SR_SMID", SpecialReg::GtId => "SR_GTID",
+            SpecialReg::TidX => "SR_TID",
+            SpecialReg::NtidX => "SR_NTID",
+            SpecialReg::CtaidX => "SR_CTAID",
+            SpecialReg::NctaidX => "SR_NCTAID",
+            SpecialReg::CtaidY => "SR_CTAID_Y",
+            SpecialReg::NctaidY => "SR_NCTAID_Y",
+            SpecialReg::LaneId => "SR_LANEID",
+            SpecialReg::WarpId => "SR_WARPID",
+            SpecialReg::SmId => "SR_SMID",
+            SpecialReg::GtId => "SR_GTID",
         }
     }
 

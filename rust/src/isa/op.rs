@@ -153,15 +153,38 @@ impl Op {
     pub fn mnemonic(self) -> &'static str {
         use Op::*;
         match self {
-            Nop => "NOP", Exit => "EXIT", Join => "JOIN", Bar => "BAR",
-            Mov => "MOV", S2r => "S2R", R2a => "R2A", A2r => "A2R",
-            Iadd => "IADD", Isub => "ISUB", Imul => "IMUL", Imad => "IMAD",
-            Imin => "IMIN", Imax => "IMAX", Iabs => "IABS", Ineg => "INEG",
-            And => "AND", Or => "OR", Xor => "XOR", Not => "NOT",
-            Shl => "SHL", Shr => "SHR", Sar => "SAR",
-            Isetp => "ISETP", Iset => "ISET", Sel => "SEL",
-            Bra => "BRA", Ssy => "SSY",
-            Gld => "GLD", Gst => "GST", Sld => "SLD", Sst => "SST",
+            Nop => "NOP",
+            Exit => "EXIT",
+            Join => "JOIN",
+            Bar => "BAR",
+            Mov => "MOV",
+            S2r => "S2R",
+            R2a => "R2A",
+            A2r => "A2R",
+            Iadd => "IADD",
+            Isub => "ISUB",
+            Imul => "IMUL",
+            Imad => "IMAD",
+            Imin => "IMIN",
+            Imax => "IMAX",
+            Iabs => "IABS",
+            Ineg => "INEG",
+            And => "AND",
+            Or => "OR",
+            Xor => "XOR",
+            Not => "NOT",
+            Shl => "SHL",
+            Shr => "SHR",
+            Sar => "SAR",
+            Isetp => "ISETP",
+            Iset => "ISET",
+            Sel => "SEL",
+            Bra => "BRA",
+            Ssy => "SSY",
+            Gld => "GLD",
+            Gst => "GST",
+            Sld => "SLD",
+            Sst => "SST",
         }
     }
 

@@ -66,7 +66,11 @@ const LUT_PER_MUL_SP: f64 = (39_189.0 - 22_937.0) / 8.0;
 const FF_PER_MUL_SP: f64 = (57_301.0 - 27_136.0) / 8.0;
 const BRAM_MUL_REMOVAL: u32 = 4;
 
-fn interp(table: &[(u32, u32, u32, u32); 3], sp: u32, field: fn(&(u32, u32, u32, u32)) -> u32) -> f64 {
+fn interp(
+    table: &[(u32, u32, u32, u32); 3],
+    sp: u32,
+    field: fn(&(u32, u32, u32, u32)) -> u32,
+) -> f64 {
     // Exact at table points, linear between / beyond.
     let pts: Vec<(f64, f64)> =
         table.iter().map(|row| (row.0 as f64, field(row) as f64)).collect();

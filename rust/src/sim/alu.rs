@@ -104,6 +104,17 @@ pub trait AluBackend {
 
     /// Backend name for metrics / CLI display.
     fn name(&self) -> &'static str;
+
+    /// True iff this backend is semantically [`NativeAlu`] — stateless,
+    /// with `execute` a pure function of its input. The `gpgpu` launch
+    /// boundary uses this to swap a `&mut dyn AluBackend` for a concrete
+    /// `NativeAlu` before entering `Sm::run`, so the simulator hot path
+    /// monomorphizes (and inlines the lane loop) instead of
+    /// virtual-dispatching per warp instruction. Stateful or
+    /// differentially-tested backends must keep the default `false`.
+    fn is_native(&self) -> bool {
+        false
+    }
 }
 
 /// Per-SM-thread ALU factory for the parallel launch path. The sequential
@@ -222,6 +233,10 @@ impl AluBackend for NativeAlu {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn is_native(&self) -> bool {
+        true
     }
 }
 

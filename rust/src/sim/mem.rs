@@ -90,20 +90,33 @@ impl GmemPort for GlobalMem {
 /// phase: `(byte address, value)`, in program order for its SM.
 pub type WriteRecord = (u32, i32);
 
-/// A per-SM view of global memory for the parallel launch path: a private
-/// copy of the launch-time memory image that the SM reads and writes
-/// normally (so its own loads observe its own stores), plus a log of every
-/// store so the merge phase can replay writes deterministically in SM
-/// order and detect cross-SM write conflicts.
+/// Copy-on-write page size for [`GmemSnapshot`], in 32-bit words (1 KiB).
+pub const GMEM_PAGE_WORDS: usize = 256;
+
+/// A per-SM view of global memory for the parallel launch path, built as
+/// a **page-granular copy-on-write snapshot**: reads fall through to the
+/// shared launch-time base image; the first store to a 1 KiB page faults
+/// a private copy of that page in, so the SM's own loads observe its own
+/// stores while the base stays untouched. Per-SM launch setup is
+/// therefore O(touched pages) instead of the seed engine's O(mem) full
+/// `GlobalMem` clone — what makes 4/8-SM sweeps cheap.
+///
+/// Every store is additionally logged so the merge phase can replay
+/// writes deterministically in SM order and detect cross-SM write
+/// conflicts. The base is shared by reference: the scoped-thread simulate
+/// phase hands every SM the same `&GlobalMem`, with zero setup copies.
 #[derive(Debug, Clone)]
-pub struct GmemSnapshot {
-    snap: GlobalMem,
+pub struct GmemSnapshot<'a> {
+    base: &'a GlobalMem,
+    /// Lazily faulted private pages; index = word index / page size.
+    pages: Vec<Option<Box<[i32; GMEM_PAGE_WORDS]>>>,
     log: Vec<WriteRecord>,
 }
 
-impl GmemSnapshot {
-    pub fn new(base: &GlobalMem) -> GmemSnapshot {
-        GmemSnapshot { snap: base.clone(), log: Vec::new() }
+impl<'a> GmemSnapshot<'a> {
+    pub fn new(base: &'a GlobalMem) -> GmemSnapshot<'a> {
+        let n_pages = base.words.len().div_ceil(GMEM_PAGE_WORDS);
+        GmemSnapshot { base, pages: vec![None; n_pages], log: Vec::new() }
     }
 
     pub fn log(&self) -> &[WriteRecord] {
@@ -113,17 +126,39 @@ impl GmemSnapshot {
     pub fn into_log(self) -> Vec<WriteRecord> {
         self.log
     }
+
+    /// Pages privately copied so far (the COW working-set size).
+    pub fn touched_pages(&self) -> usize {
+        self.pages.iter().filter(|p| p.is_some()).count()
+    }
 }
 
-impl GmemPort for GmemSnapshot {
+impl GmemPort for GmemSnapshot<'_> {
     #[inline]
     fn load(&self, addr: u32) -> Result<i32, SimError> {
-        self.snap.load(addr)
+        let idx = word_index(addr, self.base.words.len(), "global")?;
+        Ok(match &self.pages[idx / GMEM_PAGE_WORDS] {
+            Some(page) => page[idx % GMEM_PAGE_WORDS],
+            None => self.base.words[idx],
+        })
     }
 
     #[inline]
     fn store(&mut self, addr: u32, value: i32) -> Result<(), SimError> {
-        self.snap.store(addr, value)?;
+        let base = self.base;
+        let idx = word_index(addr, base.words.len(), "global")?;
+        let page = self.pages[idx / GMEM_PAGE_WORDS].get_or_insert_with(|| {
+            // First write to this page: fault in a private copy of the
+            // base image (the last page of a non-page-multiple image is
+            // zero-padded; the padding is unreachable past the bounds
+            // check above).
+            let start = idx / GMEM_PAGE_WORDS * GMEM_PAGE_WORDS;
+            let end = (start + GMEM_PAGE_WORDS).min(base.words.len());
+            let mut p = Box::new([0i32; GMEM_PAGE_WORDS]);
+            p[..end - start].copy_from_slice(&base.words[start..end]);
+            p
+        });
+        page[idx % GMEM_PAGE_WORDS] = value;
         self.log.push((addr, value));
         Ok(())
     }
@@ -288,5 +323,54 @@ mod tests {
         assert!(GmemPort::store(&mut view, 2, 1).is_err());
         assert!(GmemPort::load(&view, 1 << 20).is_err());
         assert!(view.log().is_empty());
+        assert_eq!(view.touched_pages(), 0, "faulting accesses copy nothing");
+    }
+
+    #[test]
+    fn snapshot_faults_pages_on_first_write_only() {
+        // 4 KiB = 4 pages. Writes to two addresses on page 0 and one on
+        // page 2 must copy exactly two pages; reads elsewhere fall through.
+        let mut base = GlobalMem::new(4096);
+        for i in 0..1024 {
+            base.store(i * 4, i as i32 + 1).unwrap();
+        }
+        let mut view = GmemSnapshot::new(&base);
+        assert_eq!(view.touched_pages(), 0, "construction copies nothing");
+        GmemPort::store(&mut view, 0, -1).unwrap();
+        GmemPort::store(&mut view, 8, -2).unwrap();
+        GmemPort::store(&mut view, 2 * 1024 + 4, -3).unwrap();
+        assert_eq!(view.touched_pages(), 2);
+        // COW page carries the base image around the written word.
+        assert_eq!(GmemPort::load(&view, 4).unwrap(), 2, "page 0 preserved");
+        assert_eq!(GmemPort::load(&view, 0).unwrap(), -1);
+        assert_eq!(GmemPort::load(&view, 2 * 1024 + 4).unwrap(), -3);
+        // Untouched pages read the live base values.
+        assert_eq!(GmemPort::load(&view, 1024).unwrap(), 257, "page 1 falls through");
+        assert_eq!(GmemPort::load(&view, 3 * 1024).unwrap(), 769, "page 3 falls through");
+    }
+
+    #[test]
+    fn snapshot_handles_partial_last_page() {
+        // 64 bytes = 16 words, far less than one 256-word page.
+        let mut base = GlobalMem::new(64);
+        base.store(60, 7).unwrap();
+        let mut view = GmemSnapshot::new(&base);
+        GmemPort::store(&mut view, 0, 1).unwrap();
+        assert_eq!(view.touched_pages(), 1);
+        assert_eq!(GmemPort::load(&view, 60).unwrap(), 7, "partial page copied");
+        assert!(GmemPort::load(&view, 64).is_err(), "bounds still the base image");
+        assert!(GmemPort::store(&mut view, 64, 1).is_err());
+    }
+
+    #[test]
+    fn snapshot_page_boundary_writes_stay_on_their_page() {
+        let base = GlobalMem::new(4096);
+        let mut view = GmemSnapshot::new(&base);
+        GmemPort::store(&mut view, 1020, 5).unwrap(); // last word of page 0
+        GmemPort::store(&mut view, 1024, 6).unwrap(); // first word of page 1
+        assert_eq!(view.touched_pages(), 2);
+        assert_eq!(GmemPort::load(&view, 1020).unwrap(), 5);
+        assert_eq!(GmemPort::load(&view, 1024).unwrap(), 6);
+        assert_eq!(view.log(), [(1020, 5), (1024, 6)]);
     }
 }

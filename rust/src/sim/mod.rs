@@ -5,11 +5,21 @@
 //! the paper's microarchitecture — a 5-stage pipeline issuing one warp
 //! *row* (`32 / num_sp` threads) per cycle, round-robin across ready
 //! warps, with memory latencies overlapped across warps (paper §3.2).
+//!
+//! The engine is warp-wide and allocation-free on the hot path: kernels
+//! are lowered once per launch to pre-resolved micro-ops ([`PreDecoded`]),
+//! issue selection is event-driven ([`WarpScheduler`]: ready bitmask +
+//! wake min-heap), per-SM parallel launches read through page-granular
+//! copy-on-write snapshots ([`GmemSnapshot`]), and `Sm::run` is generic
+//! over its memory port and ALU backend so concrete callers inline the
+//! lane loops (trait objects survive only at the `gpgpu::launch`
+//! boundary).
 
 pub mod alu;
 pub mod mem;
 pub mod metrics;
 pub mod regfile;
+pub mod sched;
 pub mod sm;
 pub mod stack;
 pub mod warp;
@@ -18,10 +28,12 @@ pub use alu::{
     eval_lane, AluBackend, AluFactory, AluFunc, NativeAlu, WarpAluIn, WarpAluOut, WARP_SIZE,
 };
 pub use mem::{
-    GlobalMem, GmemPort, GmemSnapshot, MemTiming, SharedMem, WriteRecord, PARAM_SEG_BYTES,
+    GlobalMem, GmemPort, GmemSnapshot, MemTiming, SharedMem, WriteRecord, GMEM_PAGE_WORDS,
+    PARAM_SEG_BYTES,
 };
 pub use metrics::SmStats;
 pub use regfile::RegFile;
+pub use sched::{WarpScheduler, MAX_RESIDENT_WARPS};
 pub use sm::{BlockDesc, PreDecoded, Sm};
 pub use stack::{EntryType, StackEntry, WarpStack};
 pub use warp::{Warp, WarpStatus};

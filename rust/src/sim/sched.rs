@@ -1,0 +1,426 @@
+//! Event-driven warp scheduler — the warp unit's issue-selection logic,
+//! factored out of [`super::Sm`] so it is unit-testable on its own.
+//!
+//! The seed engine re-derived every warp's status with an O(total-warps)
+//! linear scan per issued instruction. This scheduler keeps the same
+//! *observable* policy — positional round-robin over ready warps, starting
+//! at a rotating pointer — but makes selection O(1) amortized:
+//!
+//! * **ready set**: one bit per flat warp index in a `u128`; the
+//!   round-robin pick is a single masked `trailing_zeros`;
+//! * **wake heap**: a min-heap of `(ready_at, flat)` for warps parked on a
+//!   pipeline/memory hazard. Wakes are drained lazily into the ready set
+//!   before each pick, so simultaneous wakes are still served in
+//!   positional order (heap tie-order never leaks into issue order);
+//! * **stall advance**: when nothing is ready, the heap top is exactly the
+//!   seed engine's `min(ready_at)` over Waiting warps, so stall-cycle
+//!   accounting is bit-identical to the linear scan.
+//!
+//! Round-robin fairness across block retirement is handled by
+//! [`WarpScheduler::retire_range`]: the rotation pointer is rebased
+//! against the shrunk warp population instead of being reset to slot 0
+//! (the seed engine's fairness bug — `rr` restarted from 0 on every
+//! `swap_remove`, silently favouring low-numbered blocks).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Hard cap on simultaneously resident warps per SM. The block scheduler's
+/// Table 1 limits give at most 8 resident blocks x 8 warps = 64; the cap
+/// leaves headroom for direct `Sm::run` callers with custom limits.
+pub const MAX_RESIDENT_WARPS: u32 = 128;
+
+/// O(1)-amortized round-robin warp scheduler (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct WarpScheduler {
+    /// Bit `i` set = flat warp `i` is ready to issue.
+    ready: u128,
+    /// Parked warps: `(ready_at, flat)`, min first.
+    wake: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Flat index the next pick starts scanning from.
+    rr: u32,
+    /// Flat warps currently tracked (resident, in slot order).
+    n: u32,
+}
+
+impl WarpScheduler {
+    pub fn new() -> WarpScheduler {
+        WarpScheduler::default()
+    }
+
+    /// Warps currently tracked.
+    pub fn len(&self) -> u32 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// A new block became resident: append `count` warps at the end of the
+    /// flat order, all immediately ready (fresh warps have `ready_at = 0`).
+    /// Existing flat indices are unaffected.
+    pub fn extend_ready(&mut self, count: u32) {
+        assert!(
+            self.n + count <= MAX_RESIDENT_WARPS,
+            "at most {MAX_RESIDENT_WARPS} resident warps per SM (got {})",
+            self.n + count
+        );
+        for i in self.n..self.n + count {
+            self.ready |= 1u128 << i;
+        }
+        self.n += count;
+    }
+
+    /// Park `flat` until `ready_at`. The warp must not be in the ready set
+    /// (an issued warp's bit is cleared by [`WarpScheduler::pick`]).
+    pub fn park(&mut self, flat: u32, ready_at: u64) {
+        debug_assert_eq!(self.ready & (1u128 << flat), 0, "parking a ready warp");
+        self.wake.push(Reverse((ready_at, flat)));
+    }
+
+    /// Immediately mark `flat` ready (barrier release of a warp whose
+    /// pipeline hazard already drained).
+    pub fn make_ready(&mut self, flat: u32) {
+        debug_assert!(flat < self.n);
+        self.ready |= 1u128 << flat;
+    }
+
+    /// Move every parked warp whose wake time has arrived (`ready_at <=
+    /// now`) into the ready set. No wakeup is ever lost: entries stay in
+    /// the heap until drained, and draining is monotonic in `now`.
+    pub fn drain_wakes(&mut self, now: u64) {
+        while let Some(&Reverse((t, flat))) = self.wake.peek() {
+            if t > now {
+                break;
+            }
+            self.wake.pop();
+            self.ready |= 1u128 << flat;
+        }
+    }
+
+    /// Earliest pending wake time, if any warp is parked. After
+    /// [`WarpScheduler::drain_wakes`]`(now)` this is strictly greater than
+    /// `now` — exactly the seed engine's `min(ready_at)` over Waiting
+    /// warps, which drives stall-cycle accounting.
+    pub fn next_wake(&self) -> Option<u64> {
+        self.wake.peek().map(|&Reverse((t, _))| t)
+    }
+
+    /// Round-robin pick: the first ready warp at or after the rotation
+    /// pointer, wrapping once. Clears the picked warp's ready bit and
+    /// advances the pointer just past it. Returns `None` when no warp is
+    /// ready (caller then advances time to [`WarpScheduler::next_wake`]).
+    pub fn pick(&mut self) -> Option<u32> {
+        if self.ready == 0 {
+            return None;
+        }
+        // rr is always < n <= 128 (and 0 when n == 0), so the shift
+        // amount is at most 127 and cannot overflow.
+        let at_or_after = self.ready & (!0u128 << self.rr);
+        let candidates = if at_or_after != 0 {
+            at_or_after
+        } else {
+            self.ready
+        };
+        let idx = candidates.trailing_zeros();
+        self.ready &= !(1u128 << idx);
+        self.rr = if idx + 1 >= self.n { 0 } else { idx + 1 };
+        Some(idx)
+    }
+
+    /// A block retired: remove flat indices `[base, base + count)` — all
+    /// must be inactive (done warps are neither ready nor parked) — and
+    /// shift every higher index down by `count`, preserving the relative
+    /// order of the survivors.
+    ///
+    /// The rotation pointer is rebased, not reset: a pointer past the
+    /// removed range slides down with its warp; a pointer inside the range
+    /// lands on the first warp after it. Round-robin order therefore
+    /// continues exactly where it left off (the seed engine's fairness
+    /// bug reset it to 0 here).
+    pub fn retire_range(&mut self, base: u32, count: u32) {
+        if count == 0 {
+            return;
+        }
+        debug_assert!(base + count <= self.n);
+        let count_mask = if count >= 128 {
+            !0u128
+        } else {
+            (1u128 << count) - 1
+        };
+        debug_assert_eq!(
+            (self.ready >> base) & count_mask,
+            0,
+            "retired warps must be done (inactive)"
+        );
+        let low = self.ready & ((1u128 << base) - 1);
+        let high = if base + count >= 128 {
+            0
+        } else {
+            self.ready >> (base + count)
+        };
+        self.ready = (high << base) | low;
+
+        if !self.wake.is_empty() {
+            let mut entries = std::mem::take(&mut self.wake).into_vec();
+            for Reverse((_, flat)) in entries.iter_mut() {
+                debug_assert!(
+                    *flat < base || *flat >= base + count,
+                    "retired warps must not be parked"
+                );
+                if *flat >= base + count {
+                    *flat -= count;
+                }
+            }
+            self.wake = BinaryHeap::from(entries);
+        }
+
+        if self.rr >= base + count {
+            self.rr -= count;
+        } else if self.rr > base {
+            self.rr = base;
+        }
+        self.n -= count;
+        if self.n == 0 || self.rr >= self.n {
+            self.rr = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference model: the seed engine's linear scan (with the fairness
+    /// fix), kept deliberately naive so the event-driven scheduler can be
+    /// differentially tested against it.
+    #[derive(Debug, Clone)]
+    struct LinearScan {
+        /// ready_at per warp; `None` = removed (done).
+        warps: Vec<Option<u64>>,
+        rr: usize,
+    }
+
+    impl LinearScan {
+        fn new() -> LinearScan {
+            LinearScan { warps: Vec::new(), rr: 0 }
+        }
+
+        fn extend_ready(&mut self, count: u32) {
+            for _ in 0..count {
+                self.warps.push(Some(0));
+            }
+        }
+
+        fn pick(&mut self, now: u64) -> Option<u32> {
+            let n = self.warps.len();
+            if n == 0 {
+                return None;
+            }
+            let start = if self.rr >= n { 0 } else { self.rr };
+            for k in 0..n {
+                let i = (start + k) % n;
+                if matches!(self.warps[i], Some(t) if t <= now) {
+                    self.rr = (i + 1) % n;
+                    self.warps[i] = None; // issued: caller re-parks or retires
+                    return Some(i as u32);
+                }
+            }
+            None
+        }
+
+        fn park(&mut self, flat: u32, ready_at: u64) {
+            self.warps[flat as usize] = Some(ready_at);
+        }
+
+        fn next_wake(&self, now: u64) -> Option<u64> {
+            self.warps.iter().flatten().copied().filter(|&t| t > now).min()
+        }
+
+        fn retire_range(&mut self, base: u32, count: u32) {
+            let (base, count) = (base as usize, count as usize);
+            self.warps.drain(base..base + count);
+            if self.rr >= base + count {
+                self.rr -= count;
+            } else if self.rr > base {
+                self.rr = base;
+            }
+            if self.warps.is_empty() || self.rr >= self.warps.len() {
+                self.rr = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_positionally() {
+        let mut s = WarpScheduler::new();
+        s.extend_ready(4);
+        assert_eq!(s.pick(), Some(0));
+        assert_eq!(s.pick(), Some(1));
+        s.make_ready(0);
+        s.make_ready(1);
+        // Pointer sits at 2: lower-numbered ready warps must wait a lap.
+        assert_eq!(s.pick(), Some(2));
+        assert_eq!(s.pick(), Some(3));
+        assert_eq!(s.pick(), Some(0));
+        assert_eq!(s.pick(), Some(1));
+        assert_eq!(s.pick(), None);
+    }
+
+    #[test]
+    fn pointer_survives_block_retirement() {
+        // Three 2-warp blocks, flat 0..6. Issue 0,1,2,3; block 1 (warps
+        // 2,3) retires. The pointer was at 4 and must continue at the warp
+        // that *was* flat 4 — not restart from slot 0 (the seed bug).
+        let mut s = WarpScheduler::new();
+        s.extend_ready(6);
+        for want in 0..4 {
+            assert_eq!(s.pick(), Some(want));
+        }
+        s.make_ready(0);
+        s.make_ready(1);
+        s.retire_range(2, 2);
+        assert_eq!(s.len(), 4);
+        // Old warp 4 is now flat 2 and must issue before warps 0/1.
+        assert_eq!(s.pick(), Some(2), "round-robin must not restart at 0");
+        assert_eq!(s.pick(), Some(3));
+        assert_eq!(s.pick(), Some(0));
+        assert_eq!(s.pick(), Some(1));
+    }
+
+    #[test]
+    fn pointer_inside_retired_range_lands_after_it() {
+        let mut s = WarpScheduler::new();
+        s.extend_ready(6);
+        for want in 0..6 {
+            assert_eq!(s.pick(), Some(want));
+        }
+        // Warp 2 issues once more and is the block's last warp to finish:
+        // the pointer (3) sits inside the retiring range [2, 4).
+        s.make_ready(2);
+        assert_eq!(s.pick(), Some(2));
+        s.make_ready(0);
+        s.make_ready(1);
+        s.make_ready(4);
+        s.make_ready(5);
+        s.retire_range(2, 2);
+        // rr rebased to the first survivor after the range: old warp 4,
+        // now flat 2; rotation continues from there.
+        assert_eq!(s.pick(), Some(2));
+        assert_eq!(s.pick(), Some(3));
+        assert_eq!(s.pick(), Some(0));
+    }
+
+    #[test]
+    fn retiring_the_tail_wraps_the_pointer() {
+        let mut s = WarpScheduler::new();
+        s.extend_ready(4);
+        for want in 0..4 {
+            assert_eq!(s.pick(), Some(want));
+        }
+        s.make_ready(0);
+        s.make_ready(1);
+        s.retire_range(2, 2);
+        assert_eq!(s.pick(), Some(0), "pointer past the end wraps to 0");
+    }
+
+    #[test]
+    fn no_lost_wakeups() {
+        let mut s = WarpScheduler::new();
+        s.extend_ready(3);
+        for f in 0..3 {
+            assert_eq!(s.pick(), Some(f));
+        }
+        s.park(0, 10);
+        s.park(1, 10); // simultaneous wake
+        s.park(2, 25);
+        assert_eq!(s.pick(), None);
+        assert_eq!(s.next_wake(), Some(10));
+        s.drain_wakes(9);
+        assert_eq!(s.pick(), None, "nothing wakes before its time");
+        s.drain_wakes(10);
+        // Simultaneous wakes are served positionally, not in heap order.
+        assert_eq!(s.pick(), Some(0));
+        assert_eq!(s.pick(), Some(1));
+        assert_eq!(s.pick(), None);
+        assert_eq!(s.next_wake(), Some(25));
+        s.drain_wakes(30);
+        assert_eq!(s.pick(), Some(2));
+        assert_eq!(s.next_wake(), None);
+    }
+
+    #[test]
+    fn differential_vs_linear_scan_randomized() {
+        // Drive both schedulers with the same random issue/park/retire
+        // trace and assert identical pick sequences and stall advances —
+        // the seed engine's observable behaviour (fairness fix included).
+        let mut rng = crate::rng::XorShift64::new(0x5EED_5C4D);
+        for case in 0..200 {
+            let mut ev = WarpScheduler::new();
+            let mut lin = LinearScan::new();
+            let mut now = 0u64;
+            let blocks = 1 + rng.below(4) as u32; // warps per block
+            ev.extend_ready(blocks * 2);
+            lin.extend_ready(blocks * 2);
+            let mut live: Vec<u32> = vec![0; (blocks * 2) as usize];
+            let mut issues = 0;
+            while live.iter().any(|&d| d == 0) && issues < 500 {
+                ev.drain_wakes(now);
+                let a = ev.pick();
+                let b = lin.pick(now);
+                assert_eq!(a, b, "case {case} issue {issues} at {now}");
+                match a {
+                    Some(flat) => {
+                        let fi = flat as usize;
+                        if rng.below(8) == 0 {
+                            // Warp finishes: drop it; retire its pair when
+                            // both are done.
+                            live[fi] = 1;
+                            let pair = fi ^ 1;
+                            if live[pair] == 1 {
+                                let base = (fi & !1) as u32;
+                                ev.retire_range(base, 2);
+                                lin.retire_range(base, 2);
+                                live.drain((base as usize)..(base as usize) + 2);
+                            }
+                        } else {
+                            let delay = 1 + rng.below(20) as u64;
+                            ev.park(flat, now + delay);
+                            lin.park(flat, now + delay);
+                        }
+                    }
+                    None => {
+                        let (wa, wb) = (ev.next_wake(), lin.next_wake(now));
+                        assert_eq!(wa, wb, "case {case} stall at {now}");
+                        match wa {
+                            Some(t) => now = t,
+                            None => break,
+                        }
+                    }
+                }
+                issues += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn extend_after_retirement_appends_fresh_ready_warps() {
+        let mut s = WarpScheduler::new();
+        s.extend_ready(2);
+        assert_eq!(s.pick(), Some(0));
+        assert_eq!(s.pick(), Some(1));
+        s.retire_range(0, 2);
+        assert!(s.is_empty());
+        s.extend_ready(3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.pick(), Some(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "resident warps")]
+    fn capacity_is_enforced() {
+        let mut s = WarpScheduler::new();
+        s.extend_ready(MAX_RESIDENT_WARPS + 1);
+    }
+}

@@ -13,43 +13,241 @@
 //! * memory instructions park the warp for the AXI/BRAM latency while
 //!   other warps keep issuing (latency hiding);
 //! * `BAR` parks warps until every live warp of the block arrives.
+//!
+//! # The warp-wide hot path
+//!
+//! Three structural decisions keep the issue loop allocation-free and
+//! branch-light (EXPERIMENTS.md §Perf):
+//!
+//! * [`Sm::run`]/`step` are **monomorphized** over `G: GmemPort` and
+//!   `A: AluBackend` — trait objects exist only at the `gpgpu::launch`
+//!   boundary, so per-lane loads/stores and the warp-ALU call inline
+//!   instead of virtual-dispatching;
+//! * issue selection is **event-driven** ([`super::WarpScheduler`]): a
+//!   ready bitmask picked with one masked `trailing_zeros` plus a min-heap
+//!   of wake times, replacing the seed engine's O(total-warps) status
+//!   re-scan per issued instruction;
+//! * the Decode stage runs **once per launch**: [`PreDecoded`] lowers
+//!   every instruction to a micro-op ([`Uop`]) with operand kinds, guard,
+//!   branch targets and fault flags pre-resolved, so `step` never
+//!   re-matches `Operand`/`SpecialReg` per issue.
 
 use super::alu::{AluBackend, AluFunc, WarpAluIn, WARP_SIZE};
 use super::mem::{GmemPort, SharedMem, PARAM_SEG_BYTES};
 use super::metrics::SmStats;
 use super::regfile::RegFile;
+use super::sched::{WarpScheduler, MAX_RESIDENT_WARPS};
 use super::stack::{EntryType, StackEntry};
-use super::warp::{Warp, WarpStatus};
+use super::warp::Warp;
 use super::{SimError, SmConfig};
 use crate::asm::Kernel;
-use crate::isa::{Instr, Op, Operand, SpecialReg};
+use crate::isa::{Cond, Guard, Instr, Op, Operand, SpecialReg};
 
-/// Pre-decoded kernel image: the Decode stage run once per launch. The
-/// issue loop then indexes a flat table — the single biggest simulator
-/// speedup (see EXPERIMENTS.md §Perf).
+/// A vector-fetch source for the Read stage, resolved at pre-decode:
+/// either a strided register-file gather or an immediate splat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VecSrc {
+    Reg(u8),
+    Splat(i32),
+}
+
+/// Third-operand source (MAD addend / SEL selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CSrc {
+    Reg(u8),
+    /// SEL: selector lanes come from the predicate file (`setp_idx`,
+    /// `cond` of the owning [`AluUop`]).
+    Pred,
+    Zero,
+}
+
+/// Memory-address base register kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MemBase {
+    Reg(u8),
+    AReg(u8),
+}
+
+/// Pre-resolved datapath instruction (everything the Read/Execute/Write
+/// stages need, with operand dispatch done once per launch).
+#[derive(Debug, Clone, Copy)]
+struct AluUop {
+    func: AluFunc,
+    cond: Cond,
+    a: VecSrc,
+    b: VecSrc,
+    c: CSrc,
+    dst: u8,
+    setp_idx: u8,
+    /// `func == Setp`: write the predicate file instead of the GP file.
+    setp_wb: bool,
+}
+
+/// Pre-resolved memory instruction.
+#[derive(Debug, Clone, Copy)]
+struct MemUop {
+    global: bool,
+    load: bool,
+    base: MemBase,
+    /// Byte offset, widened from the encoded i16 once.
+    offset: i32,
+    /// Load destination / store data register.
+    reg: u8,
+}
+
+/// Micro-op kind: one variant per issue-loop dispatch arm.
+#[derive(Debug, Clone, Copy)]
+enum UopKind {
+    Nop,
+    Exit,
+    Join,
+    Bar,
+    Ssy { target: u32 },
+    Bra { target: u32 },
+    S2r { sr: SpecialReg, dst: u8 },
+    R2a { src: u8, dst: u8 },
+    A2r { src: u8, dst: u8 },
+    Mem(MemUop),
+    Alu(AluUop),
+}
+
+/// One pre-decoded micro-op (see [`PreDecoded`]).
+#[derive(Debug, Clone, Copy)]
+struct Uop {
+    kind: UopKind,
+    /// Original opcode, kept for the dynamic histogram.
+    op: Op,
+    guard: Guard,
+    /// `guard` is conditional (pre-tested so the common unguarded path is
+    /// a single branch).
+    guarded: bool,
+    /// §4.2 customization faults, resolved to flags at pre-decode.
+    needs_mul: bool,
+    needs_3ops: bool,
+    /// Fall-through PC (`pc + size`), precomputed.
+    next_pc: u32,
+}
+
+impl Uop {
+    fn from_instr(pc: u32, instr: &Instr) -> Uop {
+        let kind = match instr.op {
+            Op::Nop => UopKind::Nop,
+            Op::Exit => UopKind::Exit,
+            Op::Join => UopKind::Join,
+            Op::Bar => UopKind::Bar,
+            Op::Ssy => UopKind::Ssy { target: instr.branch_target().expect("SSY target") },
+            Op::Bra => UopKind::Bra { target: instr.branch_target().expect("BRA target") },
+            Op::S2r => match instr.src1 {
+                Operand::Special(sr) => UopKind::S2r { sr, dst: instr.dst },
+                _ => unreachable!("decoder guarantees S2R source"),
+            },
+            Op::R2a => match instr.src1 {
+                Operand::Reg(r) => UopKind::R2a { src: r, dst: instr.dst },
+                _ => unreachable!("decoder guarantees R2A source"),
+            },
+            Op::A2r => match instr.src1 {
+                Operand::AReg(a) => UopKind::A2r { src: a, dst: instr.dst },
+                _ => unreachable!("decoder guarantees A2R source"),
+            },
+            Op::Gld | Op::Sld | Op::Gst | Op::Sst => {
+                let base = match instr.src1 {
+                    Operand::Reg(r) => MemBase::Reg(r),
+                    Operand::AReg(a) => MemBase::AReg(a),
+                    _ => unreachable!("memory base is a register"),
+                };
+                let load = matches!(instr.op, Op::Gld | Op::Sld);
+                let reg = if load {
+                    instr.dst
+                } else {
+                    match instr.src2 {
+                        Operand::Reg(r) => r,
+                        _ => unreachable!("stores carry a register source"),
+                    }
+                };
+                UopKind::Mem(MemUop {
+                    global: matches!(instr.op, Op::Gld | Op::Gst),
+                    load,
+                    base,
+                    offset: instr.offset as i32,
+                    reg,
+                })
+            }
+            _ => {
+                let func = AluFunc::from_op(instr.op).expect("non-ALU ops handled above");
+                let a = match instr.src1 {
+                    Operand::Reg(r) => VecSrc::Reg(r),
+                    // MOV #imm carries its immediate in src2 (splat to both
+                    // source lanes, exactly the seed engine's fill).
+                    Operand::None => match instr.src2 {
+                        Operand::Imm(v) => VecSrc::Splat(v),
+                        _ => VecSrc::Splat(0),
+                    },
+                    _ => VecSrc::Splat(0),
+                };
+                let b = match instr.src2 {
+                    Operand::Reg(r) => VecSrc::Reg(r),
+                    Operand::Imm(v) => VecSrc::Splat(v),
+                    _ => VecSrc::Splat(0),
+                };
+                let c = if func == AluFunc::Sel {
+                    CSrc::Pred
+                } else {
+                    match instr.src3 {
+                        Operand::Reg(r) => CSrc::Reg(r),
+                        _ => CSrc::Zero,
+                    }
+                };
+                UopKind::Alu(AluUop {
+                    func,
+                    cond: instr.cond,
+                    a,
+                    b,
+                    c,
+                    dst: instr.dst,
+                    setp_idx: instr.setp_idx,
+                    setp_wb: func == AluFunc::Setp,
+                })
+            }
+        };
+        Uop {
+            kind,
+            op: instr.op,
+            guard: instr.guard,
+            guarded: !instr.guard.is_unconditional(),
+            needs_mul: instr.op.uses_multiplier(),
+            needs_3ops: instr.op == Op::Imad,
+            next_pc: pc + instr.size as u32,
+        }
+    }
+}
+
+/// Pre-decoded kernel image: the Decode stage run once per launch,
+/// lowering every [`Instr`] to a dense micro-op. The issue loop then
+/// indexes a flat table and never re-matches operand kinds — the single
+/// biggest simulator speedup alongside monomorphization (see
+/// EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone)]
 pub struct PreDecoded {
     /// Indexed by `pc / 4`; instructions are 4-byte aligned.
-    by_pc: Vec<Option<Instr>>,
+    by_pc: Vec<Option<Uop>>,
 }
 
 impl PreDecoded {
     pub fn from_kernel(k: &Kernel) -> PreDecoded {
         let words = k.code.len().div_ceil(4);
         let mut by_pc = vec![None; words];
-        for &(pc, instr) in &k.instrs {
-            by_pc[(pc / 4) as usize] = Some(instr);
+        for (pc, instr) in &k.instrs {
+            by_pc[(pc / 4) as usize] = Some(Uop::from_instr(*pc, instr));
         }
         PreDecoded { by_pc }
     }
 
     #[inline]
-    fn fetch(&self, warp: u32, pc: u32) -> Result<Instr, SimError> {
-        self.by_pc
-            .get((pc / 4) as usize)
-            .copied()
-            .flatten()
-            .ok_or(SimError::RanOffCode { warp, pc })
+    fn fetch(&self, warp: u32, pc: u32) -> Result<&Uop, SimError> {
+        match self.by_pc.get((pc / 4) as usize) {
+            Some(Some(uop)) => Ok(uop),
+            _ => Err(SimError::RanOffCode { warp, pc }),
+        }
     }
 }
 
@@ -79,6 +277,20 @@ impl Resident {
     }
 }
 
+/// Map a scheduler flat index to `(slot, warp)` over the resident blocks
+/// (flat order = slot order; at most 8 slots, so the walk is trivial).
+#[inline]
+fn locate(resident: &[Resident], flat: u32) -> (usize, usize) {
+    let mut f = flat as usize;
+    for (s, r) in resident.iter().enumerate() {
+        if f < r.warps.len() {
+            return (s, f);
+        }
+        f -= r.warps.len();
+    }
+    unreachable!("scheduler flat index {flat} out of range");
+}
+
 /// A streaming multiprocessor.
 #[derive(Debug, Clone)]
 pub struct Sm {
@@ -96,11 +308,13 @@ impl Sm {
     /// scheduler). Returns per-SM statistics; `stats.cycles` is this SM's
     /// busy time.
     ///
-    /// `gmem` is a [`GmemPort`]: the shared [`super::GlobalMem`] on the
-    /// sequential path, or this SM's private [`super::GmemSnapshot`] on
-    /// the parallel path.
+    /// `gmem` is any [`GmemPort`]: the shared [`super::GlobalMem`] on the
+    /// sequential path, or this SM's private copy-on-write
+    /// [`super::GmemSnapshot`] on the parallel path. Both `gmem` and `alu`
+    /// are generic (`?Sized`, so `&mut dyn` still works) — concrete
+    /// callers get a fully monomorphized, inlined lane loop.
     #[allow(clippy::too_many_arguments)]
-    pub fn run(
+    pub fn run<G: GmemPort + ?Sized, A: AluBackend + ?Sized>(
         &self,
         kernel: &PreDecoded,
         regs_per_thread: u32,
@@ -108,8 +322,8 @@ impl Sm {
         params: &[i32],
         blocks: &[BlockDesc],
         max_resident: usize,
-        gmem: &mut dyn GmemPort,
-        alu: &mut dyn AluBackend,
+        gmem: &mut G,
+        alu: &mut A,
     ) -> Result<SmStats, SimError> {
         self.cfg.validate()?;
         assert!(max_resident >= 1, "block scheduler must allow one resident block");
@@ -118,99 +332,100 @@ impl Sm {
         let mut cycle: u64 = 0;
         let rows = self.cfg.rows_per_warp() as u64;
         let mut next_block = 0usize;
-        let mut resident: Vec<Resident> = Vec::new();
-        let mut rr: usize = 0;
+        let mut resident: Vec<Resident> = Vec::with_capacity(max_resident);
+        let mut sched = WarpScheduler::new();
 
         loop {
             // Block scheduler interface: fill free slots (§4.3 — "control
             // signals from the SM notify the block scheduler when all
             // thread blocks have completed and scheduling ... can begin").
+            // New blocks append at the end of the flat warp order, so
+            // existing scheduler indices stay valid.
             while resident.len() < max_resident && next_block < blocks.len() {
-                resident.push(self.make_resident(
+                let r = self.make_resident(
                     blocks[next_block],
                     regs_per_thread,
                     smem_bytes,
                     params,
-                )?);
+                )?;
+                let new_warps = r.warps.len() as u32;
+                // Unreachable under the block scheduler's Table 1 limits
+                // (<= 64 resident warps); direct callers with custom
+                // limits get a structured fault, not a panic.
+                if sched.len() + new_warps > MAX_RESIDENT_WARPS {
+                    return Err(SimError::LimitExceeded(format!(
+                        "{} resident warps exceed the scheduler cap of {}",
+                        sched.len() + new_warps,
+                        MAX_RESIDENT_WARPS
+                    )));
+                }
+                sched.extend_ready(new_warps);
+                resident.push(r);
                 next_block += 1;
             }
             if resident.is_empty() {
                 break;
             }
 
-            // Warp unit: round-robin pick of a ready warp. The scan is
-            // allocation-free and indexes (slot, warp) directly — this
-            // loop runs once per issued instruction (§Perf: the previous
-            // Vec-per-issue version cost ~2x end-to-end).
-            let total: usize = resident.iter().map(|r| r.warps.len()).sum();
-            let mut chosen = None;
-            {
-                let mut flat = if rr >= total { 0 } else { rr };
-                // locate starting slot/warp for `flat`
-                let (mut s0, mut w0) = (0usize, flat);
-                while w0 >= resident[s0].warps.len() {
-                    w0 -= resident[s0].warps.len();
-                    s0 += 1;
-                }
-                let (mut s, mut w) = (s0, w0);
-                for _ in 0..total {
-                    if resident[s].warps[w].status(cycle) == WarpStatus::Ready {
-                        chosen = Some((s, w));
-                        rr = flat + 1;
-                        break;
-                    }
-                    flat += 1;
-                    w += 1;
-                    if w == resident[s].warps.len() {
-                        w = 0;
-                        s += 1;
-                        if s == resident.len() {
-                            s = 0;
-                            flat = 0;
-                        }
-                    }
-                }
-            }
-
-            match chosen {
-                Some((s, w)) => {
+            // Warp unit: event-driven round-robin. Wakes whose time
+            // arrived join the ready set; the pick is one bit-scan.
+            sched.drain_wakes(cycle);
+            match sched.pick() {
+                Some(flat) => {
+                    let (s, w) = locate(&resident, flat);
+                    let slot_base = flat - w as u32;
                     cycle += rows;
                     // Memory instructions drain through the single AXI
                     // master / BRAM port and block the pipeline (Fig. 3);
                     // `step` returns those extra cycles.
                     cycle +=
                         self.step(&mut resident[s], w, kernel, gmem, alu, &mut stats, cycle)?;
-                    let r = &mut resident[s];
-                    // Barrier release: all live warps of the block arrived?
-                    if r.warps.iter().any(|w| w.at_barrier)
-                        && r.warps.iter().all(|w| w.done || w.at_barrier)
                     {
-                        for w in &mut r.warps {
-                            w.at_barrier = false;
+                        let wp = &resident[s].warps[w];
+                        if !wp.done && !wp.at_barrier {
+                            sched.park(flat, wp.ready_at);
+                        }
+                    }
+                    // Barrier release: all live warps of the block arrived?
+                    let r = &mut resident[s];
+                    if r.warps.iter().any(|x| x.at_barrier)
+                        && r.warps.iter().all(|x| x.done || x.at_barrier)
+                    {
+                        for (i, x) in r.warps.iter_mut().enumerate() {
+                            if x.at_barrier {
+                                x.at_barrier = false;
+                                if !x.done {
+                                    // Released warps whose pipeline hazard
+                                    // already drained are ready now; the
+                                    // rest wait out their hazard.
+                                    if x.ready_at > cycle {
+                                        sched.park(slot_base + i as u32, x.ready_at);
+                                    } else {
+                                        sched.make_ready(slot_base + i as u32);
+                                    }
+                                }
+                            }
                         }
                         stats.barriers += 1;
                     }
                     // Retire the issued block if it just completed (only
-                    // the block that issued can change state).
+                    // the block that issued can change state). Ordered
+                    // removal keeps the surviving flat order intact so the
+                    // round-robin pointer can be rebased, not reset.
                     if r.warps[w].done && r.all_done() {
-                        for w in &r.warps {
+                        for x in &r.warps {
                             stats.max_stack_depth =
-                                stats.max_stack_depth.max(w.stack.max_depth());
+                                stats.max_stack_depth.max(x.stack.max_depth());
                         }
-                        resident.swap_remove(s);
+                        let retired = r.warps.len() as u32;
+                        resident.remove(s);
+                        sched.retire_range(slot_base, retired);
                         stats.blocks += 1;
-                        rr = 0;
                     }
                 }
                 None => {
                     // No warp ready: advance to the earliest wake-up.
-                    let wake = resident
-                        .iter()
-                        .flat_map(|r| r.warps.iter())
-                        .filter(|w| w.status(cycle) == WarpStatus::Waiting)
-                        .map(|w| w.ready_at)
-                        .min();
-                    match wake {
+                    match sched.next_wake() {
                         Some(t) => {
                             stats.stall_cycles += t - cycle;
                             cycle = t;
@@ -271,72 +486,71 @@ impl Sm {
     /// the cycle at which the instruction's last row entered the pipeline.
     /// Returns extra pipeline-blocking cycles (memory serialization).
     #[allow(clippy::too_many_arguments)]
-    fn step(
+    fn step<G: GmemPort + ?Sized, A: AluBackend + ?Sized>(
         &self,
         slot: &mut Resident,
         wi: usize,
         kernel: &PreDecoded,
-        gmem: &mut dyn GmemPort,
-        alu: &mut dyn AluBackend,
+        gmem: &mut G,
+        alu: &mut A,
         stats: &mut SmStats,
         issue_done: u64,
     ) -> Result<u64, SimError> {
         let Resident { desc, regs, shared, warps } = slot;
         let w = &mut warps[wi];
-        let instr = kernel.fetch(w.id, w.pc)?;
+        let uop = kernel.fetch(w.id, w.pc)?;
         let eff = w.effective();
         debug_assert_ne!(eff, 0, "scheduler must not issue an empty warp");
 
         // Customization faults (§4.2): hardware without the multiplier /
         // third read-operand unit cannot execute these encodings.
-        if instr.op.uses_multiplier() && !self.cfg.has_multiplier {
+        if uop.needs_mul && !self.cfg.has_multiplier {
             return Err(SimError::NoMultiplier { pc: w.pc });
         }
-        if instr.op == Op::Imad && self.cfg.read_operands < 3 {
+        if uop.needs_3ops && self.cfg.read_operands < 3 {
             return Err(SimError::NoThirdOperand { pc: w.pc });
         }
 
         // Guard evaluation (Fig. 2: predicate LUT -> instruction mask,
         // combined with the thread mask).
-        let exec = if instr.guard.is_unconditional() {
+        let exec = if !uop.guarded {
             eff
         } else {
             let mut m = 0u32;
             for lane in 0..WARP_SIZE as u32 {
                 if eff & (1 << lane) != 0 {
                     let t = w.id * WARP_SIZE as u32 + lane;
-                    if regs.read_pred(t, instr.guard.preg).eval(instr.guard.cond) {
+                    if regs.read_pred(t, uop.guard.preg).eval(uop.guard.cond) {
                         m |= 1 << lane;
                     }
                 }
             }
             m
         };
-        stats.count_op(instr.op, exec.count_ones());
+        stats.count_op(uop.op, exec.count_ones());
 
         // Default hazard: same warp re-issues only after the pipeline
         // drains (write-back of this instruction).
         w.ready_at = issue_done + (self.cfg.pipeline_depth as u64 - 1);
-        let mut next_pc = w.pc + instr.size as u32;
+        let mut next_pc = uop.next_pc;
         let mut blocking: u64 = 0;
 
-        match instr.op {
-            Op::Nop => {}
-            Op::Exit => {
+        match uop.kind {
+            UopKind::Nop => {}
+            UopKind::Exit => {
                 w.finished |= exec;
             }
-            Op::Join => match w.stack.pop() {
+            UopKind::Join => match w.stack.pop() {
                 Some(e) => {
                     w.active = e.mask;
                     next_pc = e.addr;
                 }
                 None => return Err(SimError::StackUnderflow { warp: w.id, pc: w.pc }),
             },
-            Op::Bar => {
+            UopKind::Bar => {
                 w.at_barrier = true;
             }
-            Op::Ssy => {
-                let target = instr.branch_target().expect("SSY target");
+            UopKind::Ssy { target } => {
                 let entry = StackEntry { typ: EntryType::Sync, addr: target, mask: eff };
                 w.stack.push(entry).map_err(|_| SimError::StackOverflow {
                     warp: w.id,
@@ -344,8 +558,7 @@ impl Sm {
                     depth: self.cfg.warp_stack_depth,
                 })?;
             }
-            Op::Bra => {
-                let target = instr.branch_target().expect("BRA target");
+            UopKind::Bra { target } => {
                 let taken = exec;
                 let not_taken = eff & !exec;
                 if taken == 0 {
@@ -366,89 +579,69 @@ impl Sm {
                     w.active = not_taken;
                 }
             }
-            Op::S2r => {
-                let sr = match instr.src1 {
-                    Operand::Special(sr) => sr,
-                    _ => unreachable!("decoder guarantees S2R source"),
-                };
+            UopKind::S2r { sr, dst } => {
                 for lane in 0..WARP_SIZE as u32 {
                     if exec & (1 << lane) != 0 {
                         let t = w.id * WARP_SIZE as u32 + lane;
-                        regs.write(t, instr.dst, special_value(sr, desc, w.id, lane, t, self.sm_id));
+                        regs.write(t, dst, special_value(sr, desc, w.id, lane, t, self.sm_id));
                     }
                 }
             }
-            Op::R2a => {
+            UopKind::R2a { src, dst } => {
                 for lane in 0..WARP_SIZE as u32 {
                     if exec & (1 << lane) != 0 {
                         let t = w.id * WARP_SIZE as u32 + lane;
-                        let v = match instr.src1 {
-                            Operand::Reg(r) => regs.read(t, r),
-                            _ => unreachable!(),
-                        };
-                        regs.write_areg(t, instr.dst, v);
+                        let v = regs.read(t, src);
+                        regs.write_areg(t, dst, v);
                     }
                 }
             }
-            Op::A2r => {
+            UopKind::A2r { src, dst } => {
                 for lane in 0..WARP_SIZE as u32 {
                     if exec & (1 << lane) != 0 {
                         let t = w.id * WARP_SIZE as u32 + lane;
-                        let v = match instr.src1 {
-                            Operand::AReg(a) => regs.read_areg(t, a),
-                            _ => unreachable!(),
-                        };
-                        regs.write(t, instr.dst, v);
+                        let v = regs.read_areg(t, src);
+                        regs.write(t, dst, v);
                     }
                 }
             }
-            Op::Gld | Op::Sld | Op::Gst | Op::Sst => {
-                let is_global = matches!(instr.op, Op::Gld | Op::Gst);
+            UopKind::Mem(m) => {
                 // Read stage: one vector fetch of the address base, one of
                 // the store data; the per-lane loop then touches memory for
-                // exec lanes only (operand dispatch hoisted; §Perf).
+                // exec lanes only (operand dispatch resolved at pre-decode).
                 let wbase = w.id * WARP_SIZE as u32;
                 let count = WARP_SIZE.min((desc.ntid - wbase) as usize);
                 let mut base = [0i32; WARP_SIZE];
-                match instr.src1 {
-                    Operand::Reg(r) => regs.read_vec(wbase, count, r, &mut base),
-                    Operand::AReg(a) => {
+                match m.base {
+                    MemBase::Reg(r) => regs.read_vec(wbase, count, r, &mut base),
+                    MemBase::AReg(a) => {
                         for (lane, slot) in base.iter_mut().enumerate().take(count) {
                             *slot = regs.read_areg(wbase + lane as u32, a);
                         }
                     }
-                    _ => unreachable!(),
                 }
-                let addr =
-                    |lane: usize| base[lane].wrapping_add(instr.offset as i32) as u32;
-                match instr.op {
-                    Op::Gld | Op::Sld => {
-                        let mut out = [0i32; WARP_SIZE];
-                        for (lane, slot) in out.iter_mut().enumerate().take(count) {
-                            if exec & (1 << lane) != 0 {
-                                *slot = if is_global {
-                                    gmem.load(addr(lane))?
-                                } else {
-                                    shared.load(addr(lane))?
-                                };
-                            }
+                let addr = |lane: usize| base[lane].wrapping_add(m.offset) as u32;
+                if m.load {
+                    let mut out = [0i32; WARP_SIZE];
+                    for (lane, slot) in out.iter_mut().enumerate().take(count) {
+                        if exec & (1 << lane) != 0 {
+                            *slot = if m.global {
+                                gmem.load(addr(lane))?
+                            } else {
+                                shared.load(addr(lane))?
+                            };
                         }
-                        regs.write_vec(wbase, count, instr.dst, exec, &out);
                     }
-                    _ => {
-                        let mut data = [0i32; WARP_SIZE];
-                        if let Operand::Reg(r) = instr.src2 {
-                            regs.read_vec(wbase, count, r, &mut data);
-                        } else {
-                            unreachable!("stores carry a register source");
-                        }
-                        for lane in 0..count {
-                            if exec & (1 << lane) != 0 {
-                                if is_global {
-                                    gmem.store(addr(lane), data[lane])?;
-                                } else {
-                                    shared.store(addr(lane), data[lane])?;
-                                }
+                    regs.write_vec(wbase, count, m.reg, exec, &out);
+                } else {
+                    let mut data = [0i32; WARP_SIZE];
+                    regs.read_vec(wbase, count, m.reg, &mut data);
+                    for lane in 0..count {
+                        if exec & (1 << lane) != 0 {
+                            if m.global {
+                                gmem.store(addr(lane), data[lane])?;
+                            } else {
+                                shared.store(addr(lane), data[lane])?;
                             }
                         }
                     }
@@ -458,76 +651,68 @@ impl Sm {
                 // see MemTiming docs for the calibration).
                 let txns = exec.count_ones() as u64;
                 blocking = self.cfg.mem.blocking_cycles(
-                    is_global,
+                    m.global,
                     self.cfg.rows_per_warp(),
                     exec.count_ones(),
                 );
                 w.ready_at = issue_done + blocking + (self.cfg.pipeline_depth as u64 - 1);
-                match instr.op {
-                    Op::Gld => stats.global_load_txns += txns,
-                    Op::Gst => stats.global_store_txns += txns,
-                    Op::Sld => stats.shared_load_txns += txns,
-                    Op::Sst => stats.shared_store_txns += txns,
-                    _ => unreachable!(),
+                match (m.global, m.load) {
+                    (true, true) => stats.global_load_txns += txns,
+                    (true, false) => stats.global_store_txns += txns,
+                    (false, true) => stats.shared_load_txns += txns,
+                    (false, false) => stats.shared_store_txns += txns,
                 }
             }
-            // Everything else is the SP-array datapath.
-            _ => {
-                let func = AluFunc::from_op(instr.op)
-                    .expect("non-ALU ops handled above");
-                // Read stage: operand kind is resolved once per warp
-                // instruction, then each source is a strided vector fetch
-                // (one read-operand unit per source, exactly Fig. 3; also
-                // the simulator's hottest loop — see EXPERIMENTS.md §Perf).
+            // The SP-array datapath.
+            UopKind::Alu(a) => {
+                // Read stage: operand kinds were resolved at pre-decode;
+                // each source is a strided vector fetch or an immediate
+                // splat (one read-operand unit per source, exactly Fig. 3 —
+                // also the simulator's hottest loop, see EXPERIMENTS.md
+                // §Perf).
                 let mut input = WarpAluIn {
-                    func,
-                    cond: instr.cond,
+                    func: a.func,
+                    cond: a.cond,
                     a: [0; WARP_SIZE],
                     b: [0; WARP_SIZE],
                     c: [0; WARP_SIZE],
                 };
                 let wbase = w.id * WARP_SIZE as u32;
                 let count = WARP_SIZE.min((desc.ntid - wbase) as usize);
-                match instr.src1 {
-                    Operand::Reg(r) => regs.read_vec(wbase, count, r, &mut input.a),
-                    // MOV #imm carries its immediate in src2.
-                    Operand::None => {
-                        if let Operand::Imm(v) = instr.src2 {
-                            input.a[..count].fill(v);
+                match a.a {
+                    VecSrc::Reg(r) => regs.read_vec(wbase, count, r, &mut input.a),
+                    VecSrc::Splat(v) => input.a[..count].fill(v),
+                }
+                match a.b {
+                    VecSrc::Reg(r) => regs.read_vec(wbase, count, r, &mut input.b),
+                    VecSrc::Splat(v) => input.b[..count].fill(v),
+                }
+                match a.c {
+                    CSrc::Reg(r) => regs.read_vec(wbase, count, r, &mut input.c),
+                    CSrc::Pred => {
+                        // Selector lanes from the predicate register file.
+                        for lane in 0..count {
+                            input.c[lane] = regs
+                                .read_pred(wbase + lane as u32, a.setp_idx)
+                                .eval(a.cond) as i32;
                         }
                     }
-                    _ => {}
-                }
-                match instr.src2 {
-                    Operand::Reg(r) => regs.read_vec(wbase, count, r, &mut input.b),
-                    Operand::Imm(v) => input.b[..count].fill(v),
-                    _ => {}
-                }
-                if let Operand::Reg(r) = instr.src3 {
-                    regs.read_vec(wbase, count, r, &mut input.c);
-                }
-                if func == AluFunc::Sel {
-                    // Selector lanes from the predicate register file.
-                    for lane in 0..count {
-                        input.c[lane] = regs
-                            .read_pred(wbase + lane as u32, instr.setp_idx)
-                            .eval(instr.cond) as i32;
-                    }
+                    CSrc::Zero => {}
                 }
                 let out = alu.execute(&input);
                 // Write stage: masked vector scatter.
-                if func == AluFunc::Setp {
+                if a.setp_wb {
                     for lane in 0..count {
                         if exec & (1 << lane) != 0 {
                             regs.write_pred(
                                 wbase + lane as u32,
-                                instr.setp_idx,
+                                a.setp_idx,
                                 crate::isa::Flags::unpack(out[lane] as u8),
                             );
                         }
                     }
                 } else {
-                    regs.write_vec(wbase, count, instr.dst, exec, &out);
+                    regs.write_vec(wbase, count, a.dst, exec, &out);
                 }
             }
         }
@@ -807,5 +992,87 @@ mod tests {
         run_one_block(src, &[], 32, &mut g).unwrap();
         assert_eq!(g.load(3 * 4).unwrap(), 0, "exited lane must not store");
         assert_eq!(g.load(20 * 4).unwrap(), 5, "surviving lane stores");
+    }
+
+    #[test]
+    fn multi_block_retirement_preserves_round_robin_coverage() {
+        // More blocks than residency slots: blocks retire and refill while
+        // the round-robin pointer keeps rotating (the seed engine reset it
+        // to slot 0 on every retirement — see WarpScheduler::retire_range
+        // for the order-pinning unit tests). Every thread of every block
+        // must still execute exactly once.
+        let src = r#"
+            .entry cover
+            .regs 6
+                S2R R1, SR_GTID
+                SHL R2, R1, #2
+                IADD R3, R1, #7
+                GST [R2], R3
+                EXIT
+        "#;
+        let k = assemble(src).unwrap();
+        let pre = PreDecoded::from_kernel(&k);
+        let sm = Sm::new(SmConfig::baseline(), 0);
+        let blocks: Vec<BlockDesc> = (0..6)
+            .map(|bx| BlockDesc {
+                ctaid_x: bx,
+                ctaid_y: 0,
+                nctaid_x: 6,
+                nctaid_y: 1,
+                ntid: 64,
+            })
+            .collect();
+        let mut g = GlobalMem::new(4096);
+        let mut alu = NativeAlu;
+        let stats = sm
+            .run(&pre, k.regs_per_thread, k.smem_bytes, &[], &blocks, 2, &mut g, &mut alu)
+            .unwrap();
+        assert_eq!(stats.blocks, 6);
+        for t in 0..6 * 64 {
+            assert_eq!(g.load(t * 4).unwrap(), t as i32 + 7, "thread {t}");
+        }
+    }
+
+    #[test]
+    fn warp_cap_overflow_is_a_structured_fault() {
+        // 17 blocks x 8 warps = 136 resident warps with a custom
+        // max_resident — beyond the scheduler cap. Must fault, not panic.
+        let k = assemble(SCALE_SRC).unwrap();
+        let pre = PreDecoded::from_kernel(&k);
+        let sm = Sm::new(SmConfig::baseline(), 0);
+        let blocks: Vec<BlockDesc> = (0..17u32)
+            .map(|bx| BlockDesc {
+                ctaid_x: bx,
+                ctaid_y: 0,
+                nctaid_x: 17,
+                nctaid_y: 1,
+                ntid: 256,
+            })
+            .collect();
+        let mut g = GlobalMem::new(1 << 14);
+        let mut alu = NativeAlu;
+        let err = sm
+            .run(&pre, k.regs_per_thread, k.smem_bytes, &[0, 0], &blocks, 17, &mut g, &mut alu)
+            .unwrap_err();
+        assert!(matches!(err, SimError::LimitExceeded(_)), "{err}");
+    }
+
+    #[test]
+    fn dyn_trait_objects_still_accepted_at_the_boundary() {
+        // The generic engine must keep working through `&mut dyn` (the
+        // gpgpu::launch boundary contract).
+        let k = assemble(SCALE_SRC).unwrap();
+        let pre = PreDecoded::from_kernel(&k);
+        let sm = Sm::new(SmConfig::baseline(), 0);
+        let blocks = [BlockDesc { ctaid_x: 0, ctaid_y: 0, nctaid_x: 1, nctaid_y: 1, ntid: 32 }];
+        let mut g = GlobalMem::new(4096);
+        let mut alu = NativeAlu;
+        let gd: &mut dyn crate::sim::GmemPort = &mut g;
+        let ad: &mut dyn AluBackend = &mut alu;
+        let stats = sm
+            .run(&pre, k.regs_per_thread, k.smem_bytes, &[5, 0], &blocks, 8, gd, ad)
+            .unwrap();
+        assert_eq!(stats.blocks, 1);
+        assert_eq!(g.load(0).unwrap(), 5);
     }
 }

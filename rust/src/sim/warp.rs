@@ -5,6 +5,12 @@
 use super::stack::WarpStack;
 
 /// Scheduling status of a warp, as the warp unit sees it.
+///
+/// The issue loop itself no longer re-derives this per issue — the
+/// event-driven [`super::WarpScheduler`] tracks readiness incrementally
+/// (ready bitmask + wake heap) — but the classification below is still
+/// the architectural model: [`Warp::status`] is the reference predicate
+/// the scheduler's behaviour is defined (and tested) against.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WarpStatus {
     /// Eligible for issue.

@@ -7,6 +7,7 @@
 use flexgrip::asm::assemble;
 use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
 use flexgrip::kernels::{self, BenchId};
+use flexgrip::rng::XorShift64;
 use flexgrip::sim::{GlobalMem, NativeAlu, SimError};
 
 /// Run one paper workload both ways and compare everything observable.
@@ -71,6 +72,30 @@ fn two_sm_parallel_identical_to_sequential_all_paper_benchmarks() {
 fn parallel_path_identical_on_one_sm_too() {
     for id in BenchId::PAPER {
         assert_deterministic(id, 32, 1, 16, 0xDE7E);
+    }
+}
+
+#[test]
+fn prop_cow_parallel_matches_sequential_on_randomized_geometries() {
+    // The COW-snapshot parallel path must be observationally identical to
+    // the sequential reference for every paper benchmark across random
+    // SM counts (including >2, where the snapshot is the only thing that
+    // keeps setup cheap), SP widths, problem sizes and data seeds.
+    let mut rng = XorShift64::new(0xC0_57A9E5);
+    for case in 0..4 {
+        for id in BenchId::PAPER {
+            let sms = [1u32, 2, 3, 4, 6, 8][rng.below(6) as usize];
+            let sp = [8u32, 16, 32][rng.below(3) as usize];
+            // Matrix workloads are n x n threads: keep debug runtime sane.
+            let n = if id.is_matrix() {
+                [32u32, 64][rng.below(2) as usize]
+            } else {
+                [32u32, 64, 128, 256][rng.below(4) as usize]
+            };
+            let seed = rng.next_u64();
+            eprintln!("case {case}: {} n={n} {sms}sm {sp}sp seed={seed:#x}", id.name());
+            assert_deterministic(id, n, sms, sp, seed);
+        }
     }
 }
 

@@ -1,0 +1,57 @@
+"""Estimate cycle drift from the rr fairness fix on paper-shaped
+workloads: uniform blocks (matmul-like: mem-heavy, 8 warps/block,
+max_resident 3), comparing the seed engine vs intended engine, and the
+derived 2-SM scaling ratio (cycles_1sm / max over 2 SMs round-robin)."""
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from engine_diff import gen_blocks, new_engine, old_engine, ref_engine
+
+def mk_blocks(nblocks, uid0=0):
+    # matmul-ish: per-warp script = loop of (mem, mem, alu*3) x16 + exit
+    shape = []
+    for _ in range(16):
+        shape += [('mem', 35), ('mem', 35), ('alu',), ('alu',), ('alu',)]
+    shape.append(('exit',))
+    out = []
+    uid = uid0
+    for b in range(nblocks):
+        out.append([(uid + i, list(shape)) for i in range(8)])
+        uid += 8
+    return out
+
+def main():
+    worst = 0.0
+    for nblocks in [4, 6, 8, 12, 16]:
+        b1 = mk_blocks(nblocks)
+        o1 = old_engine(b1, 3)[1]['cycles']
+        r1 = ref_engine(b1, 3)[1]['cycles']
+        # 2 SM: round-robin deal
+        even = mk_blocks((nblocks + 1) // 2)
+        odd = mk_blocks(nblocks // 2, uid0=1000)
+        o2 = max(old_engine(even, 3)[1]['cycles'], old_engine(odd, 3)[1]['cycles'])
+        r2 = max(ref_engine(even, 3)[1]['cycles'], ref_engine(odd, 3)[1]['cycles'])
+        drift1 = abs(r1 / o1 - 1)
+        ratio_old = o1 / o2
+        ratio_ref = r1 / r2
+        worst = max(worst, drift1, abs(ratio_ref - ratio_old))
+        print(f"blocks={nblocks:2d}: 1sm cycles old={o1} ref={r1} (drift {drift1:.4%}); "
+              f"2sm-scaling old={ratio_old:.4f} ref={ratio_ref:.4f}")
+
+    # heterogeneous random workloads, same comparison
+    rng = random.Random(7)
+    from engine_diff import gen_blocks
+    for case in range(60):
+        nb = rng.randrange(4, 12)
+        blocks = gen_blocks(rng, nb, with_bar=False)
+        mr = rng.randrange(1, 4)
+        o = old_engine(blocks, mr)[1]['cycles']
+        r = ref_engine(blocks, mr)[1]['cycles']
+        worst = max(worst, abs(r / o - 1))
+    print(f"\nworst relative drift observed: {worst:.4%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+import heapq, random
+
+MAX = 128
+
+class WarpScheduler:
+    def __init__(self):
+        self.ready = 0
+        self.wake = []  # heap of (t, flat)
+        self.rr = 0
+        self.n = 0
+
+    def extend_ready(self, count):
+        assert self.n + count <= MAX
+        for i in range(self.n, self.n + count):
+            self.ready |= 1 << i
+        self.n += count
+
+    def park(self, flat, t):
+        assert not (self.ready >> flat) & 1
+        heapq.heappush(self.wake, (t, flat))
+
+    def make_ready(self, flat):
+        assert flat < self.n
+        self.ready |= 1 << flat
+
+    def drain_wakes(self, now):
+        while self.wake and self.wake[0][0] <= now:
+            t, flat = heapq.heappop(self.wake)
+            self.ready |= 1 << flat
+
+    def next_wake(self):
+        return self.wake[0][0] if self.wake else None
+
+    def pick(self):
+        if self.ready == 0:
+            return None
+        mask128 = (1 << 128) - 1
+        at_or_after = self.ready & ((mask128 << self.rr) & mask128)
+        cand = at_or_after if at_or_after != 0 else self.ready
+        idx = (cand & -cand).bit_length() - 1  # trailing_zeros
+        self.ready &= ~(1 << idx)
+        self.rr = 0 if idx + 1 >= self.n else idx + 1
+        return idx
+
+    def retire_range(self, base, count):
+        if count == 0:
+            return
+        assert base + count <= self.n
+        cm = (1 << count) - 1
+        assert (self.ready >> base) & cm == 0
+        low = self.ready & ((1 << base) - 1)
+        high = 0 if base + count >= 128 else self.ready >> (base + count)
+        self.ready = (high << base) | low
+        entries = [(t, f - count if f >= base + count else f) for (t, f) in self.wake]
+        for t, f in self.wake:
+            assert f < base or f >= base + count
+        self.wake = entries
+        heapq.heapify(self.wake)
+        if self.rr >= base + count:
+            self.rr -= count
+        elif self.rr > base:
+            self.rr = base
+        self.n -= count
+        if self.n == 0 or self.rr >= self.n:
+            self.rr = 0
+
+class LinearScan:
+    def __init__(self):
+        self.warps = []
+        self.rr = 0
+
+    def extend_ready(self, count):
+        self.warps += [0] * count
+
+    def pick(self, now):
+        n = len(self.warps)
+        if n == 0:
+            return None
+        start = 0 if self.rr >= n else self.rr
+        for k in range(n):
+            i = (start + k) % n
+            if self.warps[i] is not None and self.warps[i] <= now:
+                self.rr = (i + 1) % n
+                self.warps[i] = None
+                return i
+        return None
+
+    def park(self, flat, t):
+        self.warps[flat] = t
+
+    def next_wake(self, now):
+        c = [t for t in self.warps if t is not None and t > now]
+        return min(c) if c else None
+
+    def retire_range(self, base, count):
+        del self.warps[base:base + count]
+        if self.rr >= base + count:
+            self.rr -= count
+        elif self.rr > base:
+            self.rr = base
+        if not self.warps or self.rr >= len(self.warps):
+            self.rr = 0
+
+def main():
+    random.seed(0x5EED)
+    for case in range(500):
+        ev, lin = WarpScheduler(), LinearScan()
+        now = 0
+        blocks = 1 + random.randrange(4)
+        ev.extend_ready(blocks * 2)
+        lin.extend_ready(blocks * 2)
+        live = [0] * (blocks * 2)
+        issues = 0
+        while any(d == 0 for d in live) and issues < 500:
+            ev.drain_wakes(now)
+            a = ev.pick()
+            b = lin.pick(now)
+            assert a == b, f"case {case} issue {issues} at {now}: {a} vs {b}"
+            if a is not None:
+                fi = a
+                if random.randrange(8) == 0:
+                    live[fi] = 1
+                    pair = fi ^ 1
+                    if live[pair] == 1:
+                        base = fi & ~1
+                        ev.retire_range(base, 2)
+                        lin.retire_range(base, 2)
+                        del live[base:base + 2]
+                else:
+                    delay = 1 + random.randrange(20)
+                    ev.park(fi, now + delay)
+                    lin.park(fi, now + delay)
+            else:
+                wa, wb = ev.next_wake(), lin.next_wake(now)
+                assert wa == wb, f"case {case} stall at {now}: {wa} vs {wb}"
+                if wa is None:
+                    break
+                now = wa
+            issues += 1
+
+    # pinned-order tests
+    s = WarpScheduler(); s.extend_ready(6)
+    assert [s.pick() for _ in range(4)] == [0, 1, 2, 3]
+    s.make_ready(0); s.make_ready(1)
+    s.retire_range(2, 2)
+    assert s.pick() == 2, "pointer must continue at old warp 4"
+    assert s.pick() == 3
+    assert s.pick() == 0
+    assert s.pick() == 1
+
+    s = WarpScheduler(); s.extend_ready(6)
+    assert [s.pick() for _ in range(6)] == [0, 1, 2, 3, 4, 5]
+    s.make_ready(2)
+    assert s.pick() == 2  # rr now 3, inside the about-to-retire range [2, 4)
+    s.make_ready(0); s.make_ready(1); s.make_ready(4); s.make_ready(5)
+    s.retire_range(2, 2)
+    assert s.pick() == 2  # old warp 4: first survivor after the range
+    assert s.pick() == 3  # old warp 5
+    assert s.pick() == 0
+
+    s = WarpScheduler(); s.extend_ready(4)
+    assert [s.pick() for _ in range(4)] == [0, 1, 2, 3]
+    s.make_ready(0); s.make_ready(1)
+    s.retire_range(2, 2)
+    assert s.pick() == 0
+
+    s = WarpScheduler(); s.extend_ready(3)
+    for f in range(3): assert s.pick() == f
+    s.park(0, 10); s.park(1, 10); s.park(2, 25)
+    assert s.pick() is None
+    assert s.next_wake() == 10
+    s.drain_wakes(9); assert s.pick() is None
+    s.drain_wakes(10)
+    assert s.pick() == 0 and s.pick() == 1 and s.pick() is None
+    assert s.next_wake() == 25
+    s.drain_wakes(30); assert s.pick() == 2 and s.next_wake() is None
+
+    print("ALL SCHEDULER LOGIC TESTS PASS")
+
+
+if __name__ == "__main__":
+    main()
