@@ -38,7 +38,8 @@ fn main() {
     }
     println!(
         "\nembedded scenario (paper §5.2): store one bitstream per class; \
-         the bitonic variant rejects matmul at launch (NoMultiplier fault)."
+         the bitonic variant rejects matmul at launch \
+         (Unsupported: requires the SP multiplier)."
     );
     println!("customize OK");
 }

@@ -5,9 +5,10 @@
 //!   simulated warp-instructions per second and emitted as
 //!   machine-readable `BENCH_hot_path.json` for cross-PR tracking (the
 //!   ISSUE-2 acceptance metric);
-//! * multi-SM scaling: 1-SM vs 2-SM sequential vs 2/4/8-SM parallel vs a
-//!   4-shard coordinator pool on the largest paper benchmark, emitted as
-//!   `BENCH_scaling.json`;
+//! * multi-SM / SP-width scaling: 1/2-SM sequential vs 2/4/8-SM parallel
+//!   vs 16/32-SP widths vs a 4-shard coordinator pool, swept over three
+//!   benchmark shapes and emitted as `BENCH_scaling.json` (one report
+//!   object per benchmark);
 //! * native ALU lane throughput;
 //! * XLA ALU backend (skipped gracefully when PJRT is unavailable);
 //! * assembler + pre-decode throughput;
@@ -20,7 +21,7 @@
 use flexgrip::asm::assemble;
 use flexgrip::baseline::{self, MbTiming};
 use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
-use flexgrip::harness::{bench, scaling_report, HotPathPoint, HotPathReport};
+use flexgrip::harness::{bench, scaling_suite, write_suite_json, HotPathPoint, HotPathReport};
 use flexgrip::isa::Cond;
 use flexgrip::kernels::{self, BenchId};
 use flexgrip::runtime::{Artifacts, XlaAlu, XlaBatchAlu, XLA_BATCH};
@@ -87,32 +88,37 @@ fn main() {
         wd.run(&gpgpu, &mut g, &mut alu).unwrap().cycles
     });
 
-    // Multi-SM scaling on the largest paper benchmark: sequential vs the
-    // scoped-thread parallel path (2/4/8 SM, COW snapshots) vs the
-    // sharded coordinator pool.
+    // Multi-SM / SP-width scaling suite: sequential vs the scoped-thread
+    // parallel path (2/4/8 SM, COW snapshots) vs the 16/32-SP widths vs
+    // the sharded coordinator pool, swept over three benchmark shapes
+    // (compute-heavy matmul, divergence-heavy bitonic, two-phase
+    // reduction — the ROADMAP follow-up to the matmul-only study).
     let (scale_n, scale_samples) = if fast { (64, 1) } else { (256, 3) };
-    println!("\n--- multi-SM / pool scaling (matmul-{scale_n}) ---");
-    let report = scaling_report(BenchId::MatMul, scale_n, 1, scale_samples);
-    for p in &report.points {
-        println!(
-            "{:<44} {:>10.1} ms wall  ({} jobs, {} simulated cycles, ~{} LUTs)",
-            p.label, p.wall_ms, p.jobs, p.sim_cycles, p.luts
-        );
-    }
-    if let Some(s) = report.speedup("2sm_parallel", "2sm_sequential") {
-        println!("  -> 2-SM parallel over 2-SM sequential: {s:.2}x wall-clock");
-    }
-    if let Some(s) = report.speedup("2sm_parallel", "1sm_sequential") {
-        println!("  -> 2-SM parallel over 1-SM sequential: {s:.2}x wall-clock");
-    }
-    for sms in ["4sm_parallel", "8sm_parallel"] {
-        if let Some(s) = report.sim_speedup(sms, "1sm_sequential") {
-            println!("  -> {sms} over 1-SM: {s:.2}x simulated cycles");
+    let scale_benches = [BenchId::MatMul, BenchId::Bitonic, BenchId::Reduction];
+    println!("\n--- multi-SM / SP / pool scaling (n={scale_n}) ---");
+    let reports = scaling_suite(&scale_benches, scale_n, 1, scale_samples);
+    for report in &reports {
+        println!("[{}]", report.bench);
+        for p in &report.points {
+            println!(
+                "{:<44} {:>10.1} ms wall  ({} jobs, {} simulated cycles, ~{} LUTs)",
+                p.label, p.wall_ms, p.jobs, p.sim_cycles, p.luts
+            );
         }
     }
-    report
-        .write_json("BENCH_scaling.json")
-        .expect("write BENCH_scaling.json");
+    let matmul = &reports[0];
+    if let Some(s) = matmul.speedup("2sm_parallel", "2sm_sequential") {
+        println!("  -> 2-SM parallel over 2-SM sequential: {s:.2}x wall-clock");
+    }
+    if let Some(s) = matmul.speedup("2sm_parallel", "1sm_sequential") {
+        println!("  -> 2-SM parallel over 1-SM sequential: {s:.2}x wall-clock");
+    }
+    for label in ["4sm_parallel", "8sm_parallel", "1sm_16sp_sequential", "1sm_32sp_sequential"] {
+        if let Some(s) = matmul.sim_speedup(label, "1sm_sequential") {
+            println!("  -> {label} over 1-SM/8-SP: {s:.2}x simulated cycles");
+        }
+    }
+    write_suite_json("BENCH_scaling.json", &reports).expect("write BENCH_scaling.json");
     println!("  -> wrote BENCH_scaling.json\n");
 
     // Native ALU throughput.

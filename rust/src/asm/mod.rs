@@ -21,7 +21,7 @@ pub use error::AsmError;
 pub use lexer::{lex_line, Token};
 pub(crate) use parser::parse_line;
 
-use crate::isa::{encode::encode_program, Instr};
+use crate::isa::{encode::encode_program, CapabilitySignature, Instr};
 use std::collections::HashMap;
 
 /// An assembled kernel: the binary image plus the launch-relevant resource
@@ -43,6 +43,17 @@ pub struct Kernel {
     pub smem_bytes: u32,
     /// Label name -> byte address (debugging / tests).
     pub labels: HashMap<String, u32>,
+}
+
+impl Kernel {
+    /// Static capability signature (paper §4.2): what this binary requires
+    /// from the SM datapath. Shared by launch admission, the customization
+    /// analyzer and the fleet router; the [`crate::registry`] caches it
+    /// alongside the pre-decoded image so repeat launches never re-derive
+    /// it.
+    pub fn signature(&self) -> CapabilitySignature {
+        CapabilitySignature::of_program(&self.instrs)
+    }
 }
 
 /// Result of parsing one source line (internal between passes).

@@ -1,46 +1,27 @@
 //! Application-class customization analyzer (paper §4.2, §5.2).
 //!
 //! "By performing an instruction analysis, we can determine the minimal
-//! set of functions needed to support each benchmark" — this module does
-//! both halves: *static* analysis of the kernel binary (does it encode
-//! IMUL/IMAD at all?) and *dynamic* profiling ("profiling the application
-//! with representative data sets", §4.1) to find the warp-stack
-//! high-water mark. It then recommends the minimal FlexGrip variant and
-//! quantifies the Table-6 area/energy savings with the implementation
-//! models.
+//! set of functions needed to support each benchmark" — the *static* half
+//! of that analysis is the ISA-layer [`CapabilitySignature`] (shared with
+//! the assembler, launch admission, and the fleet router); this module
+//! adds the *dynamic* half ("profiling the application with
+//! representative data sets", §4.1): a baseline run measuring the
+//! warp-stack high-water mark and the dynamic multiplier usage. It then
+//! recommends the minimal FlexGrip variant and quantifies the Table-6
+//! area/energy savings with the implementation models.
 
 use crate::asm::Kernel;
 use crate::gpgpu::{Gpgpu, GpgpuConfig};
+use crate::isa::CapabilitySignature;
 use crate::kernels::{self, BenchId};
 use crate::model::{area::area, power::power, ArchParams};
 use crate::sim::{NativeAlu, SimError};
 
-/// Static instruction analysis of an assembled kernel.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct StaticAnalysis {
-    /// Kernel encodes IMUL or IMAD -> multiplier required.
-    pub uses_multiplier: bool,
-    /// Kernel encodes IMAD -> third read operand required.
-    pub uses_third_operand: bool,
-    /// Kernel encodes SSY/BRA -> conditional hardware required at all.
-    pub uses_branches: bool,
-    pub instruction_count: usize,
-}
-
-pub fn analyze_kernel(k: &Kernel) -> StaticAnalysis {
-    use crate::isa::Op;
-    let mut a = StaticAnalysis {
-        uses_multiplier: false,
-        uses_third_operand: false,
-        uses_branches: false,
-        instruction_count: k.instrs.len(),
-    };
-    for (_, i) in &k.instrs {
-        a.uses_multiplier |= i.op.uses_multiplier();
-        a.uses_third_operand |= i.op == Op::Imad;
-        a.uses_branches |= matches!(i.op, Op::Bra | Op::Ssy);
-    }
-    a
+/// Static instruction analysis of an assembled kernel — the ISA-layer
+/// capability signature (kept as a free function for API continuity; the
+/// registry caches the same value per kernel).
+pub fn analyze_kernel(k: &Kernel) -> CapabilitySignature {
+    k.signature()
 }
 
 /// A customization recommendation with its modelled savings.
@@ -48,7 +29,9 @@ pub fn analyze_kernel(k: &Kernel) -> StaticAnalysis {
 pub struct CustomizationReport {
     pub bench: BenchId,
     pub n: u32,
-    pub analysis: StaticAnalysis,
+    /// Static capability signature of the kernel binary.
+    pub sig: CapabilitySignature,
+    pub instruction_count: usize,
     /// Warp-stack high-water mark measured by the profiling run.
     pub measured_stack_depth: u32,
     /// Dynamic IMUL/IMAD count from the profiling run.
@@ -58,11 +41,34 @@ pub struct CustomizationReport {
     pub dynamic_power_reduction_pct: f64,
 }
 
+impl CustomizationReport {
+    /// The profile-refined signature: measured stack depth replaces the
+    /// static bound, a dynamically-idle multiplier is dropped. This is
+    /// what the coordinator registers with its fleet router.
+    pub fn refined_signature(&self) -> CapabilitySignature {
+        self.sig.refined(self.measured_stack_depth, self.multiplier_ops)
+    }
+
+    /// The recommended variant as a launchable device configuration
+    /// (1 SM; multiplier removal also drops the third read-operand unit,
+    /// §5.2).
+    pub fn recommended_config(&self) -> GpgpuConfig {
+        let mut cfg = GpgpuConfig::new(self.recommended.num_sms, self.recommended.num_sp);
+        cfg.sm.warp_stack_depth = self.recommended.warp_stack_depth;
+        cfg.sm.has_multiplier = self.recommended.has_multiplier;
+        if !self.recommended.has_multiplier {
+            cfg.sm.read_operands = 2;
+        }
+        cfg
+    }
+}
+
 /// Profile `bench` at size `n` on the baseline 1 SM / 8 SP FlexGrip and
 /// derive the minimal configuration (paper §5.2 methodology).
 pub fn profile(bench: BenchId, n: u32, seed: u64) -> Result<CustomizationReport, SimError> {
     let workload = kernels::prepare(bench, n, seed);
-    let analysis = analyze_kernel(&workload.kernel);
+    let sig = workload.kernel.sig;
+    let instruction_count = workload.kernel.instrs.len();
 
     let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
     let mut alu = NativeAlu;
@@ -72,7 +78,7 @@ pub fn profile(bench: BenchId, n: u32, seed: u64) -> Result<CustomizationReport,
         return Err(SimError::LimitExceeded(format!("profiling run invalid: {e}")));
     }
 
-    let needs_mul = analysis.uses_multiplier && run.stats.multiplier_ops() > 0;
+    let needs_mul = sig.uses_multiplier && run.stats.multiplier_ops() > 0;
     let recommended = ArchParams {
         num_sms: 1,
         num_sp: 8,
@@ -86,7 +92,8 @@ pub fn profile(bench: BenchId, n: u32, seed: u64) -> Result<CustomizationReport,
     Ok(CustomizationReport {
         bench,
         n,
-        analysis,
+        sig,
+        instruction_count,
         measured_stack_depth: run.stats.max_stack_depth,
         multiplier_ops: run.stats.multiplier_ops(),
         recommended,
@@ -99,13 +106,7 @@ pub fn profile(bench: BenchId, n: u32, seed: u64) -> Result<CustomizationReport,
 /// customized hardware still executes it (the paper's embedded-bitstream
 /// scenario: the right variant must be functionally sufficient).
 pub fn validate(report: &CustomizationReport, seed: u64) -> Result<(), SimError> {
-    let mut cfg = GpgpuConfig::new(1, 8);
-    cfg.sm.warp_stack_depth = report.recommended.warp_stack_depth;
-    cfg.sm.has_multiplier = report.recommended.has_multiplier;
-    if !report.recommended.has_multiplier {
-        cfg.sm.read_operands = 2;
-    }
-    let gpgpu = Gpgpu::new(cfg);
+    let gpgpu = Gpgpu::new(report.recommended_config());
     let mut alu = NativeAlu;
     kernels::run_verified(report.bench, report.n, &gpgpu, &mut alu, seed)?;
     Ok(())
@@ -114,6 +115,7 @@ pub fn validate(report: &CustomizationReport, seed: u64) -> Result<(), SimError>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::isa::{Capability, StackBound};
 
     #[test]
     fn bitonic_gets_multiplier_free_shallow_stack() {
@@ -137,33 +139,41 @@ mod tests {
         let r = profile(BenchId::Autocorr, 64, 7).unwrap();
         assert_eq!(r.recommended.warp_stack_depth, 16, "Table 6");
         assert!(r.recommended.has_multiplier);
+        assert_eq!(
+            r.refined_signature().stack_bound,
+            StackBound::AtMost(16),
+            "router signature carries the measured depth"
+        );
         validate(&r, 7).unwrap();
     }
 
     #[test]
-    fn static_analysis_spots_branches_and_mads() {
+    fn static_signature_spots_branches_and_mads() {
         let w = kernels::prepare(BenchId::MatMul, 32, 0);
         let a = analyze_kernel(&w.kernel);
         assert!(a.uses_multiplier && a.uses_third_operand && a.uses_branches);
         let w = kernels::prepare(BenchId::VecAdd, 32, 0);
         let a = analyze_kernel(&w.kernel);
         assert!(!a.uses_branches, "vecadd is straight-line");
+        assert_eq!(a.stack_bound, StackBound::AtMost(0));
     }
 
     #[test]
     fn recommended_config_fails_wrong_application() {
         // The bitonic-customized (multiplier-less) FlexGrip must REJECT
-        // matmul — exactly why the paper stores several bitstreams.
+        // matmul — exactly why the paper stores several bitstreams. The
+        // mismatch is now caught by pre-flight admission, before any
+        // simulation.
         let r = profile(BenchId::Bitonic, 64, 7).unwrap();
-        let mut cfg = GpgpuConfig::new(1, 8);
-        cfg.sm.warp_stack_depth = r.recommended.warp_stack_depth;
-        cfg.sm.has_multiplier = false;
-        cfg.sm.read_operands = 2;
-        let gpgpu = Gpgpu::new(cfg);
+        let gpgpu = Gpgpu::new(r.recommended_config());
         let mut alu = NativeAlu;
         let w = kernels::prepare(BenchId::MatMul, 32, 7);
+        assert!(!gpgpu.supports(&w.kernel.sig));
         let mut gmem = w.make_gmem();
         let err = w.run(&gpgpu, &mut gmem, &mut alu).unwrap_err();
-        assert!(matches!(err, SimError::NoMultiplier { .. }));
+        assert!(matches!(
+            err,
+            SimError::Unsupported { capability: Capability::Multiplier, pc: None, .. }
+        ));
     }
 }

@@ -1,22 +1,38 @@
 //! The coordinator: the paper's "MicroBlaze driver" role (§3.1) as a
-//! long-lived service — it owns a pool of soft-GPGPU device shards,
-//! accepts kernel-launch requests over a bounded submit queue, DMAs data
-//! in and out of device memory, and reports per-job, per-shard, and
-//! aggregate metrics.
+//! long-lived service — it owns a fleet of soft-GPGPU device shards,
+//! accepts kernel-launch requests over bounded submit queues, DMAs data
+//! in and out of device memory, and reports per-job, per-shard,
+//! per-variant and aggregate metrics.
 //!
-//! # Pool architecture
+//! # Fleet architecture
 //!
-//! `GpgpuService` runs `ServiceConfig::shards` worker threads. Each shard
-//! owns one [`Gpgpu`] device instance and pulls jobs from a single shared
-//! work queue (`Mutex<VecDeque>` + condvars — effectively work stealing:
-//! an idle shard takes the next job the moment it frees up, so one slow
-//! job never blocks the whole pool). `submit` applies backpressure once
-//! `queue_depth` jobs are waiting. Each job's kernel launch itself uses
-//! the parallel multi-SM path (`Gpgpu::launch_parallel`), so a 2-SM shard
-//! simulates its SMs concurrently while other shards run other jobs.
+//! `GpgpuService` hosts a *heterogeneous* fleet: each [`VariantSpec`]
+//! names a (possibly §4.2-customized) device configuration and how many
+//! shards of it to run. Every variant group has its own bounded work
+//! queue served by its shards (`Mutex<VecDeque>` + condvars —
+//! effectively work stealing inside a group: an idle shard takes the
+//! next job the moment it frees up). `submit` computes the job's
+//! [`CapabilitySignature`] (profiled when registered, static otherwise)
+//! and **routes** it to the lowest-modeled-dynamic-power variant whose
+//! capabilities cover the signature, falling back to the most-capable
+//! (baseline) variant — the paper's stored-bitstream scenario (§5.2) as
+//! a runtime scheduling concern. The routed signature travels with the
+//! job and the shard's launch admits on exactly that signature
+//! (`Gpgpu::launch_admitted`), so a profile-refined requirement can never
+//! be re-rejected by the static one on the variant the router chose; a
+//! *lying* profile surfaces as the structured mid-run removed-unit or
+//! stack-overflow trap, failing only its own ticket. Backpressure applies
+//! per variant queue once `queue_depth` jobs are waiting.
 //!
-//! Shutdown is graceful: dropping the service stops intake, lets the
-//! shards drain every queued job (each ticket still resolves), then joins
+//! Kernel binaries reach the devices through the process-wide
+//! [`KernelRegistry`], so repeat launches of the same benchmark skip
+//! assembly, pre-decode and signature analysis; each job's launch uses
+//! the parallel multi-SM path (`Gpgpu::launch_parallel_prepared`), so a
+//! 2-SM shard simulates its SMs concurrently while other shards run
+//! other jobs.
+//!
+//! Shutdown is graceful: dropping the service stops intake, lets every
+//! group drain its queued jobs (each ticket still resolves), then joins
 //! the worker threads.
 //!
 //! tokio is unavailable in this offline image (DESIGN.md §substitutions),
@@ -26,13 +42,16 @@
 
 pub mod customize;
 
-pub use customize::{analyze_kernel, profile, CustomizationReport, StaticAnalysis};
+pub use customize::{analyze_kernel, profile, CustomizationReport};
 
 use crate::asm::Kernel;
 use crate::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use crate::isa::CapabilitySignature;
 use crate::kernels::{self, BenchId};
+use crate::model::{power::power, ArchParams};
+use crate::registry::{KernelRegistry, PreparedKernel};
 use crate::sim::{GlobalMem, NativeAlu, SimError, SmStats};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -46,15 +65,15 @@ pub enum Request {
     /// Launch an arbitrary assembled kernel: the driver writes `inputs`
     /// into device memory, launches, and reads `read_back` words out.
     ///
-    /// Executed through `Gpgpu::launch_parallel`. If the kernel's blocks
-    /// overlap writes across SMs, the rejected merge leaves device memory
-    /// untouched and the shard transparently retries on the sequential
-    /// `Gpgpu::launch` (which permits overlapping writes, SM order). One
-    /// contract remains on the caller for multi-SM devices: blocks must
-    /// not *read* data written by blocks on another SM within the same
-    /// launch — that dependency is undetectable (see `gpgpu` module docs)
-    /// and such kernels should be split into phases or run on a 1-SM
-    /// service.
+    /// Executed through `Gpgpu::launch_parallel_prepared`. If the
+    /// kernel's blocks overlap writes across SMs, the rejected merge
+    /// leaves device memory untouched and the shard transparently retries
+    /// on the sequential `Gpgpu::launch_prepared` (which permits
+    /// overlapping writes, SM order). One contract remains on the caller
+    /// for multi-SM devices: blocks must not *read* data written by
+    /// blocks on another SM within the same launch — that dependency is
+    /// undetectable (see `gpgpu` module docs) and such kernels should be
+    /// split into phases or run on a 1-SM service.
     Kernel {
         kernel: Box<Kernel>,
         launch: LaunchConfig,
@@ -76,8 +95,10 @@ pub struct JobOutput {
     pub data: Vec<i32>,
     /// For `Request::Bench`: golden verification outcome.
     pub verified: bool,
-    /// Pool shard that executed the job.
+    /// Fleet shard that executed the job (global index, variant-major).
     pub shard: u32,
+    /// Label of the variant the router admitted the job to.
+    pub variant: String,
 }
 
 /// Handle to an in-flight job.
@@ -92,8 +113,10 @@ impl JobTicket {
     }
 }
 
-/// Pool shape: how many device shards serve the queue, and how many jobs
-/// may wait before `submit` applies backpressure.
+/// Pool shape of a *homogeneous* service: how many identical shards serve
+/// the queue, and how many jobs may wait before `submit` applies
+/// backpressure. (Kept as the simple entry point; heterogeneous fleets
+/// use [`FleetConfig`].)
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServiceConfig {
     /// Worker threads, each owning one GPGPU device instance.
@@ -105,6 +128,45 @@ pub struct ServiceConfig {
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig { shards: 1, queue_depth: 64 }
+    }
+}
+
+/// One device variant in a heterogeneous fleet.
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    /// Display label (e.g. `ArchParams::label()`'s "1 SM - 8 SP, stack 2,
+    /// no mul").
+    pub label: String,
+    pub cfg: GpgpuConfig,
+    /// Shards (worker threads) hosting this variant.
+    pub shards: u32,
+}
+
+impl VariantSpec {
+    pub fn new(label: impl Into<String>, cfg: GpgpuConfig) -> VariantSpec {
+        VariantSpec { label: label.into(), cfg, shards: 1 }
+    }
+}
+
+/// A heterogeneous fleet: customized variants + (normally) the baseline.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub variants: Vec<VariantSpec>,
+    /// Per-variant-queue depth before `submit` blocks.
+    pub queue_depth: usize,
+}
+
+impl FleetConfig {
+    /// A single-variant fleet — the homogeneous pool the seed service ran.
+    pub fn homogeneous(cfg: GpgpuConfig, pool: ServiceConfig) -> FleetConfig {
+        FleetConfig {
+            variants: vec![VariantSpec {
+                label: "baseline".to_string(),
+                cfg,
+                shards: pool.shards.max(1),
+            }],
+            queue_depth: pool.queue_depth.max(1),
+        }
     }
 }
 
@@ -148,7 +210,11 @@ impl MetricsSnapshot {
     }
 }
 
-type Job = (Request, mpsc::Sender<Result<JobOutput, String>>);
+/// A queued job: the request, the signature the router admitted it on
+/// (the shard launches with exactly this signature — see
+/// `Gpgpu::launch_admitted` — so profile refinement can never self-reject
+/// on the routed variant), and the reply channel.
+type Job = (Request, CapabilitySignature, mpsc::Sender<Result<JobOutput, String>>);
 
 struct QueueState {
     jobs: VecDeque<Job>,
@@ -164,12 +230,39 @@ struct Shared {
     depth: usize,
 }
 
-/// The GPGPU service: a shard pool behind one submit queue.
-pub struct GpgpuService {
+impl Shared {
+    fn new(depth: usize) -> Arc<Shared> {
+        Arc::new(Shared {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth,
+        })
+    }
+}
+
+/// One running variant group: its queue, its shards' metrics, and the
+/// routing key (modeled dynamic power).
+struct Variant {
+    label: String,
+    cfg: GpgpuConfig,
+    dyn_w: f64,
     shared: Arc<Shared>,
+    metrics: Vec<Arc<Metrics>>,
+}
+
+/// The GPGPU service: a capability-routed fleet of device-variant groups.
+pub struct GpgpuService {
+    variants: Vec<Variant>,
     workers: Vec<JoinHandle<()>>,
-    shard_metrics: Vec<Arc<Metrics>>,
+    /// Index of the most-capable variant — the routing fallback.
+    fallback: usize,
+    /// Profile-refined signatures registered per benchmark (paper §4.1:
+    /// representative-data profiling decides which bitstream suffices).
+    profiles: Mutex<HashMap<BenchId, CapabilitySignature>>,
+    /// The fallback (most capable) variant's device configuration.
     pub cfg: GpgpuConfig,
+    /// Aggregate pool shape (total shards across variants).
     pub pool: ServiceConfig,
 }
 
@@ -181,71 +274,173 @@ impl GpgpuService {
 
     /// Start a pool of `pool.shards` identical device shards.
     pub fn start_pool(cfg: GpgpuConfig, pool: ServiceConfig) -> GpgpuService {
-        let shards = pool.shards.max(1);
-        let shared = Arc::new(Shared {
-            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
-            depth: pool.queue_depth.max(1),
-        });
-        let mut workers = Vec::with_capacity(shards as usize);
-        let mut shard_metrics = Vec::with_capacity(shards as usize);
-        for shard in 0..shards {
-            let metrics = Arc::new(Metrics::default());
-            shard_metrics.push(metrics.clone());
-            let shared = shared.clone();
-            workers.push(std::thread::spawn(move || {
-                shard_worker(shard, cfg, &shared, &metrics);
-            }));
-        }
-        GpgpuService { shared, workers, shard_metrics, cfg, pool }
+        GpgpuService::start_fleet(FleetConfig::homogeneous(cfg, pool))
     }
 
-    /// Queue a job; returns immediately with a ticket unless the queue is
-    /// at `queue_depth`, in which case it blocks until a shard drains it.
-    pub fn submit(&self, req: Request) -> JobTicket {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let mut q = self.shared.state.lock().expect("queue poisoned");
-        while q.jobs.len() >= self.shared.depth && !q.shutdown {
-            q = self.shared.not_full.wait(q).expect("queue poisoned");
+    /// Start a heterogeneous fleet: one worker group per variant, jobs
+    /// routed by capability signature.
+    pub fn start_fleet(fleet: FleetConfig) -> GpgpuService {
+        assert!(!fleet.variants.is_empty(), "fleet needs at least one variant");
+        let depth = fleet.queue_depth.max(1);
+        let mut variants = Vec::with_capacity(fleet.variants.len());
+        let mut workers = Vec::new();
+        let mut shard_base = 0u32;
+        for spec in fleet.variants {
+            let shards = spec.shards.max(1);
+            let shared = Shared::new(depth);
+            let mut metrics = Vec::with_capacity(shards as usize);
+            for s in 0..shards {
+                let m = Arc::new(Metrics::default());
+                metrics.push(m.clone());
+                let shared = shared.clone();
+                let cfg = spec.cfg;
+                let label = spec.label.clone();
+                let shard = shard_base + s;
+                workers.push(std::thread::spawn(move || {
+                    shard_worker(shard, &label, cfg, &shared, &m);
+                }));
+            }
+            let dyn_w = power(&ArchParams::from_config(&spec.cfg)).dynamic_w;
+            variants.push(Variant { label: spec.label, cfg: spec.cfg, dyn_w, shared, metrics });
+            shard_base += shards;
         }
-        q.jobs.push_back((req, reply_tx));
+        // Fallback: the most capable variant (multiplier before stack
+        // depth before operand count) — "the full baseline device" in any
+        // sensibly-specified fleet.
+        let fallback = variants
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| {
+                (v.cfg.sm.has_multiplier, v.cfg.sm.warp_stack_depth, v.cfg.sm.read_operands)
+            })
+            .map(|(i, _)| i)
+            .expect("non-empty fleet");
+        let cfg = variants[fallback].cfg;
+        let pool = ServiceConfig { shards: shard_base, queue_depth: depth };
+        GpgpuService {
+            variants,
+            workers,
+            fallback,
+            profiles: Mutex::new(HashMap::new()),
+            cfg,
+            pool,
+        }
+    }
+
+    /// Register a profile-refined signature for a benchmark (from
+    /// [`CustomizationReport::refined_signature`]). Subsequent `Bench`
+    /// jobs route on the measured requirements instead of the
+    /// conservative static ones — what lets autocorr land on a depth-16
+    /// variant and matmul on a depth-0 one.
+    pub fn register_profile(&self, id: BenchId, sig: CapabilitySignature) {
+        self.profiles.lock().expect("profiles poisoned").insert(id, sig);
+    }
+
+    /// The signature the router admits a request on.
+    fn job_signature(&self, req: &Request) -> CapabilitySignature {
+        match req {
+            Request::Bench { id, .. } => {
+                if let Some(sig) = self.profiles.lock().expect("profiles poisoned").get(id) {
+                    return *sig;
+                }
+                KernelRegistry::global()
+                    .get_or_assemble(id.source())
+                    .expect("benchmark kernels must assemble")
+                    .sig
+            }
+            Request::Kernel { kernel, .. } => kernel.signature(),
+        }
+    }
+
+    /// Route: the cheapest (lowest modeled dynamic power) variant whose
+    /// capabilities cover the signature; the most-capable variant if none
+    /// does (its own launch admission then reports the structured
+    /// `Unsupported` error if even the fallback cannot run the kernel).
+    fn route(&self, sig: &CapabilitySignature) -> usize {
+        self.variants
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.cfg.sm.covers(sig))
+            .min_by(|(_, a), (_, b)| {
+                a.dyn_w.partial_cmp(&b.dyn_w).expect("finite modeled power")
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(self.fallback)
+    }
+
+    /// Queue a job on its routed variant; returns immediately with a
+    /// ticket unless that variant's queue is at `queue_depth`, in which
+    /// case it blocks until a shard drains it.
+    pub fn submit(&self, req: Request) -> JobTicket {
+        let sig = self.job_signature(&req);
+        let shared = &self.variants[self.route(&sig)].shared;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut q = shared.state.lock().expect("queue poisoned");
+        while q.jobs.len() >= shared.depth && !q.shutdown {
+            q = shared.not_full.wait(q).expect("queue poisoned");
+        }
+        q.jobs.push_back((req, sig, reply_tx));
         drop(q);
-        self.shared.not_empty.notify_one();
+        shared.not_empty.notify_one();
         JobTicket { rx: reply_rx }
     }
 
-    /// Aggregate metrics over every shard.
+    /// Aggregate metrics over every shard of every variant.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shard_metrics
+        self.shard_metrics()
             .iter()
-            .fold(MetricsSnapshot::default(), |acc, m| acc.merged(&m.snapshot()))
+            .fold(MetricsSnapshot::default(), |acc, m| acc.merged(m))
     }
 
-    /// Per-shard metrics (index = shard id).
+    /// Per-shard metrics (index = global shard id, variant-major).
     pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
-        self.shard_metrics.iter().map(|m| m.snapshot()).collect()
+        self.variants
+            .iter()
+            .flat_map(|v| v.metrics.iter().map(|m| m.snapshot()))
+            .collect()
+    }
+
+    /// Per-variant metrics: (label, merged counters over its shards).
+    pub fn variant_metrics(&self) -> Vec<(String, MetricsSnapshot)> {
+        self.variants
+            .iter()
+            .map(|v| {
+                let merged = v
+                    .metrics
+                    .iter()
+                    .fold(MetricsSnapshot::default(), |acc, m| acc.merged(&m.snapshot()));
+                (v.label.clone(), merged)
+            })
+            .collect()
+    }
+
+    /// (label, modeled dynamic power W) per variant — the routing order.
+    pub fn variant_power(&self) -> Vec<(String, f64)> {
+        self.variants.iter().map(|v| (v.label.clone(), v.dyn_w)).collect()
     }
 }
 
 impl Drop for GpgpuService {
     fn drop(&mut self) {
-        // Graceful shutdown: stop intake, let shards drain the queue
-        // (every already-submitted ticket still resolves), then join.
-        {
-            let mut q = self.shared.state.lock().expect("queue poisoned");
+        // Graceful shutdown: stop intake on every variant queue, let the
+        // shards drain (every already-submitted ticket still resolves),
+        // then join.
+        for v in &self.variants {
+            let mut q = v.shared.state.lock().expect("queue poisoned");
             q.shutdown = true;
+            drop(q);
+            v.shared.not_empty.notify_all();
+            v.shared.not_full.notify_all();
         }
-        self.shared.not_empty.notify_all();
-        self.shared.not_full.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-/// One shard: owns a device, pulls jobs until shutdown + empty queue.
-fn shard_worker(shard: u32, cfg: GpgpuConfig, shared: &Shared, metrics: &Metrics) {
+/// One shard: owns a device, pulls jobs from its variant's queue until
+/// shutdown + empty queue.
+fn shard_worker(shard: u32, variant: &str, cfg: GpgpuConfig, shared: &Shared, metrics: &Metrics) {
     let gpgpu = Gpgpu::new(cfg);
     loop {
         let job = {
@@ -260,20 +455,21 @@ fn shard_worker(shard: u32, cfg: GpgpuConfig, shared: &Shared, metrics: &Metrics
                 q = shared.not_empty.wait(q).expect("queue poisoned");
             }
         };
-        let Some((req, reply)) = job else { break };
+        let Some((req, sig, reply)) = job else { break };
         shared.not_full.notify_one();
         // A panicking job (e.g. a malformed Bench size tripping an assert
         // in kernels::prepare) must fail its own ticket, not kill the
         // shard — a dead shard would leave later tickets hanging forever.
-        let result = catch_unwind(AssertUnwindSafe(|| run_one(&gpgpu, shard, req)))
-            .unwrap_or_else(|payload| {
-                let msg = payload
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| payload.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "unknown panic".to_string());
-                Err(format!("job panicked: {msg}"))
-            });
+        let result =
+            catch_unwind(AssertUnwindSafe(|| run_one(&gpgpu, shard, variant, req, sig)))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic".to_string());
+                    Err(format!("job panicked: {msg}"))
+                });
         match &result {
             Ok(out) => {
                 metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
@@ -290,13 +486,23 @@ fn shard_worker(shard: u32, cfg: GpgpuConfig, shared: &Shared, metrics: &Metrics
     }
 }
 
-fn run_one(gpgpu: &Gpgpu, shard: u32, req: Request) -> Result<JobOutput, String> {
+/// Execute one routed job. `sig` is the signature the router admitted the
+/// job on (profile-refined for registered benchmarks): the launch admits
+/// on exactly that signature, and the mid-run removed-unit / stack traps
+/// are the structured backstop if a registered profile over-promised.
+fn run_one(
+    gpgpu: &Gpgpu,
+    shard: u32,
+    variant: &str,
+    req: Request,
+    sig: CapabilitySignature,
+) -> Result<JobOutput, String> {
     match req {
         Request::Bench { id, n, seed } => {
             let w = kernels::prepare(id, n, seed);
             let mut gmem = w.make_gmem();
             let run = w
-                .run_parallel(gpgpu, &mut gmem, &NativeAlu)
+                .run_parallel_admitted(gpgpu, &sig, &mut gmem, &NativeAlu)
                 .map_err(|e| e.to_string())?;
             let verified = w.verify(&gmem).map(|_| true)?;
             Ok(JobOutput {
@@ -307,6 +513,7 @@ fn run_one(gpgpu: &Gpgpu, shard: u32, req: Request) -> Result<JobOutput, String>
                 data: Vec::new(),
                 verified,
                 shard,
+                variant: variant.to_string(),
             })
         }
         Request::Kernel {
@@ -317,19 +524,23 @@ fn run_one(gpgpu: &Gpgpu, shard: u32, req: Request) -> Result<JobOutput, String>
             inputs,
             read_back,
         } => {
+            // Pre-decode once per job (arbitrary kernels are not
+            // interned); the signature was already derived at submit for
+            // routing, so it is reused rather than re-walked.
+            let pk = PreparedKernel::with_sig(*kernel, sig);
             let mut gmem = GlobalMem::new(gmem_bytes);
             for (addr, words) in &inputs {
                 gmem.write_words(*addr, words).map_err(|e| e.to_string())?;
             }
             let launched = match gpgpu
-                .launch_parallel(&kernel, launch, &params, &mut gmem, &NativeAlu)
+                .launch_parallel_prepared(&pk, launch, &params, &mut gmem, &NativeAlu)
             {
                 Err(SimError::WriteConflict { .. }) => {
                     // Arbitrary user kernels may legally overlap writes
                     // across SMs; the rejected merge left gmem untouched,
                     // so fall back to the sequential reference path.
                     let mut alu = NativeAlu;
-                    gpgpu.launch(&kernel, launch, &params, &mut gmem, &mut alu)
+                    gpgpu.launch_prepared(&pk, launch, &params, &mut gmem, &mut alu)
                 }
                 other => other,
             };
@@ -337,13 +548,14 @@ fn run_one(gpgpu: &Gpgpu, shard: u32, req: Request) -> Result<JobOutput, String>
             let data =
                 gmem.read_words(read_back.0, read_back.1).map_err(|e| e.to_string())?;
             Ok(JobOutput {
-                label: kernel.name.clone(),
+                label: pk.kernel.name.clone(),
                 cycles: r.total.cycles,
                 exec_time_ms: r.exec_time_ms(),
                 stats: r.total,
                 data,
                 verified: true,
                 shard,
+                variant: variant.to_string(),
             })
         }
     }

@@ -6,9 +6,13 @@
 //! Every kernel launch runs in three phases:
 //!
 //! 1. **Partition** — the block scheduler validates the configuration and
-//!    kernel resources, then deals thread blocks round-robin across SMs
-//!    ("the block scheduler logic equally and automatically distributed
-//!    thread blocks to the 2 SMs", §5.1.1).
+//!    kernel resources, runs pre-flight admission against the kernel's
+//!    [`CapabilitySignature`] (a §4.2 capability the customized device
+//!    lacks rejects the launch with [`SimError::Unsupported`] before any
+//!    simulation — `Gpgpu::supports` is the query form), then deals
+//!    thread blocks round-robin across SMs ("the block scheduler logic
+//!    equally and automatically distributed thread blocks to the 2 SMs",
+//!    §5.1.1).
 //! 2. **Simulate** — each SM executes its block queue to completion.
 //!    [`Gpgpu::launch`] simulates the SMs sequentially against the shared
 //!    [`GlobalMem`] (the reference path, usable with any
@@ -46,6 +50,8 @@ pub mod limits;
 pub use limits::KernelResources;
 
 use crate::asm::Kernel;
+use crate::isa::CapabilitySignature;
+use crate::registry::PreparedKernel;
 use crate::sim::{
     AluBackend, AluFactory, BlockDesc, GlobalMem, GmemPort, GmemSnapshot, NativeAlu, PreDecoded,
     SimError, Sm, SmConfig, SmStats, WriteRecord,
@@ -95,11 +101,11 @@ impl GpgpuConfig {
         GpgpuConfig { sm: SmConfig::baseline().with_sp(num_sp), num_sms }
     }
 
+    /// Validate the device configuration. All capability/limit checks
+    /// live in `sim` ([`crate::sim::validate_device`]); this is a pure
+    /// delegation so the two layers cannot drift.
     pub fn validate(&self) -> Result<(), SimError> {
-        if self.num_sms == 0 {
-            return Err(SimError::LimitExceeded("at least one SM required".into()));
-        }
-        self.sm.validate()
+        crate::sim::validate_device(&self.sm, self.num_sms)
     }
 
     pub fn label(&self) -> String {
@@ -165,14 +171,26 @@ impl Gpgpu {
         Gpgpu { cfg }
     }
 
-    /// Phase 1 (partition): validate, compute the residency limit, and
-    /// deal blocks round-robin across SMs.
+    /// The public capability check: can this device *guaranteed* execute a
+    /// kernel with signature `sig`? (Conservative — see
+    /// [`SmConfig::covers`]; the coordinator's fleet router and callers
+    /// choosing among customized variants use this.)
+    pub fn supports(&self, sig: &CapabilitySignature) -> bool {
+        self.cfg.sm.covers(sig)
+    }
+
+    /// Phase 1 (partition): validate the device, admit the kernel's
+    /// capability signature (§4.2 — a provable mismatch is rejected with
+    /// [`SimError::Unsupported`] *before* any simulation), compute the
+    /// residency limit, and deal blocks round-robin across SMs.
     fn partition(
         &self,
         kernel: &Kernel,
+        sig: &CapabilitySignature,
         launch: LaunchConfig,
     ) -> Result<(Vec<Vec<BlockDesc>>, u32), SimError> {
         self.cfg.validate()?;
+        self.cfg.sm.admit(sig)?;
         let res = KernelResources {
             regs_per_thread: kernel.regs_per_thread,
             smem_bytes: kernel.smem_bytes,
@@ -216,6 +234,11 @@ impl Gpgpu {
     /// path: SMs are simulated one after another against the shared global
     /// memory, all through the single `alu` backend. Kernel time is the
     /// max of the per-SM busy times.
+    ///
+    /// Derives the capability signature and micro-op lowering on the
+    /// spot; repeat launches should go through a
+    /// [`crate::registry::KernelRegistry`] and [`Gpgpu::launch_prepared`]
+    /// to skip that work.
     pub fn launch(
         &self,
         kernel: &Kernel,
@@ -224,8 +247,58 @@ impl Gpgpu {
         gmem: &mut GlobalMem,
         alu: &mut dyn AluBackend,
     ) -> Result<LaunchResult, SimError> {
-        let (assignments, max_resident) = self.partition(kernel, launch)?;
+        let sig = kernel.signature();
+        let (assignments, max_resident) = self.partition(kernel, &sig, launch)?;
         let pre = PreDecoded::from_kernel(kernel);
+        self.simulate_seq(kernel, &pre, &assignments, max_resident, params, gmem, alu)
+    }
+
+    /// [`Gpgpu::launch`] for a registry-cached kernel: admission reads the
+    /// cached signature and simulation reuses the cached pre-decode, so a
+    /// repeat launch does no per-launch kernel analysis at all.
+    pub fn launch_prepared(
+        &self,
+        pk: &PreparedKernel,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<LaunchResult, SimError> {
+        self.launch_admitted(pk, &pk.sig, launch, params, gmem, alu)
+    }
+
+    /// [`Gpgpu::launch_prepared`] with an explicit admission signature —
+    /// normally a profile-refined one (paper §4.1). The coordinator's
+    /// routed launches admit on exactly the signature the router used, so
+    /// refinement can never self-reject a job on the variant it chose; if
+    /// the profile over-promised, the mid-run removed-unit trap (same
+    /// structured [`SimError::Unsupported`] payload) and the runtime
+    /// stack-overflow trap remain the backstop.
+    pub fn launch_admitted(
+        &self,
+        pk: &PreparedKernel,
+        sig: &CapabilitySignature,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<LaunchResult, SimError> {
+        let (assignments, max_resident) = self.partition(&pk.kernel, sig, launch)?;
+        self.simulate_seq(&pk.kernel, &pk.pre, &assignments, max_resident, params, gmem, alu)
+    }
+
+    /// Phase 2+3 of the sequential path.
+    #[allow(clippy::too_many_arguments)]
+    fn simulate_seq(
+        &self,
+        kernel: &Kernel,
+        pre: &PreDecoded,
+        assignments: &[Vec<BlockDesc>],
+        max_resident: u32,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<LaunchResult, SimError> {
         let mut per_sm = Vec::with_capacity(self.cfg.num_sms as usize);
         for (sm_id, blocks) in assignments.iter().enumerate() {
             let sm = Sm::new(self.cfg.sm, sm_id as u32);
@@ -234,7 +307,7 @@ impl Gpgpu {
             } else {
                 run_sm(
                     &sm,
-                    &pre,
+                    pre,
                     kernel.regs_per_thread,
                     kernel.smem_bytes,
                     params,
@@ -266,16 +339,59 @@ impl Gpgpu {
         gmem: &mut GlobalMem,
         factory: &dyn AluFactory,
     ) -> Result<LaunchResult, SimError> {
-        let (assignments, max_resident) = self.partition(kernel, launch)?;
+        let sig = kernel.signature();
+        let (assignments, max_resident) = self.partition(kernel, &sig, launch)?;
         let pre = PreDecoded::from_kernel(kernel);
+        self.simulate_par(kernel, &pre, &assignments, max_resident, params, gmem, factory)
+    }
 
+    /// [`Gpgpu::launch_parallel`] for a registry-cached kernel (cached
+    /// signature + pre-decode, like [`Gpgpu::launch_prepared`]).
+    pub fn launch_parallel_prepared(
+        &self,
+        pk: &PreparedKernel,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<LaunchResult, SimError> {
+        self.launch_parallel_admitted(pk, &pk.sig, launch, params, gmem, factory)
+    }
+
+    /// [`Gpgpu::launch_parallel_prepared`] with an explicit admission
+    /// signature (see [`Gpgpu::launch_admitted`]).
+    pub fn launch_parallel_admitted(
+        &self,
+        pk: &PreparedKernel,
+        sig: &CapabilitySignature,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<LaunchResult, SimError> {
+        let (assignments, max_resident) = self.partition(&pk.kernel, sig, launch)?;
+        self.simulate_par(&pk.kernel, &pk.pre, &assignments, max_resident, params, gmem, factory)
+    }
+
+    /// Phase 2+3 of the parallel path.
+    #[allow(clippy::too_many_arguments)]
+    fn simulate_par(
+        &self,
+        kernel: &Kernel,
+        pre: &PreDecoded,
+        assignments: &[Vec<BlockDesc>],
+        max_resident: u32,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<LaunchResult, SimError> {
         if self.cfg.num_sms == 1 {
             // One SM: no partitioning benefit; skip the snapshot entirely.
             let mut alu = factory.make_alu();
             let sm = Sm::new(self.cfg.sm, 0);
             let stats = run_sm(
                 &sm,
-                &pre,
+                pre,
                 kernel.regs_per_thread,
                 kernel.smem_bytes,
                 params,
@@ -300,7 +416,6 @@ impl Gpgpu {
                     .iter()
                     .enumerate()
                     .map(|(sm_id, blocks)| {
-                        let pre = &pre;
                         scope.spawn(move || {
                             if blocks.is_empty() {
                                 return Ok((SmStats::default(), Vec::new()));
@@ -515,5 +630,54 @@ mod tests {
             .launch_parallel(&k, LaunchConfig::linear(4, 32), &[], &mut g, &NativeAlu)
             .unwrap_err();
         assert!(matches!(err, SimError::StackUnderflow { .. }));
+    }
+
+    #[test]
+    fn admission_rejects_before_simulation() {
+        // A multiply kernel on a multiplier-less variant must be refused
+        // at the launch boundary with the structured payload — device
+        // memory untouched, nothing simulated.
+        let k = assemble("S2R R1, SR_GTID\nIMUL R2, R1, R1\nGST [R1], R2\nEXIT").unwrap();
+        let mut cfg = GpgpuConfig::new(1, 8);
+        cfg.sm.has_multiplier = false;
+        cfg.sm.read_operands = 2;
+        let gp = Gpgpu::new(cfg);
+        assert!(!gp.supports(&k.signature()));
+        let mut g = GlobalMem::new(4096);
+        let mut alu = NativeAlu;
+        let err = gp
+            .launch(&k, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu)
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            SimError::Unsupported {
+                capability: crate::isa::Capability::Multiplier,
+                pc: None,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn prepared_launch_matches_raw_launch() {
+        use crate::registry::PreparedKernel;
+        let pk = PreparedKernel::new(assemble(SRC).unwrap());
+        let gp = Gpgpu::new(GpgpuConfig::new(2, 8));
+        let (g_raw, r_raw) = launch(GpgpuConfig::new(2, 8), 6, 64);
+        let mut g = GlobalMem::new(6 * 64 * 4 + 64);
+        let mut alu = NativeAlu;
+        let r = gp
+            .launch_prepared(&pk, LaunchConfig::linear(6, 64), &[], &mut g, &mut alu)
+            .unwrap();
+        assert_eq!(r.total.cycles, r_raw.total.cycles);
+        let words = (g.size_bytes() / 4) as usize;
+        assert_eq!(g.read_words(0, words).unwrap(), g_raw.read_words(0, words).unwrap());
+
+        let mut g2 = GlobalMem::new(6 * 64 * 4 + 64);
+        let rp = gp
+            .launch_parallel_prepared(&pk, LaunchConfig::linear(6, 64), &[], &mut g2, &NativeAlu)
+            .unwrap();
+        assert_eq!(rp.total.cycles, r_raw.total.cycles);
+        assert_eq!(g2.read_words(0, words).unwrap(), g_raw.read_words(0, words).unwrap());
     }
 }

@@ -1,8 +1,9 @@
 //! Shared framing for the hand-rolled machine-readable reports
-//! (`BENCH_scaling.json`, `BENCH_hot_path.json`). The offline image has
-//! no serde, so each report formats its own fields — but the document
-//! shape (header fields, then a `points` array with trailing-comma
-//! handling) lives here once so the two schemas cannot drift in framing.
+//! (`BENCH_scaling.json`, `BENCH_hot_path.json`, `BENCH_fleet.json`).
+//! The offline image has no serde, so each report formats its own fields
+//! — but the document shape (header fields, then a `points` array with
+//! trailing-comma handling, and the multi-report array wrapper) lives
+//! here once so the schemas cannot drift in framing.
 
 /// Build `{ header_fields..., "points": [ point_lines... ] }` with the
 /// stable indentation/trailing-comma conventions the cross-PR diffing
@@ -19,6 +20,21 @@ pub(crate) fn frame(header_fields: &[String], point_lines: &[String]) -> String 
         out.push_str(&format!("    {p}{comma}\n"));
     }
     out.push_str("  ]\n}\n");
+    out
+}
+
+/// Wrap independently-framed JSON documents into a top-level array — the
+/// multi-benchmark suite emitters (`BENCH_scaling.json` carries one
+/// [`super::scaling::ScalingReport`] object per swept benchmark).
+pub(crate) fn array(docs: &[String]) -> String {
+    let mut out = String::from("[\n");
+    for (i, d) in docs.iter().enumerate() {
+        let comma = if i + 1 == docs.len() { "" } else { "," };
+        out.push_str(d.trim_end());
+        out.push_str(comma);
+        out.push('\n');
+    }
+    out.push_str("]\n");
     out
 }
 
@@ -42,5 +58,16 @@ mod tests {
     fn empty_points_array_is_valid() {
         let doc = frame(&["\"a\": 1".into()], &[]);
         assert_eq!(doc, "{\n  \"a\": 1,\n  \"points\": [\n  ]\n}\n");
+    }
+
+    #[test]
+    fn array_wraps_framed_documents() {
+        let a = frame(&["\"x\": 1".into()], &[]);
+        let b = frame(&["\"x\": 2".into()], &[]);
+        let doc = array(&[a, b]);
+        assert!(doc.starts_with("[\n{\n"));
+        assert!(doc.contains("},\n{\n"), "{doc}");
+        assert!(doc.ends_with("}\n]\n"));
+        assert_eq!(array(&[]), "[\n]\n");
     }
 }

@@ -4,6 +4,7 @@
 //! (criterion itself is not available in this offline image).
 
 pub mod eval;
+pub mod fleet;
 pub mod hotpath;
 mod jsonfmt;
 pub mod microbench;
@@ -13,7 +14,10 @@ pub mod tables;
 pub mod text;
 
 pub use eval::Evaluation;
+pub use fleet::{fleet_report, FleetBenchPoint, FleetReport};
 pub use hotpath::{HotPathPoint, HotPathReport};
 pub use microbench::{bench, BenchResult};
-pub use scaling::{scaling_report, ScalingPoint, ScalingReport};
+pub use scaling::{
+    scaling_report, scaling_suite, suite_json, write_suite_json, ScalingPoint, ScalingReport,
+};
 pub use text::TextTable;

@@ -3,8 +3,10 @@
 //! track the host-side scaling trajectory (simulated cycles are asserted
 //! equal across paths elsewhere; this file is about *wall-clock*).
 //!
-//! Six points per report:
-//! * `1sm_sequential`  — reference path, one SM;
+//! Eight points per report:
+//! * `1sm_sequential`  — reference path, one SM, 8 SP;
+//! * `1sm_16sp_sequential` / `1sm_32sp_sequential` — the SP-width sweep
+//!   (paper §5.1: 8/16/32 SP), priced by the Table-2 area calibration;
 //! * `2sm_sequential`  — reference path, two SMs simulated back-to-back;
 //! * `2sm_parallel`    — `launch_parallel`, one thread per SM;
 //! * `4sm_parallel` / `8sm_parallel` — the >2-SM scaling study (ROADMAP):
@@ -13,6 +15,10 @@
 //!   each point carries the extrapolated FPGA area from `model/area.rs`
 //!   so simulated speedup can be read against LUT cost;
 //! * `pool_4shard`     — 4-shard coordinator pool absorbing a job batch.
+//!
+//! [`scaling_suite`] sweeps several benchmarks (beyond the original
+//! matmul-only report) and [`write_suite_json`] emits them as one JSON
+//! array, one framed report object per benchmark.
 
 use crate::coordinator::{GpgpuService, Request, ServiceConfig};
 use crate::gpgpu::{Gpgpu, GpgpuConfig};
@@ -25,6 +31,8 @@ use std::time::Instant;
 #[derive(Debug, Clone)]
 pub struct ScalingPoint {
     pub label: &'static str,
+    /// SP width of the measured device(s).
+    pub sp: u32,
     /// Median wall-clock per run/batch, milliseconds.
     pub wall_ms: f64,
     /// Simulated device cycles of one run (summed over pool jobs).
@@ -63,7 +71,8 @@ impl ScalingReport {
     }
 
     /// Simulated-cycle speedup of `num` over `den` (both by label) — the
-    /// architectural scaling the >2-SM study reads against area cost.
+    /// architectural scaling the >2-SM and SP-width studies read against
+    /// area cost.
     pub fn sim_speedup(&self, num: &str, den: &str) -> Option<f64> {
         self.ratio(num, den, |p| p.sim_cycles as f64)
     }
@@ -81,9 +90,9 @@ impl ScalingReport {
             .iter()
             .map(|p| {
                 format!(
-                    "{{\"label\": \"{}\", \"wall_ms\": {:.3}, \"sim_cycles\": {}, \
-                     \"jobs\": {}, \"luts\": {}}}",
-                    p.label, p.wall_ms, p.sim_cycles, p.jobs, p.luts
+                    "{{\"label\": \"{}\", \"sp\": {}, \"wall_ms\": {:.3}, \
+                     \"sim_cycles\": {}, \"jobs\": {}, \"luts\": {}}}",
+                    p.label, p.sp, p.wall_ms, p.sim_cycles, p.jobs, p.luts
                 )
             })
             .collect();
@@ -93,6 +102,21 @@ impl ScalingReport {
     pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
         std::fs::write(path, self.to_json())
     }
+}
+
+/// Serialize a multi-benchmark sweep as one JSON array (shared framing
+/// with the single-report emitter).
+pub fn suite_json(reports: &[ScalingReport]) -> String {
+    let docs: Vec<String> = reports.iter().map(ScalingReport::to_json).collect();
+    super::jsonfmt::array(&docs)
+}
+
+/// Write a multi-benchmark sweep to `path` (`BENCH_scaling.json`).
+pub fn write_suite_json(
+    path: impl AsRef<std::path::Path>,
+    reports: &[ScalingReport],
+) -> std::io::Result<()> {
+    std::fs::write(path, suite_json(reports))
 }
 
 fn median_ms(samples: usize, mut f: impl FnMut() -> u64) -> (f64, u64) {
@@ -107,21 +131,21 @@ fn median_ms(samples: usize, mut f: impl FnMut() -> u64) -> (f64, u64) {
     (walls[walls.len() / 2], cycles)
 }
 
-/// Area-model LUT estimate for an `sms`-SM, 8-SP device (exact at the
-/// paper's 1/2-SM calibration points, marginal-cost extrapolation beyond).
-fn luts_for(sms: u32) -> u32 {
-    area(&ArchParams { num_sms: sms, ..ArchParams::baseline() }).luts
+/// Area-model LUT estimate for an `sms`-SM, `sp`-SP device (exact at the
+/// paper's calibration points, marginal-cost extrapolation beyond 2 SMs).
+fn luts_for(sms: u32, sp: u32) -> u32 {
+    area(&ArchParams { num_sms: sms, num_sp: sp, ..ArchParams::baseline() }).luts
 }
 
-/// Measure all six scaling points for `id` at size `n`. Every run is
+/// Measure all eight scaling points for `id` at size `n`. Every run is
 /// verified against the host golden reference.
 pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> ScalingReport {
     let samples = samples.max(1);
     let w = kernels::prepare(id, n, seed);
-    let mut points = Vec::with_capacity(6);
+    let mut points = Vec::with_capacity(8);
 
-    let mut direct = |label: &'static str, sms: u32, parallel: bool| {
-        let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, 8));
+    let mut direct = |label: &'static str, sms: u32, sp: u32, parallel: bool| {
+        let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, sp));
         let (wall_ms, sim_cycles) = median_ms(samples, || {
             let mut gmem = w.make_gmem();
             let result = if parallel {
@@ -134,15 +158,26 @@ pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> Scaling
             w.verify(&gmem).unwrap_or_else(|e| panic!("{label}: {e}"));
             run.cycles
         });
-        points.push(ScalingPoint { label, wall_ms, sim_cycles, jobs: 1, luts: luts_for(sms) });
+        points.push(ScalingPoint {
+            label,
+            sp,
+            wall_ms,
+            sim_cycles,
+            jobs: 1,
+            luts: luts_for(sms, sp),
+        });
     };
-    direct("1sm_sequential", 1, false);
-    direct("2sm_sequential", 2, false);
-    direct("2sm_parallel", 2, true);
+    direct("1sm_sequential", 1, 8, false);
+    // SP-width sweep (paper §5.1's second scaling axis): wider SP arrays
+    // cut simulated cycles at a steep Table-2 LUT/DSP cost.
+    direct("1sm_16sp_sequential", 1, 16, false);
+    direct("1sm_32sp_sequential", 1, 32, false);
+    direct("2sm_sequential", 2, 8, false);
+    direct("2sm_parallel", 2, 8, true);
     // ROADMAP >2-SM study: beyond the paper's largest configuration,
     // priced by the area model's marginal-SM extrapolation.
-    direct("4sm_parallel", 4, true);
-    direct("8sm_parallel", 8, true);
+    direct("4sm_parallel", 4, 8, true);
+    direct("8sm_parallel", 8, 8, true);
 
     // Pool throughput: 4 shards absorbing 8 concurrent jobs of the same
     // benchmark (1-SM devices so shard-level parallelism dominates).
@@ -151,7 +186,7 @@ pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> Scaling
     let (wall_ms, sim_cycles) = median_ms(samples, || {
         let svc = GpgpuService::start_pool(
             GpgpuConfig::new(1, 8),
-            ServiceConfig { shards: POOL_SHARDS as usize, queue_depth: POOL_JOBS as usize },
+            ServiceConfig { shards: POOL_SHARDS, queue_depth: POOL_JOBS as usize },
         );
         let tickets: Vec<_> = (0..POOL_JOBS)
             .map(|i| svc.submit(Request::Bench { id, n, seed: seed + i as u64 }))
@@ -166,43 +201,60 @@ pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> Scaling
     });
     points.push(ScalingPoint {
         label: "pool_4shard",
+        sp: 8,
         wall_ms,
         sim_cycles,
         jobs: POOL_JOBS,
-        luts: POOL_SHARDS * luts_for(1),
+        luts: POOL_SHARDS * luts_for(1, 8),
     });
 
     ScalingReport { bench: id.name(), n, seed, points }
+}
+
+/// Sweep several benchmarks at one size (the ROADMAP follow-up to the
+/// matmul-only study).
+pub fn scaling_suite(
+    ids: &[BenchId],
+    n: u32,
+    seed: u64,
+    samples: usize,
+) -> Vec<ScalingReport> {
+    ids.iter().map(|id| scaling_report(*id, n, seed, samples)).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    const LABELS: [&str; 8] = [
+        "1sm_sequential",
+        "1sm_16sp_sequential",
+        "1sm_32sp_sequential",
+        "2sm_sequential",
+        "2sm_parallel",
+        "4sm_parallel",
+        "8sm_parallel",
+        "pool_4shard",
+    ];
+
     #[test]
     fn report_has_all_points_and_valid_json() {
         let r = scaling_report(BenchId::VecAdd, 32, 1, 1);
-        assert_eq!(r.points.len(), 6);
+        assert_eq!(r.points.len(), LABELS.len());
         let json = r.to_json();
-        for label in [
-            "1sm_sequential",
-            "2sm_sequential",
-            "2sm_parallel",
-            "4sm_parallel",
-            "8sm_parallel",
-            "pool_4shard",
-        ] {
+        for label in LABELS {
             assert!(json.contains(label), "{json}");
         }
         assert!(json.contains("\"bench\": \"vecadd\""));
         assert!(json.contains("\"luts\""));
+        assert!(json.contains("\"sp\": 32"));
         assert!(r.points.iter().all(|p| p.sim_cycles > 0));
         assert!(r.points.iter().all(|p| p.luts > 0));
         assert!(r.speedup("2sm_parallel", "1sm_sequential").is_some());
     }
 
     #[test]
-    fn area_grows_with_extrapolated_sm_count() {
+    fn area_grows_with_extrapolated_sm_count_and_sp_width() {
         let by_label = |r: &ScalingReport, l: &str| {
             r.points.iter().find(|p| p.label == l).map(|p| p.luts).unwrap()
         };
@@ -210,6 +262,9 @@ mod tests {
         let (l1, l2) = (by_label(&r, "1sm_sequential"), by_label(&r, "2sm_parallel"));
         let (l4, l8) = (by_label(&r, "4sm_parallel"), by_label(&r, "8sm_parallel"));
         assert!(l1 < l2 && l2 < l4 && l4 < l8, "{l1}/{l2}/{l4}/{l8}");
+        let (s16, s32) =
+            (by_label(&r, "1sm_16sp_sequential"), by_label(&r, "1sm_32sp_sequential"));
+        assert!(l1 < s16 && s16 < s32, "SP sweep LUTs: {l1}/{s16}/{s32}");
     }
 
     #[test]
@@ -221,5 +276,19 @@ mod tests {
         let s8 = r.sim_speedup("8sm_parallel", "1sm_sequential").unwrap();
         assert!(s4 > 1.5, "4-SM simulated speedup: {s4:.2}");
         assert!(s8 >= s4 * 0.99, "8-SM must not regress: {s8:.2} vs {s4:.2}");
+        // Wider SPs must also cut simulated cycles (paper Fig. 4 shape).
+        let w16 = r.sim_speedup("1sm_16sp_sequential", "1sm_sequential").unwrap();
+        assert!(w16 > 1.0, "16-SP speedup: {w16:.2}");
+    }
+
+    #[test]
+    fn suite_emits_one_report_per_benchmark() {
+        let reports = scaling_suite(&[BenchId::VecAdd, BenchId::Reduction], 32, 1, 1);
+        assert_eq!(reports.len(), 2);
+        let json = suite_json(&reports);
+        assert!(json.starts_with("[\n{\n"));
+        assert!(json.contains("\"bench\": \"vecadd\""));
+        assert!(json.contains("\"bench\": \"reduction\""));
+        assert!(json.ends_with("]\n"));
     }
 }

@@ -29,6 +29,7 @@ pub mod disasm;
 pub mod encode;
 mod instr;
 mod op;
+pub mod sig;
 
 pub use cond::{Cond, Flags};
 pub use decode::{decode, decode_stream, DecodeError};
@@ -36,6 +37,7 @@ pub use disasm::{disassemble, disassemble_listing};
 pub use encode::encode;
 pub use instr::{Guard, Instr, MemSpace, Operand, SpecialReg};
 pub use op::{Op, OpClass};
+pub use sig::{Capability, CapabilitySignature, StackBound, MAX_STACK_BOUND};
 
 /// General-purpose registers per thread (R0..=R62 usable, R63 is RZ).
 pub const NUM_REGS: u8 = 64;

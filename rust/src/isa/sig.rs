@@ -1,0 +1,309 @@
+//! Capability signature: what a kernel *requires* from the hardware, as a
+//! core ISA-layer concept (paper §4.2, §5.2).
+//!
+//! The paper derives minimal FlexGrip variants in two steps: a *static*
+//! instruction analysis ("we can determine the minimal set of functions
+//! needed to support each benchmark") decides whether the multiplier and
+//! the third read-operand unit are needed at all, and *dynamic* profiling
+//! with representative data finds the warp-stack high-water mark. This
+//! module is the shared representation of both: [`CapabilitySignature`]
+//! is computed statically from any instruction stream (the assembler and
+//! launch admission use it directly) and can be *refined* by a profiling
+//! run (the customization analyzer and the coordinator's fleet router use
+//! the refined form).
+//!
+//! The static stack bound is a genuine upper bound: the analysis walks the
+//! control-flow graph tracking the worst-case number of live warp-stack
+//! entries, treating every guarded branch as potentially divergent. Code
+//! whose pushes cannot be bounded statically (a push inside a loop — e.g.
+//! autocorr's lane-retirement loop, which reaches depth 16 only at
+//! runtime) saturates to [`StackBound::Unbounded`] rather than guessing.
+
+use super::{Instr, Op};
+use std::collections::HashMap;
+
+/// Architectural warp-stack capacity (Table 1 / Table 6: depths 0..=32).
+pub const MAX_STACK_BOUND: u32 = 32;
+
+/// A hardware capability a kernel may require and a customized variant may
+/// lack (§4.2). Carried by [`crate::sim::SimError::Unsupported`] for both
+/// pre-flight admission rejects and mid-run traps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Capability {
+    /// The SP multiplier (DSP48E blocks; IMUL/IMAD).
+    Multiplier,
+    /// The third read-operand unit (IMAD only).
+    ThirdReadOperand,
+    /// Warp-stack capacity: the kernel needs `need` entries, the
+    /// configuration provides `have`.
+    StackDepth { need: u32, have: u32 },
+}
+
+impl std::fmt::Display for Capability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Capability::Multiplier => write!(f, "the SP multiplier"),
+            Capability::ThirdReadOperand => write!(f, "the third read-operand unit"),
+            Capability::StackDepth { need, have } => {
+                write!(f, "warp-stack depth {need} (configured {have})")
+            }
+        }
+    }
+}
+
+/// Upper bound on the warp-stack high-water mark of a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StackBound {
+    /// The high-water mark provably (static analysis) or measuredly
+    /// (profiling refinement) never exceeds this many entries (<= 32).
+    AtMost(u32),
+    /// Static analysis saturated (a push inside a loop): the depth is
+    /// input-dependent. Pre-flight admission lets such kernels through —
+    /// the runtime stack-overflow trap remains the backstop — but the
+    /// conservative fleet router demands a full-depth device.
+    Unbounded,
+}
+
+impl StackBound {
+    /// The depth a device must provision to be *guaranteed* sufficient.
+    pub fn required_depth(self) -> u32 {
+        match self {
+            StackBound::AtMost(b) => b,
+            StackBound::Unbounded => MAX_STACK_BOUND,
+        }
+    }
+}
+
+/// What a kernel requires from the SM datapath — the paper's
+/// customization axes, derived once and shared by the assembler, launch
+/// admission ([`crate::sim::SmConfig::admit`]) and the coordinator's
+/// variant router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CapabilitySignature {
+    /// Kernel encodes IMUL or IMAD -> multiplier required.
+    pub uses_multiplier: bool,
+    /// Kernel encodes IMAD -> third read operand required.
+    pub uses_third_operand: bool,
+    /// Kernel encodes SSY/BRA -> conditional hardware used at all.
+    pub uses_branches: bool,
+    /// Warp-stack requirement (static upper bound, or profiled).
+    pub stack_bound: StackBound,
+}
+
+impl CapabilitySignature {
+    /// Static analysis of a decoded instruction stream (the form stored in
+    /// [`crate::asm::Kernel::instrs`]).
+    pub fn of_program(instrs: &[(u32, Instr)]) -> CapabilitySignature {
+        let mut uses_multiplier = false;
+        let mut uses_third_operand = false;
+        let mut uses_branches = false;
+        let mut has_push_site = false;
+        for (_, i) in instrs {
+            uses_multiplier |= i.op.uses_multiplier();
+            uses_third_operand |= i.op == Op::Imad;
+            uses_branches |= matches!(i.op, Op::Bra | Op::Ssy);
+            has_push_site |=
+                i.op == Op::Ssy || (i.op == Op::Bra && !i.guard.is_unconditional());
+        }
+        let stack_bound = if has_push_site {
+            static_stack_bound(instrs)
+        } else {
+            StackBound::AtMost(0)
+        };
+        CapabilitySignature { uses_multiplier, uses_third_operand, uses_branches, stack_bound }
+    }
+
+    /// Refine the static signature with a profiling run (paper §4.1:
+    /// "profiling the application with representative data sets"): the
+    /// measured warp-stack high-water mark replaces the static bound, and
+    /// a multiplier that is encoded but never dynamically issued is
+    /// dropped from the requirements.
+    pub fn refined(self, measured_stack_depth: u32, multiplier_ops: u64) -> CapabilitySignature {
+        let executed_mul = self.uses_multiplier && multiplier_ops > 0;
+        CapabilitySignature {
+            uses_multiplier: executed_mul,
+            uses_third_operand: self.uses_third_operand && executed_mul,
+            uses_branches: self.uses_branches,
+            stack_bound: StackBound::AtMost(measured_stack_depth.min(MAX_STACK_BOUND)),
+        }
+    }
+}
+
+/// Worst-case warp-stack occupancy over every static control-flow path.
+///
+/// Depth-annotated reachability: each instruction is (re)visited whenever
+/// it becomes reachable at a greater entry depth. `SSY` pushes one entry
+/// (its reconvergence target later resumes at the push depth); a guarded
+/// `BRA` may diverge, pushing one entry while both arms continue; `JOIN`
+/// only pops (its successors are the addresses recorded at the matching
+/// push sites); a (possibly guarded) `EXIT` may retire only part of the
+/// warp, so its fall-through stays reachable. Any path that would exceed
+/// [`MAX_STACK_BOUND`] entries saturates to [`StackBound::Unbounded`] —
+/// that is what every push-inside-a-loop becomes, keeping the bound sound
+/// without simulating trip counts.
+fn static_stack_bound(instrs: &[(u32, Instr)]) -> StackBound {
+    if instrs.is_empty() {
+        return StackBound::AtMost(0);
+    }
+    let index: HashMap<u32, usize> =
+        instrs.iter().enumerate().map(|(i, (pc, _))| (*pc, i)).collect();
+    // Max entry depth seen per instruction (monotone -> termination).
+    let mut best: Vec<Option<u32>> = vec![None; instrs.len()];
+    let mut high = 0u32;
+    let mut work: Vec<(usize, u32)> = vec![(0, 0)];
+    while let Some((i, d)) = work.pop() {
+        match best[i] {
+            Some(b) if b >= d => continue,
+            _ => best[i] = Some(d),
+        }
+        let (pc, instr) = &instrs[i];
+        let next = pc + instr.size as u32;
+        // Off-image targets are a fetch fault at runtime, not a stack
+        // concern — their edges are simply dropped.
+        let edge = |target: u32, depth: u32, work: &mut Vec<(usize, u32)>| {
+            if let Some(&j) = index.get(&target) {
+                work.push((j, depth));
+            }
+        };
+        match instr.op {
+            Op::Join => {}
+            Op::Exit => edge(next, d, &mut work),
+            Op::Ssy => {
+                if d + 1 > MAX_STACK_BOUND {
+                    return StackBound::Unbounded;
+                }
+                high = high.max(d + 1);
+                let t = instr.branch_target().expect("SSY carries a target");
+                edge(next, d + 1, &mut work);
+                edge(t, d, &mut work);
+            }
+            Op::Bra => {
+                let t = instr.branch_target().expect("BRA carries a target");
+                if instr.guard.is_unconditional() {
+                    edge(t, d, &mut work);
+                } else {
+                    if d + 1 > MAX_STACK_BOUND {
+                        return StackBound::Unbounded;
+                    }
+                    high = high.max(d + 1);
+                    edge(next, d + 1, &mut work);
+                    edge(t, d + 1, &mut work);
+                }
+            }
+            _ => edge(next, d, &mut work),
+        }
+    }
+    StackBound::AtMost(high)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+
+    fn sig_of(src: &str) -> CapabilitySignature {
+        CapabilitySignature::of_program(&assemble(src).unwrap().instrs)
+    }
+
+    #[test]
+    fn straight_line_kernel_needs_no_stack() {
+        let s = sig_of("S2R R1, SR_GTID\nSHL R2, R1, #2\nGST [R2], R1\nEXIT");
+        assert!(!s.uses_multiplier && !s.uses_third_operand && !s.uses_branches);
+        assert_eq!(s.stack_bound, StackBound::AtMost(0));
+    }
+
+    #[test]
+    fn mul_and_mad_detected() {
+        let s = sig_of("IMUL R1, R2, R3\nEXIT");
+        assert!(s.uses_multiplier && !s.uses_third_operand);
+        let s = sig_of("IMAD R1, R2, R3, R4\nEXIT");
+        assert!(s.uses_multiplier && s.uses_third_operand);
+    }
+
+    #[test]
+    fn forward_divergence_bound_is_exact() {
+        // SSY + one divergent BRA: runtime high-water is 2, and the static
+        // walk proves exactly that on forward-only control flow.
+        let s = sig_of(
+            r#"
+                S2R R0, SR_TID
+                ISETP P0, R0, #4
+                SSY reconv
+                @P0.LT BRA then
+                MOV R1, #222
+                JOIN
+            then:
+                MOV R1, #111
+                JOIN
+            reconv:
+                EXIT
+            "#,
+        );
+        assert!(s.uses_branches);
+        assert_eq!(s.stack_bound, StackBound::AtMost(2));
+    }
+
+    #[test]
+    fn nested_ssy_counts_nesting() {
+        let s = sig_of("SSY a\nSSY a\nSSY a\na:\nJOIN\nJOIN\nJOIN\nEXIT");
+        assert_eq!(s.stack_bound, StackBound::AtMost(3));
+    }
+
+    #[test]
+    fn partial_exit_keeps_fall_through_reachable() {
+        // A guarded EXIT may retire only some lanes; the SSY after it must
+        // still be counted.
+        let s = sig_of("ISETP P0, R0, #4\n@P0.LT EXIT\nSSY e\nJOIN\ne:\nEXIT");
+        assert_eq!(s.stack_bound, StackBound::AtMost(1));
+    }
+
+    #[test]
+    fn push_inside_a_loop_saturates() {
+        // Unbalanced: one SSY per iteration — depth is trip-count
+        // dependent, so the static bound must refuse to guess.
+        let s = sig_of("a:\nSSY b\nBRA a\nb:\nEXIT");
+        assert_eq!(s.stack_bound, StackBound::Unbounded);
+        // Guarded backward branch (every benchmark loop shape): same.
+        let s = sig_of("top:\nISETP P0, R1, #0\n@P0.GT BRA top\nEXIT");
+        assert_eq!(s.stack_bound, StackBound::Unbounded);
+    }
+
+    #[test]
+    fn balanced_loop_stays_bounded() {
+        // Push and pop per iteration, loop closed by a uniform branch:
+        // the fixed point converges without saturating.
+        let s = sig_of("top:\nSSY x\nJOIN\nx:\nBRA top\nEXIT");
+        assert_eq!(s.stack_bound, StackBound::AtMost(1));
+    }
+
+    #[test]
+    fn paper_benchmark_signatures() {
+        use crate::kernels::BenchId;
+        let sig = |id: BenchId| sig_of(id.source());
+        assert!(!sig(BenchId::VecAdd).uses_branches);
+        assert_eq!(sig(BenchId::VecAdd).stack_bound, StackBound::AtMost(0));
+        assert!(!sig(BenchId::Bitonic).uses_multiplier, "paper §5.2");
+        assert!(sig(BenchId::MatMul).uses_third_operand, "MAD loop");
+        // Every looping benchmark's depth is dynamic (profiling's job).
+        for id in [BenchId::Autocorr, BenchId::Bitonic, BenchId::MatMul] {
+            assert_eq!(sig(id).stack_bound, StackBound::Unbounded, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn refinement_tightens_stack_and_drops_idle_multiplier() {
+        let s = sig_of(crate::kernels::BenchId::MatMul.source());
+        let r = s.refined(0, 12_345);
+        assert_eq!(r.stack_bound, StackBound::AtMost(0));
+        assert!(r.uses_multiplier, "dynamically used -> kept");
+        let r = s.refined(2, 0);
+        assert!(!r.uses_multiplier && !r.uses_third_operand, "never issued -> dropped");
+        assert_eq!(r.stack_bound, StackBound::AtMost(2));
+    }
+
+    #[test]
+    fn required_depth_saturates_unbounded() {
+        assert_eq!(StackBound::AtMost(5).required_depth(), 5);
+        assert_eq!(StackBound::Unbounded.required_depth(), MAX_STACK_BOUND);
+    }
+}

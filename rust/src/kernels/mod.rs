@@ -6,10 +6,11 @@
 
 pub mod golden;
 
-use crate::asm::{assemble, Kernel};
 use crate::gpgpu::{Gpgpu, LaunchConfig, LaunchResult};
+use crate::registry::{KernelRegistry, PreparedKernel};
 use crate::rng::XorShift64;
 use crate::sim::{AluBackend, AluFactory, GlobalMem, SimError, SmStats};
+use std::sync::Arc;
 
 /// Device byte address where benchmark inputs begin.
 pub const IN_BASE: u32 = 0x1000;
@@ -102,7 +103,10 @@ pub struct Workload {
     pub id: BenchId,
     pub n: u32,
     pub seed: u64,
-    pub kernel: Kernel,
+    /// Registry-interned kernel: repeat `prepare` calls of the same
+    /// benchmark share one assembled + pre-decoded image (`Deref`s to the
+    /// inner [`crate::asm::Kernel`]).
+    pub kernel: Arc<PreparedKernel>,
     pub phases: Vec<Phase>,
     pub gmem_bytes: u32,
     /// Input blob written at `IN_BASE` (layout is benchmark-specific).
@@ -141,7 +145,9 @@ pub fn prepare(id: BenchId, n: u32, seed: u64) -> Workload {
         n.is_power_of_two() && (32..=256).contains(&n),
         "problem size must be a power of two in 32..=256 (got {n})"
     );
-    let kernel = assemble(id.source()).expect("benchmark kernels must assemble");
+    let kernel = KernelRegistry::global()
+        .get_or_assemble(id.source())
+        .expect("benchmark kernels must assemble");
     let mut rng = XorShift64::new(seed ^ (id as u64) << 32);
     let input: Vec<i32> = (0..id.input_elems(n)).map(|_| rng.small_i32()).collect();
 
@@ -266,11 +272,25 @@ impl Workload {
         gmem: &mut GlobalMem,
         alu: &mut dyn AluBackend,
     ) -> Result<BenchRun, SimError> {
+        self.run_admitted(gpgpu, &self.kernel.sig, gmem, alu)
+    }
+
+    /// [`Workload::run`] admitted on an explicit (e.g. profile-refined)
+    /// signature — the coordinator's routed launches use the same
+    /// signature the router admitted on (see `Gpgpu::launch_admitted`).
+    pub fn run_admitted(
+        &self,
+        gpgpu: &Gpgpu,
+        sig: &crate::isa::CapabilitySignature,
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<BenchRun, SimError> {
         let mut phases = Vec::with_capacity(self.phases.len());
         let mut cycles = 0u64;
         let mut stats = SmStats::default();
         for ph in &self.phases {
-            let r = gpgpu.launch(&self.kernel, ph.launch, &ph.params, gmem, alu)?;
+            let r = gpgpu
+                .launch_admitted(&self.kernel, sig, ph.launch, &ph.params, gmem, alu)?;
             cycles += r.total.cycles;
             stats.merge(&r.total);
             phases.push(r);
@@ -288,11 +308,30 @@ impl Workload {
         gmem: &mut GlobalMem,
         factory: &dyn AluFactory,
     ) -> Result<BenchRun, SimError> {
+        self.run_parallel_admitted(gpgpu, &self.kernel.sig, gmem, factory)
+    }
+
+    /// [`Workload::run_parallel`] admitted on an explicit signature (see
+    /// [`Workload::run_admitted`]).
+    pub fn run_parallel_admitted(
+        &self,
+        gpgpu: &Gpgpu,
+        sig: &crate::isa::CapabilitySignature,
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<BenchRun, SimError> {
         let mut phases = Vec::with_capacity(self.phases.len());
         let mut cycles = 0u64;
         let mut stats = SmStats::default();
         for ph in &self.phases {
-            let r = gpgpu.launch_parallel(&self.kernel, ph.launch, &ph.params, gmem, factory)?;
+            let r = gpgpu.launch_parallel_admitted(
+                &self.kernel,
+                sig,
+                ph.launch,
+                &ph.params,
+                gmem,
+                factory,
+            )?;
             cycles += r.total.cycles;
             stats.merge(&r.total);
             phases.push(r);
@@ -365,6 +404,7 @@ pub fn run_verified(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::asm::assemble;
     use crate::gpgpu::GpgpuConfig;
     use crate::sim::NativeAlu;
 

@@ -33,6 +33,7 @@ pub mod gpgpu;
 pub mod harness;
 pub mod kernels;
 pub mod model;
+pub mod registry;
 pub mod runtime;
 pub mod rng;
 pub mod sim;

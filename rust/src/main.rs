@@ -25,7 +25,8 @@ fn usage() -> ! {
          flexgrip customize --bench <name> [--n 64]\n  \
          flexgrip limits\n  \
          flexgrip asm --file <kernel.flex>\n  \
-         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1]\n\n\
+         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1]\n  \
+         flexgrip fleet-demo [--n 64] [--jobs 4] [--seed N] [--out BENCH_fleet.json]\n\n\
          benchmarks: autocorr bitonic matmul reduction transpose vecadd"
     );
     std::process::exit(2);
@@ -211,11 +212,12 @@ fn cmd_customize(flags: HashMap<String, String>) -> ExitCode {
     };
     println!("customization report: {} (n={n})", id.name());
     println!(
-        "  static analysis: multiplier={} third-operand={} branches={} ({} instrs)",
-        r.analysis.uses_multiplier,
-        r.analysis.uses_third_operand,
-        r.analysis.uses_branches,
-        r.analysis.instruction_count
+        "  static signature: multiplier={} third-operand={} branches={} stack {:?} ({} instrs)",
+        r.sig.uses_multiplier,
+        r.sig.uses_third_operand,
+        r.sig.uses_branches,
+        r.sig.stack_bound,
+        r.instruction_count
     );
     println!(
         "  profiled: warp-stack high-water {}  dynamic mul/mad ops {}",
@@ -316,6 +318,55 @@ fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// Fleet replay: profile the five paper benchmarks, build the
+/// heterogeneous variant fleet, route a job mix through it, and read the
+/// modeled dynamic-energy saving against the baseline-only pool
+/// (EXPERIMENTS.md §Fleet; `BENCH_fleet.json` when --out is given).
+fn cmd_fleet_demo(flags: HashMap<String, String>) -> ExitCode {
+    let n: u32 = get(&flags, "n", 64);
+    let jobs: u32 = get(&flags, "jobs", 4);
+    let seed: u64 = get(&flags, "seed", flexgrip::harness::eval::EVAL_SEED);
+    let r = match flexgrip::harness::fleet_report(n, jobs, seed) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fleet replay failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("fleet replay: {} jobs/bench at n={n} (seed {seed})", r.jobs_per_bench);
+    for p in &r.points {
+        println!(
+            "  {:<10} -> {:<28} {:.4} W  {:>10} cycles  {:>8.3} ms  \
+             {:.2} mJ vs {:.2} mJ  ({:.1}% dyn. energy red.)",
+            p.bench,
+            p.variant,
+            p.variant_dyn_w,
+            p.cycles,
+            p.exec_ms,
+            p.fleet_mj,
+            p.baseline_mj,
+            p.reduction_pct
+        );
+    }
+    println!(
+        "  fleet-wide: {:.2} mJ vs {:.2} mJ baseline -> {:.1}% dynamic-energy \
+         reduction (paper Table 6 mix ~14%), {} mis-admissions",
+        r.fleet_mj, r.baseline_mj, r.reduction_pct, r.misadmissions
+    );
+    if let Some(path) = flags.get("out") {
+        if let Err(e) = r.write_json(path) {
+            eprintln!("writing {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+        println!("  wrote {path}");
+    }
+    if r.misadmissions > 0 {
+        eprintln!("{} job(s) failed on their routed variant", r.misadmissions);
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
@@ -332,6 +383,7 @@ fn main() -> ExitCode {
         }
         "asm" => cmd_asm(parse_flags(&rest)),
         "service-demo" => cmd_service_demo(parse_flags(&rest)),
+        "fleet-demo" => cmd_fleet_demo(parse_flags(&rest)),
         _ => usage(),
     }
 }

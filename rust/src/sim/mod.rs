@@ -38,7 +38,7 @@ pub use sm::{BlockDesc, PreDecoded, Sm};
 pub use stack::{EntryType, StackEntry, WarpStack};
 pub use warp::{Warp, WarpStatus};
 
-use crate::isa::DecodeError;
+use crate::isa::{Capability, CapabilitySignature, DecodeError, StackBound};
 
 /// Architectural faults. In hardware these would be raised to the
 /// MicroBlaze driver over AXI; the simulator propagates them to the
@@ -58,11 +58,11 @@ pub enum SimError {
     /// All live warps parked at a barrier that can never release
     /// (e.g. a barrier inside a divergent region).
     BarrierDeadlock { block: u32 },
-    /// IMUL/IMAD issued on a configuration without the multiplier
-    /// (paper §4.2 customization).
-    NoMultiplier { pc: u32 },
-    /// IMAD issued on a two-read-operand configuration (§4.2).
-    NoThirdOperand { pc: u32 },
+    /// §4.2 capability mismatch between a kernel and a customized
+    /// configuration. Raised with `pc: None` by pre-flight admission
+    /// ([`SmConfig::admit`], before any simulation) and with `pc: Some`
+    /// by the mid-run trap when an instruction reaches a removed unit.
+    Unsupported { op: &'static str, capability: Capability, pc: Option<u32> },
     /// Kernel exceeds a physical limit (Table 1) — raised by the block
     /// scheduler before execution starts.
     LimitExceeded(String),
@@ -100,13 +100,13 @@ impl std::fmt::Display for SimError {
             SimError::BarrierDeadlock { block } => {
                 write!(f, "barrier deadlock in block {block}")
             }
-            SimError::NoMultiplier { pc } => write!(
+            SimError::Unsupported { op, capability, pc: Some(pc) } => write!(
                 f,
-                "multiply instruction at pc={pc:#x} on a multiplier-less configuration"
+                "{op} at pc={pc:#x} requires {capability}, absent on this configuration"
             ),
-            SimError::NoThirdOperand { pc } => write!(
+            SimError::Unsupported { op, capability, pc: None } => write!(
                 f,
-                "IMAD at pc={pc:#x} on a two-read-operand configuration"
+                "kernel rejected at admission: {op} requires {capability}"
             ),
             SimError::LimitExceeded(s) => write!(f, "physical limit exceeded: {s}"),
             SimError::WriteConflict { addr, first_sm, second_sm } => write!(
@@ -199,6 +199,62 @@ impl SmConfig {
         }
         Ok(())
     }
+
+    /// Pre-flight admission (§4.2): reject a kernel whose capability
+    /// signature *provably* exceeds this SM, before any simulation. A
+    /// statically unbounded stack requirement is let through — the
+    /// runtime [`SimError::StackOverflow`] trap remains the backstop —
+    /// which is exactly why the fleet router uses the stricter
+    /// [`SmConfig::covers`] when it *chooses* hardware.
+    pub fn admit(&self, sig: &CapabilitySignature) -> Result<(), SimError> {
+        if sig.uses_multiplier && !self.has_multiplier {
+            return Err(SimError::Unsupported {
+                op: "IMUL/IMAD",
+                capability: Capability::Multiplier,
+                pc: None,
+            });
+        }
+        if sig.uses_third_operand && self.read_operands < 3 {
+            return Err(SimError::Unsupported {
+                op: "IMAD",
+                capability: Capability::ThirdReadOperand,
+                pc: None,
+            });
+        }
+        if let StackBound::AtMost(need) = sig.stack_bound {
+            if need > self.warp_stack_depth {
+                return Err(SimError::Unsupported {
+                    op: "SSY/BRA",
+                    capability: Capability::StackDepth {
+                        need,
+                        have: self.warp_stack_depth,
+                    },
+                    pc: None,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Conservative coverage: is this SM *guaranteed* sufficient for the
+    /// signature? Same checks as [`SmConfig::admit`], except an unbounded
+    /// stack requirement demands the full 32-deep stack. This is the
+    /// predicate the coordinator's variant router uses.
+    pub fn covers(&self, sig: &CapabilitySignature) -> bool {
+        (!sig.uses_multiplier || self.has_multiplier)
+            && (!sig.uses_third_operand || self.read_operands >= 3)
+            && self.warp_stack_depth >= sig.stack_bound.required_depth()
+    }
+}
+
+/// Device-level validation: every limit check a launch boundary needs, in
+/// one place (`GpgpuConfig::validate` delegates here, so the gpgpu and
+/// sim layers cannot drift apart).
+pub fn validate_device(sm: &SmConfig, num_sms: u32) -> Result<(), SimError> {
+    if num_sms == 0 {
+        return Err(SimError::LimitExceeded("at least one SM required".into()));
+    }
+    sm.validate()
 }
 
 impl Default for SmConfig {
@@ -230,5 +286,56 @@ mod tests {
         assert!(c.validate().is_err());
         c.has_multiplier = false;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_device_requires_an_sm() {
+        assert!(validate_device(&SmConfig::baseline(), 0).is_err());
+        assert!(validate_device(&SmConfig::baseline(), 2).is_ok());
+    }
+
+    fn sig(mul: bool, mad: bool, stack: StackBound) -> CapabilitySignature {
+        CapabilitySignature {
+            uses_multiplier: mul,
+            uses_third_operand: mad,
+            uses_branches: true,
+            stack_bound: stack,
+        }
+    }
+
+    #[test]
+    fn admit_rejects_only_provable_mismatches() {
+        let mut c = SmConfig::baseline();
+        c.warp_stack_depth = 8;
+        assert!(c.admit(&sig(true, true, StackBound::AtMost(8))).is_ok());
+        let err = c.admit(&sig(true, false, StackBound::AtMost(9))).unwrap_err();
+        assert!(matches!(
+            err,
+            SimError::Unsupported {
+                capability: Capability::StackDepth { need: 9, have: 8 },
+                pc: None,
+                ..
+            }
+        ));
+        // Unbounded = statically unknown: admitted, runtime trap backstop.
+        assert!(c.admit(&sig(true, true, StackBound::Unbounded)).is_ok());
+
+        c.has_multiplier = false;
+        c.read_operands = 2;
+        let err = c.admit(&sig(true, false, StackBound::AtMost(0))).unwrap_err();
+        assert!(matches!(
+            err,
+            SimError::Unsupported { capability: Capability::Multiplier, pc: None, .. }
+        ));
+    }
+
+    #[test]
+    fn covers_is_conservative_about_unbounded_stacks() {
+        let mut c = SmConfig::baseline();
+        c.warp_stack_depth = 16;
+        assert!(c.covers(&sig(true, true, StackBound::AtMost(16))));
+        assert!(!c.covers(&sig(true, true, StackBound::AtMost(17))));
+        assert!(!c.covers(&sig(false, false, StackBound::Unbounded)));
+        assert!(SmConfig::baseline().covers(&sig(true, true, StackBound::Unbounded)));
     }
 }

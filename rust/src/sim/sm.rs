@@ -41,7 +41,7 @@ use super::stack::{EntryType, StackEntry};
 use super::warp::Warp;
 use super::{SimError, SmConfig};
 use crate::asm::Kernel;
-use crate::isa::{Cond, Guard, Instr, Op, Operand, SpecialReg};
+use crate::isa::{Capability, Cond, Guard, Instr, Op, Operand, SpecialReg};
 
 /// A vector-fetch source for the Read stage, resolved at pre-decode:
 /// either a strided register-file gather or an immediate splat.
@@ -502,13 +502,24 @@ impl Sm {
         let eff = w.effective();
         debug_assert_ne!(eff, 0, "scheduler must not issue an empty warp");
 
-        // Customization faults (§4.2): hardware without the multiplier /
-        // third read-operand unit cannot execute these encodings.
+        // Customization traps (§4.2): hardware without the multiplier /
+        // third read-operand unit cannot execute these encodings. Launch
+        // admission (`SmConfig::admit`) rejects statically-detectable
+        // cases before simulation; this mid-run trap is the backstop for
+        // direct `Sm::run` callers, with the same structured payload.
         if uop.needs_mul && !self.cfg.has_multiplier {
-            return Err(SimError::NoMultiplier { pc: w.pc });
+            return Err(SimError::Unsupported {
+                op: uop.op.mnemonic(),
+                capability: Capability::Multiplier,
+                pc: Some(w.pc),
+            });
         }
         if uop.needs_3ops && self.cfg.read_operands < 3 {
-            return Err(SimError::NoThirdOperand { pc: w.pc });
+            return Err(SimError::Unsupported {
+                op: uop.op.mnemonic(),
+                capability: Capability::ThirdReadOperand,
+                pc: Some(w.pc),
+            });
         }
 
         // Guard evaluation (Fig. 2: predicate LUT -> instruction mask,
@@ -882,13 +893,22 @@ mod tests {
     }
 
     #[test]
-    fn multiplier_less_config_faults_on_imul() {
+    fn multiplier_less_config_traps_on_imul_mid_run() {
+        // Direct `Sm::run` bypasses launch admission, so the removed-unit
+        // trap fires at issue time, carrying the faulting pc.
         let mut cfg = SmConfig::baseline();
         cfg.has_multiplier = false;
         cfg.read_operands = 2;
         let mut g = GlobalMem::new(4096);
         let err = run_one_block_cfg(SCALE_SRC, &[0, 0], 32, &mut g, cfg).unwrap_err();
-        assert!(matches!(err, SimError::NoMultiplier { .. }));
+        assert!(matches!(
+            err,
+            SimError::Unsupported {
+                op: "IMUL",
+                capability: Capability::Multiplier,
+                pc: Some(_)
+            }
+        ));
     }
 
     /// Two warps exchange data through shared memory across a barrier:

@@ -1,0 +1,232 @@
+//! Launch admission (ISSUE 3): kernels meet devices through the
+//! capability signature. Pre-flight rejection is structured
+//! (`SimError::Unsupported`), profiled signatures route the Table-6
+//! variants, and admission is *sound*: it never rejects a kernel the
+//! baseline device can run.
+
+use flexgrip::asm::assemble;
+use flexgrip::coordinator::customize;
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use flexgrip::isa::{
+    encode::instr_size, Capability, CapabilitySignature, Cond, Guard, Instr, Op, Operand,
+    StackBound, MAX_STACK_BOUND,
+};
+use flexgrip::kernels::BenchId;
+use flexgrip::registry::PreparedKernel;
+use flexgrip::rng::XorShift64;
+use flexgrip::sim::{GlobalMem, NativeAlu, SimError, SmConfig};
+
+fn launch_on(src: &str, cfg: GpgpuConfig) -> Result<(), SimError> {
+    let k = assemble(src).unwrap();
+    let mut g = GlobalMem::new(4096);
+    let mut alu = NativeAlu;
+    Gpgpu::new(cfg)
+        .launch(&k, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu)
+        .map(|_| ())
+}
+
+fn multiplierless() -> GpgpuConfig {
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.has_multiplier = false;
+    cfg.sm.read_operands = 2;
+    cfg
+}
+
+#[test]
+fn imul_and_imad_kernels_rejected_at_launch() {
+    // Satellite: an IMUL/IMAD kernel on a multiplier-less device is
+    // rejected *at launch* (pc: None — nothing was simulated).
+    let err = launch_on("IMUL R1, R2, R3\nEXIT", multiplierless()).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SimError::Unsupported { capability: Capability::Multiplier, pc: None, .. }
+        ),
+        "{err}"
+    );
+    let err = launch_on("IMAD R1, R2, R3, R4\nEXIT", multiplierless()).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SimError::Unsupported {
+                capability: Capability::Multiplier | Capability::ThirdReadOperand,
+                pc: None,
+                ..
+            }
+        ),
+        "{err}"
+    );
+    // The same kernels pass on the baseline.
+    launch_on("IMUL R1, R2, R3\nEXIT", GpgpuConfig::new(1, 8)).unwrap();
+}
+
+#[test]
+fn provable_stack_shortfall_rejected_at_launch() {
+    // Three nested SSYs have an exact static bound of 3: a depth-2 device
+    // refuses them pre-flight with the structured need/have payload.
+    let src = "SSY a\nSSY a\nSSY a\na:\nJOIN\nJOIN\nJOIN\nEXIT";
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.warp_stack_depth = 2;
+    let err = launch_on(src, cfg).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SimError::Unsupported {
+                capability: Capability::StackDepth { need: 3, have: 2 },
+                pc: None,
+                ..
+            }
+        ),
+        "{err}"
+    );
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.warp_stack_depth = 3;
+    launch_on(src, cfg).unwrap();
+}
+
+#[test]
+fn autocorr_profile_admits_depth_16_rejects_depth_8() {
+    // Satellite: autocorr's measured Table-6 depth is 16. The refined
+    // signature is admitted at depth 16 and rejected at depth 8 — by
+    // both the public capability check and the admission error path.
+    let r = customize::profile(BenchId::Autocorr, 64, 7).unwrap();
+    let sig = r.refined_signature();
+    assert_eq!(sig.stack_bound, StackBound::AtMost(16));
+
+    let mut cfg16 = GpgpuConfig::new(1, 8);
+    cfg16.sm.warp_stack_depth = 16;
+    assert!(Gpgpu::new(cfg16).supports(&sig));
+    cfg16.sm.admit(&sig).unwrap();
+
+    let mut cfg8 = GpgpuConfig::new(1, 8);
+    cfg8.sm.warp_stack_depth = 8;
+    assert!(!Gpgpu::new(cfg8).supports(&sig));
+    let err = cfg8.sm.admit(&sig).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SimError::Unsupported {
+                capability: Capability::StackDepth { need: 16, have: 8 },
+                ..
+            }
+        ),
+        "{err}"
+    );
+}
+
+#[test]
+fn refined_signature_admits_where_the_static_one_rejects() {
+    // A uniform guarded branch makes the static bound over-approximate
+    // (AtMost(2)) while the measured high-water is 1. The routed-launch
+    // path (`launch_admitted` with the refined signature — what the
+    // coordinator's shards do) must accept the depth-1 variant that
+    // static admission refuses; this is the regression test for routing
+    // and admission disagreeing about the same job.
+    let src = "S2R R0, SR_TID\nISETP P0, R0, #100\nSSY e\n@P0.LT BRA t\nJOIN\nt:\nJOIN\ne:\nEXIT";
+    let pk = PreparedKernel::new(assemble(src).unwrap());
+    assert_eq!(pk.sig.stack_bound, StackBound::AtMost(2), "static over-approximates");
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.warp_stack_depth = 1;
+    let gp = Gpgpu::new(cfg);
+    let mut g = GlobalMem::new(4096);
+    let mut alu = NativeAlu;
+    let err = gp
+        .launch_prepared(&pk, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu)
+        .unwrap_err();
+    assert!(
+        matches!(
+            err,
+            SimError::Unsupported {
+                capability: Capability::StackDepth { need: 2, have: 1 },
+                ..
+            }
+        ),
+        "{err}"
+    );
+    let refined = pk.sig.refined(1, 0);
+    gp.launch_admitted(&pk, &refined, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu)
+        .unwrap();
+}
+
+#[test]
+fn statically_unbounded_stack_admits_and_runs_on_profiled_depth() {
+    // Loops saturate the static bound, so admission lets the launch
+    // through and the measured depth is what actually matters: bitonic
+    // (static Unbounded, measured 2) must run on its depth-2 variant.
+    let w = flexgrip::kernels::prepare(BenchId::Bitonic, 64, 7);
+    assert_eq!(w.kernel.sig.stack_bound, StackBound::Unbounded);
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.warp_stack_depth = 2;
+    cfg.sm.has_multiplier = false;
+    cfg.sm.read_operands = 2;
+    let gpgpu = Gpgpu::new(cfg);
+    let mut gmem = w.make_gmem();
+    let mut alu = NativeAlu;
+    w.run(&gpgpu, &mut gmem, &mut alu).unwrap();
+    w.verify(&gmem).unwrap();
+}
+
+/// Random instruction program over every opcode, with branch targets
+/// resolved to real instruction addresses so the signature walk sees a
+/// plausible CFG.
+fn random_program(rng: &mut XorShift64) -> Vec<(u32, Instr)> {
+    let len = 1 + rng.below(40) as usize;
+    let mut instrs: Vec<Instr> = Vec::with_capacity(len);
+    for _ in 0..len {
+        let op = Op::ALL[rng.below(Op::ALL.len() as u64) as usize];
+        let mut i = Instr { op, ..Instr::NOP };
+        if rng.below(3) == 0 {
+            i.guard = Guard { preg: rng.below(4) as u8, cond: Cond::Lt };
+        }
+        // Operand detail does not affect the signature; branches get a
+        // placeholder immediate so instr_size is the 8-byte form.
+        if matches!(op, Op::Bra | Op::Ssy) {
+            i.src2 = Operand::Imm(0);
+        }
+        i.size = instr_size(op, matches!(i.src2, Operand::Imm(_)));
+        instrs.push(i);
+    }
+    let mut pcs = Vec::with_capacity(len);
+    let mut at = 0u32;
+    for i in &instrs {
+        pcs.push(at);
+        at += i.size as u32;
+    }
+    for i in instrs.iter_mut() {
+        if matches!(i.op, Op::Bra | Op::Ssy) {
+            let target = pcs[rng.below(len as u64) as usize];
+            i.src2 = Operand::Imm(target as i32);
+        }
+    }
+    pcs.into_iter().zip(instrs).collect()
+}
+
+#[test]
+fn prop_admission_never_rejects_what_the_baseline_runs_500() {
+    // Satellite property: whatever the static analysis concludes, the
+    // full baseline device (multiplier, 3 operands, 32-deep stack) must
+    // admit and cover every program — the bound clamps at 32 instead of
+    // ever over-claiming past the architectural maximum.
+    let mut rng = XorShift64::new(0xAD317);
+    let baseline = SmConfig::baseline();
+    for case in 0..500 {
+        let prog = random_program(&mut rng);
+        let sig = CapabilitySignature::of_program(&prog);
+        if let StackBound::AtMost(b) = sig.stack_bound {
+            assert!(b <= MAX_STACK_BOUND, "case {case}: bound {b}");
+        }
+        baseline
+            .admit(&sig)
+            .unwrap_or_else(|e| panic!("case {case}: baseline rejected: {e}"));
+        assert!(baseline.covers(&sig), "case {case}: baseline must cover");
+    }
+}
+
+#[test]
+fn every_paper_benchmark_admitted_on_the_baseline() {
+    let baseline = Gpgpu::new(GpgpuConfig::new(1, 8));
+    for id in BenchId::ALL {
+        let k = assemble(id.source()).unwrap();
+        assert!(baseline.supports(&k.signature()), "{}", id.name());
+    }
+}

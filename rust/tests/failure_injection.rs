@@ -4,6 +4,7 @@
 
 use flexgrip::asm::assemble;
 use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use flexgrip::isa::Capability;
 use flexgrip::sim::{GlobalMem, NativeAlu, SimError, SmConfig};
 
 fn launch_src(src: &str, cfg: GpgpuConfig, block: u32) -> Result<(), SimError> {
@@ -45,15 +46,13 @@ fn shared_oob_faults_independently_of_global() {
 
 #[test]
 fn stack_overflow_names_warp_and_depth() {
+    // A push-per-iteration loop defeats the static bound (it saturates to
+    // Unbounded, so pre-flight admission lets the launch through — see
+    // tests/admission.rs for the statically-provable case), and the
+    // runtime trap is the backstop that names warp and depth.
     let mut cfg = GpgpuConfig::new(1, 8);
     cfg.sm.warp_stack_depth = 2;
-    // 3 nested SSYs overflow a depth-2 stack before any branch.
-    let err = launch_src(
-        "SSY a\nSSY a\nSSY a\na:\nJOIN\nJOIN\nJOIN\nEXIT",
-        cfg,
-        32,
-    )
-    .unwrap_err();
+    let err = launch_src("a:\nSSY b\nBRA a\nb:\nEXIT", cfg, 32).unwrap_err();
     assert!(matches!(err, SimError::StackOverflow { depth: 2, .. }), "{err}");
 }
 
@@ -109,15 +108,25 @@ fn illegal_opcode_in_binary_faults_at_fetch() {
 }
 
 #[test]
-fn multiplier_and_third_operand_faults_are_distinct() {
+fn capability_mismatch_is_a_structured_preflight_error() {
     let mut cfg = GpgpuConfig::new(1, 8);
     cfg.sm.has_multiplier = false;
     cfg.sm.read_operands = 2;
     let err = launch_src("IMUL R1, R2, R3\nEXIT", cfg, 32).unwrap_err();
-    assert!(matches!(err, SimError::NoMultiplier { .. }));
+    assert!(matches!(
+        err,
+        SimError::Unsupported { capability: Capability::Multiplier, pc: None, .. }
+    ));
     let err = launch_src("IMAD R1, R2, R3, R4\nEXIT", cfg, 32).unwrap_err();
     // IMAD is caught by the multiplier check first (it multiplies).
-    assert!(matches!(err, SimError::NoMultiplier { .. } | SimError::NoThirdOperand { .. }));
+    assert!(matches!(
+        err,
+        SimError::Unsupported {
+            capability: Capability::Multiplier | Capability::ThirdReadOperand,
+            pc: None,
+            ..
+        }
+    ));
 }
 
 #[test]

@@ -1,0 +1,128 @@
+//! Heterogeneous fleet (ISSUE 3): capability routing, per-variant
+//! metrics, baseline fallback, and the registry-backed serving path.
+
+use flexgrip::coordinator::{
+    customize, FleetConfig, GpgpuService, Request, VariantSpec,
+};
+use flexgrip::gpgpu::GpgpuConfig;
+use flexgrip::kernels::BenchId;
+
+fn variant(label: &str, depth: u32, mul: bool) -> VariantSpec {
+    let mut cfg = GpgpuConfig::new(1, 8);
+    cfg.sm.warp_stack_depth = depth;
+    cfg.sm.has_multiplier = mul;
+    if !mul {
+        cfg.sm.read_operands = 2;
+    }
+    VariantSpec::new(label, cfg)
+}
+
+/// Baseline + the three distinct Table-6 variants.
+fn paper_fleet() -> GpgpuService {
+    let svc = GpgpuService::start_fleet(FleetConfig {
+        variants: vec![
+            variant("baseline", 32, true),
+            variant("stack16", 16, true),
+            variant("stack0", 0, true),
+            variant("nomul", 2, false),
+        ],
+        queue_depth: 16,
+    });
+    for id in BenchId::PAPER {
+        let r = customize::profile(id, 32, 5).expect("profile");
+        svc.register_profile(id, r.refined_signature());
+    }
+    svc
+}
+
+#[test]
+fn jobs_route_to_the_cheapest_covering_variant() {
+    let svc = paper_fleet();
+    let expect = [
+        (BenchId::Autocorr, "stack16"),
+        (BenchId::Bitonic, "nomul"),
+        (BenchId::MatMul, "stack0"),
+        (BenchId::Reduction, "stack0"),
+        (BenchId::Transpose, "stack0"),
+    ];
+    for (id, want) in expect {
+        let out = svc
+            .submit(Request::Bench { id, n: 32, seed: 9 })
+            .wait()
+            .unwrap_or_else(|e| panic!("{}: {e}", id.name()));
+        assert!(out.verified, "{}", id.name());
+        assert_eq!(out.variant, want, "{} routed wrong", id.name());
+    }
+    // Per-variant metrics: every customized variant did work; the
+    // baseline fallback stayed idle.
+    let by_label: std::collections::HashMap<String, u64> = svc
+        .variant_metrics()
+        .into_iter()
+        .map(|(l, m)| (l, m.jobs_completed))
+        .collect();
+    assert_eq!(by_label["baseline"], 0);
+    assert_eq!(by_label["stack16"], 1);
+    assert_eq!(by_label["stack0"], 3);
+    assert_eq!(by_label["nomul"], 1);
+    assert_eq!(svc.metrics().jobs_completed, 5);
+}
+
+#[test]
+fn unprofiled_jobs_fall_back_to_the_most_capable_variant() {
+    // Without a registered profile, the static signature of every looping
+    // benchmark is stack-Unbounded: only the full-depth baseline covers
+    // it, so the router must fall back there — and the job still runs.
+    let svc = GpgpuService::start_fleet(FleetConfig {
+        variants: vec![variant("nomul", 2, false), variant("baseline", 32, true)],
+        queue_depth: 16,
+    });
+    let out = svc
+        .submit(Request::Bench { id: BenchId::MatMul, n: 32, seed: 1 })
+        .wait()
+        .unwrap();
+    assert!(out.verified);
+    assert_eq!(out.variant, "baseline");
+    // A straight-line, multiplier-free kernel routes off the fallback
+    // even statically.
+    let out = svc
+        .submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 })
+        .wait()
+        .unwrap();
+    assert_eq!(out.variant, "nomul");
+}
+
+#[test]
+fn misrouted_profile_fails_structured_not_silent() {
+    // Register a bogus profile that routes matmul onto the
+    // multiplier-less variant. The shard launches admit on the routed
+    // (lying) signature, so the failure surfaces as the structured
+    // mid-run removed-unit trap — failing only that ticket, never
+    // silently corrupting.
+    let svc = GpgpuService::start_fleet(FleetConfig {
+        variants: vec![variant("baseline", 32, true), variant("nomul", 2, false)],
+        queue_depth: 16,
+    });
+    let r = customize::profile(BenchId::Bitonic, 32, 5).unwrap();
+    // bitonic's (mul-free) signature attached to matmul — a lying profile.
+    svc.register_profile(BenchId::MatMul, r.refined_signature());
+    let err = svc
+        .submit(Request::Bench { id: BenchId::MatMul, n: 32, seed: 2 })
+        .wait()
+        .expect_err("matmul cannot run without a multiplier");
+    assert!(err.contains("multiplier"), "{err}");
+    // The shard survives and the aggregate counters record the failure.
+    let ok = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 2 }).wait();
+    assert!(ok.unwrap().verified);
+    assert_eq!(svc.metrics().jobs_failed, 1);
+    assert_eq!(svc.metrics().jobs_completed, 1);
+}
+
+#[test]
+fn variant_power_orders_the_routing() {
+    let svc = paper_fleet();
+    let power: std::collections::HashMap<String, f64> =
+        svc.variant_power().into_iter().collect();
+    assert!(power["nomul"] < power["stack0"]);
+    assert!(power["stack0"] < power["stack16"]);
+    assert!(power["stack16"] < power["baseline"]);
+}

@@ -12,7 +12,11 @@ use flexgrip::sim::{GlobalMem, NativeAlu, SimError};
 
 /// Run one paper workload both ways and compare everything observable.
 fn assert_deterministic(id: BenchId, n: u32, sms: u32, sp: u32, seed: u64) {
-    let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, sp));
+    assert_deterministic_cfg(id, n, GpgpuConfig::new(sms, sp), seed);
+}
+
+fn assert_deterministic_cfg(id: BenchId, n: u32, cfg: GpgpuConfig, seed: u64) {
+    let gpgpu = Gpgpu::new(cfg);
     let w = kernels::prepare(id, n, seed);
 
     let mut g_seq = w.make_gmem();
@@ -96,6 +100,22 @@ fn prop_cow_parallel_matches_sequential_on_randomized_geometries() {
             eprintln!("case {case}: {} n={n} {sms}sm {sp}sp seed={seed:#x}", id.name());
             assert_deterministic(id, n, sms, sp, seed);
         }
+    }
+}
+
+#[test]
+fn customized_variants_stay_deterministic() {
+    // ISSUE-3 acceptance: the sequential-vs-parallel determinism contract
+    // holds on the paper's customized variants too — bitonic on the
+    // multiplier-less depth-2 device, autocorr on the depth-16 one.
+    for (id, depth, mul) in [(BenchId::Bitonic, 2u32, false), (BenchId::Autocorr, 16, true)] {
+        let mut cfg = GpgpuConfig::new(2, 8);
+        cfg.sm.warp_stack_depth = depth;
+        cfg.sm.has_multiplier = mul;
+        if !mul {
+            cfg.sm.read_operands = 2;
+        }
+        assert_deterministic_cfg(id, 64, cfg, 0xC057);
     }
 }
 
