@@ -9,6 +9,10 @@
 //!   vs 16/32-SP widths vs a 4-shard coordinator pool, swept over three
 //!   benchmark shapes and emitted as `BENCH_scaling.json` (one report
 //!   object per benchmark);
+//! * memory-hierarchy sweep: the paper benchmarks + the memstress stride
+//!   variants under flat memory and three L1/BRAM geometries, emitted as
+//!   `BENCH_memory.json` (hit rate, stall/contention cycles, modeled
+//!   dynamic energy per point);
 //! * native ALU lane throughput;
 //! * XLA ALU backend (skipped gracefully when PJRT is unavailable);
 //! * assembler + pre-decode throughput;
@@ -21,9 +25,11 @@
 use flexgrip::asm::assemble;
 use flexgrip::baseline::{self, MbTiming};
 use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
-use flexgrip::harness::{bench, scaling_suite, write_suite_json, HotPathPoint, HotPathReport};
+use flexgrip::harness::{
+    bench, memory_report, scaling_suite, write_suite_json, HotPathPoint, HotPathReport,
+};
 use flexgrip::isa::Cond;
-use flexgrip::kernels::{self, BenchId};
+use flexgrip::kernels::{self, BenchId, RunOptions};
 use flexgrip::runtime::{Artifacts, XlaAlu, XlaBatchAlu, XLA_BATCH};
 use flexgrip::sim::{AluBackend, AluFunc, NativeAlu, WarpAluIn};
 use std::sync::Arc;
@@ -44,15 +50,13 @@ fn main() {
     for id in BenchId::PAPER {
         let w = kernels::prepare(id, ips_n, 1);
         let (warp_instrs, thread_instrs) = {
-            let mut alu = NativeAlu;
             let mut g = w.make_gmem();
-            let stats = w.run(&gpgpu, &mut g, &mut alu).unwrap().stats;
+            let stats = w.run(&gpgpu, &mut g, RunOptions::default()).unwrap().stats;
             (stats.instructions, stats.thread_instructions)
         };
         let r = bench(&format!("sim_{}{}_1sm8sp", id.name(), ips_n), samples, || {
-            let mut alu = NativeAlu;
             let mut g = w.make_gmem();
-            w.run(&gpgpu, &mut g, &mut alu).unwrap().cycles
+            w.run(&gpgpu, &mut g, RunOptions::default()).unwrap().cycles
         });
         let wall_ms = r.median().as_secs_f64() * 1e3;
         let instrs_per_sec = warp_instrs as f64 / r.median().as_secs_f64();
@@ -83,9 +87,8 @@ fn main() {
     // Divergence-heavy path.
     let wd = kernels::prepare(BenchId::Bitonic, if fast { 64 } else { 256 }, 1);
     bench("sim_bitonic_divergent", samples, || {
-        let mut alu = NativeAlu;
         let mut g = wd.make_gmem();
-        wd.run(&gpgpu, &mut g, &mut alu).unwrap().cycles
+        wd.run(&gpgpu, &mut g, RunOptions::default()).unwrap().cycles
     });
 
     // Multi-SM / SP-width scaling suite: sequential vs the scoped-thread
@@ -120,6 +123,27 @@ fn main() {
     }
     write_suite_json("BENCH_scaling.json", &reports).expect("write BENCH_scaling.json");
     println!("  -> wrote BENCH_scaling.json\n");
+
+    // Memory-hierarchy sweep: every cached point is verified against the
+    // golden reference AND asserted bit-identical to the flat run.
+    let mem_n = if fast { 64 } else { 256 };
+    println!("--- memory hierarchy sweep (n={mem_n}) ---");
+    let mem = memory_report(mem_n, 1);
+    for p in &mem.points {
+        println!(
+            "{:<16} {:<12} {:>8} hits {:>8} misses ({:>5.1}% hit)  \
+             {:>10} cycles  {:.3} mJ",
+            p.bench,
+            p.cache,
+            p.hits,
+            p.misses,
+            100.0 * p.hit_rate,
+            p.cycles,
+            p.energy_mj
+        );
+    }
+    mem.write_json("BENCH_memory.json").expect("write BENCH_memory.json");
+    println!("  -> wrote BENCH_memory.json\n");
 
     // Native ALU throughput.
     let input = WarpAluIn {

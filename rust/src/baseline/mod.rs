@@ -55,6 +55,7 @@ pub fn run_verified(id: BenchId, n: u32, seed: u64, timing: MbTiming) -> Result<
         BenchId::VecAdd => {
             mb.read_words(b(2 * n), nn) == golden::vecadd(&input[..nn], &input[nn..])
         }
+        BenchId::MemStress => mb.read_words(b(n), nn) == golden::memstress(&input, 1),
     };
     if !ok {
         return Err(MbError::WrongResult(id.name()));

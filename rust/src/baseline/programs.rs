@@ -20,6 +20,7 @@ pub fn build_program(id: BenchId, n: u32) -> MbProgram {
         BenchId::MatMul => matmul(n),
         BenchId::Reduction => reduction(n),
         BenchId::Transpose => transpose(n),
+        BenchId::MemStress => memstress(n),
     }
 }
 
@@ -222,6 +223,39 @@ fn transpose(n: u32) -> MbProgram {
     b.branch(MbOp::Blt(2, 4, 0), lj);
     b.push(MbOp::Addi(1, 1, 1));
     b.branch(MbOp::Blt(1, 4, 0), li);
+    b.push(MbOp::Halt);
+    b.build()
+}
+
+/// out[t] = sum_{j=0}^{7} in[(t + j) & (n-1)] — the stride-1 form of
+/// the memory-stress walk (strided variants exist only on the GPGPU
+/// side, via `kernels::prepare_memstress`).
+fn memstress(n: u32) -> MbProgram {
+    let n = n as i32;
+    let mut b = MbBuilder::new();
+    let lt = b.label();
+    let lj = b.label();
+    b.push(MbOp::Li(10, IB)); // in
+    b.push(MbOp::Li(11, IB + 4 * n)); // out
+    b.push(MbOp::Li(12, n - 1)); // index mask (n is a power of two)
+    b.push(MbOp::Li(13, n));
+    b.push(MbOp::Li(14, 8)); // trips
+    b.push(MbOp::Li(1, 0)); // t
+    b.bind(lt);
+    b.push(MbOp::Li(3, 0)); // acc
+    b.push(MbOp::Li(2, 0)); // j
+    b.bind(lj);
+    b.push(MbOp::Add(4, 1, 2)); // t + j (stride 1)
+    b.push(MbOp::And(4, 4, 12));
+    b.push(MbOp::Slli(4, 4, 2));
+    b.push(MbOp::Lw(5, 10, 4));
+    b.push(MbOp::Add(3, 3, 5));
+    b.push(MbOp::Addi(2, 2, 1));
+    b.branch(MbOp::Blt(2, 14, 0), lj);
+    b.push(MbOp::Slli(4, 1, 2));
+    b.push(MbOp::Sw(3, 11, 4)); // out[t] = acc
+    b.push(MbOp::Addi(1, 1, 1));
+    b.branch(MbOp::Blt(1, 13, 0), lt);
     b.push(MbOp::Halt);
     b.build()
 }

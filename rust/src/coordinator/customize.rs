@@ -13,7 +13,7 @@
 use crate::asm::Kernel;
 use crate::gpgpu::{Gpgpu, GpgpuConfig};
 use crate::isa::CapabilitySignature;
-use crate::kernels::{self, BenchId};
+use crate::kernels::{self, BenchId, RunOptions};
 use crate::model::{area::area, power::power, ArchParams};
 use crate::sim::{NativeAlu, SimError};
 
@@ -71,9 +71,8 @@ pub fn profile(bench: BenchId, n: u32, seed: u64) -> Result<CustomizationReport,
     let instruction_count = workload.kernel.instrs.len();
 
     let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
-    let mut alu = NativeAlu;
     let mut gmem = workload.make_gmem();
-    let run = workload.run(&gpgpu, &mut gmem, &mut alu)?;
+    let run = workload.run(&gpgpu, &mut gmem, RunOptions::default())?;
     if let Err(e) = workload.verify(&gmem) {
         return Err(SimError::LimitExceeded(format!("profiling run invalid: {e}")));
     }
@@ -84,6 +83,7 @@ pub fn profile(bench: BenchId, n: u32, seed: u64) -> Result<CustomizationReport,
         num_sp: 8,
         warp_stack_depth: run.stats.max_stack_depth,
         has_multiplier: needs_mul,
+        l1: None,
     };
     let base = ArchParams::baseline();
     let lut_red = area(&recommended).lut_reduction_pct(&area(&base));
@@ -166,11 +166,10 @@ mod tests {
         // simulation.
         let r = profile(BenchId::Bitonic, 64, 7).unwrap();
         let gpgpu = Gpgpu::new(r.recommended_config());
-        let mut alu = NativeAlu;
         let w = kernels::prepare(BenchId::MatMul, 32, 7);
         assert!(!gpgpu.supports(&w.kernel.sig));
         let mut gmem = w.make_gmem();
-        let err = w.run(&gpgpu, &mut gmem, &mut alu).unwrap_err();
+        let err = w.run(&gpgpu, &mut gmem, RunOptions::default()).unwrap_err();
         assert!(matches!(
             err,
             SimError::Unsupported { capability: Capability::Multiplier, pc: None, .. }

@@ -18,7 +18,7 @@
 //! (baseline) variant — the paper's stored-bitstream scenario (§5.2) as
 //! a runtime scheduling concern. The routed signature travels with the
 //! job and the shard's launch admits on exactly that signature
-//! (`Gpgpu::launch_admitted`), so a profile-refined requirement can never
+//! (`LaunchRequest::admit`), so a profile-refined requirement can never
 //! be re-rejected by the static one on the variant the router chose; a
 //! *lying* profile surfaces as the structured mid-run removed-unit or
 //! stack-overflow trap, failing only its own ticket. Backpressure applies
@@ -27,9 +27,9 @@
 //! Kernel binaries reach the devices through the process-wide
 //! [`KernelRegistry`], so repeat launches of the same benchmark skip
 //! assembly, pre-decode and signature analysis; each job's launch uses
-//! the parallel multi-SM path (`Gpgpu::launch_parallel_prepared`), so a
-//! 2-SM shard simulates its SMs concurrently while other shards run
-//! other jobs.
+//! the parallel multi-SM path (`LaunchRequest::parallel`), so a 2-SM
+//! shard simulates its SMs concurrently while other shards run other
+//! jobs.
 //!
 //! Shutdown is graceful: dropping the service stops intake, lets every
 //! group drain its queued jobs (each ticket still resolves), then joins
@@ -45,12 +45,12 @@ pub mod customize;
 pub use customize::{analyze_kernel, profile, CustomizationReport};
 
 use crate::asm::Kernel;
-use crate::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use crate::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig, LaunchRequest};
 use crate::isa::CapabilitySignature;
-use crate::kernels::{self, BenchId};
+use crate::kernels::{self, BenchId, RunOptions};
 use crate::model::{power::power, ArchParams};
 use crate::registry::{KernelRegistry, PreparedKernel};
-use crate::sim::{GlobalMem, NativeAlu, SimError, SmStats};
+use crate::sim::{GlobalMem, SimError, SmStats};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -65,11 +65,11 @@ pub enum Request {
     /// Launch an arbitrary assembled kernel: the driver writes `inputs`
     /// into device memory, launches, and reads `read_back` words out.
     ///
-    /// Executed through `Gpgpu::launch_parallel_prepared`. If the
+    /// Executed through the parallel mode of `Gpgpu::launch`. If the
     /// kernel's blocks overlap writes across SMs, the rejected merge
     /// leaves device memory untouched and the shard transparently retries
-    /// on the sequential `Gpgpu::launch_prepared` (which permits
-    /// overlapping writes, SM order). One contract remains on the caller
+    /// the request in sequential mode (which permits overlapping writes,
+    /// SM order). One contract remains on the caller
     /// for multi-SM devices: blocks must not *read* data written by
     /// blocks on another SM within the same launch — that dependency is
     /// undetectable (see `gpgpu` module docs) and such kernels should be
@@ -212,7 +212,7 @@ impl MetricsSnapshot {
 
 /// A queued job: the request, the signature the router admitted it on
 /// (the shard launches with exactly this signature — see
-/// `Gpgpu::launch_admitted` — so profile refinement can never self-reject
+/// `LaunchRequest::admit` — so profile refinement can never self-reject
 /// on the routed variant), and the reply channel.
 type Job = (Request, CapabilitySignature, mpsc::Sender<Result<JobOutput, String>>);
 
@@ -502,7 +502,7 @@ fn run_one(
             let w = kernels::prepare(id, n, seed);
             let mut gmem = w.make_gmem();
             let run = w
-                .run_parallel_admitted(gpgpu, &sig, &mut gmem, &NativeAlu)
+                .run(gpgpu, &mut gmem, RunOptions::new().parallel().admit(sig))
                 .map_err(|e| e.to_string())?;
             let verified = w.verify(&gmem).map(|_| true)?;
             Ok(JobOutput {
@@ -532,15 +532,16 @@ fn run_one(
             for (addr, words) in &inputs {
                 gmem.write_words(*addr, words).map_err(|e| e.to_string())?;
             }
-            let launched = match gpgpu
-                .launch_parallel_prepared(&pk, launch, &params, &mut gmem, &NativeAlu)
-            {
+            let launched = match gpgpu.launch(
+                LaunchRequest::new(&pk, launch, &mut gmem).params(&params).parallel(),
+            ) {
                 Err(SimError::WriteConflict { .. }) => {
                     // Arbitrary user kernels may legally overlap writes
                     // across SMs; the rejected merge left gmem untouched,
                     // so fall back to the sequential reference path.
-                    let mut alu = NativeAlu;
-                    gpgpu.launch_prepared(&pk, launch, &params, &mut gmem, &mut alu)
+                    gpgpu.launch(
+                        LaunchRequest::new(&pk, launch, &mut gmem).params(&params),
+                    )
                 }
                 other => other,
             };

@@ -1,9 +1,29 @@
 //! The FlexGrip GPGPU top level: block scheduler + one or more streaming
 //! multiprocessors (paper §3.1, §4.3).
 //!
-//! # Execution model: partition → simulate → merge
+//! # One entry point: [`Gpgpu::launch`] with a [`LaunchRequest`]
 //!
-//! Every kernel launch runs in three phases:
+//! Every kernel launch goes through the single [`Gpgpu::launch`] method.
+//! A [`LaunchRequest`] bundles the kernel (raw [`Kernel`] or
+//! registry-cached [`PreparedKernel`]), the geometry, the parameters, the
+//! target [`GlobalMem`], and three optional knobs:
+//!
+//! * **execution mode** — default is sequential with the built-in
+//!   [`NativeAlu`]; [`LaunchRequest::sequential`] supplies a foreign
+//!   `&mut dyn AluBackend`; [`LaunchRequest::parallel`] /
+//!   [`LaunchRequest::parallel_with`] run one scoped OS thread per SM;
+//! * **admission signature** — [`LaunchRequest::admit`] overrides the
+//!   kernel-derived [`CapabilitySignature`] with a profile-refined one
+//!   (the coordinator's routed launches use this);
+//! * **memory hierarchy** — [`LaunchRequest::memory`] overrides the
+//!   device's [`MemoryConfig`] (flat AXI vs. per-SM L1/BRAM cache).
+//!
+//! The pre-redesign entry points (`launch_prepared`, `launch_admitted`,
+//! `launch_parallel`, `launch_parallel_prepared`,
+//! `launch_parallel_admitted`) survive as thin `#[deprecated]` shims over
+//! the same request type.
+//!
+//! # Execution model: partition → simulate → merge
 //!
 //! 1. **Partition** — the block scheduler validates the configuration and
 //!    kernel resources, runs pre-flight admission against the kernel's
@@ -14,9 +34,8 @@
 //!    equally and automatically distributed thread blocks to the 2 SMs",
 //!    §5.1.1).
 //! 2. **Simulate** — each SM executes its block queue to completion.
-//!    [`Gpgpu::launch`] simulates the SMs sequentially against the shared
-//!    [`GlobalMem`] (the reference path, usable with any
-//!    `&mut dyn AluBackend`). [`Gpgpu::launch_parallel`] instead runs each
+//!    Sequential mode simulates the SMs one after another against the
+//!    shared [`GlobalMem`] (the reference path). Parallel mode runs each
 //!    SM on its own scoped OS thread: every SM gets a private
 //!    copy-on-write [`GmemSnapshot`] (reads fall through to the shared
 //!    launch-time base; the first store to a 1 KiB page faults in a
@@ -24,26 +43,33 @@
 //!    [`AluFactory`], so no mutable simulation state is shared between
 //!    threads and per-SM setup is O(touched pages), not O(mem).
 //!
+//!    When an L1 is configured ([`MemoryConfig`]), each SM's memory port
+//!    is wrapped in [`crate::sim::CachedGmem`]: a tags-only BRAM cache
+//!    layer that re-prices global accesses (hits block at BRAM speed,
+//!    misses park the warp on a line fill, SMs sharing a partition fill
+//!    port contend) but never holds data — values stay bit-identical to
+//!    flat memory by construction, on both paths.
+//!
 //!    Trait objects stop at this boundary: inside the simulate phase the
 //!    engine is monomorphized over the concrete memory port and — when
 //!    [`AluBackend::is_native`] — the concrete [`NativeAlu`], so the
 //!    per-lane hot loops inline (EXPERIMENTS.md §Perf).
 //! 3. **Merge** — per-SM statistics are aggregated (`cycles` = max over
-//!    SMs, since real SMs run concurrently; counters summed). On the
-//!    parallel path the write logs are additionally replayed into the real
-//!    `GlobalMem` in SM-id order, and any global address stored by two
-//!    different SMs raises [`SimError::WriteConflict`].
+//!    SMs, since real SMs run concurrently; counters summed, including
+//!    the per-SM [`crate::sim::MemStats`]). On the parallel path the
+//!    write logs are additionally replayed into the real `GlobalMem` in
+//!    SM-id order, and any global address stored by two different SMs
+//!    raises [`SimError::WriteConflict`].
 //!
 //! The parallel path is bit-equivalent to the sequential path (identical
 //! memory image and identical simulated cycles) for kernels whose SMs
 //! write disjoint addresses and never read another SM's writes within one
-//! launch — true of all five paper benchmarks. The *write-disjointness*
+//! launch — true of all paper benchmarks. The *write-disjointness*
 //! half of that contract is checked per launch by the conflict detector;
 //! a cross-SM read of data another SM wrote in the same launch has no
 //! write overlap, so it is **not** detectable — such kernels read the
-//! launch-time snapshot and must use the sequential [`Gpgpu::launch`]
-//! (or split the dependency across launches, as reduction's two phases
-//! do). Inter-SM memory contention is not modelled (DESIGN.md §5).
+//! launch-time snapshot and must use a sequential-mode request (or split
+//! the dependency across launches, as reduction's two phases do).
 
 pub mod limits;
 
@@ -53,63 +79,93 @@ use crate::asm::Kernel;
 use crate::isa::CapabilitySignature;
 use crate::registry::PreparedKernel;
 use crate::sim::{
-    AluBackend, AluFactory, BlockDesc, GlobalMem, GmemPort, GmemSnapshot, NativeAlu, PreDecoded,
-    SimError, Sm, SmConfig, SmStats, WriteRecord,
+    AluBackend, AluFactory, BlockDesc, CachedGmem, GlobalMem, GmemPort, GmemSnapshot, L1Cache,
+    MemoryConfig, NativeAlu, PreDecoded, SimError, Sm, SmConfig, SmLaunch, SmStats, WriteRecord,
 };
 use std::collections::HashMap;
 
 /// Run one SM with the hot path monomorphized as far as the boundary
 /// allows: `G` is always a concrete memory port here (the shared
-/// [`GlobalMem`] or a per-thread [`GmemSnapshot`]), and a backend that
+/// [`GlobalMem`] or a per-thread [`GmemSnapshot`]), an L1-configured
+/// launch wraps it in a concrete [`CachedGmem`], and a backend that
 /// reports [`AluBackend::is_native`] is swapped for a concrete
 /// [`NativeAlu`] so the default configuration runs fully inlined. Only
 /// genuinely foreign backends (e.g. the XLA executor) pay dyn dispatch —
 /// once per warp instruction, never per lane.
-#[allow(clippy::too_many_arguments)]
 fn run_sm<G: GmemPort>(
     sm: &Sm,
-    pre: &PreDecoded,
-    regs_per_thread: u32,
-    smem_bytes: u32,
-    params: &[i32],
-    blocks: &[BlockDesc],
-    max_resident: usize,
+    launch: &SmLaunch<'_>,
+    cache: Option<L1Cache>,
+    gmem: &mut G,
+    alu: &mut dyn AluBackend,
+) -> Result<SmStats, SimError> {
+    match cache {
+        Some(l1) => {
+            let mut cached = CachedGmem::new(gmem, l1);
+            run_sm_mono(sm, launch, &mut cached, alu)
+        }
+        None => run_sm_mono(sm, launch, gmem, alu),
+    }
+}
+
+fn run_sm_mono<G: GmemPort>(
+    sm: &Sm,
+    launch: &SmLaunch<'_>,
     gmem: &mut G,
     alu: &mut dyn AluBackend,
 ) -> Result<SmStats, SimError> {
     if alu.is_native() {
         let mut native = NativeAlu;
-        sm.run(pre, regs_per_thread, smem_bytes, params, blocks, max_resident, gmem, &mut native)
+        sm.run(launch, gmem, &mut native)
     } else {
-        sm.run(pre, regs_per_thread, smem_bytes, params, blocks, max_resident, gmem, alu)
+        sm.run(launch, gmem, alu)
     }
 }
 
 /// Overlay clock: "All designs were evaluated at 100 MHz" (paper §5.1).
 pub const CLOCK_HZ: f64 = 100e6;
 
-/// Whole-GPGPU configuration: the SM microarchitecture plus how many SMs
-/// are instantiated (the paper evaluates 1 and 2).
+/// Whole-GPGPU configuration: the SM microarchitecture, how many SMs are
+/// instantiated (the paper evaluates 1 and 2), and the global-memory
+/// hierarchy (flat AXI by default, optional per-SM L1/BRAM cache).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GpgpuConfig {
     pub sm: SmConfig,
     pub num_sms: u32,
+    pub memory: MemoryConfig,
 }
 
 impl GpgpuConfig {
     pub fn new(num_sms: u32, num_sp: u32) -> GpgpuConfig {
-        GpgpuConfig { sm: SmConfig::baseline().with_sp(num_sp), num_sms }
+        GpgpuConfig {
+            sm: SmConfig::baseline().with_sp(num_sp),
+            num_sms,
+            memory: MemoryConfig::default(),
+        }
+    }
+
+    /// Same device with a different memory hierarchy.
+    pub fn with_memory(mut self, memory: MemoryConfig) -> GpgpuConfig {
+        self.memory = memory;
+        self
     }
 
     /// Validate the device configuration. All capability/limit checks
-    /// live in `sim` ([`crate::sim::validate_device`]); this is a pure
-    /// delegation so the two layers cannot drift.
+    /// live in `sim` ([`crate::sim::validate_device`],
+    /// [`MemoryConfig::validate`]); this is a pure delegation so the two
+    /// layers cannot drift.
     pub fn validate(&self) -> Result<(), SimError> {
-        crate::sim::validate_device(&self.sm, self.num_sms)
+        crate::sim::validate_device(&self.sm, self.num_sms)?;
+        self.memory.validate()
     }
 
     pub fn label(&self) -> String {
-        format!("{} SM, {} SP", self.num_sms, self.sm.num_sp)
+        match self.memory.l1 {
+            Some(_) => {
+                format!("{} SM, {} SP, {}", self.num_sms, self.sm.num_sp, self.memory.label())
+            }
+            None => format!("{} SM, {} SP", self.num_sms, self.sm.num_sp),
+        }
     }
 }
 
@@ -158,6 +214,152 @@ impl LaunchResult {
     /// Kernel execution time in milliseconds at the 100 MHz overlay clock.
     pub fn exec_time_ms(&self) -> f64 {
         self.total.exec_time_ms(CLOCK_HZ)
+    }
+
+    /// Aggregate memory-hierarchy counters (all-zero on flat memory).
+    pub fn mem_stats(&self) -> crate::sim::MemStats {
+        self.total.mem
+    }
+}
+
+/// The kernel a [`LaunchRequest`] targets: a raw [`Kernel`] (signature and
+/// micro-op lowering derived on the spot) or a registry-cached
+/// [`PreparedKernel`] (both reused, so a repeat launch does no per-launch
+/// kernel analysis at all).
+#[derive(Clone, Copy)]
+pub enum KernelRef<'a> {
+    Source(&'a Kernel),
+    Prepared(&'a PreparedKernel),
+}
+
+impl<'a> From<&'a Kernel> for KernelRef<'a> {
+    fn from(k: &'a Kernel) -> Self {
+        KernelRef::Source(k)
+    }
+}
+
+impl<'a> From<&'a PreparedKernel> for KernelRef<'a> {
+    fn from(pk: &'a PreparedKernel) -> Self {
+        KernelRef::Prepared(pk)
+    }
+}
+
+/// How the simulate phase runs (see the module docs): SMs one after
+/// another through a single ALU backend, or one scoped OS thread per SM
+/// with per-SM ALUs built from a factory.
+pub enum ExecMode<'a> {
+    Sequential(&'a mut dyn AluBackend),
+    Parallel(&'a dyn AluFactory),
+}
+
+/// Everything one [`Gpgpu::launch`] needs, built fluent-style:
+///
+/// ```ignore
+/// let r = gpgpu.launch(
+///     LaunchRequest::new(&kernel, LaunchConfig::linear(8, 64), &mut gmem)
+///         .params(&[n as i32])
+///         .parallel(),
+/// )?;
+/// ```
+///
+/// Defaults: sequential execution on the built-in [`NativeAlu`], admission
+/// on the kernel's own derived signature, and the device's configured
+/// [`MemoryConfig`]. Migrating from the pre-redesign entry points:
+/// `launch_parallel*` becomes `.parallel()` (or `.parallel_with(factory)`),
+/// `launch_prepared` passes the `&PreparedKernel` as the kernel, and
+/// `launch_admitted`'s explicit signature becomes `.admit(sig)`.
+pub struct LaunchRequest<'a> {
+    kernel: KernelRef<'a>,
+    geometry: LaunchConfig,
+    gmem: &'a mut GlobalMem,
+    params: &'a [i32],
+    mode: Option<ExecMode<'a>>,
+    sig: Option<CapabilitySignature>,
+    memory: Option<MemoryConfig>,
+}
+
+impl<'a> LaunchRequest<'a> {
+    pub fn new(
+        kernel: impl Into<KernelRef<'a>>,
+        geometry: LaunchConfig,
+        gmem: &'a mut GlobalMem,
+    ) -> LaunchRequest<'a> {
+        LaunchRequest {
+            kernel: kernel.into(),
+            geometry,
+            gmem,
+            params: &[],
+            mode: None,
+            sig: None,
+            memory: None,
+        }
+    }
+
+    /// Kernel parameter words (the SLD-visible segment).
+    pub fn params(mut self, params: &'a [i32]) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Sequential simulation through a caller-supplied ALU backend
+    /// (foreign backends pay dyn dispatch once per warp instruction).
+    pub fn sequential(mut self, alu: &'a mut dyn AluBackend) -> Self {
+        self.mode = Some(ExecMode::Sequential(alu));
+        self
+    }
+
+    /// One scoped OS thread per SM, each with its own [`NativeAlu`].
+    pub fn parallel(mut self) -> Self {
+        self.mode = Some(ExecMode::Parallel(&NativeAlu));
+        self
+    }
+
+    /// One scoped OS thread per SM, per-SM ALUs built by `factory`.
+    pub fn parallel_with(mut self, factory: &'a dyn AluFactory) -> Self {
+        self.mode = Some(ExecMode::Parallel(factory));
+        self
+    }
+
+    /// Admit on an explicit capability signature — normally a
+    /// profile-refined one (paper §4.1) — instead of the kernel's own.
+    /// The coordinator's routed launches admit on exactly the signature
+    /// the router used, so refinement can never self-reject a job on the
+    /// variant it chose; if the profile over-promised, the mid-run
+    /// removed-unit trap (same structured [`SimError::Unsupported`]
+    /// payload) and the runtime stack-overflow trap remain the backstop.
+    pub fn admit(mut self, sig: CapabilitySignature) -> Self {
+        self.sig = Some(sig);
+        self
+    }
+
+    /// Override the device's memory hierarchy for this launch only.
+    pub fn memory(mut self, memory: MemoryConfig) -> Self {
+        self.memory = Some(memory);
+        self
+    }
+}
+
+/// Post-partition simulate-phase inputs, bundled so the per-path drivers
+/// stay well under the argument-count lint.
+struct SimJob<'a> {
+    kernel: &'a Kernel,
+    pre: &'a PreDecoded,
+    assignments: &'a [Vec<BlockDesc>],
+    max_resident: u32,
+    params: &'a [i32],
+    memory: MemoryConfig,
+}
+
+impl SimJob<'_> {
+    fn sm_launch<'b>(&'b self, blocks: &'b [BlockDesc]) -> SmLaunch<'b> {
+        SmLaunch {
+            pre: self.pre,
+            regs_per_thread: self.kernel.regs_per_thread,
+            smem_bytes: self.kernel.smem_bytes,
+            params: self.params,
+            blocks,
+            max_resident: self.max_resident as usize,
+        }
     }
 }
 
@@ -230,158 +432,70 @@ impl Gpgpu {
         LaunchResult { per_sm, total, max_resident_blocks: max_resident }
     }
 
-    /// Launch `kernel` over `launch` geometry — the sequential reference
-    /// path: SMs are simulated one after another against the shared global
-    /// memory, all through the single `alu` backend. Kernel time is the
-    /// max of the per-SM busy times.
-    ///
-    /// Derives the capability signature and micro-op lowering on the
-    /// spot; repeat launches should go through a
-    /// [`crate::registry::KernelRegistry`] and [`Gpgpu::launch_prepared`]
-    /// to skip that work.
-    pub fn launch(
-        &self,
-        kernel: &Kernel,
-        launch: LaunchConfig,
-        params: &[i32],
-        gmem: &mut GlobalMem,
-        alu: &mut dyn AluBackend,
-    ) -> Result<LaunchResult, SimError> {
-        let sig = kernel.signature();
-        let (assignments, max_resident) = self.partition(kernel, &sig, launch)?;
-        let pre = PreDecoded::from_kernel(kernel);
-        self.simulate_seq(kernel, &pre, &assignments, max_resident, params, gmem, alu)
+    /// The single launch entry point — the request carries the kernel,
+    /// geometry, parameters, target memory and the optional mode /
+    /// admission / memory-hierarchy knobs (see [`LaunchRequest`] and the
+    /// module docs). Partition → simulate → merge; kernel time is the max
+    /// of the per-SM busy times.
+    pub fn launch(&self, req: LaunchRequest<'_>) -> Result<LaunchResult, SimError> {
+        let LaunchRequest { kernel, geometry, gmem, params, mode, sig, memory } = req;
+        let memory = memory.unwrap_or(self.cfg.memory);
+        memory.validate()?;
+        let derived_pre;
+        let (k, pre, sig) = match kernel {
+            KernelRef::Source(k) => {
+                derived_pre = PreDecoded::from_kernel(k);
+                (k, &derived_pre, sig.unwrap_or_else(|| k.signature()))
+            }
+            KernelRef::Prepared(pk) => (&pk.kernel, &pk.pre, sig.unwrap_or(pk.sig)),
+        };
+        let (assignments, max_resident) = self.partition(k, &sig, geometry)?;
+        let job =
+            SimJob { kernel: k, pre, assignments: &assignments, max_resident, params, memory };
+        match mode {
+            None => {
+                let mut alu = NativeAlu;
+                self.simulate_seq(&job, gmem, &mut alu)
+            }
+            Some(ExecMode::Sequential(alu)) => self.simulate_seq(&job, gmem, alu),
+            Some(ExecMode::Parallel(factory)) => self.simulate_par(&job, gmem, factory),
+        }
     }
 
-    /// [`Gpgpu::launch`] for a registry-cached kernel: admission reads the
-    /// cached signature and simulation reuses the cached pre-decode, so a
-    /// repeat launch does no per-launch kernel analysis at all.
-    pub fn launch_prepared(
-        &self,
-        pk: &PreparedKernel,
-        launch: LaunchConfig,
-        params: &[i32],
-        gmem: &mut GlobalMem,
-        alu: &mut dyn AluBackend,
-    ) -> Result<LaunchResult, SimError> {
-        self.launch_admitted(pk, &pk.sig, launch, params, gmem, alu)
-    }
-
-    /// [`Gpgpu::launch_prepared`] with an explicit admission signature —
-    /// normally a profile-refined one (paper §4.1). The coordinator's
-    /// routed launches admit on exactly the signature the router used, so
-    /// refinement can never self-reject a job on the variant it chose; if
-    /// the profile over-promised, the mid-run removed-unit trap (same
-    /// structured [`SimError::Unsupported`] payload) and the runtime
-    /// stack-overflow trap remain the backstop.
-    pub fn launch_admitted(
-        &self,
-        pk: &PreparedKernel,
-        sig: &CapabilitySignature,
-        launch: LaunchConfig,
-        params: &[i32],
-        gmem: &mut GlobalMem,
-        alu: &mut dyn AluBackend,
-    ) -> Result<LaunchResult, SimError> {
-        let (assignments, max_resident) = self.partition(&pk.kernel, sig, launch)?;
-        self.simulate_seq(&pk.kernel, &pk.pre, &assignments, max_resident, params, gmem, alu)
-    }
-
-    /// Phase 2+3 of the sequential path.
-    #[allow(clippy::too_many_arguments)]
+    /// Phase 2+3 of the sequential path: SMs simulated one after another
+    /// against the shared global memory, all through the single `alu`.
     fn simulate_seq(
         &self,
-        kernel: &Kernel,
-        pre: &PreDecoded,
-        assignments: &[Vec<BlockDesc>],
-        max_resident: u32,
-        params: &[i32],
+        job: &SimJob<'_>,
         gmem: &mut GlobalMem,
         alu: &mut dyn AluBackend,
     ) -> Result<LaunchResult, SimError> {
         let mut per_sm = Vec::with_capacity(self.cfg.num_sms as usize);
-        for (sm_id, blocks) in assignments.iter().enumerate() {
+        for (sm_id, blocks) in job.assignments.iter().enumerate() {
             let sm = Sm::new(self.cfg.sm, sm_id as u32);
             let stats = if blocks.is_empty() {
                 SmStats::default()
             } else {
-                run_sm(
-                    &sm,
-                    pre,
-                    kernel.regs_per_thread,
-                    kernel.smem_bytes,
-                    params,
-                    blocks,
-                    max_resident as usize,
-                    gmem,
-                    alu,
-                )?
+                let cache = sm_cache(&self.cfg, job.memory, sm_id as u32);
+                run_sm(&sm, &job.sm_launch(blocks), cache, gmem, alu)?
             };
             per_sm.push(stats);
         }
-        Ok(Self::merge_stats(per_sm, max_resident))
+        Ok(Self::merge_stats(per_sm, job.max_resident))
     }
 
-    /// Launch `kernel` with each SM simulated on its own scoped thread —
-    /// the wall-clock-parallel path.
-    ///
-    /// Each SM thread owns an ALU built by `factory` and a private
-    /// [`GmemSnapshot`] of `gmem`; after every SM completes, the write
-    /// logs are replayed into `gmem` in SM-id order, raising
-    /// [`SimError::WriteConflict`] if two SMs stored the same address.
-    /// For conflict-free kernels the result (memory image, per-SM stats,
-    /// simulated cycles) is identical to [`Gpgpu::launch`].
-    pub fn launch_parallel(
-        &self,
-        kernel: &Kernel,
-        launch: LaunchConfig,
-        params: &[i32],
-        gmem: &mut GlobalMem,
-        factory: &dyn AluFactory,
-    ) -> Result<LaunchResult, SimError> {
-        let sig = kernel.signature();
-        let (assignments, max_resident) = self.partition(kernel, &sig, launch)?;
-        let pre = PreDecoded::from_kernel(kernel);
-        self.simulate_par(kernel, &pre, &assignments, max_resident, params, gmem, factory)
-    }
-
-    /// [`Gpgpu::launch_parallel`] for a registry-cached kernel (cached
-    /// signature + pre-decode, like [`Gpgpu::launch_prepared`]).
-    pub fn launch_parallel_prepared(
-        &self,
-        pk: &PreparedKernel,
-        launch: LaunchConfig,
-        params: &[i32],
-        gmem: &mut GlobalMem,
-        factory: &dyn AluFactory,
-    ) -> Result<LaunchResult, SimError> {
-        self.launch_parallel_admitted(pk, &pk.sig, launch, params, gmem, factory)
-    }
-
-    /// [`Gpgpu::launch_parallel_prepared`] with an explicit admission
-    /// signature (see [`Gpgpu::launch_admitted`]).
-    pub fn launch_parallel_admitted(
-        &self,
-        pk: &PreparedKernel,
-        sig: &CapabilitySignature,
-        launch: LaunchConfig,
-        params: &[i32],
-        gmem: &mut GlobalMem,
-        factory: &dyn AluFactory,
-    ) -> Result<LaunchResult, SimError> {
-        let (assignments, max_resident) = self.partition(&pk.kernel, sig, launch)?;
-        self.simulate_par(&pk.kernel, &pk.pre, &assignments, max_resident, params, gmem, factory)
-    }
-
-    /// Phase 2+3 of the parallel path.
-    #[allow(clippy::too_many_arguments)]
+    /// Phase 2+3 of the parallel path: each SM on its own scoped thread
+    /// with an ALU built by the factory and a private [`GmemSnapshot`];
+    /// write logs are replayed into `gmem` in SM-id order afterwards,
+    /// raising [`SimError::WriteConflict`] if two SMs stored the same
+    /// address. For conflict-free kernels the result (memory image,
+    /// per-SM stats, simulated cycles) is identical to the sequential
+    /// path — the L1 timing model is deterministic and purely per-SM
+    /// (partition contention is a static sharer count), so this holds
+    /// with and without a cache.
     fn simulate_par(
         &self,
-        kernel: &Kernel,
-        pre: &PreDecoded,
-        assignments: &[Vec<BlockDesc>],
-        max_resident: u32,
-        params: &[i32],
+        job: &SimJob<'_>,
         gmem: &mut GlobalMem,
         factory: &dyn AluFactory,
     ) -> Result<LaunchResult, SimError> {
@@ -389,18 +503,10 @@ impl Gpgpu {
             // One SM: no partitioning benefit; skip the snapshot entirely.
             let mut alu = factory.make_alu();
             let sm = Sm::new(self.cfg.sm, 0);
-            let stats = run_sm(
-                &sm,
-                pre,
-                kernel.regs_per_thread,
-                kernel.smem_bytes,
-                params,
-                &assignments[0],
-                max_resident as usize,
-                gmem,
-                alu.as_mut(),
-            )?;
-            return Ok(Self::merge_stats(vec![stats], max_resident));
+            let cache = sm_cache(&self.cfg, job.memory, 0);
+            let stats =
+                run_sm(&sm, &job.sm_launch(&job.assignments[0]), cache, gmem, alu.as_mut())?;
+            return Ok(Self::merge_stats(vec![stats], job.max_resident));
         }
 
         // Phase 2 (simulate): one scoped thread per SM, no shared mutable
@@ -408,11 +514,10 @@ impl Gpgpu {
         // it through a private copy-on-write view.
         let base: &GlobalMem = gmem;
         let cfg = self.cfg;
-        let regs = kernel.regs_per_thread;
-        let smem = kernel.smem_bytes;
         let results: Vec<Result<(SmStats, Vec<WriteRecord>), SimError>> =
             std::thread::scope(|scope| {
-                let handles: Vec<_> = assignments
+                let handles: Vec<_> = job
+                    .assignments
                     .iter()
                     .enumerate()
                     .map(|(sm_id, blocks)| {
@@ -422,18 +527,15 @@ impl Gpgpu {
                             }
                             let sm = Sm::new(cfg.sm, sm_id as u32);
                             let mut alu = factory.make_alu();
+                            let cache = sm_cache(&cfg, job.memory, sm_id as u32);
                             // Copy-on-write view: setup is O(touched
                             // pages), not O(mem) — reads fall through to
                             // the shared base.
                             let mut view = GmemSnapshot::new(base);
                             let stats = run_sm(
                                 &sm,
-                                pre,
-                                regs,
-                                smem,
-                                params,
-                                blocks,
-                                max_resident as usize,
+                                &job.sm_launch(blocks),
+                                cache,
                                 &mut view,
                                 alu.as_mut(),
                             )?;
@@ -457,8 +559,94 @@ impl Gpgpu {
             logs.push(log);
         }
         merge_write_logs(gmem, &logs)?;
-        Ok(Self::merge_stats(per_sm, max_resident))
+        Ok(Self::merge_stats(per_sm, job.max_resident))
     }
+
+    // ------------------------------------------------------------------
+    // Pre-redesign entry points, kept as thin shims over `launch`.
+    // ------------------------------------------------------------------
+
+    /// Sequential launch of a registry-cached kernel.
+    #[deprecated(note = "use Gpgpu::launch with a LaunchRequest")]
+    pub fn launch_prepared(
+        &self,
+        pk: &PreparedKernel,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<LaunchResult, SimError> {
+        self.launch(LaunchRequest::new(pk, launch, gmem).params(params).sequential(alu))
+    }
+
+    /// Sequential launch with an explicit admission signature.
+    #[deprecated(note = "use Gpgpu::launch with LaunchRequest::admit")]
+    pub fn launch_admitted(
+        &self,
+        pk: &PreparedKernel,
+        sig: &CapabilitySignature,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<LaunchResult, SimError> {
+        self.launch(
+            LaunchRequest::new(pk, launch, gmem).params(params).sequential(alu).admit(*sig),
+        )
+    }
+
+    /// Thread-per-SM launch of a raw kernel.
+    #[deprecated(note = "use Gpgpu::launch with LaunchRequest::parallel_with")]
+    pub fn launch_parallel(
+        &self,
+        kernel: &Kernel,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<LaunchResult, SimError> {
+        self.launch(LaunchRequest::new(kernel, launch, gmem).params(params).parallel_with(factory))
+    }
+
+    /// Thread-per-SM launch of a registry-cached kernel.
+    #[deprecated(note = "use Gpgpu::launch with LaunchRequest::parallel_with")]
+    pub fn launch_parallel_prepared(
+        &self,
+        pk: &PreparedKernel,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<LaunchResult, SimError> {
+        self.launch(LaunchRequest::new(pk, launch, gmem).params(params).parallel_with(factory))
+    }
+
+    /// Thread-per-SM launch with an explicit admission signature.
+    #[deprecated(note = "use Gpgpu::launch with LaunchRequest::parallel_with + admit")]
+    pub fn launch_parallel_admitted(
+        &self,
+        pk: &PreparedKernel,
+        sig: &CapabilitySignature,
+        launch: LaunchConfig,
+        params: &[i32],
+        gmem: &mut GlobalMem,
+        factory: &dyn AluFactory,
+    ) -> Result<LaunchResult, SimError> {
+        self.launch(
+            LaunchRequest::new(pk, launch, gmem)
+                .params(params)
+                .parallel_with(factory)
+                .admit(*sig),
+        )
+    }
+}
+
+/// Build the per-SM L1 timing layer for a launch, if one is configured.
+/// Purely a function of static launch facts (device shape, SM id, AXI
+/// calibration), so sequential and parallel simulation construct
+/// identical caches — part of the bit-equivalence contract.
+fn sm_cache(cfg: &GpgpuConfig, memory: MemoryConfig, sm_id: u32) -> Option<L1Cache> {
+    memory.l1.map(|l1| L1Cache::new(l1, cfg.num_sms, sm_id, cfg.sm.mem))
 }
 
 /// Replay per-SM write logs into `gmem` in SM-id order (within one SM,
@@ -466,8 +654,8 @@ impl Gpgpu {
 /// two different SMs is a violation of the parallel launch's
 /// disjoint-write contract and raises [`SimError::WriteConflict`] —
 /// detected in a scan pass *before* any write is applied, so a rejected
-/// launch leaves `gmem` exactly as it was (callers may recover by falling
-/// back to the sequential [`Gpgpu::launch`] on the same memory).
+/// launch leaves `gmem` exactly as it was (callers may recover by
+/// re-issuing the request in sequential mode on the same memory).
 fn merge_write_logs(gmem: &mut GlobalMem, logs: &[Vec<WriteRecord>]) -> Result<(), SimError> {
     let mut writer: HashMap<u32, u32> = HashMap::new();
     for (sm_id, log) in logs.iter().enumerate() {
@@ -515,9 +703,8 @@ mod tests {
     fn launch(cfg: GpgpuConfig, grid: u32, block: u32) -> (GlobalMem, LaunchResult) {
         let k = assemble(SRC).unwrap();
         let mut g = GlobalMem::new(grid * block * 4 + 64);
-        let mut alu = NativeAlu;
         let r = Gpgpu::new(cfg)
-            .launch(&k, LaunchConfig::linear(grid, block), &[], &mut g, &mut alu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(grid, block), &mut g))
             .unwrap();
         (g, r)
     }
@@ -526,7 +713,7 @@ mod tests {
         let k = assemble(SRC).unwrap();
         let mut g = GlobalMem::new(grid * block * 4 + 64);
         let r = Gpgpu::new(cfg)
-            .launch_parallel(&k, LaunchConfig::linear(grid, block), &[], &mut g, &NativeAlu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(grid, block), &mut g).parallel())
             .unwrap();
         (g, r)
     }
@@ -573,9 +760,8 @@ mod tests {
     fn launch_rejects_oversized_block() {
         let k = assemble(SRC).unwrap();
         let mut g = GlobalMem::new(1024);
-        let mut alu = NativeAlu;
         let err = Gpgpu::new(GpgpuConfig::default())
-            .launch(&k, LaunchConfig::linear(1, 512), &[], &mut g, &mut alu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(1, 512), &mut g))
             .unwrap_err();
         assert!(matches!(err, SimError::LimitExceeded(_)));
     }
@@ -614,7 +800,7 @@ mod tests {
         let k = assemble("MOV R1, #0\nMOV R2, #7\nGST [R1], R2\nEXIT").unwrap();
         let mut g = GlobalMem::new(4096);
         let err = Gpgpu::new(GpgpuConfig::new(2, 8))
-            .launch_parallel(&k, LaunchConfig::linear(2, 32), &[], &mut g, &NativeAlu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(2, 32), &mut g).parallel())
             .unwrap_err();
         assert!(
             matches!(err, SimError::WriteConflict { addr: 0, .. }),
@@ -627,7 +813,7 @@ mod tests {
         let k = assemble("JOIN\nEXIT").unwrap();
         let mut g = GlobalMem::new(4096);
         let err = Gpgpu::new(GpgpuConfig::new(2, 8))
-            .launch_parallel(&k, LaunchConfig::linear(4, 32), &[], &mut g, &NativeAlu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(4, 32), &mut g).parallel())
             .unwrap_err();
         assert!(matches!(err, SimError::StackUnderflow { .. }));
     }
@@ -644,9 +830,8 @@ mod tests {
         let gp = Gpgpu::new(cfg);
         assert!(!gp.supports(&k.signature()));
         let mut g = GlobalMem::new(4096);
-        let mut alu = NativeAlu;
         let err = gp
-            .launch(&k, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(1, 32), &mut g))
             .unwrap_err();
         assert!(matches!(
             err,
@@ -665,19 +850,82 @@ mod tests {
         let gp = Gpgpu::new(GpgpuConfig::new(2, 8));
         let (g_raw, r_raw) = launch(GpgpuConfig::new(2, 8), 6, 64);
         let mut g = GlobalMem::new(6 * 64 * 4 + 64);
-        let mut alu = NativeAlu;
-        let r = gp
-            .launch_prepared(&pk, LaunchConfig::linear(6, 64), &[], &mut g, &mut alu)
-            .unwrap();
+        let r = gp.launch(LaunchRequest::new(&pk, LaunchConfig::linear(6, 64), &mut g)).unwrap();
         assert_eq!(r.total.cycles, r_raw.total.cycles);
         let words = (g.size_bytes() / 4) as usize;
         assert_eq!(g.read_words(0, words).unwrap(), g_raw.read_words(0, words).unwrap());
 
         let mut g2 = GlobalMem::new(6 * 64 * 4 + 64);
         let rp = gp
-            .launch_parallel_prepared(&pk, LaunchConfig::linear(6, 64), &[], &mut g2, &NativeAlu)
+            .launch(LaunchRequest::new(&pk, LaunchConfig::linear(6, 64), &mut g2).parallel())
             .unwrap();
         assert_eq!(rp.total.cycles, r_raw.total.cycles);
         assert_eq!(g2.read_words(0, words).unwrap(), g_raw.read_words(0, words).unwrap());
+    }
+
+    #[test]
+    fn cached_launch_keeps_values_and_reports_mem_stats() {
+        use crate::sim::{CacheGeometry, MemoryConfig};
+        let geom = CacheGeometry::parse("4x64x32").unwrap();
+        let (g_flat, r_flat) = launch(GpgpuConfig::new(2, 8), 8, 64);
+        assert_eq!(r_flat.mem_stats(), crate::sim::MemStats::default());
+
+        let k = assemble(SRC).unwrap();
+        let cfg = GpgpuConfig::new(2, 8).with_memory(MemoryConfig::with_l1(geom));
+        let mut g = GlobalMem::new(8 * 64 * 4 + 64);
+        let r = Gpgpu::new(cfg)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(8, 64), &mut g))
+            .unwrap();
+        // Cache changes cycles, never values.
+        let words = (g.size_bytes() / 4) as usize;
+        assert_eq!(g.read_words(0, words).unwrap(), g_flat.read_words(0, words).unwrap());
+        assert_ne!(r.total.cycles, r_flat.total.cycles);
+        // This kernel only stores, so the write-through cache observes
+        // traffic but no load hits/misses.
+        assert_eq!(r.mem_stats().misses, 0);
+
+        // A per-request memory override on a flat device behaves the same.
+        let mut g2 = GlobalMem::new(8 * 64 * 4 + 64);
+        let r2 = Gpgpu::new(GpgpuConfig::new(2, 8))
+            .launch(
+                LaunchRequest::new(&k, LaunchConfig::linear(8, 64), &mut g2)
+                    .memory(MemoryConfig::with_l1(geom)),
+            )
+            .unwrap();
+        assert_eq!(r2.total.cycles, r.total.cycles);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_route_through_the_unified_launch() {
+        use crate::registry::PreparedKernel;
+        let pk = PreparedKernel::new(assemble(SRC).unwrap());
+        let gp = Gpgpu::new(GpgpuConfig::new(2, 8));
+        let (g_raw, r_raw) = launch(GpgpuConfig::new(2, 8), 6, 64);
+        let words = (g_raw.size_bytes() / 4) as usize;
+        let geometry = LaunchConfig::linear(6, 64);
+
+        let mut alu = NativeAlu;
+        let mut g = GlobalMem::new(6 * 64 * 4 + 64);
+        let r = gp.launch_prepared(&pk, geometry, &[], &mut g, &mut alu).unwrap();
+        assert_eq!(r.total.cycles, r_raw.total.cycles);
+
+        let mut g = GlobalMem::new(6 * 64 * 4 + 64);
+        let r = gp.launch_admitted(&pk, &pk.sig, geometry, &[], &mut g, &mut alu).unwrap();
+        assert_eq!(r.total.cycles, r_raw.total.cycles);
+
+        let mut g = GlobalMem::new(6 * 64 * 4 + 64);
+        let r = gp.launch_parallel(&pk.kernel, geometry, &[], &mut g, &NativeAlu).unwrap();
+        assert_eq!(r.total.cycles, r_raw.total.cycles);
+
+        let mut g = GlobalMem::new(6 * 64 * 4 + 64);
+        let r = gp.launch_parallel_prepared(&pk, geometry, &[], &mut g, &NativeAlu).unwrap();
+        assert_eq!(r.total.cycles, r_raw.total.cycles);
+
+        let mut g = GlobalMem::new(6 * 64 * 4 + 64);
+        let r =
+            gp.launch_parallel_admitted(&pk, &pk.sig, geometry, &[], &mut g, &NativeAlu).unwrap();
+        assert_eq!(r.total.cycles, r_raw.total.cycles);
+        assert_eq!(g.read_words(0, words).unwrap(), g_raw.read_words(0, words).unwrap());
     }
 }

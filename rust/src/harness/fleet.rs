@@ -24,7 +24,7 @@ use crate::coordinator::{
 use crate::gpgpu::GpgpuConfig;
 use crate::kernels::BenchId;
 use crate::model::{power::power, ArchParams};
-use crate::sim::SimError;
+use crate::sim::{MemoryConfig, SimError};
 
 /// Per-benchmark accumulation over the replayed mix.
 #[derive(Debug, Clone)]
@@ -51,6 +51,8 @@ pub struct FleetReport {
     pub n: u32,
     pub jobs_per_bench: u32,
     pub seed: u64,
+    /// Memory-hierarchy label shared by every shard (`flat` or `l1 WxSxL`).
+    pub memory: String,
     pub baseline_dyn_w: f64,
     pub baseline_mj: f64,
     pub fleet_mj: f64,
@@ -69,6 +71,7 @@ impl FleetReport {
             format!("\"n\": {}", self.n),
             format!("\"jobs_per_bench\": {}", self.jobs_per_bench),
             format!("\"seed\": {}", self.seed),
+            format!("\"memory\": \"{}\"", self.memory),
             format!("\"baseline_dyn_w\": {:.4}", self.baseline_dyn_w),
             format!("\"baseline_mj\": {:.4}", self.baseline_mj),
             format!("\"fleet_mj\": {:.4}", self.fleet_mj),
@@ -107,9 +110,24 @@ impl FleetReport {
 /// problem size (power of two, 32..=256) used for both profiling and
 /// replay; `jobs_per_bench` jobs of each paper benchmark are submitted.
 pub fn fleet_report(n: u32, jobs_per_bench: u32, seed: u64) -> Result<FleetReport, SimError> {
+    fleet_report_with_memory(n, jobs_per_bench, seed, MemoryConfig::default())
+}
+
+/// [`fleet_report`] with an explicit memory hierarchy applied to *every*
+/// shard (baseline pool and all customized variants alike, so the
+/// cycle-for-cycle comparison between them still holds — all shards are
+/// 1-SM devices, so the cache's static contention factor is identical
+/// too; only routed power differs).
+pub fn fleet_report_with_memory(
+    n: u32,
+    jobs_per_bench: u32,
+    seed: u64,
+    memory: MemoryConfig,
+) -> Result<FleetReport, SimError> {
+    memory.validate()?;
     let jobs_per_bench = jobs_per_bench.max(1);
-    let base_cfg = GpgpuConfig::new(1, 8);
-    let baseline_dyn_w = power(&ArchParams::baseline()).dynamic_w;
+    let base_cfg = GpgpuConfig::new(1, 8).with_memory(memory);
+    let baseline_dyn_w = power(&ArchParams::from_config(&base_cfg)).dynamic_w;
 
     // 1. Profile on the baseline (also validates each run's output).
     let mut profiles = Vec::with_capacity(BenchId::PAPER.len());
@@ -121,7 +139,7 @@ pub fn fleet_report(n: u32, jobs_per_bench: u32, seed: u64) -> Result<FleetRepor
     // variant, one shard each.
     let mut variants = vec![VariantSpec::new("baseline", base_cfg)];
     for p in &profiles {
-        let cfg = p.recommended_config();
+        let cfg = p.recommended_config().with_memory(memory);
         if !variants.iter().any(|v| v.cfg == cfg) {
             variants.push(VariantSpec::new(p.recommended.label(), cfg));
         }
@@ -246,6 +264,7 @@ pub fn fleet_report(n: u32, jobs_per_bench: u32, seed: u64) -> Result<FleetRepor
         n,
         jobs_per_bench,
         seed,
+        memory: memory.label(),
         baseline_dyn_w,
         baseline_mj,
         fleet_mj,
@@ -289,6 +308,19 @@ mod tests {
         for field in ["\"reduction_pct\"", "\"misadmissions\": 0", "\"variant\""] {
             assert!(json.contains(field), "{json}");
         }
+    }
+
+    #[test]
+    fn cached_fleet_replay_matches_baseline_cycles_job_for_job() {
+        use crate::sim::CacheGeometry;
+        let mem = MemoryConfig::with_l1(CacheGeometry::parse("2x16x32").unwrap());
+        // fleet_report_with_memory asserts fleet == baseline cycles
+        // internally; a cached fleet must still satisfy it (the cache's
+        // contention factor is static, so 1-SM shards agree exactly).
+        let r = fleet_report_with_memory(32, 1, 7, mem).unwrap();
+        assert_eq!(r.misadmissions, 0);
+        assert!(r.memory.contains("2x16x32"), "{}", r.memory);
+        assert!(r.to_json().contains("\"memory\": \"l1 2x16x32\""));
     }
 
     #[test]

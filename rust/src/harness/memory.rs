@@ -1,0 +1,228 @@
+//! Memory-hierarchy sweep report (`BENCH_memory.json`): the paper's
+//! benchmarks re-run under the modeled per-SM L1/BRAM cache at several
+//! geometries, against the flat-memory baseline.
+//!
+//! For every benchmark x geometry point the sweep records the L1 hit
+//! rate, fill-stall and interconnect-contention cycles, total simulated
+//! cycles, and the modeled dynamic energy (`P_dyn x t`, §5.1.2 — the
+//! cache's additive power term against the cycles it saves). The cache is
+//! tags-only (values are bit-identical to flat memory by construction),
+//! and the sweep *asserts* that: every cached run's full memory image
+//! must equal the flat run's before the point is recorded.
+
+use crate::gpgpu::{Gpgpu, GpgpuConfig};
+use crate::kernels::{self, BenchId, RunOptions, Workload};
+use crate::model::{dynamic_energy_mj, power::power, ArchParams};
+use crate::sim::{CacheGeometry, GlobalMem, MemoryConfig};
+
+/// Swept cache geometries (`WAYSxSETSxLINE_BYTES`), small to large:
+/// 1 KiB, 8 KiB, 64 KiB per SM.
+pub const SWEEP_GEOMETRIES: [&str; 3] = ["2x16x32", "4x64x32", "4x256x64"];
+
+/// One benchmark x memory-configuration measurement.
+#[derive(Debug, Clone)]
+pub struct MemoryPoint {
+    /// Benchmark label (`memstress_s32` is the strided variant).
+    pub bench: String,
+    /// Memory label: `flat` or `l1 WxSxL`.
+    pub cache: String,
+    pub hits: u64,
+    pub misses: u64,
+    pub hit_rate: f64,
+    pub evictions: u64,
+    pub mshr_merges: u64,
+    pub fill_stall_cycles: u64,
+    pub contention_cycles: u64,
+    pub cycles: u64,
+    pub exec_ms: f64,
+    /// Modeled dynamic power of the device with this memory config (W).
+    pub dyn_w: f64,
+    /// Modeled dynamic energy of the run (mJ).
+    pub energy_mj: f64,
+}
+
+/// The full sweep at one problem size.
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    pub n: u32,
+    pub seed: u64,
+    pub num_sms: u32,
+    pub points: Vec<MemoryPoint>,
+}
+
+impl MemoryReport {
+    /// Hand-rolled JSON (shared `jsonfmt` framing; no serde offline).
+    pub fn to_json(&self) -> String {
+        let header = [
+            format!("\"n\": {}", self.n),
+            format!("\"seed\": {}", self.seed),
+            format!("\"num_sms\": {}", self.num_sms),
+        ];
+        let points: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"bench\": \"{}\", \"cache\": \"{}\", \"hits\": {}, \
+                     \"misses\": {}, \"hit_rate\": {:.4}, \"evictions\": {}, \
+                     \"mshr_merges\": {}, \"fill_stall_cycles\": {}, \
+                     \"contention_cycles\": {}, \"cycles\": {}, \
+                     \"exec_ms\": {:.3}, \"dyn_w\": {:.4}, \"energy_mj\": {:.4}}}",
+                    p.bench,
+                    p.cache,
+                    p.hits,
+                    p.misses,
+                    p.hit_rate,
+                    p.evictions,
+                    p.mshr_merges,
+                    p.fill_stall_cycles,
+                    p.contention_cycles,
+                    p.cycles,
+                    p.exec_ms,
+                    p.dyn_w,
+                    p.energy_mj
+                )
+            })
+            .collect();
+        super::jsonfmt::frame(&header, &points)
+    }
+
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Point lookup by (bench, cache) labels.
+    pub fn point(&self, bench: &str, cache: &str) -> Option<&MemoryPoint> {
+        self.points.iter().find(|p| p.bench == bench && p.cache == cache)
+    }
+}
+
+/// Full memory image of a device (for the bit-identity assertion).
+fn image(gmem: &GlobalMem) -> Vec<i32> {
+    gmem.read_words(0, gmem.size_bytes() as usize / 4).expect("whole image reads")
+}
+
+/// Run `w` under `memory` on a fresh `num_sms`-SM device, verify it, and
+/// record one point. `flat_image` is the reference memory image the run
+/// must reproduce exactly (None when this *is* the flat run).
+fn measure(
+    bench: &str,
+    w: &Workload,
+    num_sms: u32,
+    memory: MemoryConfig,
+    flat_image: Option<&[i32]>,
+) -> (MemoryPoint, Vec<i32>) {
+    let cfg = GpgpuConfig::new(num_sms, 8).with_memory(memory);
+    let gpgpu = Gpgpu::new(cfg);
+    let mut gmem = w.make_gmem();
+    let run = w
+        .run(&gpgpu, &mut gmem, RunOptions::default())
+        .unwrap_or_else(|e| panic!("{bench} under {}: {e}", memory.label()));
+    w.verify(&gmem)
+        .unwrap_or_else(|e| panic!("{bench} under {}: {e}", memory.label()));
+    let img = image(&gmem);
+    if let Some(want) = flat_image {
+        assert!(
+            img == want,
+            "{bench} under {}: cached memory image diverged from flat",
+            memory.label()
+        );
+    }
+    let m = run.stats.mem;
+    let dyn_w = power(&ArchParams::from_config(&cfg)).dynamic_w;
+    let exec_ms = run.exec_time_ms();
+    let point = MemoryPoint {
+        bench: bench.to_string(),
+        cache: memory.label(),
+        hits: m.hits,
+        misses: m.misses,
+        hit_rate: m.hit_rate(),
+        evictions: m.evictions,
+        mshr_merges: m.mshr_merges,
+        fill_stall_cycles: m.fill_stall_cycles,
+        contention_cycles: m.contention_cycles,
+        cycles: run.cycles,
+        exec_ms,
+        dyn_w,
+        energy_mj: dynamic_energy_mj(dyn_w, exec_ms),
+    };
+    (point, img)
+}
+
+/// Sweep the five paper benchmarks plus two memstress stride variants
+/// over flat memory and [`SWEEP_GEOMETRIES`] on a 2-SM device. Every
+/// cached run is verified against the golden reference *and* asserted
+/// bit-identical to the flat run's memory image.
+pub fn memory_report(n: u32, seed: u64) -> MemoryReport {
+    let num_sms = 2;
+    let mut workloads: Vec<(String, Workload)> = BenchId::PAPER
+        .iter()
+        .map(|id| (id.name().to_string(), kernels::prepare(*id, n, seed)))
+        .collect();
+    // Stride 1 streams adjacent lines (reuse); stride 32 (128 bytes)
+    // touches a fresh line per trip on every swept line size.
+    workloads.push(("memstress".into(), kernels::prepare_memstress(n, seed, 1)));
+    workloads.push(("memstress_s32".into(), kernels::prepare_memstress(n, seed, 32)));
+
+    let mut points = Vec::new();
+    for (bench, w) in &workloads {
+        let (flat_point, flat_img) = measure(bench, w, num_sms, MemoryConfig::flat(), None);
+        points.push(flat_point);
+        for geom in SWEEP_GEOMETRIES {
+            let memory =
+                MemoryConfig::with_l1(CacheGeometry::parse(geom).expect("swept geometry"));
+            let (p, _) = measure(bench, w, num_sms, memory, Some(&flat_img));
+            points.push(p);
+        }
+    }
+    MemoryReport { n, seed, num_sms, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_every_bench_and_geometry() {
+        let r = memory_report(32, 7);
+        // 5 paper benchmarks + 2 memstress variants, flat + 3 geometries.
+        assert_eq!(r.points.len(), 7 * (1 + SWEEP_GEOMETRIES.len()));
+        for p in &r.points {
+            assert!(p.cycles > 0 && p.energy_mj > 0.0, "{} {}", p.bench, p.cache);
+            if p.cache == "flat" {
+                assert_eq!(p.hits + p.misses, 0, "flat memory has no L1 to hit");
+            } else {
+                assert!(p.hits + p.misses > 0, "{} {}", p.bench, p.cache);
+            }
+        }
+        let json = r.to_json();
+        for field in ["\"hit_rate\"", "\"fill_stall_cycles\"", "\"energy_mj\""] {
+            assert!(json.contains(field), "{json}");
+        }
+    }
+
+    #[test]
+    fn streaming_stride_hits_more_than_line_skipping_stride() {
+        let r = memory_report(64, 3);
+        for geom in SWEEP_GEOMETRIES {
+            let cache = format!("l1 {geom}");
+            let stream = r.point("memstress", &cache).unwrap();
+            let skip = r.point("memstress_s32", &cache).unwrap();
+            assert!(
+                stream.hit_rate > skip.hit_rate,
+                "{cache}: stream {:.2} <= skip {:.2}",
+                stream.hit_rate,
+                skip.hit_rate
+            );
+        }
+    }
+
+    #[test]
+    fn cache_power_grows_with_geometry_and_flat_is_cheapest() {
+        let r = memory_report(32, 1);
+        let flat = r.point("matmul", "flat").unwrap();
+        let small = r.point("matmul", "l1 2x16x32").unwrap();
+        let large = r.point("matmul", "l1 4x256x64").unwrap();
+        assert!(flat.dyn_w < small.dyn_w && small.dyn_w < large.dyn_w);
+    }
+}

@@ -7,6 +7,7 @@ pub mod eval;
 pub mod fleet;
 pub mod hotpath;
 mod jsonfmt;
+pub mod memory;
 pub mod microbench;
 pub mod paper;
 pub mod scaling;
@@ -14,8 +15,9 @@ pub mod tables;
 pub mod text;
 
 pub use eval::Evaluation;
-pub use fleet::{fleet_report, FleetBenchPoint, FleetReport};
+pub use fleet::{fleet_report, fleet_report_with_memory, FleetBenchPoint, FleetReport};
 pub use hotpath::{HotPathPoint, HotPathReport};
+pub use memory::{memory_report, MemoryPoint, MemoryReport};
 pub use microbench::{bench, BenchResult};
 pub use scaling::{
     scaling_report, scaling_suite, suite_json, write_suite_json, ScalingPoint, ScalingReport,

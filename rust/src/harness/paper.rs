@@ -22,7 +22,7 @@ pub fn table3(bench: BenchId, sp: u32) -> f64 {
         BenchId::MatMul => [1.98, 1.98, 1.98],
         BenchId::Reduction => [1.78, 1.77, 1.77],
         BenchId::Transpose => [1.98, 1.98, 1.98],
-        BenchId::VecAdd => [f64::NAN; 3],
+        BenchId::VecAdd | BenchId::MemStress => [f64::NAN; 3],
     };
     row[match sp {
         8 => 0,
@@ -111,7 +111,7 @@ pub fn fig4(bench: BenchId, sp: u32) -> f64 {
         BenchId::MatMul => [13.2, 21.3, 26.9],
         BenchId::Reduction => [16.7, 23.4, 28.9],
         BenchId::Transpose => [12.2, 18.2, 22.4],
-        BenchId::VecAdd => [f64::NAN; 3],
+        BenchId::VecAdd | BenchId::MemStress => [f64::NAN; 3],
     };
     row[match sp {
         8 => 0,

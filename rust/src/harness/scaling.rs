@@ -8,7 +8,7 @@
 //! * `1sm_16sp_sequential` / `1sm_32sp_sequential` — the SP-width sweep
 //!   (paper §5.1: 8/16/32 SP), priced by the Table-2 area calibration;
 //! * `2sm_sequential`  — reference path, two SMs simulated back-to-back;
-//! * `2sm_parallel`    — `launch_parallel`, one thread per SM;
+//! * `2sm_parallel`    — parallel launch mode, one thread per SM;
 //! * `4sm_parallel` / `8sm_parallel` — the >2-SM scaling study (ROADMAP):
 //!   configurations beyond the paper's 2-SM evaluation, feasible to sweep
 //!   because per-SM memory setup is copy-on-write (O(touched pages));
@@ -22,9 +22,8 @@
 
 use crate::coordinator::{GpgpuService, Request, ServiceConfig};
 use crate::gpgpu::{Gpgpu, GpgpuConfig};
-use crate::kernels::{self, BenchId};
+use crate::kernels::{self, BenchId, RunOptions};
 use crate::model::{area::area, ArchParams};
-use crate::sim::NativeAlu;
 use std::time::Instant;
 
 /// One measured configuration.
@@ -148,12 +147,9 @@ pub fn scaling_report(id: BenchId, n: u32, seed: u64, samples: usize) -> Scaling
         let gpgpu = Gpgpu::new(GpgpuConfig::new(sms, sp));
         let (wall_ms, sim_cycles) = median_ms(samples, || {
             let mut gmem = w.make_gmem();
-            let result = if parallel {
-                w.run_parallel(&gpgpu, &mut gmem, &NativeAlu)
-            } else {
-                let mut alu = NativeAlu;
-                w.run(&gpgpu, &mut gmem, &mut alu)
-            };
+            let opts =
+                if parallel { RunOptions::new().parallel() } else { RunOptions::default() };
+            let result = w.run(&gpgpu, &mut gmem, opts);
             let run = result.unwrap_or_else(|e| panic!("{label}: {e}"));
             w.verify(&gmem).unwrap_or_else(|e| panic!("{label}: {e}"));
             run.cycles

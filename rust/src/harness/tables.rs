@@ -196,6 +196,7 @@ pub fn table6(ev: &mut Evaluation) -> TextTable {
             num_sp: 8,
             warp_stack_depth: run_stats.max_stack_depth,
             has_multiplier: keep_mul,
+            l1: None,
         };
         let a = area(&params);
         let pw = power(&params).dynamic_w;

@@ -1,0 +1,33 @@
+; memstress: strided/streaming memory stress for the L1/BRAM cache sweep.
+; Each thread sums 8 input words at a configurable stride (wrapping the
+; index into the power-of-two input with an AND mask):
+;   out[t] = sum_{j=0}^{7} in[(t + j*stride) & (n-1)]
+; stride 1 -> warps stream adjacent lines (line reuse, high hit rate);
+; stride >= line_words -> every trip touches a fresh line (miss storm).
+; The trip count is uniform across lanes, so the loop never diverges
+; (warp-stack depth 0) and the kernel needs no multiplier.
+; params: [0] in base, [4] out base, [8] n-1 index mask, [12] stride
+.entry memstress
+.regs 12
+    S2R  R0, SR_GTID     ; t
+    SLD  R1, [0]         ; in base
+    SLD  R2, [4]         ; out base
+    SLD  R3, [8]         ; n-1 (index mask)
+    SLD  R4, [12]        ; stride
+    MOV  R5, #8          ; trips
+    MOV  R6, R0          ; idx = t
+    MOV  R7, #0          ; acc
+loop:
+    AND  R8, R6, R3      ; idx & (n-1)
+    SHL  R8, R8, #2
+    IADD R8, R8, R1      ; &in[idx & (n-1)]
+    GLD  R9, [R8]
+    IADD R7, R7, R9      ; acc += in[...]
+    IADD R6, R6, R4      ; idx += stride
+    ISUB R5, R5, #1
+    ISETP P0, R5, #0
+    @P0.GT BRA loop      ; uniform trip count: never diverges
+    SHL  R10, R0, #2
+    IADD R10, R10, R2
+    GST  [R10], R7       ; out[t] = acc
+    EXIT

@@ -64,6 +64,21 @@ pub fn vecadd(a: &[i32], b: &[i32]) -> Vec<i32> {
     a.iter().zip(b).map(|(&x, &y)| x.wrapping_add(y)).collect()
 }
 
+/// `out[t] = sum_{j=0}^{7} in[(t + j*stride) & (n-1)]` (wrapping; `n`
+/// must be a power of two) — the strided memory-stress kernel.
+pub fn memstress(x: &[i32], stride: u32) -> Vec<i32> {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    (0..n)
+        .map(|t| {
+            (0..8u32).fold(0i32, |acc, j| {
+                let idx = (t as u32).wrapping_add(j.wrapping_mul(stride)) as usize & (n - 1);
+                acc.wrapping_add(x[idx])
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +121,16 @@ mod tests {
     #[test]
     fn vecadd_elementwise() {
         assert_eq!(vecadd(&[1, 2], &[10, 20]), vec![11, 22]);
+    }
+
+    #[test]
+    fn memstress_stride_wraps_the_index() {
+        // n = 4, stride 1: out[t] = 8 trips over a 4-element ring = two
+        // full passes of the input.
+        let x = [1, 2, 3, 4];
+        let total: i32 = x.iter().sum();
+        assert_eq!(memstress(&x, 1), vec![2 * total; 4]);
+        // stride 4 == n: every trip lands on in[t].
+        assert_eq!(memstress(&x, 4), vec![8, 16, 24, 32]);
     }
 }

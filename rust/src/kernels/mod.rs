@@ -1,15 +1,17 @@
 //! The paper's five CUDA benchmarks (§5: bitonic sort, autocorrelation,
 //! matrix multiplication, parallel reduction, transpose — from ERCBench
-//! and the NVIDIA Programmer's Guide) plus a vecadd quickstart, each as
-//! FlexGrip assembly with a host-side workload harness (data generation,
-//! launch geometry, golden verification).
+//! and the NVIDIA Programmer's Guide) plus a vecadd quickstart and a
+//! strided memory-stress kernel (for the cache sweep), each as FlexGrip
+//! assembly with a host-side workload harness (data generation, launch
+//! geometry, golden verification).
 
 pub mod golden;
 
-use crate::gpgpu::{Gpgpu, LaunchConfig, LaunchResult};
+use crate::gpgpu::{ExecMode, Gpgpu, LaunchConfig, LaunchRequest, LaunchResult};
+use crate::isa::CapabilitySignature;
 use crate::registry::{KernelRegistry, PreparedKernel};
 use crate::rng::XorShift64;
-use crate::sim::{AluBackend, AluFactory, GlobalMem, SimError, SmStats};
+use crate::sim::{AluBackend, AluFactory, GlobalMem, MemoryConfig, NativeAlu, SimError, SmStats};
 use std::sync::Arc;
 
 /// Device byte address where benchmark inputs begin.
@@ -25,6 +27,10 @@ pub enum BenchId {
     Reduction,
     Transpose,
     VecAdd,
+    /// Strided/streaming memory stress (not a paper benchmark): each
+    /// thread sums 8 input words at a configurable stride, so the cache
+    /// sweep can dial the hit rate from line-reuse to miss-storm.
+    MemStress,
 }
 
 impl BenchId {
@@ -36,13 +42,14 @@ impl BenchId {
         BenchId::Transpose,
     ];
 
-    pub const ALL: [BenchId; 6] = [
+    pub const ALL: [BenchId; 7] = [
         BenchId::Autocorr,
         BenchId::Bitonic,
         BenchId::MatMul,
         BenchId::Reduction,
         BenchId::Transpose,
         BenchId::VecAdd,
+        BenchId::MemStress,
     ];
 
     pub fn name(self) -> &'static str {
@@ -53,6 +60,7 @@ impl BenchId {
             BenchId::Reduction => "reduction",
             BenchId::Transpose => "transpose",
             BenchId::VecAdd => "vecadd",
+            BenchId::MemStress => "memstress",
         }
     }
 
@@ -69,6 +77,7 @@ impl BenchId {
             BenchId::Reduction => include_str!("asm/reduction.flex"),
             BenchId::Transpose => include_str!("asm/transpose.flex"),
             BenchId::VecAdd => include_str!("asm/vecadd.flex"),
+            BenchId::MemStress => include_str!("asm/memstress.flex"),
         }
     }
 
@@ -81,7 +90,9 @@ impl BenchId {
     /// 32..256, matrices n x n).
     pub fn input_elems(self, n: u32) -> usize {
         match self {
-            BenchId::Autocorr | BenchId::Bitonic | BenchId::Reduction => n as usize,
+            BenchId::Autocorr | BenchId::Bitonic | BenchId::Reduction | BenchId::MemStress => {
+                n as usize
+            }
             BenchId::MatMul => 2 * (n * n) as usize, // A and B
             BenchId::Transpose => (n * n) as usize,
             BenchId::VecAdd => 2 * n as usize,
@@ -114,7 +125,7 @@ pub struct Workload {
     /// Byte address and length of the output region.
     out_base: u32,
     out_len: usize,
-    /// Bitonic segment size (needed by verification).
+    /// Bitonic segment size / memstress stride (needed by verification).
     seg: u32,
 }
 
@@ -135,12 +146,102 @@ impl BenchRun {
     }
 }
 
+/// Per-run knobs for [`Workload::run`], mirroring the launch-level knobs
+/// of [`crate::gpgpu::LaunchRequest`] (mode / admission signature /
+/// memory hierarchy) so every phase of a workload launches the same way.
+/// `RunOptions::default()` is a sequential run on the built-in native ALU
+/// under the device's configured memory hierarchy.
+#[derive(Default)]
+pub struct RunOptions<'a> {
+    mode: Option<ExecMode<'a>>,
+    sig: Option<CapabilitySignature>,
+    memory: Option<MemoryConfig>,
+}
+
+impl<'a> RunOptions<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sequential execution on an explicit ALU backend.
+    pub fn sequential(mut self, alu: &'a mut dyn AluBackend) -> Self {
+        self.mode = Some(ExecMode::Sequential(alu));
+        self
+    }
+
+    /// Thread-per-SM execution on the native ALU.
+    pub fn parallel(self) -> Self {
+        self.parallel_with(&NativeAlu)
+    }
+
+    /// Thread-per-SM execution with an explicit per-SM backend factory.
+    pub fn parallel_with(mut self, factory: &'a dyn AluFactory) -> Self {
+        self.mode = Some(ExecMode::Parallel(factory));
+        self
+    }
+
+    /// Admit every phase on an explicit (e.g. profile-refined) signature
+    /// instead of the kernel's own.
+    pub fn admit(mut self, sig: CapabilitySignature) -> Self {
+        self.sig = Some(sig);
+        self
+    }
+
+    /// Override the device's memory hierarchy for this run.
+    pub fn memory(mut self, memory: MemoryConfig) -> Self {
+        self.memory = Some(memory);
+        self
+    }
+}
+
 /// Supported problem sizes (paper §5.1.1).
 pub const PAPER_SIZES: [u32; 4] = [32, 64, 128, 256];
+
+/// Build the memory-stress workload at problem size `n` with an explicit
+/// element `stride` (see `asm/memstress.flex`): stride 1 streams adjacent
+/// lines (high L1 hit rate), stride >= the line size touches a fresh line
+/// per trip. `prepare(BenchId::MemStress, ..)` is the stride-1 form.
+pub fn prepare_memstress(n: u32, seed: u64, stride: u32) -> Workload {
+    assert!(
+        n.is_power_of_two() && (32..=256).contains(&n),
+        "problem size must be a power of two in 32..=256 (got {n})"
+    );
+    assert!(stride >= 1, "memstress stride must be >= 1");
+    let id = BenchId::MemStress;
+    let kernel = KernelRegistry::global()
+        .get_or_assemble(id.source())
+        .expect("benchmark kernels must assemble");
+    let mut rng = XorShift64::new(seed ^ (id as u64) << 32);
+    let input: Vec<i32> = (0..id.input_elems(n)).map(|_| rng.small_i32()).collect();
+
+    let out = IN_BASE + 4 * n;
+    let block = n.min(64);
+    let phases = vec![Phase {
+        launch: LaunchConfig::linear(n / block, block),
+        params: vec![IN_BASE as i32, out as i32, (n - 1) as i32, stride as i32],
+    }];
+    let gmem_bytes = (out + 4 * n + 4096).next_power_of_two();
+
+    Workload {
+        id,
+        n,
+        seed,
+        kernel,
+        phases,
+        gmem_bytes,
+        input,
+        out_base: out,
+        out_len: n as usize,
+        seg: stride,
+    }
+}
 
 /// Build a workload for benchmark `id` at problem size `n` (power of two,
 /// 32..=256) with deterministic `seed`.
 pub fn prepare(id: BenchId, n: u32, seed: u64) -> Workload {
+    if id == BenchId::MemStress {
+        return prepare_memstress(n, seed, 1);
+    }
     assert!(
         n.is_power_of_two() && (32..=256).contains(&n),
         "problem size must be a power of two in 32..=256 (got {n})"
@@ -237,6 +338,7 @@ pub fn prepare(id: BenchId, n: u32, seed: u64) -> Workload {
             }
             (phases, out, 1, 0)
         }
+        BenchId::MemStress => unreachable!("handled by prepare_memstress above"),
     };
 
     // Room for inputs + outputs + slack.
@@ -265,32 +367,42 @@ impl Workload {
         g
     }
 
-    /// Execute all phases on `gpgpu`, returning merged statistics.
+    /// Execute all phases on `gpgpu`, returning merged statistics. The
+    /// [`RunOptions`] mirror the per-launch knobs of
+    /// [`crate::gpgpu::LaunchRequest`] — execution mode (default:
+    /// sequential on the built-in native ALU), admission signature
+    /// (default: the kernel's own) and memory hierarchy (default: the
+    /// device's) — applied to every phase launch:
+    ///
+    /// ```ignore
+    /// w.run(&gpgpu, &mut gmem, RunOptions::default())?;          // sequential
+    /// w.run(&gpgpu, &mut gmem, RunOptions::new().parallel())?;   // thread/SM
+    /// ```
     pub fn run(
         &self,
         gpgpu: &Gpgpu,
         gmem: &mut GlobalMem,
-        alu: &mut dyn AluBackend,
+        mut opts: RunOptions<'_>,
     ) -> Result<BenchRun, SimError> {
-        self.run_admitted(gpgpu, &self.kernel.sig, gmem, alu)
-    }
-
-    /// [`Workload::run`] admitted on an explicit (e.g. profile-refined)
-    /// signature — the coordinator's routed launches use the same
-    /// signature the router admitted on (see `Gpgpu::launch_admitted`).
-    pub fn run_admitted(
-        &self,
-        gpgpu: &Gpgpu,
-        sig: &crate::isa::CapabilitySignature,
-        gmem: &mut GlobalMem,
-        alu: &mut dyn AluBackend,
-    ) -> Result<BenchRun, SimError> {
+        let sig = opts.sig.unwrap_or(self.kernel.sig);
         let mut phases = Vec::with_capacity(self.phases.len());
         let mut cycles = 0u64;
         let mut stats = SmStats::default();
         for ph in &self.phases {
-            let r = gpgpu
-                .launch_admitted(&self.kernel, sig, ph.launch, &ph.params, gmem, alu)?;
+            let mut req = LaunchRequest::new(&*self.kernel, ph.launch, &mut *gmem)
+                .params(&ph.params)
+                .admit(sig);
+            if let Some(m) = opts.memory {
+                req = req.memory(m);
+            }
+            // Reborrow the mode per phase: a sequential backend is handed
+            // out as a fresh `&mut` each launch.
+            req = match &mut opts.mode {
+                None => req,
+                Some(ExecMode::Sequential(alu)) => req.sequential(&mut **alu),
+                Some(ExecMode::Parallel(factory)) => req.parallel_with(&**factory),
+            };
+            let r = gpgpu.launch(req)?;
             cycles += r.total.cycles;
             stats.merge(&r.total);
             phases.push(r);
@@ -299,45 +411,43 @@ impl Workload {
         Ok(BenchRun { phases, cycles, stats })
     }
 
-    /// Execute all phases with each SM simulated on its own thread
-    /// (`Gpgpu::launch_parallel`); identical simulated cycles and memory
-    /// image to [`Workload::run`], but wall-clock-parallel across SMs.
+    // ------------------------------------------------------------------
+    // Pre-redesign entry points, kept as thin shims over `run`.
+    // ------------------------------------------------------------------
+
+    /// Sequential run admitted on an explicit signature.
+    #[deprecated(note = "use Workload::run with RunOptions::admit")]
+    pub fn run_admitted(
+        &self,
+        gpgpu: &Gpgpu,
+        sig: &CapabilitySignature,
+        gmem: &mut GlobalMem,
+        alu: &mut dyn AluBackend,
+    ) -> Result<BenchRun, SimError> {
+        self.run(gpgpu, gmem, RunOptions::new().sequential(alu).admit(*sig))
+    }
+
+    /// Thread-per-SM run.
+    #[deprecated(note = "use Workload::run with RunOptions::parallel_with")]
     pub fn run_parallel(
         &self,
         gpgpu: &Gpgpu,
         gmem: &mut GlobalMem,
         factory: &dyn AluFactory,
     ) -> Result<BenchRun, SimError> {
-        self.run_parallel_admitted(gpgpu, &self.kernel.sig, gmem, factory)
+        self.run(gpgpu, gmem, RunOptions::new().parallel_with(factory))
     }
 
-    /// [`Workload::run_parallel`] admitted on an explicit signature (see
-    /// [`Workload::run_admitted`]).
+    /// Thread-per-SM run admitted on an explicit signature.
+    #[deprecated(note = "use Workload::run with RunOptions::parallel_with + admit")]
     pub fn run_parallel_admitted(
         &self,
         gpgpu: &Gpgpu,
-        sig: &crate::isa::CapabilitySignature,
+        sig: &CapabilitySignature,
         gmem: &mut GlobalMem,
         factory: &dyn AluFactory,
     ) -> Result<BenchRun, SimError> {
-        let mut phases = Vec::with_capacity(self.phases.len());
-        let mut cycles = 0u64;
-        let mut stats = SmStats::default();
-        for ph in &self.phases {
-            let r = gpgpu.launch_parallel_admitted(
-                &self.kernel,
-                sig,
-                ph.launch,
-                &ph.params,
-                gmem,
-                factory,
-            )?;
-            cycles += r.total.cycles;
-            stats.merge(&r.total);
-            phases.push(r);
-        }
-        stats.cycles = cycles;
-        Ok(BenchRun { phases, cycles, stats })
+        self.run(gpgpu, gmem, RunOptions::new().parallel_with(factory).admit(*sig))
     }
 
     /// Expected output (golden reference on the host).
@@ -352,6 +462,7 @@ impl Workload {
             BenchId::Reduction => vec![golden::reduction(&self.input)],
             BenchId::Transpose => golden::transpose(&self.input, n),
             BenchId::VecAdd => golden::vecadd(&self.input[..n], &self.input[n..]),
+            BenchId::MemStress => golden::memstress(&self.input, self.seg),
         }
     }
 
@@ -394,7 +505,7 @@ pub fn run_verified(
 ) -> Result<BenchRun, SimError> {
     let w = prepare(id, n, seed);
     let mut gmem = w.make_gmem();
-    let run = w.run(gpgpu, &mut gmem, alu)?;
+    let run = w.run(gpgpu, &mut gmem, RunOptions::new().sequential(alu))?;
     if let Err(e) = w.verify(&gmem) {
         panic!("verification failed: {e}");
     }
@@ -496,6 +607,51 @@ mod tests {
             let mut alu = NativeAlu;
             run_verified(BenchId::Bitonic, 128, &gpgpu, &mut alu, seed).unwrap();
         }
+    }
+
+    #[test]
+    fn memstress_64_correct_depth_0() {
+        let r = run(BenchId::MemStress, 64, 1, 8);
+        // Uniform trip count: the guarded backward branch never diverges.
+        assert_eq!(r.stats.max_stack_depth, 0, "memstress loop is uniform");
+        assert_eq!(r.stats.multiplier_ops(), 0, "strides avoid the multiplier");
+        assert!(r.stats.global_load_txns > 0);
+    }
+
+    #[test]
+    fn memstress_strides_verify() {
+        let gpgpu = Gpgpu::new(GpgpuConfig::new(2, 8));
+        for stride in [1u32, 8, 32, 64] {
+            let w = prepare_memstress(64, 0xF00D, stride);
+            let mut gmem = w.make_gmem();
+            w.run(&gpgpu, &mut gmem, RunOptions::default()).unwrap();
+            w.verify(&gmem).unwrap_or_else(|e| panic!("stride {stride}: {e}"));
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_run_shims_match_the_unified_run() {
+        let gpgpu = Gpgpu::new(GpgpuConfig::new(2, 8));
+        let w = prepare(BenchId::VecAdd, 64, 7);
+
+        let mut g0 = w.make_gmem();
+        let base = w.run(&gpgpu, &mut g0, RunOptions::default()).unwrap();
+
+        let mut alu = NativeAlu;
+        let mut g1 = w.make_gmem();
+        let r1 = w.run_admitted(&gpgpu, &w.kernel.sig, &mut g1, &mut alu).unwrap();
+        assert_eq!(r1.cycles, base.cycles);
+
+        let mut g2 = w.make_gmem();
+        let r2 = w.run_parallel(&gpgpu, &mut g2, &NativeAlu).unwrap();
+        assert_eq!(r2.cycles, base.cycles);
+
+        let mut g3 = w.make_gmem();
+        let r3 = w
+            .run_parallel_admitted(&gpgpu, &w.kernel.sig, &mut g3, &NativeAlu)
+            .unwrap();
+        assert_eq!(r3.cycles, base.cycles);
     }
 
     #[test]

@@ -19,12 +19,12 @@
 //! See `DESIGN.md` for the system inventory and per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
-// Style decisions, applied crate-wide rather than per-site:
-// * lane loops index fixed `[i32; 32]` arrays by mask bit, where the
-//   index *is* the lane id — iterator rewrites obscure that;
-// * the SM/launch plumbing mirrors the hardware interface registers, so
-//   several functions legitimately take many scalar arguments.
-#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// Style decision, applied crate-wide rather than per-site: lane loops
+// index fixed `[i32; 32]` arrays by mask bit, where the index *is* the
+// lane id — iterator rewrites obscure that. (The launch plumbing that
+// once needed `too_many_arguments` now travels in `LaunchRequest` /
+// `SmLaunch` bundles.)
+#![allow(clippy::needless_range_loop)]
 
 pub mod asm;
 pub mod baseline;

@@ -10,26 +10,43 @@
 use flexgrip::coordinator::{self, GpgpuService, Request, ServiceConfig};
 use flexgrip::gpgpu::GpgpuConfig;
 use flexgrip::harness::{tables, Evaluation};
-use flexgrip::kernels::{self, BenchId};
+use flexgrip::kernels::{self, BenchId, RunOptions};
 use flexgrip::model::{area::area, power::power, ArchParams};
 use flexgrip::runtime::{Artifacts, XlaAlu};
-use flexgrip::sim::NativeAlu;
+use flexgrip::sim::{CacheGeometry, MemoryConfig};
 use std::collections::HashMap;
 use std::process::ExitCode;
 
 fn usage() -> ! {
     eprintln!(
         "usage:\n  \
-         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla] [--parallel]\n  \
+         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla] [--parallel] [--cache WxSxL]\n  \
          flexgrip report [--all] [--table 1..6] [--fig 4|5] [--sweep] [--size 256]\n  \
          flexgrip customize --bench <name> [--n 64]\n  \
          flexgrip limits\n  \
          flexgrip asm --file <kernel.flex>\n  \
-         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1]\n  \
-         flexgrip fleet-demo [--n 64] [--jobs 4] [--seed N] [--out BENCH_fleet.json]\n\n\
-         benchmarks: autocorr bitonic matmul reduction transpose vecadd"
+         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1] [--cache WxSxL]\n  \
+         flexgrip fleet-demo [--n 64] [--jobs 4] [--seed N] [--cache WxSxL] [--out BENCH_fleet.json]\n\n\
+         benchmarks: autocorr bitonic matmul reduction transpose vecadd memstress\n\
+         --cache takes an L1 geometry WAYSxSETSxLINE_BYTES, e.g. 4x64x32"
     );
     std::process::exit(2);
+}
+
+/// Parse the optional `--cache WxSxL` flag into a memory configuration
+/// (flat when absent; exits with the valid-geometry message on a bad
+/// value).
+fn memory_flag(flags: &HashMap<String, String>) -> MemoryConfig {
+    match flags.get("cache") {
+        None => MemoryConfig::flat(),
+        Some(s) => match CacheGeometry::parse(s) {
+            Ok(geom) => MemoryConfig::with_l1(geom),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        },
+    }
 }
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -89,16 +106,13 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
         return ExitCode::FAILURE;
     }
 
-    let cfg = GpgpuConfig::new(sms, sp);
+    let cfg = GpgpuConfig::new(sms, sp).with_memory(memory_flag(&flags));
     let gpgpu = flexgrip::gpgpu::Gpgpu::new(cfg);
     let w = kernels::prepare(id, n, seed);
     let mut gmem = w.make_gmem();
     let run = match backend {
-        "native" if parallel => w.run_parallel(&gpgpu, &mut gmem, &NativeAlu),
-        "native" => {
-            let mut alu = NativeAlu;
-            w.run(&gpgpu, &mut gmem, &mut alu)
-        }
+        "native" if parallel => w.run(&gpgpu, &mut gmem, RunOptions::new().parallel()),
+        "native" => w.run(&gpgpu, &mut gmem, RunOptions::default()),
         "xla" => {
             let arts = match Artifacts::open_default() {
                 Ok(a) => std::sync::Arc::new(a),
@@ -114,7 +128,7 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
                     return ExitCode::FAILURE;
                 }
             };
-            w.run(&gpgpu, &mut gmem, &mut alu)
+            w.run(&gpgpu, &mut gmem, RunOptions::new().sequential(&mut alu))
         }
         other => {
             eprintln!("unknown backend `{other}`");
@@ -152,6 +166,20 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
         s.global_load_txns, s.global_store_txns, s.shared_load_txns, s.shared_store_txns,
         s.barriers
     );
+    if cfg.memory.l1.is_some() {
+        let m = &s.mem;
+        println!(
+            "  l1: {} hits / {} misses ({:.1}% hit rate)  {} evictions  \
+             {} mshr merges  {} fill-stall + {} contention cycles",
+            m.hits,
+            m.misses,
+            100.0 * m.hit_rate(),
+            m.evictions,
+            m.mshr_merges,
+            m.fill_stall_cycles,
+            m.contention_cycles
+        );
+    }
     let p = power(&ArchParams::from_config(&cfg));
     println!(
         "  model: {:.2} W dynamic -> {:.2} mJ dynamic energy",
@@ -276,7 +304,7 @@ fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     let n: u32 = get(&flags, "n", 64);
     let sms: u32 = get(&flags, "sms", 1);
     let svc = GpgpuService::start_pool(
-        GpgpuConfig::new(sms, 8),
+        GpgpuConfig::new(sms, 8).with_memory(memory_flag(&flags)),
         ServiceConfig { shards, queue_depth: 16 },
     );
     let mix = [
@@ -326,14 +354,18 @@ fn cmd_fleet_demo(flags: HashMap<String, String>) -> ExitCode {
     let n: u32 = get(&flags, "n", 64);
     let jobs: u32 = get(&flags, "jobs", 4);
     let seed: u64 = get(&flags, "seed", flexgrip::harness::eval::EVAL_SEED);
-    let r = match flexgrip::harness::fleet_report(n, jobs, seed) {
+    let memory = memory_flag(&flags);
+    let r = match flexgrip::harness::fleet_report_with_memory(n, jobs, seed, memory) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("fleet replay failed: {e}");
             return ExitCode::FAILURE;
         }
     };
-    println!("fleet replay: {} jobs/bench at n={n} (seed {seed})", r.jobs_per_bench);
+    println!(
+        "fleet replay: {} jobs/bench at n={n} (seed {seed}, memory {})",
+        r.jobs_per_bench, r.memory
+    );
     for p in &r.points {
         println!(
             "  {:<10} -> {:<28} {:.4} W  {:>10} cycles  {:>8.3} ms  \

@@ -65,6 +65,12 @@ const FF_PER_STACK_ENTRY: f64 = (103_776.0 - 60_161.0) / 32.0;
 const LUT_PER_MUL_SP: f64 = (39_189.0 - 22_937.0) / 8.0;
 const FF_PER_MUL_SP: f64 = (57_301.0 - 27_136.0) / 8.0;
 const BRAM_MUL_REMOVAL: u32 = 4;
+/// L1 cache controller fixed cost per SM and per-tag-entry compare/mux
+/// cost (additive; not a paper calibration point).
+const CACHE_CTRL_LUTS: f64 = 150.0;
+const CACHE_CTRL_FFS: f64 = 120.0;
+const LUT_PER_TAG_ENTRY: f64 = 2.0;
+const FF_PER_TAG_ENTRY: f64 = 1.0;
 
 fn interp(
     table: &[(u32, u32, u32, u32); 3],
@@ -133,6 +139,16 @@ pub fn area(p: &ArchParams) -> Area {
         ffs -= sms * p.num_sp as f64 * FF_PER_MUL_SP;
         bram -= sms * BRAM_MUL_REMOVAL as f64;
     }
+    // Optional per-SM L1/BRAM cache (not in the paper's tables): strictly
+    // additive, so every published calibration point above is untouched
+    // when `l1` is `None`. Tag compare + hit mux scale with the tag array
+    // (ways * sets entries); line storage maps to BRAM.
+    if let Some(geom) = p.l1 {
+        let tag_entries = (geom.ways * geom.sets) as f64;
+        luts += sms * (CACHE_CTRL_LUTS + LUT_PER_TAG_ENTRY * tag_entries);
+        ffs += sms * (CACHE_CTRL_FFS + FF_PER_TAG_ENTRY * tag_entries);
+        bram += sms * geom.brams() as f64;
+    }
 
     // DSP48E closed form (exact on all Table 2 points + Table 6 rows).
     let dsp_per_sm = 12 + if p.has_multiplier { 18 * p.num_sp } else { 0 };
@@ -146,7 +162,13 @@ mod tests {
     use super::*;
 
     fn params(sms: u32, sp: u32) -> ArchParams {
-        ArchParams { num_sms: sms, num_sp: sp, warp_stack_depth: 32, has_multiplier: true }
+        ArchParams {
+            num_sms: sms,
+            num_sp: sp,
+            warp_stack_depth: 32,
+            has_multiplier: true,
+            l1: None,
+        }
     }
 
     #[test]
@@ -197,6 +219,7 @@ mod tests {
             num_sp: 8,
             warp_stack_depth: 2,
             has_multiplier: false,
+            l1: None,
         };
         let a = area(&p);
         assert_eq!(a.dsp, 12, "only the address-calculation DSPs remain");
@@ -234,6 +257,7 @@ mod tests {
             num_sp: 8,
             warp_stack_depth: 2,
             has_multiplier: false,
+            l1: None,
         });
         let red = nomul.lut_reduction_pct(&base);
         assert!((50.0..70.0).contains(&red), "bitonic-style reduction {red:.0}%");
@@ -245,5 +269,24 @@ mod tests {
         let a4 = area(&params(4, 8));
         assert!(a4.luts > a2.luts);
         assert_eq!(a4.dsp, 4 * 156 - 18);
+    }
+
+    #[test]
+    fn l1_cache_is_a_strictly_additive_per_sm_term() {
+        use crate::sim::CacheGeometry;
+        let geom = CacheGeometry::parse("4x64x32").unwrap();
+        for sms in [1u32, 2] {
+            let flat = area(&params(sms, 8));
+            let mut p = params(sms, 8);
+            p.l1 = Some(geom);
+            let cached = area(&p);
+            assert!(cached.luts > flat.luts && cached.ffs > flat.ffs);
+            assert_eq!(cached.dsp, flat.dsp, "cache uses no DSPs");
+            assert_eq!(
+                cached.bram - flat.bram,
+                sms * geom.brams(),
+                "line storage is BRAM, one array per SM"
+            );
+        }
     }
 }

@@ -13,9 +13,13 @@ pub use energy::{dynamic_energy_mj, energy_reduction_pct};
 pub use power::{PowerEstimate, MICROBLAZE_DYNAMIC_W, MICROBLAZE_STATIC_W};
 
 use crate::gpgpu::GpgpuConfig;
+use crate::sim::CacheGeometry;
 
 /// The architectural parameters the implementation models depend on —
-/// exactly the paper's customization axes (§4, §5.2).
+/// the paper's customization axes (§4, §5.2) plus the optional per-SM
+/// L1/BRAM cache (not in the paper's tables; modelled as a strictly
+/// additive term so all published calibration points are unchanged when
+/// `l1` is `None`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ArchParams {
     pub num_sms: u32,
@@ -24,12 +28,20 @@ pub struct ArchParams {
     pub warp_stack_depth: u32,
     /// Multiplier + third read-operand unit present (§4.2).
     pub has_multiplier: bool,
+    /// Per-SM L1/BRAM cache geometry, if the device models one.
+    pub l1: Option<CacheGeometry>,
 }
 
 impl ArchParams {
     /// The paper's baseline FlexGrip (Table 2 row 1).
     pub fn baseline() -> ArchParams {
-        ArchParams { num_sms: 1, num_sp: 8, warp_stack_depth: 32, has_multiplier: true }
+        ArchParams {
+            num_sms: 1,
+            num_sp: 8,
+            warp_stack_depth: 32,
+            has_multiplier: true,
+            l1: None,
+        }
     }
 
     pub fn from_config(cfg: &GpgpuConfig) -> ArchParams {
@@ -38,6 +50,7 @@ impl ArchParams {
             num_sp: cfg.sm.num_sp,
             warp_stack_depth: cfg.sm.warp_stack_depth,
             has_multiplier: cfg.sm.has_multiplier,
+            l1: cfg.memory.l1.map(|c| c.geom),
         }
     }
 
@@ -48,6 +61,9 @@ impl ArchParams {
         }
         if !self.has_multiplier {
             s += ", no mul";
+        }
+        if let Some(geom) = self.l1 {
+            s += &format!(", l1 {}", geom.label());
         }
         s
     }

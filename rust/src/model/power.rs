@@ -34,6 +34,10 @@ const STACK_FULL_FRACTION: f64 = 0.09;
 /// 8 SP (Table 6 / §5.2: 38% − 15% = 23 points at 8 SP).
 const MUL_FRACTION_8SP: f64 = 0.23;
 const BASE_8SP_W: f64 = 0.84;
+/// L1 cache dynamic power per SM: controller fixed cost + per-BRAM toggle
+/// cost (additive; not a paper calibration point — zero when no cache).
+const CACHE_CTRL_W: f64 = 0.01;
+const CACHE_W_PER_BRAM: f64 = 0.005;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PowerEstimate {
@@ -68,8 +72,14 @@ pub fn power(p: &ArchParams) -> PowerEstimate {
     } else {
         -MUL_FRACTION_8SP * BASE_8SP_W * (p.num_sp as f64 / 8.0)
     };
+    // Strictly additive cache term: all Table 4/6 points hold at `None`.
+    let cache_w = p
+        .l1
+        .map(|g| CACHE_CTRL_W + CACHE_W_PER_BRAM * g.brams() as f64)
+        .unwrap_or(0.0);
 
-    let dynamic_w = TOP_LEVEL_W + p.num_sms as f64 * (per_sm_full + stack_w + mul_w);
+    let dynamic_w =
+        TOP_LEVEL_W + p.num_sms as f64 * (per_sm_full + stack_w + mul_w + cache_w);
     // Static power is a device property, essentially flat (Table 4).
     let static_w = if p.num_sp >= 16 || p.num_sms >= 2 { 3.46 } else { 3.45 };
     PowerEstimate { dynamic_w: dynamic_w.max(0.05), static_w }
@@ -80,7 +90,13 @@ mod tests {
     use super::*;
 
     fn base(sp: u32) -> ArchParams {
-        ArchParams { num_sms: 1, num_sp: sp, warp_stack_depth: 32, has_multiplier: true }
+        ArchParams {
+            num_sms: 1,
+            num_sp: sp,
+            warp_stack_depth: 32,
+            has_multiplier: true,
+            l1: None,
+        }
     }
 
     #[test]
@@ -115,6 +131,7 @@ mod tests {
             num_sp: 8,
             warp_stack_depth: 2,
             has_multiplier: false,
+            l1: None,
         };
         let red = 100.0 * (1.0 - power(&p).dynamic_w / b);
         assert!((28.0..42.0).contains(&red), "no-mul total reduction {red:.1}%");
@@ -137,5 +154,16 @@ mod tests {
     fn microblaze_constants_match_table4() {
         assert_eq!(MICROBLAZE_DYNAMIC_W, 0.37);
         assert_eq!(MICROBLAZE_STATIC_W, 3.45);
+    }
+
+    #[test]
+    fn l1_cache_adds_modest_dynamic_power() {
+        use crate::sim::CacheGeometry;
+        let flat = power(&base(8)).dynamic_w;
+        let mut p = base(8);
+        p.l1 = Some(CacheGeometry::parse("4x64x32").unwrap());
+        let cached = power(&p).dynamic_w;
+        assert!(cached > flat, "cache must cost something");
+        assert!(cached - flat < 0.1, "but well under a baseline SP array");
     }
 }

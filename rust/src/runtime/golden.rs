@@ -31,7 +31,9 @@ pub fn golden_output(
             &name,
             &[(&input[..nu], &[nu]), (&input[nu..], &[nu])],
         ),
-        BenchId::Autocorr | BenchId::Reduction | BenchId::Bitonic => {
+        // memstress has no AOT artifact (it probes the cache model, not
+        // the execute stage); run_i32 reports the missing artifact.
+        BenchId::Autocorr | BenchId::Reduction | BenchId::Bitonic | BenchId::MemStress => {
             arts.run_i32(&name, &[(input, &[nu])])
         }
     }

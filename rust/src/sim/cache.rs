@@ -1,0 +1,556 @@
+//! Per-SM L1/BRAM cache model and SM↔memory interconnect timing.
+//!
+//! The paper's architecture is "optimized for FPGA implementation to
+//! support efficient use of embedded block memories"; this module gives
+//! the simulator that memory system as a **timing layer**: a
+//! set-associative tag array sized in BRAM-realistic units (ways × sets ×
+//! line bytes), line fills streamed over the AXI interconnect, MSHR-style
+//! outstanding-miss merging, and a per-partition fill port shared by the
+//! SMs mapped to the same memory partition — so concurrent SMs contend
+//! for memory instead of each seeing single-cycle global memory.
+//!
+//! The model holds **tags only, never data**: [`CachedGmem`] passes every
+//! load and store straight through to the wrapped [`GmemPort`]
+//! (write-through, no-write-allocate), so functional results are
+//! bit-identical to flat memory by construction. The cache changes
+//! cycles, never values — the differential suite in
+//! `tests/memory_hierarchy.rs` pins exactly that.
+//!
+//! Determinism: every timing input (including the interconnect contention
+//! factor) is a static function of the device configuration and this SM's
+//! id, never of dynamic cross-SM state, so the sequential and parallel
+//! launch paths stay bit-identical in timing too.
+
+use super::mem::{GmemPort, MemCost, MemTiming};
+use super::metrics::MemStats;
+use super::SimError;
+
+/// Bits in one Xilinx-class 36 Kb block RAM — the unit [`CacheGeometry::brams`]
+/// sizes the data array in.
+const BRAM_BITS: u64 = 36_864;
+
+/// L1 cache shape: `ways × sets × line_bytes`, the three knobs the
+/// memory sweep varies (`BENCH_memory.json`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheGeometry {
+    /// Associativity (1..=16).
+    pub ways: u32,
+    /// Sets per way (power of two, <= 1024).
+    pub sets: u32,
+    /// Line size in bytes (power of two, 16..=128).
+    pub line_bytes: u32,
+}
+
+impl CacheGeometry {
+    /// Parse the CLI form `WAYSxSETSxLINE_BYTES`, e.g. `4x64x32`.
+    pub fn parse(s: &str) -> Result<CacheGeometry, String> {
+        let bad = || {
+            format!(
+                "invalid cache geometry '{s}': expected WAYSxSETSxLINE_BYTES \
+                 (ways 1..=16, sets a power of two <= 1024, line bytes a \
+                 power of two in 16..=128) — e.g. 2x16x32 (1 KiB), \
+                 4x64x32 (8 KiB), 4x256x64 (64 KiB)"
+            )
+        };
+        let mut it = s.split('x');
+        let (a, b, c) = match (it.next(), it.next(), it.next(), it.next()) {
+            (Some(a), Some(b), Some(c), None) => (a, b, c),
+            _ => return Err(bad()),
+        };
+        let g = CacheGeometry {
+            ways: a.trim().parse().map_err(|_| bad())?,
+            sets: b.trim().parse().map_err(|_| bad())?,
+            line_bytes: c.trim().parse().map_err(|_| bad())?,
+        };
+        g.validate().map_err(|_| bad())?;
+        Ok(g)
+    }
+
+    pub fn validate(&self) -> Result<(), SimError> {
+        if !(1..=16).contains(&self.ways) {
+            return Err(SimError::LimitExceeded(format!(
+                "cache ways {} not in 1..=16",
+                self.ways
+            )));
+        }
+        if !self.sets.is_power_of_two() || self.sets > 1024 {
+            return Err(SimError::LimitExceeded(format!(
+                "cache sets {} must be a power of two <= 1024",
+                self.sets
+            )));
+        }
+        if !self.line_bytes.is_power_of_two() || !(16..=128).contains(&self.line_bytes) {
+            return Err(SimError::LimitExceeded(format!(
+                "cache line {} bytes must be a power of two in 16..=128",
+                self.line_bytes
+            )));
+        }
+        Ok(())
+    }
+
+    /// The canonical `4x64x32` form (inverse of [`CacheGeometry::parse`]).
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.ways, self.sets, self.line_bytes)
+    }
+
+    pub fn size_bytes(&self) -> u32 {
+        self.ways * self.sets * self.line_bytes
+    }
+
+    pub fn line_words(&self) -> u32 {
+        self.line_bytes / 4
+    }
+
+    /// 36 Kb block RAMs the data array occupies; each way needs its own
+    /// BRAM port for the parallel tag compare, so small caches still pay
+    /// one BRAM per way.
+    pub fn brams(&self) -> u32 {
+        ((self.size_bytes() as u64 * 8).div_ceil(BRAM_BITS) as u32).max(self.ways)
+    }
+
+    /// Split a byte address into `(tag, set, offset)`.
+    #[inline]
+    pub fn decompose(&self, addr: u32) -> (u32, u32, u32) {
+        let line = addr / self.line_bytes;
+        (line / self.sets, line % self.sets, addr % self.line_bytes)
+    }
+}
+
+/// Full L1 configuration: geometry plus the miss-handling resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct L1Config {
+    pub geom: CacheGeometry,
+    /// Outstanding-miss registers: distinct line fills in flight at once.
+    pub mshrs: u32,
+    /// Memory partitions behind the interconnect. SMs are mapped to
+    /// partitions round-robin by SM id; SMs sharing a partition share one
+    /// fill port, which is where multi-SM contention comes from.
+    pub partitions: u32,
+}
+
+impl L1Config {
+    /// Defaults sized like the paper's BRAM budget: 4 MSHRs, 2 partitions.
+    pub fn new(geom: CacheGeometry) -> L1Config {
+        L1Config { geom, mshrs: 4, partitions: 2 }
+    }
+
+    pub fn validate(&self) -> Result<(), SimError> {
+        self.geom.validate()?;
+        if self.mshrs == 0 {
+            return Err(SimError::LimitExceeded("cache needs at least 1 MSHR".into()));
+        }
+        if self.partitions == 0 {
+            return Err(SimError::LimitExceeded(
+                "interconnect needs at least 1 memory partition".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Device-level memory hierarchy selection: flat (the seed behaviour,
+/// [`MemTiming`] applied directly) or an L1 per SM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemoryConfig {
+    pub l1: Option<L1Config>,
+}
+
+impl MemoryConfig {
+    /// Flat single-latency global memory (identical to the pre-cache
+    /// simulator: every access pays [`MemTiming::blocking_cycles`]).
+    pub fn flat() -> MemoryConfig {
+        MemoryConfig { l1: None }
+    }
+
+    pub fn with_l1(geom: CacheGeometry) -> MemoryConfig {
+        MemoryConfig { l1: Some(L1Config::new(geom)) }
+    }
+
+    pub fn label(&self) -> String {
+        match self.l1 {
+            Some(c) => format!("l1 {}", c.geom.label()),
+            None => "flat".into(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), SimError> {
+        match &self.l1 {
+            Some(c) => c.validate(),
+            None => Ok(()),
+        }
+    }
+}
+
+/// One SM's L1 timing state: tag array (LRU stamps), MSHR list, and the
+/// partition fill port this SM shares with its interconnect neighbours.
+#[derive(Debug, Clone)]
+pub struct L1Cache {
+    cfg: L1Config,
+    timing: MemTiming,
+    /// Tag per (set, way) slot, `None` while invalid.
+    tags: Vec<Option<u32>>,
+    /// LRU use stamps, parallel to `tags`.
+    stamps: Vec<u64>,
+    use_stamp: u64,
+    /// Outstanding line fills: `(line base address, ready cycle)`.
+    inflight: Vec<(u32, u64)>,
+    /// Next cycle this SM's partition fill port is free.
+    fill_free_at: u64,
+    /// SMs sharing this SM's partition fill port (static, so timing stays
+    /// identical between the sequential and parallel launch paths).
+    contention_k: u64,
+    stats: MemStats,
+}
+
+impl L1Cache {
+    pub fn new(cfg: L1Config, num_sms: u32, sm_id: u32, timing: MemTiming) -> L1Cache {
+        let slots = (cfg.geom.sets * cfg.geom.ways) as usize;
+        let sharers =
+            (0..num_sms.max(1)).filter(|i| i % cfg.partitions == sm_id % cfg.partitions).count();
+        L1Cache {
+            cfg,
+            timing,
+            tags: vec![None; slots],
+            stamps: vec![0; slots],
+            use_stamp: 0,
+            inflight: Vec::new(),
+            fill_free_at: 0,
+            contention_k: (sharers as u64).max(1),
+            stats: MemStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> MemStats {
+        self.stats
+    }
+
+    /// Cycles for one line fill alone on its partition port: the AXI row
+    /// setup plus one streaming beat per line word.
+    fn fill_service(&self) -> u64 {
+        self.timing.global_row_overhead as u64
+            + self.cfg.geom.line_words() as u64 * self.timing.global_per_thread as u64
+    }
+
+    /// Timing for one global warp access (`addrs[lane]` active iff bit
+    /// `lane` of `exec` is set). Front-end occupancy runs at BRAM
+    /// (shared-memory) speed; load misses park the warp until the fill
+    /// lands.
+    pub fn access(&mut self, rows: u32, exec: u32, addrs: &[u32], load: bool, now: u64) -> MemCost {
+        let blocking = self.timing.blocking_cycles(false, rows, exec.count_ones());
+        if !load {
+            // Write-through, no-write-allocate: stores drain through a
+            // write buffer (no park); present lines refresh their LRU
+            // stamp so streaming stores don't age out live read lines.
+            for (lane, &a) in addrs.iter().enumerate() {
+                if exec & (1 << lane) == 0 {
+                    continue;
+                }
+                let line = a / self.cfg.geom.line_bytes * self.cfg.geom.line_bytes;
+                if let Some(slot) = self.lookup(line) {
+                    self.use_stamp += 1;
+                    self.stamps[slot] = self.use_stamp;
+                }
+            }
+            return MemCost { blocking, park: 0 };
+        }
+        // Coalesce active lanes to unique lines (<= 32 lanes: a linear
+        // scan beats hashing), then resolve each line once.
+        let mut lines: Vec<u32> = Vec::with_capacity(4);
+        for (lane, &a) in addrs.iter().enumerate() {
+            if exec & (1 << lane) == 0 {
+                continue;
+            }
+            let line = a / self.cfg.geom.line_bytes * self.cfg.geom.line_bytes;
+            if !lines.contains(&line) {
+                lines.push(line);
+            }
+        }
+        let mut park = 0u64;
+        for line in lines {
+            let ready = self.access_line(line, now);
+            park = park.max(ready.saturating_sub(now));
+        }
+        self.stats.fill_stall_cycles += park;
+        MemCost { blocking, park }
+    }
+
+    fn lookup(&self, line: u32) -> Option<usize> {
+        let (tag, set, _) = self.cfg.geom.decompose(line);
+        let base = (set * self.cfg.geom.ways) as usize;
+        (base..base + self.cfg.geom.ways as usize).find(|&i| self.tags[i] == Some(tag))
+    }
+
+    /// One load touching `line`; returns the cycle its data is available.
+    fn access_line(&mut self, line: u32, now: u64) -> u64 {
+        self.use_stamp += 1;
+        if let Some(slot) = self.lookup(line) {
+            self.stamps[slot] = self.use_stamp;
+            self.stats.hits += 1;
+            // Hit-under-fill: an earlier miss allocated this line and its
+            // fill is still in flight — merge into that MSHR and wake
+            // when the one outstanding fill lands (no second fill).
+            if let Some(&(_, ready)) = self.inflight.iter().find(|&&(l, r)| l == line && r > now) {
+                self.stats.mshr_merges += 1;
+                return ready;
+            }
+            return now;
+        }
+        self.stats.misses += 1;
+        // Allocate an MSHR; a full MSHR file stalls the fill until the
+        // earliest outstanding fill retires.
+        self.inflight.retain(|&(_, r)| r > now);
+        let mshr_free = if self.inflight.len() >= self.cfg.mshrs as usize {
+            self.inflight.iter().map(|&(_, r)| r).min().unwrap_or(now)
+        } else {
+            now
+        };
+        // Interconnect: fills from the SMs sharing this partition
+        // interleave on one port, so each fill's effective occupancy is
+        // `service × sharers`; the surplus is accounted as contention.
+        let service = self.fill_service();
+        let effective = service * self.contention_k;
+        let start = now.max(mshr_free).max(self.fill_free_at);
+        let ready = start + effective;
+        self.fill_free_at = ready;
+        self.stats.contention_cycles += effective - service;
+        self.inflight.retain(|&(_, r)| r > start);
+        self.inflight.push((line, ready));
+        self.insert(line);
+        ready
+    }
+
+    /// Install `line`'s tag: first invalid way, else evict the LRU way.
+    fn insert(&mut self, line: u32) {
+        let (tag, set, _) = self.cfg.geom.decompose(line);
+        let base = (set * self.cfg.geom.ways) as usize;
+        let ways = self.cfg.geom.ways as usize;
+        let slot = (base..base + ways)
+            .find(|&i| self.tags[i].is_none())
+            .unwrap_or_else(|| (base..base + ways).min_by_key(|&i| self.stamps[i]).unwrap());
+        if self.tags[slot].is_some() {
+            self.stats.evictions += 1;
+        }
+        self.tags[slot] = Some(tag);
+        self.stamps[slot] = self.use_stamp;
+    }
+}
+
+/// A [`GmemPort`] adapter layering the L1 timing model over any inner
+/// port. Loads and stores pass straight through to the wrapped port —
+/// only [`GmemPort::access_cost`] and [`GmemPort::mem_stats`] change.
+pub struct CachedGmem<'a, G: GmemPort + ?Sized> {
+    inner: &'a mut G,
+    cache: L1Cache,
+}
+
+impl<'a, G: GmemPort + ?Sized> CachedGmem<'a, G> {
+    pub fn new(inner: &'a mut G, cache: L1Cache) -> CachedGmem<'a, G> {
+        CachedGmem { inner, cache }
+    }
+}
+
+impl<G: GmemPort + ?Sized> GmemPort for CachedGmem<'_, G> {
+    #[inline]
+    fn load(&self, addr: u32) -> Result<i32, SimError> {
+        self.inner.load(addr)
+    }
+
+    #[inline]
+    fn store(&mut self, addr: u32, value: i32) -> Result<(), SimError> {
+        self.inner.store(addr, value)
+    }
+
+    fn access_cost(
+        &mut self,
+        _timing: &MemTiming,
+        rows: u32,
+        exec: u32,
+        addrs: &[u32],
+        load: bool,
+        now: u64,
+    ) -> MemCost {
+        self.cache.access(rows, exec, addrs, load, now)
+    }
+
+    fn mem_stats(&self) -> MemStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(s: &str) -> CacheGeometry {
+        CacheGeometry::parse(s).unwrap()
+    }
+
+    #[test]
+    fn parse_roundtrips_and_sizes() {
+        let g = geom("4x64x32");
+        assert_eq!(g, CacheGeometry { ways: 4, sets: 64, line_bytes: 32 });
+        assert_eq!(g.label(), "4x64x32");
+        assert_eq!(g.size_bytes(), 8192);
+        assert_eq!(g.line_words(), 8);
+        assert_eq!(geom("2x16x32").size_bytes(), 1024);
+        assert_eq!(geom("4x256x64").size_bytes(), 65536);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_geometries() {
+        for bad in ["", "4x64", "4x64x32x2", "0x64x32", "4x63x32", "4x64x8", "axbxc", "4x2048x32"]
+        {
+            let err = CacheGeometry::parse(bad).unwrap_err();
+            assert!(err.contains("WAYSxSETSxLINE_BYTES"), "{bad}: {err}");
+            assert!(err.contains("4x64x32"), "error must list examples: {err}");
+        }
+    }
+
+    #[test]
+    fn bram_sizing_in_36kb_units() {
+        assert_eq!(geom("2x16x32").brams(), 2, "tiny cache still pays 1 BRAM/way");
+        assert_eq!(geom("4x64x32").brams(), 4); // 8 KiB = 64 Kb -> ceil 2, ways 4
+        assert_eq!(geom("4x256x64").brams(), 15); // 64 KiB = 512 Kb / 36 Kb
+    }
+
+    #[test]
+    fn decompose_pins_tag_index_offset() {
+        let g = geom("4x64x32");
+        // 0x1234 / 32 = line 145; 145 % 64 = set 17; 145 / 64 = tag 2.
+        assert_eq!(g.decompose(0x1234), (2, 17, 0x14));
+        assert_eq!(g.decompose(0), (0, 0, 0));
+        // Same set, different tag: 32-byte lines, 64 sets -> +2048 bytes.
+        let (t0, s0, _) = g.decompose(0x100);
+        let (t1, s1, _) = g.decompose(0x100 + 2048);
+        assert_eq!(s0, s1);
+        assert_eq!(t1, t0 + 1);
+    }
+
+    fn one_sm_cache(g: &str) -> L1Cache {
+        L1Cache::new(L1Config::new(geom(g)), 1, 0, MemTiming::default())
+    }
+
+    #[test]
+    fn miss_then_hit_on_one_line() {
+        let mut c = one_sm_cache("2x16x32");
+        // Miss at t=0: fill service = 200 + 8*15 = 320; front-end
+        // blocking at BRAM speed = 4*4 + 1*2 = 18.
+        let cost = c.access(4, 1, &[0x40], true, 0);
+        assert_eq!(cost.blocking, 18);
+        assert_eq!(cost.park, 320);
+        // Same line after the fill landed: pure hit, no park.
+        let cost = c.access(4, 1, &[0x44], true, 1_000);
+        assert_eq!(cost.park, 0);
+        let s = c.stats();
+        assert_eq!((s.misses, s.hits, s.evictions), (1, 1, 0));
+        assert_eq!(s.fill_stall_cycles, 320);
+    }
+
+    #[test]
+    fn mshr_merges_outstanding_miss_single_fill() {
+        let mut c = one_sm_cache("2x16x32");
+        let first = c.access(4, 1, &[0x40], true, 0);
+        assert_eq!(first.park, 320);
+        // Second access to the same line while the fill is in flight:
+        // merged into the outstanding MSHR, parks to the same ready time.
+        let second = c.access(4, 1, &[0x48], true, 100);
+        assert_eq!(second.park, 220, "wakes when the one fill lands");
+        let s = c.stats();
+        assert_eq!(s.misses, 1, "no second fill issued");
+        assert_eq!(s.mshr_merges, 1);
+        assert_eq!(s.hits, 1, "merge counts as a (hit-under-fill) hit");
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 2 ways x 1 set x 16-byte lines: lines 0x00, 0x10, 0x20 all
+        // collide. Touch A, B, re-touch A, then C: B is LRU and evicted.
+        let mut c = one_sm_cache("2x1x16");
+        let mut t = 0u64;
+        let mut load = |c: &mut L1Cache, addr: u32| {
+            t += 100_000; // far apart: every fill completes in between
+            c.access(4, 1, &[addr], true, t);
+        };
+        load(&mut c, 0x00); // miss, fills way 0
+        load(&mut c, 0x10); // miss, fills way 1
+        load(&mut c, 0x00); // hit, refreshes A
+        load(&mut c, 0x20); // miss, evicts B (LRU)
+        assert_eq!(c.stats().evictions, 1);
+        load(&mut c, 0x00); // still resident
+        load(&mut c, 0x10); // gone: miss again, evicts C
+        let s = c.stats();
+        assert_eq!(s.misses, 4);
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.evictions, 2);
+    }
+
+    #[test]
+    fn partition_contention_scales_with_sharers() {
+        // 4 SMs over 2 partitions: SM 0 shares its port with SM 2.
+        let mut c = L1Cache::new(L1Config::new(geom("2x16x32")), 4, 0, MemTiming::default());
+        let cost = c.access(4, 1, &[0], true, 0);
+        assert_eq!(cost.park, 640, "2 sharers double the 320-cycle fill");
+        assert_eq!(c.stats().contention_cycles, 320);
+        // A lone SM sees the raw service time and zero contention.
+        let mut c1 = one_sm_cache("2x16x32");
+        c1.access(4, 1, &[0], true, 0);
+        assert_eq!(c1.stats().contention_cycles, 0);
+    }
+
+    #[test]
+    fn warp_access_coalesces_lanes_to_unique_lines() {
+        // 8 active lanes, stride 4 bytes: one 32-byte line covers lanes
+        // 0..8 -> exactly one miss, and the fill port serializes nothing.
+        let mut c = one_sm_cache("2x16x32");
+        let addrs: Vec<u32> = (0..8u32).map(|l| l * 4).collect();
+        c.access(4, 0xFF, &addrs, true, 0);
+        let s = c.stats();
+        assert_eq!((s.misses, s.hits), (1, 0));
+        // Stride 32: every lane its own line -> 8 fills serialized on the
+        // port; the warp parks until the last one lands.
+        let mut c = one_sm_cache("2x16x32");
+        let addrs: Vec<u32> = (0..8u32).map(|l| l * 32).collect();
+        let cost = c.access(4, 0xFF, &addrs, true, 0);
+        assert_eq!(c.stats().misses, 8);
+        assert_eq!(cost.park, 8 * 320);
+    }
+
+    #[test]
+    fn stores_never_allocate_or_park() {
+        let mut c = one_sm_cache("2x16x32");
+        let cost = c.access(4, 1, &[0x40], false, 0);
+        assert_eq!(cost.park, 0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "no-write-allocate");
+    }
+
+    #[test]
+    fn cached_gmem_passes_values_through() {
+        use super::super::mem::GlobalMem;
+        let mut base = GlobalMem::new(256);
+        base.store(8, 42).unwrap();
+        let cache = one_sm_cache("2x16x32");
+        let stats = {
+            let mut cg = CachedGmem::new(&mut base, cache);
+            assert_eq!(GmemPort::load(&cg, 8).unwrap(), 42);
+            GmemPort::store(&mut cg, 12, 7).unwrap();
+            assert_eq!(GmemPort::load(&cg, 12).unwrap(), 7);
+            cg.access_cost(&MemTiming::default(), 4, 1, &[8], true, 0);
+            cg.mem_stats()
+        };
+        assert_eq!(stats.misses, 1);
+        assert_eq!(base.load(12).unwrap(), 7, "write-through to the base");
+    }
+
+    #[test]
+    fn memory_config_labels_and_validation() {
+        assert_eq!(MemoryConfig::flat().label(), "flat");
+        assert_eq!(MemoryConfig::default(), MemoryConfig::flat());
+        let m = MemoryConfig::with_l1(geom("4x64x32"));
+        assert_eq!(m.label(), "l1 4x64x32");
+        m.validate().unwrap();
+        let mut bad = m;
+        bad.l1.as_mut().unwrap().mshrs = 0;
+        assert!(bad.validate().is_err());
+    }
+}

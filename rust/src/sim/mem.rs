@@ -6,6 +6,7 @@
 //! out-of-bounds accesses are architectural faults surfaced to the
 //! coordinator (exercised by the failure-injection tests).
 
+use super::metrics::MemStats;
 use super::SimError;
 
 /// Byte offset where kernel scratch shared memory begins; the driver
@@ -64,14 +65,50 @@ impl GlobalMem {
     }
 }
 
+/// Timing of one global-memory warp access, as computed by the device's
+/// memory hierarchy (see [`GmemPort::access_cost`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemCost {
+    /// Cycles the access occupies the SM pipeline (the issue port blocks).
+    pub blocking: u64,
+    /// Additional cycles the issuing warp parks waiting for data (line
+    /// fills); other ready warps keep issuing meanwhile.
+    pub park: u64,
+}
+
 /// Global-memory access port: what an SM executes its `GLD`/`GST` stream
 /// against. The sequential launch path hands every SM the one true
 /// [`GlobalMem`]; the parallel path hands each SM thread a private
 /// [`GmemSnapshot`] so SMs can simulate concurrently without sharing
 /// mutable state (see `gpgpu`'s partition → simulate → merge pipeline).
+/// Either may additionally be wrapped in the L1 timing layer
+/// (`sim::CachedGmem`), which overrides the two provided methods below —
+/// values still pass through untouched, only cycles change.
 pub trait GmemPort {
     fn load(&self, addr: u32) -> Result<i32, SimError>;
     fn store(&mut self, addr: u32, value: i32) -> Result<(), SimError>;
+
+    /// Timing for one global warp access: `addrs[lane]` is active iff bit
+    /// `lane` of `exec` is set. The flat default reproduces the seed
+    /// simulator exactly — every access blocks the pipeline for
+    /// [`MemTiming::blocking_cycles`] and nothing parks.
+    fn access_cost(
+        &mut self,
+        timing: &MemTiming,
+        rows: u32,
+        exec: u32,
+        _addrs: &[u32],
+        _load: bool,
+        _now: u64,
+    ) -> MemCost {
+        MemCost { blocking: timing.blocking_cycles(true, rows, exec.count_ones()), park: 0 }
+    }
+
+    /// Memory-hierarchy counters accumulated by [`GmemPort::access_cost`]
+    /// calls so far; all-zero for flat ports.
+    fn mem_stats(&self) -> MemStats {
+        MemStats::default()
+    }
 }
 
 impl GmemPort for GlobalMem {
@@ -301,6 +338,24 @@ mod tests {
         let mut m = GlobalMem::new(128);
         m.write_words(16, &[1, 2, 3]).unwrap();
         assert_eq!(m.read_words(16, 3).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn flat_access_cost_is_exactly_the_blocking_model() {
+        // The provided GmemPort default must reproduce pre-cache timing
+        // bit-for-bit: blocking = MemTiming::blocking_cycles, park = 0 —
+        // for both the shared image and the COW snapshot.
+        let t = MemTiming::default();
+        let mut g = GlobalMem::new(256);
+        let c = g.access_cost(&t, 4, 0xFFFF_FFFF, &[0; 32], true, 123);
+        assert_eq!(c.blocking, t.blocking_cycles(true, 4, 32));
+        assert_eq!(c.park, 0);
+        assert_eq!(g.mem_stats(), MemStats::default());
+        let base = GlobalMem::new(256);
+        let mut snap = GmemSnapshot::new(&base);
+        let c = snap.access_cost(&t, 2, 0b101, &[0, 4, 8], false, 0);
+        assert_eq!(c.blocking, t.blocking_cycles(true, 2, 2));
+        assert_eq!(c.park, 0);
     }
 
     #[test]

@@ -4,6 +4,47 @@
 
 use crate::isa::Op;
 
+/// Memory-hierarchy counters for one SM over one launch. All zero on
+/// flat memory (the default [`crate::sim::GmemPort`] reports nothing);
+/// populated by the L1/BRAM cache layer in `sim/cache.rs`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemStats {
+    /// L1 load hits (line-granular: one count per unique line a warp
+    /// access touches).
+    pub hits: u64,
+    /// L1 load misses (each schedules one line fill).
+    pub misses: u64,
+    /// Valid lines replaced by a fill (LRU victim had data).
+    pub evictions: u64,
+    /// Cycles warps spent parked waiting on line fills.
+    pub fill_stall_cycles: u64,
+    /// Extra fill cycles from SMs sharing a partition fill port.
+    pub contention_cycles: u64,
+    /// Misses merged into an already-outstanding fill (MSHR hits).
+    pub mshr_merges: u64,
+}
+
+impl MemStats {
+    /// Load hit rate in [0, 1]; 0 when no loads were observed.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &MemStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.fill_stall_cycles += other.fill_stall_cycles;
+        self.contention_cycles += other.contention_cycles;
+        self.mshr_merges += other.mshr_merges;
+    }
+}
+
 /// Counters for one SM over one kernel launch.
 #[derive(Debug, Clone, Default)]
 pub struct SmStats {
@@ -31,6 +72,8 @@ pub struct SmStats {
     pub stall_cycles: u64,
     /// Dynamic opcode histogram (indexed by `Op as u8`).
     pub op_histogram: [u64; 32],
+    /// Memory-hierarchy counters (zero on flat memory).
+    pub mem: MemStats,
 }
 
 impl SmStats {
@@ -59,6 +102,7 @@ impl SmStats {
         for (mine, theirs) in self.op_histogram.iter_mut().zip(&other.op_histogram) {
             *mine += theirs;
         }
+        self.mem.merge(&other.mem);
     }
 
     /// Dynamic count of multiplier-consuming instructions (IMUL/IMAD) —
@@ -99,6 +143,25 @@ mod tests {
         s.count_op(Op::Iadd, 32);
         assert_eq!(s.multiplier_ops(), 2);
         assert_eq!(s.thread_instructions, 96);
+    }
+
+    #[test]
+    fn mem_stats_sum_under_merge_and_report_hit_rate() {
+        let mut a = SmStats {
+            mem: MemStats { hits: 3, misses: 1, fill_stall_cycles: 40, ..Default::default() },
+            ..Default::default()
+        };
+        let b = SmStats {
+            mem: MemStats { hits: 1, misses: 1, contention_cycles: 9, ..Default::default() },
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.mem.hits, 4);
+        assert_eq!(a.mem.misses, 2);
+        assert_eq!(a.mem.fill_stall_cycles, 40);
+        assert_eq!(a.mem.contention_cycles, 9);
+        assert!((a.mem.hit_rate() - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(MemStats::default().hit_rate(), 0.0);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! boundary).
 
 pub mod alu;
+pub mod cache;
 pub mod mem;
 pub mod metrics;
 pub mod regfile;
@@ -27,14 +28,15 @@ pub mod warp;
 pub use alu::{
     eval_lane, AluBackend, AluFactory, AluFunc, NativeAlu, WarpAluIn, WarpAluOut, WARP_SIZE,
 };
+pub use cache::{CacheGeometry, CachedGmem, L1Cache, L1Config, MemoryConfig};
 pub use mem::{
-    GlobalMem, GmemPort, GmemSnapshot, MemTiming, SharedMem, WriteRecord, GMEM_PAGE_WORDS,
-    PARAM_SEG_BYTES,
+    GlobalMem, GmemPort, GmemSnapshot, MemCost, MemTiming, SharedMem, WriteRecord,
+    GMEM_PAGE_WORDS, PARAM_SEG_BYTES,
 };
-pub use metrics::SmStats;
+pub use metrics::{MemStats, SmStats};
 pub use regfile::RegFile;
 pub use sched::{WarpScheduler, MAX_RESIDENT_WARPS};
-pub use sm::{BlockDesc, PreDecoded, Sm};
+pub use sm::{BlockDesc, PreDecoded, Sm, SmLaunch};
 pub use stack::{EntryType, StackEntry, WarpStack};
 pub use warp::{Warp, WarpStatus};
 

@@ -262,6 +262,30 @@ pub struct BlockDesc {
     pub ntid: u32,
 }
 
+/// Everything one [`Sm::run`] call needs besides the device ports: the
+/// pre-decoded kernel, its resource footprint, the launch parameters and
+/// the blocks the block scheduler assigned to this SM.
+#[derive(Debug, Clone, Copy)]
+pub struct SmLaunch<'a> {
+    pub pre: &'a PreDecoded,
+    pub regs_per_thread: u32,
+    pub smem_bytes: u32,
+    pub params: &'a [i32],
+    pub blocks: &'a [BlockDesc],
+    /// Blocks resident at once (the Table 1 limit computed by the block
+    /// scheduler).
+    pub max_resident: usize,
+}
+
+/// Per-issue execution context threaded into [`Sm::step`]: the decoded
+/// kernel image plus the mutable device ports and counters.
+struct ExecCtx<'a, G: GmemPort + ?Sized, A: AluBackend + ?Sized> {
+    kernel: &'a PreDecoded,
+    gmem: &'a mut G,
+    alu: &'a mut A,
+    stats: &'a mut SmStats,
+}
+
 /// A resident (scheduled) block: its register file partition, shared
 /// memory allocation, and warps.
 struct Resident {
@@ -309,23 +333,20 @@ impl Sm {
     /// busy time.
     ///
     /// `gmem` is any [`GmemPort`]: the shared [`super::GlobalMem`] on the
-    /// sequential path, or this SM's private copy-on-write
-    /// [`super::GmemSnapshot`] on the parallel path. Both `gmem` and `alu`
-    /// are generic (`?Sized`, so `&mut dyn` still works) — concrete
+    /// sequential path, this SM's private copy-on-write
+    /// [`super::GmemSnapshot`] on the parallel path, or either wrapped in
+    /// [`super::CachedGmem`] when an L1 is configured. Both `gmem` and
+    /// `alu` are generic (`?Sized`, so `&mut dyn` still works) — concrete
     /// callers get a fully monomorphized, inlined lane loop.
-    #[allow(clippy::too_many_arguments)]
     pub fn run<G: GmemPort + ?Sized, A: AluBackend + ?Sized>(
         &self,
-        kernel: &PreDecoded,
-        regs_per_thread: u32,
-        smem_bytes: u32,
-        params: &[i32],
-        blocks: &[BlockDesc],
-        max_resident: usize,
+        launch: &SmLaunch<'_>,
         gmem: &mut G,
         alu: &mut A,
     ) -> Result<SmStats, SimError> {
         self.cfg.validate()?;
+        let SmLaunch { pre: kernel, regs_per_thread, smem_bytes, params, blocks, max_resident } =
+            *launch;
         assert!(max_resident >= 1, "block scheduler must allow one resident block");
 
         let mut stats = SmStats::default();
@@ -377,9 +398,12 @@ impl Sm {
                     cycle += rows;
                     // Memory instructions drain through the single AXI
                     // master / BRAM port and block the pipeline (Fig. 3);
-                    // `step` returns those extra cycles.
-                    cycle +=
-                        self.step(&mut resident[s], w, kernel, gmem, alu, &mut stats, cycle)?;
+                    // `step` returns those extra cycles. Cache line fills
+                    // instead park the warp (its `ready_at` moves out) so
+                    // other ready warps keep issuing underneath the miss.
+                    let mut cx =
+                        ExecCtx { kernel, gmem: &mut *gmem, alu: &mut *alu, stats: &mut stats };
+                    cycle += self.step(&mut resident[s], w, &mut cx, cycle)?;
                     {
                         let wp = &resident[s].warps[w];
                         if !wp.done && !wp.at_barrier {
@@ -449,6 +473,9 @@ impl Sm {
         }
 
         stats.cycles = cycle;
+        // Snapshot the memory-hierarchy counters accumulated by the gmem
+        // port (all-zero on flat memory, populated by `CachedGmem`).
+        stats.mem = gmem.mem_stats();
         Ok(stats)
     }
 
@@ -485,20 +512,16 @@ impl Sm {
     /// Execute one instruction for warp `wi` of `slot`. `issue_done` is
     /// the cycle at which the instruction's last row entered the pipeline.
     /// Returns extra pipeline-blocking cycles (memory serialization).
-    #[allow(clippy::too_many_arguments)]
     fn step<G: GmemPort + ?Sized, A: AluBackend + ?Sized>(
         &self,
         slot: &mut Resident,
         wi: usize,
-        kernel: &PreDecoded,
-        gmem: &mut G,
-        alu: &mut A,
-        stats: &mut SmStats,
+        cx: &mut ExecCtx<'_, G, A>,
         issue_done: u64,
     ) -> Result<u64, SimError> {
         let Resident { desc, regs, shared, warps } = slot;
         let w = &mut warps[wi];
-        let uop = kernel.fetch(w.id, w.pc)?;
+        let uop = cx.kernel.fetch(w.id, w.pc)?;
         let eff = w.effective();
         debug_assert_ne!(eff, 0, "scheduler must not issue an empty warp");
 
@@ -538,7 +561,7 @@ impl Sm {
             }
             m
         };
-        stats.count_op(uop.op, exec.count_ones());
+        cx.stats.count_op(uop.op, exec.count_ones());
 
         // Default hazard: same warp re-issues only after the pipeline
         // drains (write-back of this instruction).
@@ -579,7 +602,7 @@ impl Sm {
                 } else {
                     // Divergence (§4.1): save the taken path, run the
                     // not-taken path first.
-                    stats.divergences += 1;
+                    cx.stats.divergences += 1;
                     let entry =
                         StackEntry { typ: EntryType::Div, addr: target, mask: taken };
                     w.stack.push(entry).map_err(|_| SimError::StackOverflow {
@@ -637,7 +660,7 @@ impl Sm {
                     for (lane, slot) in out.iter_mut().enumerate().take(count) {
                         if exec & (1 << lane) != 0 {
                             *slot = if m.global {
-                                gmem.load(addr(lane))?
+                                cx.gmem.load(addr(lane))?
                             } else {
                                 shared.load(addr(lane))?
                             };
@@ -650,28 +673,51 @@ impl Sm {
                     for lane in 0..count {
                         if exec & (1 << lane) != 0 {
                             if m.global {
-                                gmem.store(addr(lane), data[lane])?;
+                                cx.gmem.store(addr(lane), data[lane])?;
                             } else {
                                 shared.store(addr(lane), data[lane])?;
                             }
                         }
                     }
                 }
-                // Timing: accesses drain through the single AXI master /
-                // BRAM ports row by row and block the pipeline (Fig. 3;
-                // see MemTiming docs for the calibration).
+                // Timing: the gmem port prices global accesses — flat
+                // memory blocks the pipeline for the full AXI drain
+                // (Fig. 3; see MemTiming docs for the calibration), while
+                // an L1 layer blocks only at BRAM speed and parks the warp
+                // until its line fills land (latency hidden by other
+                // ready warps). Shared memory is always BRAM-priced.
                 let txns = exec.count_ones() as u64;
-                blocking = self.cfg.mem.blocking_cycles(
-                    m.global,
-                    self.cfg.rows_per_warp(),
-                    exec.count_ones(),
-                );
-                w.ready_at = issue_done + blocking + (self.cfg.pipeline_depth as u64 - 1);
+                let park;
+                if m.global {
+                    let mut addrs = [0u32; WARP_SIZE];
+                    for (lane, slot) in addrs.iter_mut().enumerate().take(count) {
+                        *slot = addr(lane);
+                    }
+                    let cost = cx.gmem.access_cost(
+                        &self.cfg.mem,
+                        self.cfg.rows_per_warp(),
+                        exec,
+                        &addrs[..count],
+                        m.load,
+                        issue_done,
+                    );
+                    blocking = cost.blocking;
+                    park = cost.park;
+                } else {
+                    blocking = self.cfg.mem.blocking_cycles(
+                        false,
+                        self.cfg.rows_per_warp(),
+                        exec.count_ones(),
+                    );
+                    park = 0;
+                }
+                w.ready_at =
+                    issue_done + blocking + park + (self.cfg.pipeline_depth as u64 - 1);
                 match (m.global, m.load) {
-                    (true, true) => stats.global_load_txns += txns,
-                    (true, false) => stats.global_store_txns += txns,
-                    (false, true) => stats.shared_load_txns += txns,
-                    (false, false) => stats.shared_store_txns += txns,
+                    (true, true) => cx.stats.global_load_txns += txns,
+                    (true, false) => cx.stats.global_store_txns += txns,
+                    (false, true) => cx.stats.shared_load_txns += txns,
+                    (false, false) => cx.stats.shared_store_txns += txns,
                 }
             }
             // The SP-array datapath.
@@ -710,7 +756,7 @@ impl Sm {
                     }
                     CSrc::Zero => {}
                 }
-                let out = alu.execute(&input);
+                let out = cx.alu.execute(&input);
                 // Write stage: masked vector scatter.
                 if a.setp_wb {
                     for lane in 0..count {
@@ -800,7 +846,15 @@ mod tests {
         let sm = Sm::new(cfg, 0);
         let blocks = [BlockDesc { ctaid_x: 0, ctaid_y: 0, nctaid_x: 1, nctaid_y: 1, ntid }];
         let mut alu = NativeAlu;
-        sm.run(&pre, k.regs_per_thread, k.smem_bytes, params, &blocks, 8, gmem, &mut alu)
+        let launch = SmLaunch {
+            pre: &pre,
+            regs_per_thread: k.regs_per_thread,
+            smem_bytes: k.smem_bytes,
+            params,
+            blocks: &blocks,
+            max_resident: 8,
+        };
+        sm.run(&launch, gmem, &mut alu)
     }
 
     /// out[tid] = tid * 3 + param0
@@ -1044,9 +1098,15 @@ mod tests {
             .collect();
         let mut g = GlobalMem::new(4096);
         let mut alu = NativeAlu;
-        let stats = sm
-            .run(&pre, k.regs_per_thread, k.smem_bytes, &[], &blocks, 2, &mut g, &mut alu)
-            .unwrap();
+        let launch = SmLaunch {
+            pre: &pre,
+            regs_per_thread: k.regs_per_thread,
+            smem_bytes: k.smem_bytes,
+            params: &[],
+            blocks: &blocks,
+            max_resident: 2,
+        };
+        let stats = sm.run(&launch, &mut g, &mut alu).unwrap();
         assert_eq!(stats.blocks, 6);
         for t in 0..6 * 64 {
             assert_eq!(g.load(t * 4).unwrap(), t as i32 + 7, "thread {t}");
@@ -1071,9 +1131,15 @@ mod tests {
             .collect();
         let mut g = GlobalMem::new(1 << 14);
         let mut alu = NativeAlu;
-        let err = sm
-            .run(&pre, k.regs_per_thread, k.smem_bytes, &[0, 0], &blocks, 17, &mut g, &mut alu)
-            .unwrap_err();
+        let launch = SmLaunch {
+            pre: &pre,
+            regs_per_thread: k.regs_per_thread,
+            smem_bytes: k.smem_bytes,
+            params: &[0, 0],
+            blocks: &blocks,
+            max_resident: 17,
+        };
+        let err = sm.run(&launch, &mut g, &mut alu).unwrap_err();
         assert!(matches!(err, SimError::LimitExceeded(_)), "{err}");
     }
 
@@ -1089,9 +1155,15 @@ mod tests {
         let mut alu = NativeAlu;
         let gd: &mut dyn crate::sim::GmemPort = &mut g;
         let ad: &mut dyn AluBackend = &mut alu;
-        let stats = sm
-            .run(&pre, k.regs_per_thread, k.smem_bytes, &[5, 0], &blocks, 8, gd, ad)
-            .unwrap();
+        let launch = SmLaunch {
+            pre: &pre,
+            regs_per_thread: k.regs_per_thread,
+            smem_bytes: k.smem_bytes,
+            params: &[5, 0],
+            blocks: &blocks,
+            max_resident: 8,
+        };
+        let stats = sm.run(&launch, gd, ad).unwrap();
         assert_eq!(stats.blocks, 1);
         assert_eq!(g.load(0).unwrap(), 5);
     }

@@ -6,22 +6,21 @@
 
 use flexgrip::asm::assemble;
 use flexgrip::coordinator::customize;
-use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig, LaunchRequest};
 use flexgrip::isa::{
     encode::instr_size, Capability, CapabilitySignature, Cond, Guard, Instr, Op, Operand,
     StackBound, MAX_STACK_BOUND,
 };
-use flexgrip::kernels::BenchId;
+use flexgrip::kernels::{BenchId, RunOptions};
 use flexgrip::registry::PreparedKernel;
 use flexgrip::rng::XorShift64;
-use flexgrip::sim::{GlobalMem, NativeAlu, SimError, SmConfig};
+use flexgrip::sim::{GlobalMem, SimError, SmConfig};
 
 fn launch_on(src: &str, cfg: GpgpuConfig) -> Result<(), SimError> {
     let k = assemble(src).unwrap();
     let mut g = GlobalMem::new(4096);
-    let mut alu = NativeAlu;
     Gpgpu::new(cfg)
-        .launch(&k, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu)
+        .launch(LaunchRequest::new(&k, LaunchConfig::linear(1, 32), &mut g))
         .map(|_| ())
 }
 
@@ -118,7 +117,7 @@ fn autocorr_profile_admits_depth_16_rejects_depth_8() {
 fn refined_signature_admits_where_the_static_one_rejects() {
     // A uniform guarded branch makes the static bound over-approximate
     // (AtMost(2)) while the measured high-water is 1. The routed-launch
-    // path (`launch_admitted` with the refined signature — what the
+    // path (`LaunchRequest::admit` with the refined signature — what the
     // coordinator's shards do) must accept the depth-1 variant that
     // static admission refuses; this is the regression test for routing
     // and admission disagreeing about the same job.
@@ -129,9 +128,8 @@ fn refined_signature_admits_where_the_static_one_rejects() {
     cfg.sm.warp_stack_depth = 1;
     let gp = Gpgpu::new(cfg);
     let mut g = GlobalMem::new(4096);
-    let mut alu = NativeAlu;
     let err = gp
-        .launch_prepared(&pk, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu)
+        .launch(LaunchRequest::new(&pk, LaunchConfig::linear(1, 32), &mut g))
         .unwrap_err();
     assert!(
         matches!(
@@ -144,7 +142,7 @@ fn refined_signature_admits_where_the_static_one_rejects() {
         "{err}"
     );
     let refined = pk.sig.refined(1, 0);
-    gp.launch_admitted(&pk, &refined, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu)
+    gp.launch(LaunchRequest::new(&pk, LaunchConfig::linear(1, 32), &mut g).admit(refined))
         .unwrap();
 }
 
@@ -161,8 +159,7 @@ fn statically_unbounded_stack_admits_and_runs_on_profiled_depth() {
     cfg.sm.read_operands = 2;
     let gpgpu = Gpgpu::new(cfg);
     let mut gmem = w.make_gmem();
-    let mut alu = NativeAlu;
-    w.run(&gpgpu, &mut gmem, &mut alu).unwrap();
+    w.run(&gpgpu, &mut gmem, RunOptions::default()).unwrap();
     w.verify(&gmem).unwrap();
 }
 

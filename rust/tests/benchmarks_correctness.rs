@@ -5,7 +5,7 @@
 //! binary, same answer, any hardware configuration).
 
 use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
-use flexgrip::kernels::{self, BenchId, PAPER_SIZES};
+use flexgrip::kernels::{self, BenchId, RunOptions, PAPER_SIZES};
 use flexgrip::sim::NativeAlu;
 
 #[test]
@@ -38,8 +38,8 @@ fn outputs_identical_across_configurations() {
         for (sms, sp) in [(1u32, 8u32), (2, 32)] {
             let w = kernels::prepare(id, 64, 7);
             let mut g = w.make_gmem();
-            let mut alu = NativeAlu;
-            w.run(&Gpgpu::new(GpgpuConfig::new(sms, sp)), &mut g, &mut alu).unwrap();
+            w.run(&Gpgpu::new(GpgpuConfig::new(sms, sp)), &mut g, RunOptions::default())
+                .unwrap();
             outputs.push(g.read_words(0x1000, id.input_elems(64)).unwrap());
         }
         assert_eq!(outputs[0], outputs[1], "{}", id.name());

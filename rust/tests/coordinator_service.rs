@@ -188,8 +188,9 @@ fn pool_failures_isolated_per_shard() {
 #[test]
 fn kernel_with_overlapping_writes_falls_back_to_sequential() {
     // Both blocks (one per SM) store their value to the same address:
-    // launch_parallel rejects the merge, and the shard must retry on the
-    // sequential path (SM order, last writer wins) instead of failing.
+    // the parallel launch mode rejects the merge, and the shard must
+    // retry on the sequential path (SM order, last writer wins) instead
+    // of failing.
     let svc = GpgpuService::start(GpgpuConfig::new(2, 8));
     let k = assemble(
         r#"

@@ -13,7 +13,7 @@ use flexgrip::asm::assemble;
 use flexgrip::isa::{Flags, Op, Operand};
 use flexgrip::rng::XorShift64;
 use flexgrip::sim::{
-    eval_lane, AluFunc, BlockDesc, GlobalMem, NativeAlu, PreDecoded, Sm, SmConfig,
+    eval_lane, AluFunc, BlockDesc, GlobalMem, NativeAlu, PreDecoded, Sm, SmConfig, SmLaunch,
 };
 
 const DATA_REGS: [u8; 5] = [1, 2, 3, 4, 5];
@@ -212,7 +212,15 @@ fn prop_simt_equals_scalar_1500_random_programs() {
         let blocks =
             [BlockDesc { ctaid_x: 0, ctaid_y: 0, nctaid_x: 1, nctaid_y: 1, ntid: 32 }];
         let mut alu = NativeAlu;
-        sm.run(&pre, kernel.regs_per_thread, 0, &[], &blocks, 8, &mut gmem, &mut alu)
+        let launch = SmLaunch {
+            pre: &pre,
+            regs_per_thread: kernel.regs_per_thread,
+            smem_bytes: 0,
+            params: &[],
+            blocks: &blocks,
+            max_resident: 8,
+        };
+        sm.run(&launch, &mut gmem, &mut alu)
             .unwrap_or_else(|e| panic!("seed {seed}: SIMT fault {e}\n{src}"));
 
         for tid in 0..32i32 {

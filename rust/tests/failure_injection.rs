@@ -3,16 +3,15 @@
 //! driver-facing error contract of §3.1.
 
 use flexgrip::asm::assemble;
-use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig, LaunchRequest};
 use flexgrip::isa::Capability;
-use flexgrip::sim::{GlobalMem, NativeAlu, SimError, SmConfig};
+use flexgrip::sim::{GlobalMem, MemoryConfig, SimError, SmConfig};
 
 fn launch_src(src: &str, cfg: GpgpuConfig, block: u32) -> Result<(), SimError> {
     let k = assemble(src).unwrap();
     let mut g = GlobalMem::new(4096);
-    let mut alu = NativeAlu;
     Gpgpu::new(cfg)
-        .launch(&k, LaunchConfig::linear(1, block), &[], &mut g, &mut alu)
+        .launch(LaunchRequest::new(&k, LaunchConfig::linear(1, block), &mut g))
         .map(|_| ())
 }
 
@@ -136,22 +135,32 @@ fn invalid_configs_rejected_before_execution() {
     let mut bad_stack = GpgpuConfig::default();
     bad_stack.sm.warp_stack_depth = 64;
     assert!(bad_stack.validate().is_err());
-    let zero_sms = GpgpuConfig { num_sms: 0, sm: SmConfig::baseline() };
+    let zero_sms = GpgpuConfig {
+        num_sms: 0,
+        sm: SmConfig::baseline(),
+        memory: MemoryConfig::default(),
+    };
     assert!(zero_sms.validate().is_err());
+    let mut bad_cache = GpgpuConfig::default();
+    bad_cache.memory.l1 = Some(flexgrip::sim::L1Config::new(flexgrip::sim::CacheGeometry {
+        ways: 4,
+        sets: 48, // not a power of two
+        line_bytes: 32,
+    }));
+    assert!(bad_cache.validate().is_err());
 }
 
 #[test]
 fn empty_grid_and_oversized_block_rejected() {
     let k = assemble("EXIT").unwrap();
     let mut g = GlobalMem::new(1024);
-    let mut alu = NativeAlu;
     let gp = Gpgpu::new(GpgpuConfig::default());
     assert!(matches!(
-        gp.launch(&k, LaunchConfig::linear(0, 32), &[], &mut g, &mut alu),
+        gp.launch(LaunchRequest::new(&k, LaunchConfig::linear(0, 32), &mut g)),
         Err(SimError::LimitExceeded(_))
     ));
     assert!(matches!(
-        gp.launch(&k, LaunchConfig::linear(1, 300), &[], &mut g, &mut alu),
+        gp.launch(LaunchRequest::new(&k, LaunchConfig::linear(1, 300), &mut g)),
         Err(SimError::LimitExceeded(_))
     ));
 }
@@ -159,11 +168,12 @@ fn empty_grid_and_oversized_block_rejected() {
 #[test]
 fn faults_do_not_poison_subsequent_launches() {
     let gp = Gpgpu::new(GpgpuConfig::default());
-    let mut alu = NativeAlu;
     let bad = assemble("JOIN\nEXIT").unwrap();
     let good = assemble("S2R R1, SR_GTID\nSHL R2, R1, #2\nGST [R2], R1\nEXIT").unwrap();
     let mut g = GlobalMem::new(4096);
-    assert!(gp.launch(&bad, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu).is_err());
-    gp.launch(&good, LaunchConfig::linear(1, 32), &[], &mut g, &mut alu).unwrap();
+    assert!(gp
+        .launch(LaunchRequest::new(&bad, LaunchConfig::linear(1, 32), &mut g))
+        .is_err());
+    gp.launch(LaunchRequest::new(&good, LaunchConfig::linear(1, 32), &mut g)).unwrap();
     assert_eq!(g.load(31 * 4).unwrap(), 31);
 }

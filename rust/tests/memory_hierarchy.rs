@@ -1,0 +1,138 @@
+//! Memory-hierarchy differential suite: the tags-only L1 cache and the
+//! SM<->memory interconnect model may change *when* things happen, never
+//! *what* happens. Every benchmark, at every swept geometry and SM
+//! count, must produce a memory image bit-identical to the flat-memory
+//! run — on both the sequential reference path and the COW parallel
+//! path — and the two cached paths must agree on simulated cycles.
+
+use flexgrip::asm::assemble;
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig, LaunchRequest};
+use flexgrip::kernels::{self, BenchId, RunOptions, Workload};
+use flexgrip::rng::XorShift64;
+use flexgrip::sim::{CacheGeometry, GlobalMem, MemoryConfig};
+
+const GEOMETRIES: [&str; 3] = ["2x16x32", "4x64x32", "4x256x64"];
+
+fn image(g: &GlobalMem) -> Vec<i32> {
+    g.read_words(0, g.size_bytes() as usize / 4).unwrap()
+}
+
+fn run_with(w: &Workload, cfg: GpgpuConfig, parallel: bool) -> (Vec<i32>, u64) {
+    let gpgpu = Gpgpu::new(cfg);
+    let mut g = w.make_gmem();
+    let opts = if parallel { RunOptions::new().parallel() } else { RunOptions::default() };
+    let run = w.run(&gpgpu, &mut g, opts).expect("run");
+    w.verify(&g).expect("verifies");
+    (image(&g), run.cycles)
+}
+
+/// Flat vs cached (sequential and parallel) on one configuration.
+fn assert_cache_transparent(id: BenchId, n: u32, seed: u64, sms: u32, geom: CacheGeometry) {
+    let w = kernels::prepare(id, n, seed);
+    let flat = GpgpuConfig::new(sms, 8);
+    let cached = GpgpuConfig::new(sms, 8).with_memory(MemoryConfig::with_l1(geom));
+    let (flat_img, _) = run_with(&w, flat, false);
+    let (seq_img, seq_cycles) = run_with(&w, cached, false);
+    let (par_img, par_cycles) = run_with(&w, cached, true);
+    let label = format!("{} n={n} {sms}sm l1 {}", id.name(), geom.label());
+    assert!(seq_img == flat_img, "{label}: cached sequential image diverged from flat");
+    assert!(par_img == flat_img, "{label}: cached parallel image diverged from flat");
+    assert_eq!(seq_cycles, par_cycles, "{label}: cached seq/par cycle models disagree");
+}
+
+#[test]
+fn cache_is_functionally_invisible_across_benchmarks_geometries_and_sms() {
+    for id in BenchId::ALL {
+        for sms in [1u32, 2, 4, 8] {
+            for geom in GEOMETRIES {
+                assert_cache_transparent(id, 32, 0xCAC4E, sms, CacheGeometry::parse(geom).unwrap());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cache_transparent_on_randomized_configurations() {
+    // Random benchmark x SM count x cache shape x problem size x data
+    // seed: the bit-identity contract has no corner cases.
+    let mut rng = XorShift64::new(0x11CACE);
+    for case in 0..24 {
+        let id = BenchId::ALL[rng.below(BenchId::ALL.len() as u64) as usize];
+        let sms = [1u32, 2, 4, 8][rng.below(4) as usize];
+        let geom = CacheGeometry {
+            ways: [1u32, 2, 3, 4, 8][rng.below(5) as usize],
+            sets: [1u32, 8, 64, 256][rng.below(4) as usize],
+            line_bytes: [16u32, 32, 64, 128][rng.below(4) as usize],
+        };
+        geom.validate().expect("generator emits valid geometries");
+        let n = if id.is_matrix() { 32 } else { [32u32, 64][rng.below(2) as usize] };
+        let seed = rng.next_u64();
+        eprintln!("case {case}: {} n={n} {sms}sm l1 {}", id.name(), geom.label());
+        assert_cache_transparent(id, n, seed, sms, geom);
+    }
+}
+
+#[test]
+fn flat_runs_report_zero_mem_stats() {
+    let w = kernels::prepare(BenchId::MatMul, 32, 5);
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(2, 8));
+    let mut g = w.make_gmem();
+    let run = w.run(&gpgpu, &mut g, RunOptions::default()).unwrap();
+    let m = run.stats.mem;
+    assert_eq!(m.hits + m.misses + m.evictions + m.mshr_merges, 0);
+    assert_eq!(m.fill_stall_cycles + m.contention_cycles, 0);
+}
+
+#[test]
+fn cached_runs_populate_mem_stats() {
+    let geom = CacheGeometry::parse("4x64x32").unwrap();
+    let cfg = GpgpuConfig::new(2, 8).with_memory(MemoryConfig::with_l1(geom));
+    let w = kernels::prepare(BenchId::MatMul, 32, 5);
+    let gpgpu = Gpgpu::new(cfg);
+    let mut g = w.make_gmem();
+    let run = w.run(&gpgpu, &mut g, RunOptions::default()).unwrap();
+    let m = run.stats.mem;
+    assert!(m.misses > 0, "cold cache must miss");
+    assert!(m.hits > 0, "matmul reuses rows: must hit");
+    assert!(m.fill_stall_cycles > 0, "misses park warps on the fill port");
+}
+
+#[test]
+fn launch_request_memory_overrides_the_device_default() {
+    // A per-launch `.memory()` turns the cache on for that launch only,
+    // and the result surfaces through `LaunchResult::mem_stats`.
+    let k = assemble("S2R R1, SR_GTID\nSHL R2, R1, #2\nGLD R3, [R2]\nGST [R2], R3\nEXIT").unwrap();
+    let gp = Gpgpu::new(GpgpuConfig::new(1, 8)); // device default: flat
+    let geom = CacheGeometry::parse("2x16x32").unwrap();
+
+    let mut g = GlobalMem::new(1 << 14);
+    let flat = gp.launch(LaunchRequest::new(&k, LaunchConfig::linear(2, 64), &mut g)).unwrap();
+    assert_eq!(flat.mem_stats().hits + flat.mem_stats().misses, 0);
+
+    let mut g = GlobalMem::new(1 << 14);
+    let cached = gp
+        .launch(
+            LaunchRequest::new(&k, LaunchConfig::linear(2, 64), &mut g)
+                .memory(MemoryConfig::with_l1(geom)),
+        )
+        .unwrap();
+    assert!(cached.mem_stats().misses > 0, "{:?}", cached.mem_stats());
+}
+
+#[test]
+fn larger_line_size_lowers_miss_count_on_streaming_access() {
+    // memstress stride 1 streams adjacent words: doubling the line size
+    // halves the number of distinct lines fetched, so misses must drop.
+    let run_misses = |line_bytes: u32| {
+        let geom = CacheGeometry { ways: 4, sets: 64, line_bytes };
+        let cfg = GpgpuConfig::new(1, 8).with_memory(MemoryConfig::with_l1(geom));
+        let w = kernels::prepare_memstress(64, 9, 1);
+        let gpgpu = Gpgpu::new(cfg);
+        let mut g = w.make_gmem();
+        let run = w.run(&gpgpu, &mut g, RunOptions::default()).unwrap();
+        w.verify(&g).unwrap();
+        run.stats.mem.misses
+    };
+    let (m32, m64, m128) = (run_misses(32), run_misses(64), run_misses(128));
+    assert!(m32 > m64 && m64 > m128, "misses must fall with line size: {m32} {m64} {m128}");
+}

@@ -88,8 +88,14 @@ fn shape_customization_reductions_ordered_like_table6() {
     // LUT reduction, as in the paper.
     let base = area(&ArchParams::baseline());
     let lut_red = |depth: u32, mul: bool| {
-        area(&ArchParams { num_sms: 1, num_sp: 8, warp_stack_depth: depth, has_multiplier: mul })
-            .lut_reduction_pct(&base)
+        area(&ArchParams {
+            num_sms: 1,
+            num_sp: 8,
+            warp_stack_depth: depth,
+            has_multiplier: mul,
+            l1: None,
+        })
+        .lut_reduction_pct(&base)
     };
     let autocorr = lut_red(16, true);
     let matclass = lut_red(0, true);
@@ -109,7 +115,13 @@ fn paper_conclusion_averages() {
     let configs = [(16u32, true), (0, true), (0, true), (0, true), (2, false)];
     let (mut area_sum, mut dyn_sum) = (0.0, 0.0);
     for (depth, mul) in configs {
-        let p = ArchParams { num_sms: 1, num_sp: 8, warp_stack_depth: depth, has_multiplier: mul };
+        let p = ArchParams {
+            num_sms: 1,
+            num_sp: 8,
+            warp_stack_depth: depth,
+            has_multiplier: mul,
+            l1: None,
+        };
         area_sum += area(&p).lut_reduction_pct(&base);
         dyn_sum += 100.0 * (1.0 - power(&p).dynamic_w / base_p);
     }

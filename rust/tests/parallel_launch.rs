@@ -5,10 +5,10 @@
 //! contract.
 
 use flexgrip::asm::assemble;
-use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
-use flexgrip::kernels::{self, BenchId};
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig, LaunchRequest};
+use flexgrip::kernels::{self, BenchId, RunOptions};
 use flexgrip::rng::XorShift64;
-use flexgrip::sim::{GlobalMem, NativeAlu, SimError};
+use flexgrip::sim::{GlobalMem, SimError};
 
 /// Run one paper workload both ways and compare everything observable.
 fn assert_deterministic(id: BenchId, n: u32, sms: u32, sp: u32, seed: u64) {
@@ -20,12 +20,13 @@ fn assert_deterministic_cfg(id: BenchId, n: u32, cfg: GpgpuConfig, seed: u64) {
     let w = kernels::prepare(id, n, seed);
 
     let mut g_seq = w.make_gmem();
-    let mut alu = NativeAlu;
-    let seq = w.run(&gpgpu, &mut g_seq, &mut alu).expect("sequential run");
+    let seq = w.run(&gpgpu, &mut g_seq, RunOptions::default()).expect("sequential run");
     w.verify(&g_seq).expect("sequential verifies");
 
     let mut g_par = w.make_gmem();
-    let par = w.run_parallel(&gpgpu, &mut g_par, &NativeAlu).expect("parallel run");
+    let par = w
+        .run(&gpgpu, &mut g_par, RunOptions::new().parallel())
+        .expect("parallel run");
     w.verify(&g_par).expect("parallel verifies");
 
     assert_eq!(seq.cycles, par.cycles, "{} n={n}: total cycles", id.name());
@@ -126,7 +127,7 @@ fn parallel_path_stable_across_repeated_runs() {
     let w = kernels::prepare(BenchId::Bitonic, 128, 9);
     let run = |w: &kernels::Workload| {
         let mut g = w.make_gmem();
-        let r = w.run_parallel(&gpgpu, &mut g, &NativeAlu).unwrap();
+        let r = w.run(&gpgpu, &mut g, RunOptions::new().parallel()).unwrap();
         let words = (g.size_bytes() / 4) as usize;
         (r.cycles, g.read_words(0, words).unwrap())
     };
@@ -153,7 +154,7 @@ fn conflicting_writes_across_sms_are_detected() {
     .unwrap();
     let mut g = GlobalMem::new(4096);
     let err = Gpgpu::new(GpgpuConfig::new(2, 8))
-        .launch_parallel(&k, LaunchConfig::linear(2, 32), &[], &mut g, &NativeAlu)
+        .launch(LaunchRequest::new(&k, LaunchConfig::linear(2, 32), &mut g).parallel())
         .unwrap_err();
     match err {
         SimError::WriteConflict { addr, first_sm, second_sm } => {
@@ -186,7 +187,7 @@ fn disjoint_writes_across_sms_pass_the_conflict_check() {
     for (grid, block) in [(2u32, 32u32), (5, 64), (9, 100)] {
         let mut g = GlobalMem::new((grid * block * 4 + 4096).next_power_of_two());
         Gpgpu::new(GpgpuConfig::new(2, 8))
-            .launch_parallel(&k, LaunchConfig::linear(grid, block), &[], &mut g, &NativeAlu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(grid, block), &mut g).parallel())
             .unwrap_or_else(|e| panic!("{grid}x{block}: {e}"));
         for t in 0..grid * block {
             assert_eq!(g.load(t * 4).unwrap(), t as i32 + 5, "thread {t}");

@@ -4,7 +4,7 @@
 //! determinism.
 
 use flexgrip::asm::assemble;
-use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, KernelResources, LaunchConfig};
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, KernelResources, LaunchConfig, LaunchRequest};
 use flexgrip::rng::XorShift64;
 use flexgrip::sim::{GlobalMem, NativeAlu};
 
@@ -35,9 +35,8 @@ fn prop_every_thread_executes_exactly_once_100_geometries() {
         let total = grid * block;
         let k = assemble(COVER).unwrap();
         let mut g = GlobalMem::new((total * 4 + 4096).next_power_of_two());
-        let mut alu = NativeAlu;
         let r = Gpgpu::new(GpgpuConfig::new(sms, sp))
-            .launch(&k, LaunchConfig::linear(grid, block), &[], &mut g, &mut alu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(grid, block), &mut g))
             .unwrap_or_else(|e| panic!("case {case} ({sms}x{sp} {grid}x{block}): {e}"));
         for t in 0..total {
             assert_eq!(
@@ -57,9 +56,8 @@ fn prop_round_robin_balance_across_sms() {
         let grid = 1 + rng.below(33) as u32;
         let k = assemble(COVER).unwrap();
         let mut g = GlobalMem::new((grid * 64 * 4 + 4096).next_power_of_two());
-        let mut alu = NativeAlu;
         let r = Gpgpu::new(GpgpuConfig::new(2, 8))
-            .launch(&k, LaunchConfig::linear(grid, 64), &[], &mut g, &mut alu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(grid, 64), &mut g))
             .unwrap();
         let (a, b) = (r.per_sm[0].blocks, r.per_sm[1].blocks);
         assert!(a.abs_diff(b) <= 1, "grid {grid}: split {a}/{b}");
@@ -124,9 +122,8 @@ fn multi_block_barrier_kernels_interleave_safely() {
     "#;
     let k = assemble(src).unwrap();
     let mut g = GlobalMem::new(1 << 14);
-    let mut alu = NativeAlu;
     Gpgpu::new(GpgpuConfig::new(2, 8))
-        .launch(&k, LaunchConfig::linear(6, 64), &[], &mut g, &mut alu)
+        .launch(LaunchRequest::new(&k, LaunchConfig::linear(6, 64), &mut g))
         .unwrap();
     for b in 0..6u32 {
         for t in 0..64u32 {

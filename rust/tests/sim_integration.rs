@@ -2,16 +2,15 @@
 //! address registers, predicate machinery, multi-block residency.
 
 use flexgrip::asm::assemble;
-use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig};
-use flexgrip::kernels::{self, BenchId};
-use flexgrip::sim::{GlobalMem, MemTiming, NativeAlu};
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig, LaunchRequest};
+use flexgrip::kernels::{self, BenchId, RunOptions};
+use flexgrip::sim::{GlobalMem, MemTiming};
 
 fn run(src: &str, cfg: GpgpuConfig, grid: u32, block: u32) -> (GlobalMem, u64) {
     let k = assemble(src).unwrap();
     let mut g = GlobalMem::new(1 << 16);
-    let mut alu = NativeAlu;
     let r = Gpgpu::new(cfg)
-        .launch(&k, LaunchConfig::linear(grid, block), &[], &mut g, &mut alu)
+        .launch(LaunchRequest::new(&k, LaunchConfig::linear(grid, block), &mut g))
         .unwrap();
     (g, r.total.cycles)
 }
@@ -150,9 +149,8 @@ fn memory_timing_scales_with_latency_parameters() {
         let mut cfg = GpgpuConfig::new(1, 8);
         cfg.sm.mem = MemTiming { global_row_overhead: row_overhead, ..MemTiming::default() };
         let mut g = GlobalMem::new(1 << 14);
-        let mut alu = NativeAlu;
         let r = Gpgpu::new(cfg)
-            .launch(&k, LaunchConfig::linear(2, 64), &[], &mut g, &mut alu)
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(2, 64), &mut g))
             .unwrap();
         cycles.push(r.total.cycles);
     }
@@ -183,8 +181,7 @@ fn per_sm_stats_sum_to_totals() {
     let gpgpu = Gpgpu::new(GpgpuConfig::new(2, 16));
     let w = kernels::prepare(BenchId::Transpose, 64, 3);
     let mut g = w.make_gmem();
-    let mut alu = NativeAlu;
-    let run = w.run(&gpgpu, &mut g, &mut alu).unwrap();
+    let run = w.run(&gpgpu, &mut g, RunOptions::default()).unwrap();
     let lr = &run.phases[0];
     let sum: u64 = lr.per_sm.iter().map(|s| s.instructions).sum();
     assert_eq!(sum, lr.total.instructions);
@@ -203,15 +200,12 @@ fn gtid_covers_2d_grids() {
     "#;
     let k = assemble(src).unwrap();
     let mut g = GlobalMem::new(1 << 14);
-    let mut alu = NativeAlu;
     Gpgpu::new(GpgpuConfig::new(1, 8))
-        .launch(
+        .launch(LaunchRequest::new(
             &k,
             LaunchConfig { grid_x: 3, grid_y: 2, block_threads: 32 },
-            &[],
             &mut g,
-            &mut alu,
-        )
+        ))
         .unwrap();
     for t in 0..(3 * 2 * 32) {
         assert_eq!(g.load(t * 4).unwrap(), t as i32);

@@ -1,0 +1,243 @@
+#!/usr/bin/env python3
+"""Functional differential for the new memstress benchmark (PR 4).
+
+Checks, against kernels/golden.rs::memstress:
+  1. the GPGPU kernel kernels/asm/memstress.flex (mini per-thread
+     interpreter over the exact opcode subset it uses, NativeAlu
+     semantics transliterated from sim/alu.rs + isa/cond.rs);
+  2. the MicroBlaze baseline program baseline/programs.rs::memstress
+     (VM transliterated from baseline/vm.rs, R0 hardwired zero);
+using the exact input generation (rng.rs XorShift64, seed ^ id<<32,
+small_i32) and prepare_memstress geometry/params from kernels/mod.rs.
+"""
+
+import sys
+
+M64 = (1 << 64) - 1
+IN_BASE = 0x1000
+MEMSTRESS_ID = 6  # BenchId::MemStress discriminant
+
+
+def i32(x):
+    x &= 0xFFFFFFFF
+    return x - (1 << 32) if x >= (1 << 31) else x
+
+
+class XorShift64:
+    def __init__(self, seed):
+        self.state = max((seed * 2685821657736338717) & M64, 1)
+
+    def next_u64(self):
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & M64
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & M64
+
+    def small_i32(self):
+        return (self.next_u64() % 201) - 100
+
+
+def gen_input(seed, n):
+    rng = XorShift64(seed ^ ((MEMSTRESS_ID << 32) & M64))
+    return [rng.small_i32() for _ in range(n)]
+
+
+def golden_memstress(x, stride):
+    n = len(x)
+    assert n & (n - 1) == 0
+    out = []
+    for t in range(n):
+        acc = 0
+        for j in range(8):
+            acc = i32(acc + x[(t + j * stride) & (n - 1)])
+        out.append(acc)
+    return out
+
+
+# ---- FlexGrip mini-interpreter (opcode subset used by memstress.flex) ----
+
+def flags_of_sub(a, b):
+    res = i32(a - b)
+    # overflow of signed sub
+    ovf = i32(a - b) != (a - b)
+    return {"sign": res < 0, "zero": res == 0, "ovf": ovf}
+
+
+def cond_eval(f, cond):
+    lt = f["sign"] != f["ovf"]
+    return {
+        "EQ": f["zero"], "NE": not f["zero"], "LT": lt,
+        "LE": f["zero"] or lt, "GT": not f["zero"] and not lt, "GE": not lt,
+    }[cond]
+
+
+def parse_flex(path):
+    instrs, labels = [], {}
+    for raw in open(path):
+        line = raw.split(";")[0].strip()
+        if not line or line.startswith("."):
+            continue
+        if line.endswith(":"):
+            labels[line[:-1]] = len(instrs)
+            continue
+        guard = None
+        if line.startswith("@"):
+            g, line = line.split(None, 1)
+            preg, cond = g[1:].split(".")
+            guard = (int(preg[1:]), cond)
+        toks = [p for p in (t.strip().rstrip(",") for t in line.split()) if p]
+        instrs.append((guard, toks[0], toks[1:]))
+    return instrs, labels
+
+
+def run_flex_thread(instrs, labels, gtid, params, mem):
+    r = [0] * 16
+    preds = [None] * 4
+
+    def val(tok):
+        if tok.startswith("#"):
+            return int(tok[1:])
+        return r[int(tok[1:])]
+
+    pc = 0
+    steps = 0
+    while True:
+        steps += 1
+        assert steps < 10000, "runaway kernel"
+        guard, op, a = instrs[pc]
+        pc += 1
+        if guard is not None:
+            preg, cond = guard
+            taken = cond_eval(preds[preg], cond)
+            if not taken:
+                continue
+        if op == "S2R":
+            assert a[1] == "SR_GTID"
+            r[int(a[0][1:])] = gtid
+        elif op == "SLD":
+            off = int(a[1].strip("[]"))
+            r[int(a[0][1:])] = params[off // 4]
+        elif op == "MOV":
+            r[int(a[0][1:])] = val(a[1])
+        elif op == "AND":
+            r[int(a[0][1:])] = i32(val(a[1]) & val(a[2]) & 0xFFFFFFFF)
+        elif op == "SHL":
+            r[int(a[0][1:])] = i32((val(a[1]) & 0xFFFFFFFF) << (val(a[2]) & 31))
+        elif op == "IADD":
+            r[int(a[0][1:])] = i32(val(a[1]) + val(a[2]))
+        elif op == "ISUB":
+            r[int(a[0][1:])] = i32(val(a[1]) - val(a[2]))
+        elif op == "ISETP":
+            preds[int(a[0][1:])] = flags_of_sub(val(a[1]), val(a[2]))
+        elif op == "BRA":
+            pc = labels[a[0]]
+        elif op == "GLD":
+            addr = val(a[1].strip("[]"))
+            r[int(a[0][1:])] = mem.get(addr // 4, 0)
+        elif op == "GST":
+            addr = val(a[0].strip("[]"))
+            mem[addr // 4] = val(a[1])
+        elif op == "EXIT":
+            return
+        else:
+            raise AssertionError(f"unhandled op {op}")
+
+
+def check_flex(path):
+    instrs, labels = parse_flex(path)
+    for n in (32, 64, 128, 256):
+        for stride in (1, 2, 4, 8, 16, 64):
+            for seed in (0xCAC4E, 0, 12345):
+                x = gen_input(seed, n)
+                out_base = IN_BASE + 4 * n
+                params = [IN_BASE, out_base, n - 1, stride]
+                mem = {IN_BASE // 4 + i: v for i, v in enumerate(x)}
+                for gtid in range(n):  # linear grid covers 0..n exactly
+                    run_flex_thread(instrs, labels, gtid, params, mem)
+                got = [mem.get(out_base // 4 + t, 0) for t in range(n)]
+                want = golden_memstress(x, stride)
+                assert got == want, f"flex n={n} stride={stride} seed={seed:#x}"
+    print("flex kernel: OK (4 sizes x 6 strides x 3 seeds, all bit-exact)")
+
+
+# ---- MicroBlaze baseline program (programs.rs::memstress, stride 1) ----
+
+def mb_memstress_program(n):
+    """Transliteration of baseline/programs.rs::memstress(n)."""
+    IB = IN_BASE
+    ops = [
+        ("Li", 10, IB), ("Li", 11, IB + 4 * n), ("Li", 12, n - 1),
+        ("Li", 13, n), ("Li", 14, 8), ("Li", 1, 0),
+        # lt: (index 6)
+        ("Li", 3, 0), ("Li", 2, 0),
+        # lj: (index 8)
+        ("Add", 4, 1, 2), ("And", 4, 4, 12), ("Slli", 4, 4, 2),
+        ("Lw", 5, 10, 4), ("Add", 3, 3, 5), ("Addi", 2, 2, 1),
+        ("Blt", 2, 14, 8),  # -> lj
+        ("Slli", 4, 1, 2), ("Sw", 3, 11, 4), ("Addi", 1, 1, 1),
+        ("Blt", 1, 13, 6),  # -> lt
+        ("Halt",),
+    ]
+    return ops
+
+
+def run_mb(ops, mem_words):
+    r = [0] * 32
+
+    def w(d, v):
+        if d != 0:  # R0 hardwired zero
+            r[d] = i32(v)
+
+    pc = 0
+    steps = 0
+    while True:
+        steps += 1
+        assert steps < 2_000_000
+        op = ops[pc]
+        nxt = pc + 1
+        k = op[0]
+        if k == "Li":
+            w(op[1], op[2])
+        elif k == "Add":
+            w(op[1], r[op[2]] + r[op[3]])
+        elif k == "Addi":
+            w(op[1], r[op[2]] + op[3])
+        elif k == "And":
+            w(op[1], (r[op[2]] & 0xFFFFFFFF) & (r[op[3]] & 0xFFFFFFFF))
+        elif k == "Slli":
+            w(op[1], (r[op[2]] & 0xFFFFFFFF) << (op[3] & 31))
+        elif k == "Lw":
+            addr = r[op[2]] + r[op[3]]
+            w(op[1], mem_words.get(addr // 4, 0))
+        elif k == "Sw":
+            addr = r[op[2]] + r[op[3]]
+            mem_words[addr // 4] = r[op[1]]
+        elif k == "Blt":
+            if r[op[1]] < r[op[2]]:
+                nxt = op[3]
+        elif k == "Halt":
+            return
+        else:
+            raise AssertionError(k)
+        pc = nxt
+
+
+def check_mb():
+    for n in (32, 64, 128, 256):
+        for seed in (0xF00D, 0, 1):
+            x = gen_input(seed, n)
+            mem = {IN_BASE // 4 + i: v for i, v in enumerate(x)}
+            run_mb(mb_memstress_program(n), mem)
+            out_base = IN_BASE + 4 * n
+            got = [mem.get(out_base // 4 + t, 0) for t in range(n)]
+            want = golden_memstress(x, 1)
+            assert got == want, f"mb n={n} seed={seed:#x}"
+    print("microblaze baseline program: OK (4 sizes x 3 seeds, all bit-exact)")
+
+
+if __name__ == "__main__":
+    check_flex(sys.argv[1] if len(sys.argv) > 1 else
+               "/root/repo/rust/src/kernels/asm/memstress.flex")
+    check_mb()
