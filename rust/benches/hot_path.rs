@@ -13,6 +13,11 @@
 //!   variants under flat memory and three L1/BRAM geometries, emitted as
 //!   `BENCH_memory.json` (hit rate, stall/contention cycles, modeled
 //!   dynamic energy per point);
+//! * resilience sweep: recovery policies (no-recovery / retry /
+//!   retry+quarantine / DMR) replaying a job mix against seeded SEU
+//!   campaign rates on a sick shard, emitted as `BENCH_resilience.json`
+//!   (jobs rescued/lost, corrupted outputs, retry latency overhead,
+//!   quarantine events);
 //! * native ALU lane throughput;
 //! * XLA ALU backend (skipped gracefully when PJRT is unavailable);
 //! * assembler + pre-decode throughput;
@@ -26,7 +31,8 @@ use flexgrip::asm::assemble;
 use flexgrip::baseline::{self, MbTiming};
 use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
 use flexgrip::harness::{
-    bench, memory_report, scaling_suite, write_suite_json, HotPathPoint, HotPathReport,
+    bench, memory_report, resilience_report, scaling_suite, write_suite_json, HotPathPoint,
+    HotPathReport,
 };
 use flexgrip::isa::Cond;
 use flexgrip::kernels::{self, BenchId, RunOptions};
@@ -144,6 +150,22 @@ fn main() {
     }
     mem.write_json("BENCH_memory.json").expect("write BENCH_memory.json");
     println!("  -> wrote BENCH_memory.json\n");
+
+    // Resilience sweep: recovery policies vs seeded SEU campaigns on a
+    // sick shard (EXPERIMENTS.md §Resilience).
+    let res_jobs = if fast { 3 } else { 9 };
+    println!("--- resilience sweep (n=32, {res_jobs} jobs/point) ---");
+    let res = resilience_report(32, res_jobs, 1);
+    for p in &res.points {
+        println!(
+            "{:<18} rate {:>9.0}  {}/{} completed ({} rescued, {} lost)  \
+             {} soft errors, {} quarantines",
+            p.policy, p.fault_rate, p.completed, p.jobs, p.rescued, p.lost, p.soft_errors,
+            p.quarantines
+        );
+    }
+    res.write_json("BENCH_resilience.json").expect("write BENCH_resilience.json");
+    println!("  -> wrote BENCH_resilience.json\n");
 
     // Native ALU throughput.
     let input = WarpAluIn {

@@ -31,6 +31,29 @@
 //! shard simulates its SMs concurrently while other shards run other
 //! jobs.
 //!
+//! # Resilience
+//!
+//! The service plane is self-healing on top of the `sim/fault.rs` SEU
+//! model. Failures travel the job channel as a typed [`ServiceError`]
+//! (the underlying [`SimError`] is preserved, not stringified), and a
+//! [`RecoveryPolicy`] on the fleet turns detected upsets into recovery:
+//! transient failures — a parity-detected `SimError::SoftError`, a
+//! golden-verification mismatch, a DMR replica disagreement — are
+//! retried up to `max_attempts` executions, each retry **re-routed** to
+//! a different covering variant when one exists; a shard that faults
+//! `quarantine_after` consecutive times is quarantined (it sits out
+//! `quarantine_ms` while its peers absorb the queue) and returns on
+//! probation, where a single further fault re-quarantines it.
+//! [`VariantSpec::with_fault`] marks one shard of a variant sick with a
+//! deterministic [`FaultPlan`], reseeded per execution so retries and
+//! DMR replicas draw fresh fault sites. [`Request::dmr`] wraps any
+//! request in dual-modular redundancy — run twice, compare outputs —
+//! catching the silent data-path corruption class parity cannot see.
+//! [`GpgpuService::submit_timeout`] sheds load with
+//! [`ServiceError::Saturated`] instead of blocking forever, and
+//! submitters blocked on a full queue resolve their tickets with
+//! [`ServiceError::Shutdown`] when the service drops mid-drain.
+//!
 //! Shutdown is graceful: dropping the service stops intake, lets every
 //! group drain its queued jobs (each ticket still resolves), then joins
 //! the worker threads.
@@ -50,12 +73,13 @@ use crate::isa::CapabilitySignature;
 use crate::kernels::{self, BenchId, RunOptions};
 use crate::model::{power::power, ArchParams};
 use crate::registry::{KernelRegistry, PreparedKernel};
-use crate::sim::{GlobalMem, SimError, SmStats};
+use crate::sim::{FaultPlan, GlobalMem, SimError, SmStats};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// A kernel-launch request.
 pub enum Request {
@@ -82,6 +106,81 @@ pub enum Request {
         inputs: Vec<(u32, Vec<i32>)>,
         read_back: (u32, usize),
     },
+    /// Dual-modular redundancy: execute the inner request twice and
+    /// compare outputs (cycles, read-back data, verification outcome).
+    /// Disagreement fails the job with [`ServiceError::DmrMismatch`] —
+    /// the detection net for silent data-path SEU corruption that the
+    /// parity-modeled checks cannot see.
+    Dmr(Box<Request>),
+}
+
+impl Request {
+    /// Wrap this request in dual-modular-redundancy mode.
+    pub fn dmr(self) -> Request {
+        Request::Dmr(Box::new(self))
+    }
+}
+
+/// Structured job failure, replacing the stringly `Result<_, String>`
+/// channel: the underlying [`SimError`] survives intact for callers that
+/// match on it, while `Display` preserves the old message text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The launch itself failed (structured simulator error — including
+    /// `SimError::SoftError` for parity-detected upsets).
+    Sim(SimError),
+    /// Device output disagreed with the golden reference (a `Bench` job's
+    /// built-in corruption check).
+    Verify(String),
+    /// The job panicked inside the shard (e.g. a malformed request
+    /// tripping an assert in preparation).
+    Panic(String),
+    /// The coordinator shut down before the job could run (or while the
+    /// submitter was blocked on a full queue).
+    Shutdown,
+    /// `submit_timeout` elapsed with the routed queue still full.
+    Saturated,
+    /// DMR replicas disagreed — silent corruption caught by redundancy.
+    DmrMismatch { variant: String },
+}
+
+impl ServiceError {
+    /// Transient, fault-class failures: eligible for retry/re-route and
+    /// counted against shard health. Deterministic failures (unsupported
+    /// ops, bad geometry, panics, watchdog) are not — re-running those
+    /// wastes a shard.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            ServiceError::Sim(SimError::SoftError { .. })
+                | ServiceError::Verify(_)
+                | ServiceError::DmrMismatch { .. }
+        )
+    }
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Sim(e) => write!(f, "{e}"),
+            ServiceError::Verify(msg) => write!(f, "{msg}"),
+            ServiceError::Panic(msg) => write!(f, "job panicked: {msg}"),
+            ServiceError::Shutdown => write!(f, "coordinator shut down"),
+            ServiceError::Saturated => write!(f, "service saturated: submit queue full"),
+            ServiceError::DmrMismatch { variant } => {
+                write!(f, "DMR mismatch on variant {variant}: replica outputs disagree")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServiceError::Sim(e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
 /// What a completed job returns.
@@ -99,17 +198,21 @@ pub struct JobOutput {
     pub shard: u32,
     /// Label of the variant the router admitted the job to.
     pub variant: String,
+    /// Executions consumed (1 = first try succeeded; >1 means the job
+    /// was rescued by retry/re-route).
+    pub attempts: u32,
 }
 
 /// Handle to an in-flight job.
 pub struct JobTicket {
-    rx: mpsc::Receiver<Result<JobOutput, String>>,
+    rx: mpsc::Receiver<Result<JobOutput, ServiceError>>,
 }
 
 impl JobTicket {
-    /// Block until the job completes.
-    pub fn wait(self) -> Result<JobOutput, String> {
-        self.rx.recv().map_err(|_| "coordinator shut down".to_string())?
+    /// Block until the job completes. A dropped reply channel (the shard
+    /// exited mid-drain) resolves as [`ServiceError::Shutdown`].
+    pub fn wait(self) -> Result<JobOutput, ServiceError> {
+        self.rx.recv().unwrap_or(Err(ServiceError::Shutdown))
     }
 }
 
@@ -140,11 +243,64 @@ pub struct VariantSpec {
     pub cfg: GpgpuConfig,
     /// Shards (worker threads) hosting this variant.
     pub shards: u32,
+    /// Deterministic SEU campaign applied to one shard of this variant
+    /// (local shard index, plan) — the "sick shard" of a resilience
+    /// experiment. The plan is reseeded per execution from a per-shard
+    /// nonce so retries and DMR replicas draw fresh fault sites.
+    pub fault: Option<(u32, FaultPlan)>,
 }
 
 impl VariantSpec {
     pub fn new(label: impl Into<String>, cfg: GpgpuConfig) -> VariantSpec {
-        VariantSpec { label: label.into(), cfg, shards: 1 }
+        VariantSpec { label: label.into(), cfg, shards: 1, fault: None }
+    }
+
+    /// Host `shards` workers of this variant.
+    pub fn with_shards(mut self, shards: u32) -> VariantSpec {
+        self.shards = shards;
+        self
+    }
+
+    /// Inject the plan's SEU campaign on local shard `shard`.
+    pub fn with_fault(mut self, shard: u32, plan: FaultPlan) -> VariantSpec {
+        self.fault = Some((shard, plan));
+        self
+    }
+}
+
+/// How the fleet reacts to transient (fault-class) job failures. The
+/// default is the pre-resilience behavior: no retries, no quarantine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Executions allowed per job (1 = fail on the first fault).
+    pub max_attempts: u32,
+    /// Consecutive transient faults before a shard is quarantined
+    /// (0 disables quarantine).
+    pub quarantine_after: u32,
+    /// How long a quarantined shard sits out before returning on
+    /// probation, in milliseconds.
+    pub quarantine_ms: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy { max_attempts: 1, quarantine_after: 0, quarantine_ms: 20 }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Retry-only policy: up to `max_attempts` executions, no quarantine.
+    pub fn retry(max_attempts: u32) -> RecoveryPolicy {
+        RecoveryPolicy { max_attempts: max_attempts.max(1), ..Default::default() }
+    }
+
+    /// Retry + quarantine after `quarantine_after` consecutive faults.
+    pub fn retry_quarantine(max_attempts: u32, quarantine_after: u32) -> RecoveryPolicy {
+        RecoveryPolicy {
+            max_attempts: max_attempts.max(1),
+            quarantine_after,
+            ..Default::default()
+        }
     }
 }
 
@@ -154,19 +310,49 @@ pub struct FleetConfig {
     pub variants: Vec<VariantSpec>,
     /// Per-variant-queue depth before `submit` blocks.
     pub queue_depth: usize,
+    /// Reaction to transient job failures (default: none).
+    pub policy: RecoveryPolicy,
+    /// Fleet-wide per-launch cycle-budget override (default: the device
+    /// watchdog).
+    pub watchdog: Option<u64>,
 }
 
 impl FleetConfig {
+    /// A fleet with default depth/policy — extend with the `with_*`
+    /// builders.
+    pub fn new(variants: Vec<VariantSpec>) -> FleetConfig {
+        FleetConfig {
+            variants,
+            queue_depth: 64,
+            policy: RecoveryPolicy::default(),
+            watchdog: None,
+        }
+    }
+
     /// A single-variant fleet — the homogeneous pool the seed service ran.
     pub fn homogeneous(cfg: GpgpuConfig, pool: ServiceConfig) -> FleetConfig {
-        FleetConfig {
-            variants: vec![VariantSpec {
-                label: "baseline".to_string(),
-                cfg,
-                shards: pool.shards.max(1),
-            }],
-            queue_depth: pool.queue_depth.max(1),
-        }
+        FleetConfig::new(vec![VariantSpec {
+            label: "baseline".to_string(),
+            cfg,
+            shards: pool.shards.max(1),
+            fault: None,
+        }])
+        .with_depth(pool.queue_depth)
+    }
+
+    pub fn with_depth(mut self, queue_depth: usize) -> FleetConfig {
+        self.queue_depth = queue_depth.max(1);
+        self
+    }
+
+    pub fn with_policy(mut self, policy: RecoveryPolicy) -> FleetConfig {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_watchdog(mut self, cycles: u64) -> FleetConfig {
+        self.watchdog = Some(cycles);
+        self
     }
 }
 
@@ -177,6 +363,16 @@ pub struct Metrics {
     pub jobs_failed: AtomicU64,
     pub total_cycles: AtomicU64,
     pub total_instructions: AtomicU64,
+    /// Transient (fault-class) failures observed on this shard.
+    pub soft_errors: AtomicU64,
+    /// Jobs this shard faulted that were re-admitted elsewhere.
+    pub jobs_retried: AtomicU64,
+    /// Times this shard entered quarantine.
+    pub quarantines: AtomicU64,
+    /// Times this shard returned from quarantine to probation.
+    pub reinstatements: AtomicU64,
+    /// DMR replica disagreements detected on this shard.
+    pub dmr_mismatches: AtomicU64,
 }
 
 impl Metrics {
@@ -186,6 +382,11 @@ impl Metrics {
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             total_cycles: self.total_cycles.load(Ordering::Relaxed),
             total_instructions: self.total_instructions.load(Ordering::Relaxed),
+            soft_errors: self.soft_errors.load(Ordering::Relaxed),
+            jobs_retried: self.jobs_retried.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            reinstatements: self.reinstatements.load(Ordering::Relaxed),
+            dmr_mismatches: self.dmr_mismatches.load(Ordering::Relaxed),
         }
     }
 }
@@ -196,6 +397,11 @@ pub struct MetricsSnapshot {
     pub jobs_failed: u64,
     pub total_cycles: u64,
     pub total_instructions: u64,
+    pub soft_errors: u64,
+    pub jobs_retried: u64,
+    pub quarantines: u64,
+    pub reinstatements: u64,
+    pub dmr_mismatches: u64,
 }
 
 impl MetricsSnapshot {
@@ -206,6 +412,11 @@ impl MetricsSnapshot {
             jobs_failed: self.jobs_failed + other.jobs_failed,
             total_cycles: self.total_cycles + other.total_cycles,
             total_instructions: self.total_instructions + other.total_instructions,
+            soft_errors: self.soft_errors + other.soft_errors,
+            jobs_retried: self.jobs_retried + other.jobs_retried,
+            quarantines: self.quarantines + other.quarantines,
+            reinstatements: self.reinstatements + other.reinstatements,
+            dmr_mismatches: self.dmr_mismatches + other.dmr_mismatches,
         }
     }
 }
@@ -213,8 +424,17 @@ impl MetricsSnapshot {
 /// A queued job: the request, the signature the router admitted it on
 /// (the shard launches with exactly this signature — see
 /// `LaunchRequest::admit` — so profile refinement can never self-reject
-/// on the routed variant), and the reply channel.
-type Job = (Request, CapabilitySignature, mpsc::Sender<Result<JobOutput, String>>);
+/// on the routed variant), retry bookkeeping, and the reply channel.
+struct Job {
+    req: Request,
+    sig: CapabilitySignature,
+    /// Executions already consumed.
+    attempts: u32,
+    /// Variant indices that already faulted this job (re-route excludes
+    /// them while an untried covering variant remains).
+    tried: Vec<usize>,
+    reply: mpsc::Sender<Result<JobOutput, ServiceError>>,
+}
 
 struct QueueState {
     jobs: VecDeque<Job>,
@@ -241,22 +461,56 @@ impl Shared {
     }
 }
 
-/// One running variant group: its queue, its shards' metrics, and the
-/// routing key (modeled dynamic power).
+/// One running variant group: its queue, its shards' metrics and fault
+/// campaigns, and the routing key (modeled dynamic power).
 struct Variant {
     label: String,
     cfg: GpgpuConfig,
     dyn_w: f64,
     shared: Arc<Shared>,
     metrics: Vec<Arc<Metrics>>,
+    /// Per-local-shard SEU campaign (None = healthy).
+    faults: Vec<Option<FaultPlan>>,
+}
+
+/// The fleet state shared between the service handle and every worker —
+/// workers need the full variant table to re-route faulted jobs.
+struct FleetInner {
+    variants: Vec<Variant>,
+    /// Index of the most-capable variant — the routing fallback.
+    fallback: usize,
+    policy: RecoveryPolicy,
+    watchdog: Option<u64>,
+}
+
+impl FleetInner {
+    /// Re-admit a faulted job: the cheapest covering variant it has not
+    /// faulted on yet, or back in place when every covering variant has
+    /// been tried. Retries bypass the depth limit — a worker must never
+    /// block on a full queue (possibly its own) while holding a job.
+    fn readmit(&self, job: Job, from: usize) {
+        let target = self
+            .variants
+            .iter()
+            .enumerate()
+            .filter(|(i, v)| !job.tried.contains(i) && v.cfg.sm.covers(&job.sig))
+            .min_by(|(_, a), (_, b)| {
+                a.dyn_w.partial_cmp(&b.dyn_w).expect("finite modeled power")
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(from);
+        let shared = &self.variants[target].shared;
+        let mut q = shared.state.lock().expect("queue poisoned");
+        q.jobs.push_back(job);
+        drop(q);
+        shared.not_empty.notify_one();
+    }
 }
 
 /// The GPGPU service: a capability-routed fleet of device-variant groups.
 pub struct GpgpuService {
-    variants: Vec<Variant>,
+    inner: Arc<FleetInner>,
     workers: Vec<JoinHandle<()>>,
-    /// Index of the most-capable variant — the routing fallback.
-    fallback: usize,
     /// Profile-refined signatures registered per benchmark (paper §4.1:
     /// representative-data profiling decides which bitstream suffices).
     profiles: Mutex<HashMap<BenchId, CapabilitySignature>>,
@@ -283,26 +537,23 @@ impl GpgpuService {
         assert!(!fleet.variants.is_empty(), "fleet needs at least one variant");
         let depth = fleet.queue_depth.max(1);
         let mut variants = Vec::with_capacity(fleet.variants.len());
-        let mut workers = Vec::new();
-        let mut shard_base = 0u32;
         for spec in fleet.variants {
-            let shards = spec.shards.max(1);
-            let shared = Shared::new(depth);
-            let mut metrics = Vec::with_capacity(shards as usize);
-            for s in 0..shards {
-                let m = Arc::new(Metrics::default());
-                metrics.push(m.clone());
-                let shared = shared.clone();
-                let cfg = spec.cfg;
-                let label = spec.label.clone();
-                let shard = shard_base + s;
-                workers.push(std::thread::spawn(move || {
-                    shard_worker(shard, &label, cfg, &shared, &m);
-                }));
+            let shards = spec.shards.max(1) as usize;
+            let mut faults = vec![None; shards];
+            if let Some((s, plan)) = spec.fault {
+                if let Some(slot) = faults.get_mut(s as usize) {
+                    *slot = Some(plan);
+                }
             }
             let dyn_w = power(&ArchParams::from_config(&spec.cfg)).dynamic_w;
-            variants.push(Variant { label: spec.label, cfg: spec.cfg, dyn_w, shared, metrics });
-            shard_base += shards;
+            variants.push(Variant {
+                label: spec.label,
+                cfg: spec.cfg,
+                dyn_w,
+                shared: Shared::new(depth),
+                metrics: (0..shards).map(|_| Arc::new(Metrics::default())).collect(),
+                faults,
+            });
         }
         // Fallback: the most capable variant (multiplier before stack
         // depth before operand count) — "the full baseline device" in any
@@ -315,16 +566,28 @@ impl GpgpuService {
             })
             .map(|(i, _)| i)
             .expect("non-empty fleet");
-        let cfg = variants[fallback].cfg;
-        let pool = ServiceConfig { shards: shard_base, queue_depth: depth };
-        GpgpuService {
+        let inner = Arc::new(FleetInner {
             variants,
-            workers,
             fallback,
-            profiles: Mutex::new(HashMap::new()),
-            cfg,
-            pool,
+            policy: fleet.policy,
+            watchdog: fleet.watchdog,
+        });
+        let mut workers = Vec::new();
+        let mut shard_base = 0u32;
+        for (vidx, v) in inner.variants.iter().enumerate() {
+            for local in 0..v.metrics.len() as u32 {
+                let fleet = inner.clone();
+                let metrics = v.metrics[local as usize].clone();
+                let shard = shard_base + local;
+                workers.push(std::thread::spawn(move || {
+                    shard_worker(&fleet, vidx, local, shard, &metrics);
+                }));
+            }
+            shard_base += v.metrics.len() as u32;
         }
+        let cfg = inner.variants[inner.fallback].cfg;
+        let pool = ServiceConfig { shards: shard_base, queue_depth: depth };
+        GpgpuService { inner, workers, profiles: Mutex::new(HashMap::new()), cfg, pool }
     }
 
     /// Register a profile-refined signature for a benchmark (from
@@ -349,6 +612,7 @@ impl GpgpuService {
                     .sig
             }
             Request::Kernel { kernel, .. } => kernel.signature(),
+            Request::Dmr(inner) => self.job_signature(inner),
         }
     }
 
@@ -357,7 +621,8 @@ impl GpgpuService {
     /// does (its own launch admission then reports the structured
     /// `Unsupported` error if even the fallback cannot run the kernel).
     fn route(&self, sig: &CapabilitySignature) -> usize {
-        self.variants
+        self.inner
+            .variants
             .iter()
             .enumerate()
             .filter(|(_, v)| v.cfg.sm.covers(sig))
@@ -365,24 +630,65 @@ impl GpgpuService {
                 a.dyn_w.partial_cmp(&b.dyn_w).expect("finite modeled power")
             })
             .map(|(i, _)| i)
-            .unwrap_or(self.fallback)
+            .unwrap_or(self.inner.fallback)
+    }
+
+    fn enqueue(&self, req: Request, timeout: Option<Duration>) -> Result<JobTicket, ServiceError> {
+        let sig = self.job_signature(&req);
+        let shared = &self.inner.variants[self.route(&sig)].shared;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut q = shared.state.lock().expect("queue poisoned");
+        while q.jobs.len() >= shared.depth && !q.shutdown {
+            match deadline {
+                None => q = shared.not_full.wait(q).expect("queue poisoned"),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(ServiceError::Saturated);
+                    }
+                    let (guard, timed_out) =
+                        shared.not_full.wait_timeout(q, d - now).expect("queue poisoned");
+                    q = guard;
+                    if timed_out.timed_out() && q.jobs.len() >= shared.depth && !q.shutdown {
+                        return Err(ServiceError::Saturated);
+                    }
+                }
+            }
+        }
+        if q.shutdown {
+            // Intake stopped while this submitter was blocked: resolve the
+            // ticket with a structured shutdown error instead of enqueueing
+            // into a closing queue (which could leave the ticket hanging
+            // after the shards exit).
+            drop(q);
+            let _ = reply_tx.send(Err(ServiceError::Shutdown));
+            return Ok(JobTicket { rx: reply_rx });
+        }
+        q.jobs.push_back(Job { req, sig, attempts: 0, tried: Vec::new(), reply: reply_tx });
+        drop(q);
+        shared.not_empty.notify_one();
+        Ok(JobTicket { rx: reply_rx })
     }
 
     /// Queue a job on its routed variant; returns immediately with a
     /// ticket unless that variant's queue is at `queue_depth`, in which
-    /// case it blocks until a shard drains it.
+    /// case it blocks until a shard drains it. If the service shuts down
+    /// while the submitter is blocked, the ticket resolves with
+    /// [`ServiceError::Shutdown`] instead of hanging.
     pub fn submit(&self, req: Request) -> JobTicket {
-        let sig = self.job_signature(&req);
-        let shared = &self.variants[self.route(&sig)].shared;
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let mut q = shared.state.lock().expect("queue poisoned");
-        while q.jobs.len() >= shared.depth && !q.shutdown {
-            q = shared.not_full.wait(q).expect("queue poisoned");
-        }
-        q.jobs.push_back((req, sig, reply_tx));
-        drop(q);
-        shared.not_empty.notify_one();
-        JobTicket { rx: reply_rx }
+        self.enqueue(req, None).expect("untimed submit never sheds")
+    }
+
+    /// `submit` with load-shedding: if the routed queue is still full
+    /// after `timeout`, gives up with [`ServiceError::Saturated`] instead
+    /// of blocking forever.
+    pub fn submit_timeout(
+        &self,
+        req: Request,
+        timeout: Duration,
+    ) -> Result<JobTicket, ServiceError> {
+        self.enqueue(req, Some(timeout))
     }
 
     /// Aggregate metrics over every shard of every variant.
@@ -394,7 +700,8 @@ impl GpgpuService {
 
     /// Per-shard metrics (index = global shard id, variant-major).
     pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
-        self.variants
+        self.inner
+            .variants
             .iter()
             .flat_map(|v| v.metrics.iter().map(|m| m.snapshot()))
             .collect()
@@ -402,7 +709,8 @@ impl GpgpuService {
 
     /// Per-variant metrics: (label, merged counters over its shards).
     pub fn variant_metrics(&self) -> Vec<(String, MetricsSnapshot)> {
-        self.variants
+        self.inner
+            .variants
             .iter()
             .map(|v| {
                 let merged = v
@@ -416,7 +724,21 @@ impl GpgpuService {
 
     /// (label, modeled dynamic power W) per variant — the routing order.
     pub fn variant_power(&self) -> Vec<(String, f64)> {
-        self.variants.iter().map(|v| (v.label.clone(), v.dyn_w)).collect()
+        self.inner.variants.iter().map(|v| (v.label.clone(), v.dyn_w)).collect()
+    }
+
+    /// Stop intake on every variant queue: already-queued jobs still
+    /// drain (their tickets resolve), submitters blocked on a full queue
+    /// wake with [`ServiceError::Shutdown`], and later submits resolve
+    /// the same way. Idempotent; `Drop` calls it before joining.
+    pub fn shutdown(&self) {
+        for v in &self.inner.variants {
+            let mut q = v.shared.state.lock().expect("queue poisoned");
+            q.shutdown = true;
+            drop(q);
+            v.shared.not_empty.notify_all();
+            v.shared.not_full.notify_all();
+        }
     }
 }
 
@@ -425,13 +747,7 @@ impl Drop for GpgpuService {
         // Graceful shutdown: stop intake on every variant queue, let the
         // shards drain (every already-submitted ticket still resolves),
         // then join.
-        for v in &self.variants {
-            let mut q = v.shared.state.lock().expect("queue poisoned");
-            q.shutdown = true;
-            drop(q);
-            v.shared.not_empty.notify_all();
-            v.shared.not_full.notify_all();
-        }
+        self.shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -439,12 +755,18 @@ impl Drop for GpgpuService {
 }
 
 /// One shard: owns a device, pulls jobs from its variant's queue until
-/// shutdown + empty queue.
-fn shard_worker(shard: u32, variant: &str, cfg: GpgpuConfig, shared: &Shared, metrics: &Metrics) {
-    let gpgpu = Gpgpu::new(cfg);
+/// shutdown + empty queue, and tracks its own health (consecutive-fault
+/// quarantine with probation-based reinstatement).
+fn shard_worker(fleet: &FleetInner, vidx: usize, local: u32, shard: u32, metrics: &Metrics) {
+    let v = &fleet.variants[vidx];
+    let gpgpu = Gpgpu::new(v.cfg);
+    let base_fault = v.faults[local as usize];
+    let mut fault_nonce = 0u64;
+    let mut consecutive = 0u32;
+    let mut probation = false;
     loop {
         let job = {
-            let mut q = shared.state.lock().expect("queue poisoned");
+            let mut q = v.shared.state.lock().expect("queue poisoned");
             loop {
                 if let Some(j) = q.jobs.pop_front() {
                     break Some(j);
@@ -452,38 +774,104 @@ fn shard_worker(shard: u32, variant: &str, cfg: GpgpuConfig, shared: &Shared, me
                 if q.shutdown {
                     break None;
                 }
-                q = shared.not_empty.wait(q).expect("queue poisoned");
+                q = v.shared.not_empty.wait(q).expect("queue poisoned");
             }
         };
-        let Some((req, sig, reply)) = job else { break };
-        shared.not_full.notify_one();
+        let Some(mut job) = job else { break };
+        v.shared.not_full.notify_one();
+        job.attempts += 1;
         // A panicking job (e.g. a malformed Bench size tripping an assert
         // in kernels::prepare) must fail its own ticket, not kill the
         // shard — a dead shard would leave later tickets hanging forever.
-        let result =
-            catch_unwind(AssertUnwindSafe(|| run_one(&gpgpu, shard, variant, req, sig)))
-                .unwrap_or_else(|payload| {
-                    let msg = payload
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| payload.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "unknown panic".to_string());
-                    Err(format!("job panicked: {msg}"))
-                });
-        match &result {
-            Ok(out) => {
+        let nonce = &mut fault_nonce;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            execute(&gpgpu, shard, &v.label, &job.req, job.sig, fleet.watchdog, || {
+                base_fault.map(|p| {
+                    *nonce = nonce.wrapping_add(1);
+                    // Fresh fault sites per execution: replays and DMR
+                    // replicas must not repeat the same upsets.
+                    FaultPlan {
+                        seed: p.seed ^ nonce.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        ..p
+                    }
+                })
+            })
+        }))
+        .unwrap_or_else(|payload| {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".to_string());
+            Err(ServiceError::Panic(msg))
+        });
+        match result {
+            Ok(mut out) => {
+                out.attempts = job.attempts;
                 metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
                 metrics.total_cycles.fetch_add(out.cycles, Ordering::Relaxed);
                 metrics
                     .total_instructions
                     .fetch_add(out.stats.instructions, Ordering::Relaxed);
+                consecutive = 0;
+                probation = false;
+                let _ = job.reply.send(Ok(out));
             }
-            Err(_) => {
-                metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            Err(err) => {
+                let transient = err.is_transient();
+                if transient {
+                    metrics.soft_errors.fetch_add(1, Ordering::Relaxed);
+                    if matches!(err, ServiceError::DmrMismatch { .. }) {
+                        metrics.dmr_mismatches.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                if transient && job.attempts < fleet.policy.max_attempts {
+                    metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
+                    job.tried.push(vidx);
+                    fleet.readmit(job, vidx);
+                } else {
+                    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Err(err));
+                }
+                if transient && fleet.policy.quarantine_after > 0 {
+                    consecutive += 1;
+                    if probation || consecutive >= fleet.policy.quarantine_after {
+                        // Quarantine: sit out while healthy peers absorb
+                        // the queue, then return on probation (one more
+                        // fault re-quarantines immediately).
+                        metrics.quarantines.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(fleet.policy.quarantine_ms));
+                        consecutive = 0;
+                        probation = true;
+                        metrics.reinstatements.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
             }
         }
-        let _ = reply.send(result);
     }
+}
+
+/// Execute one routed job, unwrapping DMR: the inner request runs twice
+/// (each replica drawing its own fault plan) and the outputs must agree.
+fn execute(
+    gpgpu: &Gpgpu,
+    shard: u32,
+    variant: &str,
+    req: &Request,
+    sig: CapabilitySignature,
+    watchdog: Option<u64>,
+    mut fault: impl FnMut() -> Option<FaultPlan>,
+) -> Result<JobOutput, ServiceError> {
+    if let Request::Dmr(inner) = req {
+        let a = run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog)?;
+        let b = run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog)?;
+        return if a.cycles == b.cycles && a.data == b.data && a.verified == b.verified {
+            Ok(a)
+        } else {
+            Err(ServiceError::DmrMismatch { variant: variant.to_string() })
+        };
+    }
+    run_one(gpgpu, shard, variant, req, sig, fault(), watchdog)
 }
 
 /// Execute one routed job. `sig` is the signature the router admitted the
@@ -494,17 +882,24 @@ fn run_one(
     gpgpu: &Gpgpu,
     shard: u32,
     variant: &str,
-    req: Request,
+    req: &Request,
     sig: CapabilitySignature,
-) -> Result<JobOutput, String> {
+    fault: Option<FaultPlan>,
+    watchdog: Option<u64>,
+) -> Result<JobOutput, ServiceError> {
     match req {
         Request::Bench { id, n, seed } => {
-            let w = kernels::prepare(id, n, seed);
+            let w = kernels::prepare(*id, *n, *seed);
             let mut gmem = w.make_gmem();
-            let run = w
-                .run(gpgpu, &mut gmem, RunOptions::new().parallel().admit(sig))
-                .map_err(|e| e.to_string())?;
-            let verified = w.verify(&gmem).map(|_| true)?;
+            let mut opts = RunOptions::new().parallel().admit(sig);
+            if let Some(plan) = &fault {
+                opts = opts.fault(plan);
+            }
+            if let Some(cycles) = watchdog {
+                opts = opts.watchdog(cycles);
+            }
+            let run = w.run(gpgpu, &mut gmem, opts).map_err(ServiceError::Sim)?;
+            let verified = w.verify(&gmem).map(|_| true).map_err(ServiceError::Verify)?;
             Ok(JobOutput {
                 label: format!("{} n={n}", id.name()),
                 cycles: run.cycles,
@@ -514,6 +909,7 @@ fn run_one(
                 verified,
                 shard,
                 variant: variant.to_string(),
+                attempts: 1,
             })
         }
         Request::Kernel {
@@ -527,27 +923,39 @@ fn run_one(
             // Pre-decode once per job (arbitrary kernels are not
             // interned); the signature was already derived at submit for
             // routing, so it is reused rather than re-walked.
-            let pk = PreparedKernel::with_sig(*kernel, sig);
-            let mut gmem = GlobalMem::new(gmem_bytes);
-            for (addr, words) in &inputs {
-                gmem.write_words(*addr, words).map_err(|e| e.to_string())?;
+            let pk = PreparedKernel::with_sig((**kernel).clone(), sig);
+            let mut gmem = GlobalMem::new(*gmem_bytes);
+            for (addr, words) in inputs {
+                gmem.write_words(*addr, words).map_err(ServiceError::Sim)?;
             }
-            let launched = match gpgpu.launch(
-                LaunchRequest::new(&pk, launch, &mut gmem).params(&params).parallel(),
-            ) {
+            let mut first = LaunchRequest::new(&pk, *launch, &mut gmem).params(params);
+            if let Some(plan) = &fault {
+                first = first.fault(plan);
+            }
+            if let Some(cycles) = watchdog {
+                first = first.watchdog(cycles);
+            }
+            let launched = match gpgpu.launch(first.parallel()) {
                 Err(SimError::WriteConflict { .. }) => {
                     // Arbitrary user kernels may legally overlap writes
                     // across SMs; the rejected merge left gmem untouched,
                     // so fall back to the sequential reference path.
-                    gpgpu.launch(
-                        LaunchRequest::new(&pk, launch, &mut gmem).params(&params),
-                    )
+                    let mut second =
+                        LaunchRequest::new(&pk, *launch, &mut gmem).params(params);
+                    if let Some(plan) = &fault {
+                        second = second.fault(plan);
+                    }
+                    if let Some(cycles) = watchdog {
+                        second = second.watchdog(cycles);
+                    }
+                    gpgpu.launch(second)
                 }
                 other => other,
             };
-            let r = launched.map_err(|e| e.to_string())?;
-            let data =
-                gmem.read_words(read_back.0, read_back.1).map_err(|e| e.to_string())?;
+            let r = launched.map_err(ServiceError::Sim)?;
+            let data = gmem
+                .read_words(read_back.0, read_back.1)
+                .map_err(ServiceError::Sim)?;
             Ok(JobOutput {
                 label: pk.kernel.name.clone(),
                 cycles: r.total.cycles,
@@ -557,7 +965,9 @@ fn run_one(
                 verified: true,
                 shard,
                 variant: variant.to_string(),
+                attempts: 1,
             })
         }
+        Request::Dmr(inner) => run_one(gpgpu, shard, variant, inner, sig, fault, watchdog),
     }
 }

@@ -79,8 +79,9 @@ use crate::asm::Kernel;
 use crate::isa::CapabilitySignature;
 use crate::registry::PreparedKernel;
 use crate::sim::{
-    AluBackend, AluFactory, BlockDesc, CachedGmem, GlobalMem, GmemPort, GmemSnapshot, L1Cache,
-    MemoryConfig, NativeAlu, PreDecoded, SimError, Sm, SmConfig, SmLaunch, SmStats, WriteRecord,
+    AluBackend, AluFactory, BlockDesc, CachedGmem, FaultPlan, GlobalMem, GmemPort, GmemSnapshot,
+    L1Cache, MemoryConfig, NativeAlu, PreDecoded, SimError, Sm, SmConfig, SmLaunch, SmStats,
+    WriteRecord,
 };
 use std::collections::HashMap;
 
@@ -276,6 +277,8 @@ pub struct LaunchRequest<'a> {
     mode: Option<ExecMode<'a>>,
     sig: Option<CapabilitySignature>,
     memory: Option<MemoryConfig>,
+    fault: Option<&'a FaultPlan>,
+    watchdog: Option<u64>,
 }
 
 impl<'a> LaunchRequest<'a> {
@@ -292,6 +295,8 @@ impl<'a> LaunchRequest<'a> {
             mode: None,
             sig: None,
             memory: None,
+            fault: None,
+            watchdog: None,
         }
     }
 
@@ -337,6 +342,24 @@ impl<'a> LaunchRequest<'a> {
         self.memory = Some(memory);
         self
     }
+
+    /// Run this launch under a seeded SEU injection campaign
+    /// ([`FaultPlan`], `sim::fault`). Fault sites are derived from
+    /// `(plan.seed, sm_id, cycle)`, so they are identical across runs and
+    /// across the sequential and parallel paths.
+    pub fn fault(mut self, plan: &'a FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Per-request cycle-budget override: replaces the device's
+    /// [`SmConfig::watchdog_cycles`] for this launch only (the service
+    /// plane's deadline-enforcement knob — the 50e9 device default is
+    /// effectively infinite).
+    pub fn watchdog(mut self, cycles: u64) -> Self {
+        self.watchdog = Some(cycles);
+        self
+    }
 }
 
 /// Post-partition simulate-phase inputs, bundled so the per-path drivers
@@ -348,6 +371,8 @@ struct SimJob<'a> {
     max_resident: u32,
     params: &'a [i32],
     memory: MemoryConfig,
+    fault: Option<&'a FaultPlan>,
+    watchdog: Option<u64>,
 }
 
 impl SimJob<'_> {
@@ -359,7 +384,19 @@ impl SimJob<'_> {
             params: self.params,
             blocks,
             max_resident: self.max_resident as usize,
+            fault: self.fault,
         }
+    }
+
+    /// The SM configuration this job runs under: the device's, with the
+    /// per-request watchdog override applied (identically on both launch
+    /// paths, so the override cannot break bit-equivalence).
+    fn sm_config(&self, base: SmConfig) -> SmConfig {
+        let mut cfg = base;
+        if let Some(cycles) = self.watchdog {
+            cfg.watchdog_cycles = cycles;
+        }
+        cfg
     }
 }
 
@@ -438,7 +475,8 @@ impl Gpgpu {
     /// module docs). Partition → simulate → merge; kernel time is the max
     /// of the per-SM busy times.
     pub fn launch(&self, req: LaunchRequest<'_>) -> Result<LaunchResult, SimError> {
-        let LaunchRequest { kernel, geometry, gmem, params, mode, sig, memory } = req;
+        let LaunchRequest { kernel, geometry, gmem, params, mode, sig, memory, fault, watchdog } =
+            req;
         let memory = memory.unwrap_or(self.cfg.memory);
         memory.validate()?;
         let derived_pre;
@@ -450,8 +488,16 @@ impl Gpgpu {
             KernelRef::Prepared(pk) => (&pk.kernel, &pk.pre, sig.unwrap_or(pk.sig)),
         };
         let (assignments, max_resident) = self.partition(k, &sig, geometry)?;
-        let job =
-            SimJob { kernel: k, pre, assignments: &assignments, max_resident, params, memory };
+        let job = SimJob {
+            kernel: k,
+            pre,
+            assignments: &assignments,
+            max_resident,
+            params,
+            memory,
+            fault,
+            watchdog,
+        };
         match mode {
             None => {
                 let mut alu = NativeAlu;
@@ -472,7 +518,7 @@ impl Gpgpu {
     ) -> Result<LaunchResult, SimError> {
         let mut per_sm = Vec::with_capacity(self.cfg.num_sms as usize);
         for (sm_id, blocks) in job.assignments.iter().enumerate() {
-            let sm = Sm::new(self.cfg.sm, sm_id as u32);
+            let sm = Sm::new(job.sm_config(self.cfg.sm), sm_id as u32);
             let stats = if blocks.is_empty() {
                 SmStats::default()
             } else {
@@ -502,7 +548,7 @@ impl Gpgpu {
         if self.cfg.num_sms == 1 {
             // One SM: no partitioning benefit; skip the snapshot entirely.
             let mut alu = factory.make_alu();
-            let sm = Sm::new(self.cfg.sm, 0);
+            let sm = Sm::new(job.sm_config(self.cfg.sm), 0);
             let cache = sm_cache(&self.cfg, job.memory, 0);
             let stats =
                 run_sm(&sm, &job.sm_launch(&job.assignments[0]), cache, gmem, alu.as_mut())?;
@@ -525,7 +571,7 @@ impl Gpgpu {
                             if blocks.is_empty() {
                                 return Ok((SmStats::default(), Vec::new()));
                             }
-                            let sm = Sm::new(cfg.sm, sm_id as u32);
+                            let sm = Sm::new(job.sm_config(cfg.sm), sm_id as u32);
                             let mut alu = factory.make_alu();
                             let cache = sm_cache(&cfg, job.memory, sm_id as u32);
                             // Copy-on-write view: setup is O(touched
@@ -893,6 +939,55 @@ mod tests {
             )
             .unwrap();
         assert_eq!(r2.total.cycles, r.total.cycles);
+    }
+
+    #[test]
+    fn per_request_watchdog_override_trips_and_restores() {
+        let k = assemble(SRC).unwrap();
+        let mut g = GlobalMem::new(8 * 64 * 4 + 64);
+        let err = Gpgpu::new(GpgpuConfig::new(1, 8))
+            .launch(LaunchRequest::new(&k, LaunchConfig::linear(8, 64), &mut g).watchdog(10))
+            .unwrap_err();
+        assert!(matches!(err, SimError::Watchdog { .. }), "{err}");
+        // The parallel path honors the same override...
+        let mut g = GlobalMem::new(8 * 64 * 4 + 64);
+        let err = Gpgpu::new(GpgpuConfig::new(2, 8))
+            .launch(
+                LaunchRequest::new(&k, LaunchConfig::linear(8, 64), &mut g)
+                    .watchdog(10)
+                    .parallel(),
+            )
+            .unwrap_err();
+        assert!(matches!(err, SimError::Watchdog { .. }), "{err}");
+        // ...and a request without the override still completes under the
+        // device default.
+        let (_, r) = launch(GpgpuConfig::new(1, 8), 8, 64);
+        assert_eq!(r.total.blocks, 8);
+    }
+
+    #[test]
+    fn fault_campaign_identical_on_both_launch_paths() {
+        use crate::sim::{FaultPlan, FaultTargets};
+        let k = assemble(SRC).unwrap();
+        // Detected-class campaign at mean inter-arrival 1 cycle: both
+        // paths must fail with byte-identical structured errors (the
+        // per-SM cycle streams, and therefore the fault sites, are
+        // path-independent).
+        let plan = FaultPlan::new(0xDECAF, 1_000_000.0)
+            .with_targets(FaultTargets { instr_image: true, ..FaultTargets::none() });
+        let run = |parallel: bool| {
+            let mut g = GlobalMem::new(8 * 64 * 4 + 64);
+            let mut req =
+                LaunchRequest::new(&k, LaunchConfig::linear(8, 64), &mut g).fault(&plan);
+            if parallel {
+                req = req.parallel();
+            }
+            Gpgpu::new(GpgpuConfig::new(2, 8)).launch(req).unwrap_err()
+        };
+        let seq = run(false);
+        let par = run(true);
+        assert!(matches!(seq, SimError::SoftError { .. }), "{seq}");
+        assert_eq!(seq, par, "fault sites must be path-independent");
     }
 
     #[test]

@@ -144,7 +144,7 @@ pub fn fleet_report_with_memory(
             variants.push(VariantSpec::new(p.recommended.label(), cfg));
         }
     }
-    let fleet = GpgpuService::start_fleet(FleetConfig { variants, queue_depth: 64 });
+    let fleet = GpgpuService::start_fleet(FleetConfig::new(variants));
     for p in &profiles {
         fleet.register_profile(p.bench, p.refined_signature());
     }

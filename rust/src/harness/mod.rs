@@ -10,6 +10,7 @@ mod jsonfmt;
 pub mod memory;
 pub mod microbench;
 pub mod paper;
+pub mod resilience;
 pub mod scaling;
 pub mod tables;
 pub mod text;
@@ -19,6 +20,7 @@ pub use fleet::{fleet_report, fleet_report_with_memory, FleetBenchPoint, FleetRe
 pub use hotpath::{HotPathPoint, HotPathReport};
 pub use memory::{memory_report, MemoryPoint, MemoryReport};
 pub use microbench::{bench, BenchResult};
+pub use resilience::{resilience_report, ResiliencePoint, ResilienceReport};
 pub use scaling::{
     scaling_report, scaling_suite, suite_json, write_suite_json, ScalingPoint, ScalingReport,
 };

@@ -1,0 +1,255 @@
+//! Resilience sweep (`BENCH_resilience.json`): recovery-policy comparison
+//! under seeded SEU campaigns (EXPERIMENTS.md §Resilience).
+//!
+//! Methodology:
+//! 1. build a two-variant fleet — a "sick" shard carrying a deterministic
+//!    [`FaultPlan`] campaign (listed first, so the power-ordered router
+//!    sends every job there initially) and a healthy peer;
+//! 2. replay a small benchmark mix serially for every point of the
+//!    {fault-rate} x {no-recovery, retry, retry+quarantine, DMR} grid,
+//!    timing each ticket submit-to-wait;
+//! 3. report jobs rescued (completed with `attempts > 1`), jobs lost,
+//!    corrupted outputs served (completed but unverified — the acceptance
+//!    bar is zero under every policy), retry latency overhead (mean
+//!    rescued-job latency minus mean first-try latency), and the shard
+//!    health counters (soft errors, retries, quarantines, reinstatements,
+//!    DMR mismatches).
+//!
+//! Rate 0 disables the campaign entirely (the injector's zero-cost
+//! contract), giving each policy a clean reference row.
+
+use crate::coordinator::{FleetConfig, GpgpuService, RecoveryPolicy, Request, VariantSpec};
+use crate::gpgpu::GpgpuConfig;
+use crate::kernels::BenchId;
+use crate::sim::FaultPlan;
+use std::time::Instant;
+
+/// Upsets per million simulated cycles, swept per policy. 0 = campaign
+/// disabled; 200k = mean interval 5 cycles (faults within any launch);
+/// 1M = mean interval 1 cycle (saturating).
+pub const FAULT_RATES: [f64; 3] = [0.0, 200_000.0, 1_000_000.0];
+
+/// One (policy, fault-rate) cell of the sweep grid.
+#[derive(Debug, Clone)]
+pub struct ResiliencePoint {
+    pub policy: &'static str,
+    pub fault_rate: f64,
+    pub jobs: u32,
+    pub completed: u64,
+    /// Completed jobs that needed more than one execution.
+    pub rescued: u64,
+    /// Tickets that resolved with an error.
+    pub lost: u64,
+    /// Completed jobs whose output failed golden verification — corrupted
+    /// results actually served. Must stay zero under every policy.
+    pub corrupted: u64,
+    /// Transient fault-class failures observed fleet-wide (detected SEUs,
+    /// verify rejects, DMR mismatches).
+    pub soft_errors: u64,
+    pub retries: u64,
+    pub quarantines: u64,
+    pub reinstatements: u64,
+    pub dmr_mismatches: u64,
+    /// Mean submit-to-wait latency of first-try completions (ms).
+    pub mean_clean_ms: f64,
+    /// Mean submit-to-wait latency of rescued completions (ms).
+    pub mean_rescued_ms: f64,
+    /// Retry latency overhead: `mean_rescued_ms - mean_clean_ms` when both
+    /// populations exist, else 0.
+    pub retry_overhead_ms: f64,
+}
+
+/// The whole sweep.
+#[derive(Debug, Clone)]
+pub struct ResilienceReport {
+    pub n: u32,
+    pub jobs_per_point: u32,
+    pub seed: u64,
+    pub points: Vec<ResiliencePoint>,
+}
+
+impl ResilienceReport {
+    /// Hand-rolled JSON (shared `jsonfmt` framing; no serde offline).
+    pub fn to_json(&self) -> String {
+        let header = [
+            format!("\"n\": {}", self.n),
+            format!("\"jobs_per_point\": {}", self.jobs_per_point),
+            format!("\"seed\": {}", self.seed),
+        ];
+        let points: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"policy\": \"{}\", \"fault_rate\": {:.1}, \"jobs\": {}, \
+                     \"completed\": {}, \"rescued\": {}, \"lost\": {}, \"corrupted\": {}, \
+                     \"soft_errors\": {}, \"retries\": {}, \"quarantines\": {}, \
+                     \"reinstatements\": {}, \"dmr_mismatches\": {}, \
+                     \"mean_clean_ms\": {:.3}, \"mean_rescued_ms\": {:.3}, \
+                     \"retry_overhead_ms\": {:.3}}}",
+                    p.policy,
+                    p.fault_rate,
+                    p.jobs,
+                    p.completed,
+                    p.rescued,
+                    p.lost,
+                    p.corrupted,
+                    p.soft_errors,
+                    p.retries,
+                    p.quarantines,
+                    p.reinstatements,
+                    p.dmr_mismatches,
+                    p.mean_clean_ms,
+                    p.mean_rescued_ms,
+                    p.retry_overhead_ms
+                )
+            })
+            .collect();
+        super::jsonfmt::frame(&header, &points)
+    }
+
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// The four compared policies. DMR rides on a retry policy so a mismatch
+/// (or a detected replica fault) re-routes instead of losing the job.
+fn policies() -> [(&'static str, RecoveryPolicy, bool); 4] {
+    [
+        ("no-recovery", RecoveryPolicy::default(), false),
+        ("retry", RecoveryPolicy::retry(3), false),
+        ("retry-quarantine", RecoveryPolicy::retry_quarantine(3, 2), false),
+        ("dmr", RecoveryPolicy::retry(3), true),
+    ]
+}
+
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+fn sweep_point(
+    policy: (&'static str, RecoveryPolicy, bool),
+    rate: f64,
+    n: u32,
+    jobs: u32,
+    seed: u64,
+) -> ResiliencePoint {
+    let (label, recovery, dmr) = policy;
+    let base = GpgpuConfig::new(1, 8);
+    let mut sick = VariantSpec::new("sick", base);
+    if rate > 0.0 {
+        sick = sick.with_fault(0, FaultPlan::new(0xBAD5EED ^ seed, rate));
+    }
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![sick, VariantSpec::new("healthy", base)]).with_policy(recovery),
+    );
+
+    // Serial replay: each ticket is timed submit-to-wait, so rescued jobs
+    // carry their full detect + re-route + re-execute latency.
+    let mix = [BenchId::VecAdd, BenchId::Reduction, BenchId::Bitonic];
+    let (mut completed, mut rescued, mut lost, mut corrupted) = (0u64, 0u64, 0u64, 0u64);
+    let (mut clean_ms, mut rescued_ms) = (Vec::new(), Vec::new());
+    for k in 0..jobs {
+        let id = mix[k as usize % mix.len()];
+        let req = Request::Bench { id, n, seed: seed + u64::from(k) };
+        let req = if dmr { req.dmr() } else { req };
+        let t0 = Instant::now();
+        match svc.submit(req).wait() {
+            Ok(out) => {
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                completed += 1;
+                if !out.verified {
+                    corrupted += 1;
+                }
+                if out.attempts > 1 {
+                    rescued += 1;
+                    rescued_ms.push(ms);
+                } else {
+                    clean_ms.push(ms);
+                }
+            }
+            Err(_) => lost += 1,
+        }
+    }
+
+    let m = svc.metrics();
+    let mean_clean_ms = mean(&clean_ms);
+    let mean_rescued_ms = mean(&rescued_ms);
+    let retry_overhead_ms = if clean_ms.is_empty() || rescued_ms.is_empty() {
+        0.0
+    } else {
+        mean_rescued_ms - mean_clean_ms
+    };
+    ResiliencePoint {
+        policy: label,
+        fault_rate: rate,
+        jobs,
+        completed,
+        rescued,
+        lost,
+        corrupted,
+        soft_errors: m.soft_errors,
+        retries: m.jobs_retried,
+        quarantines: m.quarantines,
+        reinstatements: m.reinstatements,
+        dmr_mismatches: m.dmr_mismatches,
+        mean_clean_ms,
+        mean_rescued_ms,
+        retry_overhead_ms,
+    }
+}
+
+/// Run the full {rate} x {policy} grid: `jobs_per_point` jobs of the
+/// benchmark mix per cell, at problem size `n` (power of two, 32..=256).
+pub fn resilience_report(n: u32, jobs_per_point: u32, seed: u64) -> ResilienceReport {
+    let jobs = jobs_per_point.max(1);
+    let mut points = Vec::with_capacity(FAULT_RATES.len() * policies().len());
+    for rate in FAULT_RATES {
+        for policy in policies() {
+            points.push(sweep_point(policy, rate, n, jobs, seed));
+        }
+    }
+    ResilienceReport { n, jobs_per_point: jobs, seed, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_the_grid_and_never_serves_corruption() {
+        let r = resilience_report(32, 3, 7);
+        assert_eq!(r.points.len(), FAULT_RATES.len() * 4);
+        for p in &r.points {
+            let at = format!("{} @ rate {}", p.policy, p.fault_rate);
+            assert_eq!(u64::from(p.jobs), p.completed + p.lost, "{at}: every ticket resolves");
+            assert_eq!(p.corrupted, 0, "{at}: verification gates completion");
+            if p.fault_rate == 0.0 {
+                // The injector's zero-cost contract: a disabled campaign
+                // behaves exactly like no campaign.
+                assert_eq!(p.completed, u64::from(p.jobs), "{at}");
+                assert_eq!(p.soft_errors, 0, "{at}");
+                assert_eq!(p.rescued, 0, "{at}");
+                assert_eq!(p.quarantines, 0, "{at}");
+            }
+            if p.policy == "no-recovery" {
+                assert_eq!(p.retries, 0, "{at}: max_attempts 1 never retries");
+                assert_eq!(p.rescued, 0, "{at}");
+            }
+            if !p.policy.contains("quarantine") {
+                assert_eq!(p.quarantines, 0, "{at}: policy has quarantine disabled");
+            }
+        }
+        let json = r.to_json();
+        for field in
+            ["\"policy\": \"retry-quarantine\"", "\"fault_rate\": 1000000.0", "\"rescued\""]
+        {
+            assert!(json.contains(field), "{json}");
+        }
+    }
+}

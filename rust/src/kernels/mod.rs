@@ -11,7 +11,9 @@ use crate::gpgpu::{ExecMode, Gpgpu, LaunchConfig, LaunchRequest, LaunchResult};
 use crate::isa::CapabilitySignature;
 use crate::registry::{KernelRegistry, PreparedKernel};
 use crate::rng::XorShift64;
-use crate::sim::{AluBackend, AluFactory, GlobalMem, MemoryConfig, NativeAlu, SimError, SmStats};
+use crate::sim::{
+    AluBackend, AluFactory, FaultPlan, GlobalMem, MemoryConfig, NativeAlu, SimError, SmStats,
+};
 use std::sync::Arc;
 
 /// Device byte address where benchmark inputs begin.
@@ -156,6 +158,8 @@ pub struct RunOptions<'a> {
     mode: Option<ExecMode<'a>>,
     sig: Option<CapabilitySignature>,
     memory: Option<MemoryConfig>,
+    fault: Option<&'a FaultPlan>,
+    watchdog: Option<u64>,
 }
 
 impl<'a> RunOptions<'a> {
@@ -190,6 +194,18 @@ impl<'a> RunOptions<'a> {
     /// Override the device's memory hierarchy for this run.
     pub fn memory(mut self, memory: MemoryConfig) -> Self {
         self.memory = Some(memory);
+        self
+    }
+
+    /// Inject soft errors from a deterministic [`FaultPlan`] on every phase.
+    pub fn fault(mut self, plan: &'a FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Override the device watchdog budget (cycles) for every phase.
+    pub fn watchdog(mut self, cycles: u64) -> Self {
+        self.watchdog = Some(cycles);
         self
     }
 }
@@ -394,6 +410,12 @@ impl Workload {
                 .admit(sig);
             if let Some(m) = opts.memory {
                 req = req.memory(m);
+            }
+            if let Some(plan) = opts.fault {
+                req = req.fault(plan);
+            }
+            if let Some(cycles) = opts.watchdog {
+                req = req.watchdog(cycles);
             }
             // Reborrow the mode per phase: a sequential backend is handed
             // out as a fresh `&mut` each launch.

@@ -7,28 +7,30 @@
 //!   limits     print the Table-1 physical limits
 //!   asm        assemble a .flex file and dump the binary layout
 
-use flexgrip::coordinator::{self, GpgpuService, Request, ServiceConfig};
+use flexgrip::coordinator::{self, FleetConfig, GpgpuService, RecoveryPolicy, Request, VariantSpec};
 use flexgrip::gpgpu::GpgpuConfig;
 use flexgrip::harness::{tables, Evaluation};
 use flexgrip::kernels::{self, BenchId, RunOptions};
 use flexgrip::model::{area::area, power::power, ArchParams};
 use flexgrip::runtime::{Artifacts, XlaAlu};
-use flexgrip::sim::{CacheGeometry, MemoryConfig};
+use flexgrip::sim::{CacheGeometry, FaultPlan, MemoryConfig};
 use std::collections::HashMap;
 use std::process::ExitCode;
 
 fn usage() -> ! {
     eprintln!(
         "usage:\n  \
-         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla] [--parallel] [--cache WxSxL]\n  \
+         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla] [--parallel] [--cache WxSxL] [--watchdog CYCLES] [--fault-rate R] [--fault-seed N]\n  \
          flexgrip report [--all] [--table 1..6] [--fig 4|5] [--sweep] [--size 256]\n  \
          flexgrip customize --bench <name> [--n 64]\n  \
          flexgrip limits\n  \
          flexgrip asm --file <kernel.flex>\n  \
-         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1] [--cache WxSxL]\n  \
-         flexgrip fleet-demo [--n 64] [--jobs 4] [--seed N] [--cache WxSxL] [--out BENCH_fleet.json]\n\n\
+         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1] [--cache WxSxL] [--watchdog CYCLES] [--fault-rate R] [--fault-seed N] [--retries K]\n  \
+         flexgrip fleet-demo [--n 64] [--jobs 4] [--seed N] [--cache WxSxL] [--out BENCH_fleet.json]\n  \
+         flexgrip resilience [--n 32] [--jobs 6] [--seed N] [--out BENCH_resilience.json]\n\n\
          benchmarks: autocorr bitonic matmul reduction transpose vecadd memstress\n\
-         --cache takes an L1 geometry WAYSxSETSxLINE_BYTES, e.g. 4x64x32"
+         --cache takes an L1 geometry WAYSxSETSxLINE_BYTES, e.g. 4x64x32\n\
+         --fault-rate is expected SEU upsets per million simulated cycles (seeded, deterministic)"
     );
     std::process::exit(2);
 }
@@ -84,6 +86,31 @@ fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default
     }
 }
 
+fn get_opt<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str) -> Option<T> {
+    flags.get(key).map(|v| {
+        v.parse().unwrap_or_else(|_| {
+            eprintln!("bad value for --{key}: {v}");
+            std::process::exit(2);
+        })
+    })
+}
+
+/// Apply the optional per-request SEU campaign and cycle budget to a
+/// launch's options.
+fn decorate<'a>(
+    mut opts: RunOptions<'a>,
+    fault: Option<&'a FaultPlan>,
+    watchdog: Option<u64>,
+) -> RunOptions<'a> {
+    if let Some(plan) = fault {
+        opts = opts.fault(plan);
+    }
+    if let Some(cycles) = watchdog {
+        opts = opts.watchdog(cycles);
+    }
+    opts
+}
+
 fn bench_id(flags: &HashMap<String, String>) -> BenchId {
     let name = flags.get("bench").unwrap_or_else(|| usage());
     BenchId::from_name(name).unwrap_or_else(|| {
@@ -106,13 +133,23 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
         return ExitCode::FAILURE;
     }
 
+    let watchdog: Option<u64> = get_opt(&flags, "watchdog");
+    let fault: Option<FaultPlan> = get_opt::<f64>(&flags, "fault-rate")
+        .map(|rate| FaultPlan::new(get(&flags, "fault-seed", 1), rate));
+
     let cfg = GpgpuConfig::new(sms, sp).with_memory(memory_flag(&flags));
     let gpgpu = flexgrip::gpgpu::Gpgpu::new(cfg);
     let w = kernels::prepare(id, n, seed);
     let mut gmem = w.make_gmem();
     let run = match backend {
-        "native" if parallel => w.run(&gpgpu, &mut gmem, RunOptions::new().parallel()),
-        "native" => w.run(&gpgpu, &mut gmem, RunOptions::default()),
+        "native" if parallel => w.run(
+            &gpgpu,
+            &mut gmem,
+            decorate(RunOptions::new().parallel(), fault.as_ref(), watchdog),
+        ),
+        "native" => {
+            w.run(&gpgpu, &mut gmem, decorate(RunOptions::default(), fault.as_ref(), watchdog))
+        }
         "xla" => {
             let arts = match Artifacts::open_default() {
                 Ok(a) => std::sync::Arc::new(a),
@@ -128,7 +165,11 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
                     return ExitCode::FAILURE;
                 }
             };
-            w.run(&gpgpu, &mut gmem, RunOptions::new().sequential(&mut alu))
+            w.run(
+                &gpgpu,
+                &mut gmem,
+                decorate(RunOptions::new().sequential(&mut alu), fault.as_ref(), watchdog),
+            )
         }
         other => {
             eprintln!("unknown backend `{other}`");
@@ -297,16 +338,30 @@ fn cmd_asm(flags: HashMap<String, String>) -> ExitCode {
 }
 
 /// Coordinator pool smoke: submit a batch of mixed benchmark jobs across
-/// N device shards and print per-shard + aggregate metrics.
+/// N device shards and print per-shard + aggregate metrics. `--fault-rate`
+/// injects a seeded SEU campaign on shard 0 (pair with `--retries` to
+/// watch the recovery plane rescue the jobs); `--watchdog` caps every
+/// job's cycle budget.
 fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     let shards: u32 = get(&flags, "shards", 2);
     let jobs: u32 = get(&flags, "jobs", 8);
     let n: u32 = get(&flags, "n", 64);
     let sms: u32 = get(&flags, "sms", 1);
-    let svc = GpgpuService::start_pool(
-        GpgpuConfig::new(sms, 8).with_memory(memory_flag(&flags)),
-        ServiceConfig { shards, queue_depth: 16 },
-    );
+    let retries: u32 = get(&flags, "retries", 1);
+    let mut spec =
+        VariantSpec::new("pool", GpgpuConfig::new(sms, 8).with_memory(memory_flag(&flags)))
+            .with_shards(shards.max(1));
+    if let Some(rate) = get_opt::<f64>(&flags, "fault-rate") {
+        spec = spec.with_fault(0, FaultPlan::new(get(&flags, "fault-seed", 1), rate));
+    }
+    let mut fleet = FleetConfig::new(vec![spec]).with_depth(16);
+    if retries > 1 {
+        fleet = fleet.with_policy(RecoveryPolicy::retry(retries));
+    }
+    if let Some(cycles) = get_opt(&flags, "watchdog") {
+        fleet = fleet.with_watchdog(cycles);
+    }
+    let svc = GpgpuService::start_fleet(fleet);
     let mix = [
         BenchId::VecAdd,
         BenchId::Reduction,
@@ -399,6 +454,47 @@ fn cmd_fleet_demo(flags: HashMap<String, String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// Resilience sweep: replay a job mix through every recovery policy at
+/// every campaign rate and print the rescue/loss table (EXPERIMENTS.md
+/// §Resilience; `BENCH_resilience.json` when --out is given).
+fn cmd_resilience(flags: HashMap<String, String>) -> ExitCode {
+    let n: u32 = get(&flags, "n", 32);
+    let jobs: u32 = get(&flags, "jobs", 6);
+    let seed: u64 = get(&flags, "seed", flexgrip::harness::eval::EVAL_SEED);
+    let r = flexgrip::harness::resilience_report(n, jobs, seed);
+    println!("resilience sweep: {} jobs/point at n={n} (seed {seed})", r.jobs_per_point);
+    for p in &r.points {
+        println!(
+            "  {:<17} rate {:>9.0}  {}/{} completed ({} rescued, {} lost, {} corrupted)  \
+             {} soft errors, {} retries, {} quarantines  (+{:.1} ms retry overhead)",
+            p.policy,
+            p.fault_rate,
+            p.completed,
+            p.jobs,
+            p.rescued,
+            p.lost,
+            p.corrupted,
+            p.soft_errors,
+            p.retries,
+            p.quarantines,
+            p.retry_overhead_ms
+        );
+    }
+    if let Some(path) = flags.get("out") {
+        if let Err(e) = r.write_json(path) {
+            eprintln!("writing {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+        println!("  wrote {path}");
+    }
+    let corrupted: u64 = r.points.iter().map(|p| p.corrupted).sum();
+    if corrupted > 0 {
+        eprintln!("{corrupted} corrupted output(s) served — the verification gate is broken");
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
@@ -416,6 +512,7 @@ fn main() -> ExitCode {
         "asm" => cmd_asm(parse_flags(&rest)),
         "service-demo" => cmd_service_demo(parse_flags(&rest)),
         "fleet-demo" => cmd_fleet_demo(parse_flags(&rest)),
+        "resilience" => cmd_resilience(parse_flags(&rest)),
         _ => usage(),
     }
 }

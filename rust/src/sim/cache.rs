@@ -224,6 +224,14 @@ impl L1Cache {
         self.stats
     }
 
+    /// Tag entries in this cache's tag array — the SEU injector's target
+    /// surface (`sim::fault`). Tag upsets are parity-detected in the
+    /// modeled hardware, so the injector raises `SimError::SoftError`
+    /// instead of mutating a tag.
+    pub fn tag_count(&self) -> u32 {
+        self.tags.len() as u32
+    }
+
     /// Cycles for one line fill alone on its partition port: the AXI row
     /// setup plus one streaming beat per line word.
     fn fill_service(&self) -> u64 {
@@ -374,6 +382,10 @@ impl<G: GmemPort + ?Sized> GmemPort for CachedGmem<'_, G> {
 
     fn mem_stats(&self) -> MemStats {
         self.cache.stats()
+    }
+
+    fn l1_tag_count(&self) -> u32 {
+        self.cache.tag_count()
     }
 }
 

@@ -1,0 +1,323 @@
+//! Deterministic SEU (single-event-upset) fault injection.
+//!
+//! The paper's soft GPGPU lives entirely in FPGA fabric — BRAMs hold the
+//! register file, shared memory, cache tags and the pre-decoded
+//! instruction image, exactly the structures embedded deployments lose
+//! bits in. This module models those upsets *deterministically*: a
+//! [`FaultPlan`] (seed + rate + target set) rides on a launch, and each
+//! SM derives its private upset schedule from `(plan.seed, sm_id)` plus
+//! its own simulated-cycle stream. Because the per-SM cycle streams are
+//! identical on the sequential and parallel launch paths (the
+//! bit-equivalence contract pinned by `tests/parallel_launch.rs`), fault
+//! sites are identical on both paths too — same seed ⇒ byte-identical
+//! upsets, reproducible in a test or a bug report.
+//!
+//! Detection is split the way real parity/ECC splits it:
+//! - **tag array / instruction image** upsets are *detected* (those BRAMs
+//!   carry parity in the modeled hardware) and surface as
+//!   `SimError::SoftError` — the service plane can retry;
+//! - **register file / shared memory** upsets corrupt *silently* — only
+//!   output verification or dual-modular redundancy can catch them,
+//!   which is the point of modeling them.
+//!
+//! A disabled plan (absent, rate 0, or no targets) never constructs a
+//! [`FaultState`], so the engine's only overhead is one `Option` branch
+//! per issue — provably bit- and cycle-identical to the fault-free
+//! engine (`tests/fault_injection.rs`).
+
+use crate::rng::XorShift64;
+
+/// Golden-ratio mixing constant for per-SM stream separation.
+const SM_STREAM_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Which modeled BRAM structures the injector may upset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultTargets {
+    /// Per-block register file (silent corruption).
+    pub register_file: bool,
+    /// Per-block shared memory (silent corruption).
+    pub shared_mem: bool,
+    /// L1 tag array (parity-detected; no-op on tagless/flat memory).
+    pub l1_tags: bool,
+    /// Pre-decoded instruction image (parity-detected at issue).
+    pub instr_image: bool,
+}
+
+impl FaultTargets {
+    /// Every modeled structure.
+    pub fn all() -> FaultTargets {
+        FaultTargets {
+            register_file: true,
+            shared_mem: true,
+            l1_tags: true,
+            instr_image: true,
+        }
+    }
+
+    /// No structure — combined with any rate this disables injection.
+    pub fn none() -> FaultTargets {
+        FaultTargets {
+            register_file: false,
+            shared_mem: false,
+            l1_tags: false,
+            instr_image: false,
+        }
+    }
+
+    /// Only the silently-corrupting structures (register file + shared
+    /// memory) — the class only DMR or output verification catches.
+    pub fn silent() -> FaultTargets {
+        FaultTargets { register_file: true, shared_mem: true, ..FaultTargets::none() }
+    }
+
+    /// Only the parity-detected structures (tags + instruction image).
+    pub fn detected() -> FaultTargets {
+        FaultTargets { l1_tags: true, instr_image: true, ..FaultTargets::none() }
+    }
+
+    pub fn any(&self) -> bool {
+        self.register_file || self.shared_mem || self.l1_tags || self.instr_image
+    }
+
+    /// Enabled targets in pinned declaration order — the order is part of
+    /// the deterministic contract (mirrored by `tools/verify/fault_diff.py`).
+    fn enabled(&self) -> ([FaultTarget; 4], usize) {
+        let mut kinds = [FaultTarget::RegisterFile; 4];
+        let mut n = 0;
+        if self.register_file {
+            kinds[n] = FaultTarget::RegisterFile;
+            n += 1;
+        }
+        if self.shared_mem {
+            kinds[n] = FaultTarget::SharedMem;
+            n += 1;
+        }
+        if self.l1_tags {
+            kinds[n] = FaultTarget::L1Tags;
+            n += 1;
+        }
+        if self.instr_image {
+            kinds[n] = FaultTarget::InstrImage;
+            n += 1;
+        }
+        (kinds, n)
+    }
+}
+
+/// A structure class an upset can land in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    RegisterFile,
+    SharedMem,
+    L1Tags,
+    InstrImage,
+}
+
+/// A seeded soft-error campaign carried on a launch. Plans are plain
+/// value types: the same plan on the same launch produces byte-identical
+/// fault sites on every run and on both launch paths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Campaign seed; each SM derives its stream from `(seed, sm_id)`.
+    pub seed: u64,
+    /// Expected upsets per million simulated cycles, per SM.
+    pub rate: f64,
+    /// Which structures may be upset.
+    pub targets: FaultTargets,
+}
+
+impl FaultPlan {
+    /// A plan over every modeled structure.
+    pub fn new(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { seed, rate, targets: FaultTargets::all() }
+    }
+
+    pub fn with_targets(mut self, targets: FaultTargets) -> FaultPlan {
+        self.targets = targets;
+        self
+    }
+
+    /// An enabled plan constructs per-SM [`FaultState`]; a disabled one
+    /// leaves the engine on its fault-free path.
+    pub fn is_enabled(&self) -> bool {
+        self.rate > 0.0 && self.targets.any()
+    }
+}
+
+/// Where an upset landed — carried by `SimError::SoftError` for detected
+/// upsets and by injection traces in tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Word `word` of resident slot `slot`'s register file on SM `sm`.
+    Register { sm: u32, slot: u32, word: u32 },
+    /// Word `word` of resident slot `slot`'s shared memory on SM `sm`.
+    Shared { sm: u32, slot: u32, word: u32 },
+    /// Tag entry `index` of SM `sm`'s L1 tag array.
+    L1Tag { sm: u32, index: u32 },
+    /// The pre-decoded image entry for `pc`, detected when SM `sm` issued
+    /// from it.
+    Instr { sm: u32, pc: u32 },
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultSite::Register { sm, slot, word } => {
+                write!(f, "SM {sm} register file (slot {slot}, word {word})")
+            }
+            FaultSite::Shared { sm, slot, word } => {
+                write!(f, "SM {sm} shared memory (slot {slot}, word {word})")
+            }
+            FaultSite::L1Tag { sm, index } => {
+                write!(f, "SM {sm} L1 tag array (entry {index})")
+            }
+            FaultSite::Instr { sm, pc } => {
+                write!(f, "SM {sm} instruction image (pc={pc:#x})")
+            }
+        }
+    }
+}
+
+/// One scheduled upset, before the engine resolves it to a concrete
+/// [`FaultSite`]: a structure class, a raw site selector (reduced modulo
+/// the live structure's size at the injection point) and a bit index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub target: FaultTarget,
+    pub sel: u64,
+    pub bit: u32,
+}
+
+/// Per-SM injection schedule. Built once per `Sm::run` from an enabled
+/// plan; upset cycles are drawn from a uniform inter-arrival distribution
+/// with mean `1e6 / rate` cycles.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    rng: XorShift64,
+    mean: u64,
+    next_event: u64,
+    kinds: [FaultTarget; 4],
+    n_kinds: usize,
+}
+
+impl FaultState {
+    /// `None` when the plan is disabled — the engine then carries no
+    /// per-issue injection work at all.
+    pub fn new(plan: &FaultPlan, sm_id: u32) -> Option<FaultState> {
+        if !plan.is_enabled() {
+            return None;
+        }
+        let stream = plan.seed ^ u64::from(sm_id + 1).wrapping_mul(SM_STREAM_MIX);
+        let mut rng = XorShift64::new(stream);
+        let mean = ((1_000_000.0 / plan.rate) as u64).max(1);
+        let next_event = 1 + rng.below(2 * mean);
+        let (kinds, n_kinds) = plan.targets.enabled();
+        Some(FaultState { rng, mean, next_event, kinds, n_kinds })
+    }
+
+    /// Cycle of the next scheduled upset (test/diagnostic visibility).
+    pub fn next_event(&self) -> u64 {
+        self.next_event
+    }
+
+    /// Fires at most one upset per call: `Some(event)` when `cycle` has
+    /// reached the scheduled upset, rescheduling the next one relative to
+    /// `cycle`. The draw sequence depends only on `(seed, sm_id)` and the
+    /// polled cycle values, which is what makes injection path-independent.
+    pub fn poll(&mut self, cycle: u64) -> Option<FaultEvent> {
+        if cycle < self.next_event {
+            return None;
+        }
+        let target = self.kinds[self.rng.below(self.n_kinds as u64) as usize];
+        let sel = self.rng.next_u64();
+        let bit = (self.rng.next_u64() % 32) as u32;
+        self.next_event = cycle + 1 + self.rng.below(2 * self.mean);
+        Some(FaultEvent { target, sel, bit })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plans_build_no_state() {
+        assert!(FaultState::new(&FaultPlan::new(1, 0.0), 0).is_none());
+        let no_targets = FaultPlan::new(1, 50.0).with_targets(FaultTargets::none());
+        assert!(!no_targets.is_enabled());
+        assert!(FaultState::new(&no_targets, 0).is_none());
+        assert!(FaultPlan::new(1, 50.0).is_enabled());
+    }
+
+    /// Pinned against the transliterated model in
+    /// `tools/verify/fault_diff.py` — if either side drifts, the
+    /// cross-language determinism contract is broken.
+    #[test]
+    fn schedule_matches_pinned_golden_constants() {
+        let plan = FaultPlan::new(0xC0FFEE, 100.0);
+        let mut fs = FaultState::new(&plan, 0).unwrap();
+        assert_eq!(fs.mean, 10_000);
+        assert_eq!(fs.next_event(), 12_812);
+
+        let expected = [
+            (12_812u64, FaultTarget::RegisterFile, 0x097a_8c1c_8963_a82f_u64, 0u32),
+            (14_584, FaultTarget::SharedMem, 0xf355_dfb0_5de6_d9df, 24),
+            (22_709, FaultTarget::L1Tags, 0xd5c6_d2d5_a0bf_a0c3, 2),
+            (24_679, FaultTarget::SharedMem, 0x1f5b_df16_4719_bbf4, 13),
+        ];
+        for (cycle, target, sel, bit) in expected {
+            assert_eq!(fs.poll(cycle - 1), None);
+            let ev = fs.poll(cycle).expect("event due");
+            assert_eq!(ev.target, target);
+            assert_eq!(ev.sel, sel);
+            assert_eq!(ev.bit, bit);
+        }
+
+        // A different SM id on the same plan gets a different stream.
+        let fs1 = FaultState::new(&plan, 1).unwrap();
+        assert_eq!(fs1.next_event(), 6_986);
+    }
+
+    #[test]
+    fn same_seed_same_schedule_across_instances() {
+        let plan = FaultPlan::new(42, 250.0);
+        let mut a = FaultState::new(&plan, 3).unwrap();
+        let mut b = FaultState::new(&plan, 3).unwrap();
+        let mut cycle = 0;
+        for _ in 0..64 {
+            cycle = a.next_event();
+            assert_eq!(a.poll(cycle), b.poll(cycle));
+        }
+        assert!(cycle > 0);
+    }
+
+    #[test]
+    fn target_order_is_pinned() {
+        let (kinds, n) = FaultTargets::all().enabled();
+        assert_eq!(n, 4);
+        assert_eq!(
+            &kinds[..n],
+            &[
+                FaultTarget::RegisterFile,
+                FaultTarget::SharedMem,
+                FaultTarget::L1Tags,
+                FaultTarget::InstrImage,
+            ]
+        );
+        let (kinds, n) = FaultTargets::detected().enabled();
+        assert_eq!(&kinds[..n], &[FaultTarget::L1Tags, FaultTarget::InstrImage]);
+        let (kinds, n) = FaultTargets::silent().enabled();
+        assert_eq!(&kinds[..n], &[FaultTarget::RegisterFile, FaultTarget::SharedMem]);
+    }
+
+    #[test]
+    fn poll_only_fires_once_per_due_cycle() {
+        let plan = FaultPlan::new(7, 1000.0);
+        let mut fs = FaultState::new(&plan, 0).unwrap();
+        let due = fs.next_event();
+        assert!(fs.poll(due).is_some());
+        // Rescheduled strictly into the future.
+        assert!(fs.next_event() > due);
+        assert_eq!(fs.poll(due), None);
+    }
+}

@@ -109,6 +109,13 @@ pub trait GmemPort {
     fn mem_stats(&self) -> MemStats {
         MemStats::default()
     }
+
+    /// Number of L1 tag entries behind this port — the SEU injector's
+    /// tag-array target surface. Flat ports have no tag BRAM, so a
+    /// tag-targeted upset lands in unused fabric and is a no-op.
+    fn l1_tag_count(&self) -> u32 {
+        0
+    }
 }
 
 impl GmemPort for GlobalMem {
@@ -225,6 +232,18 @@ impl SharedMem {
         let idx = word_index(addr, self.words.len(), "shared")?;
         self.words[idx] = value;
         Ok(())
+    }
+
+    /// SEU injection (`sim::fault`): flip `bit` of the word selected by
+    /// `sel` (reduced modulo the allocation). Returns the flipped word
+    /// index, or `None` for a zero-byte allocation. Silent by design.
+    pub(crate) fn seu_flip(&mut self, sel: u64, bit: u32) -> Option<u32> {
+        if self.words.is_empty() {
+            return None;
+        }
+        let word = (sel % self.words.len() as u64) as usize;
+        self.words[word] ^= 1i32 << (bit % 32);
+        Some(word as u32)
     }
 
     /// Copy kernel parameters into the param segment (driver behaviour at

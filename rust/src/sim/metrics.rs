@@ -46,7 +46,7 @@ impl MemStats {
 }
 
 /// Counters for one SM over one kernel launch.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SmStats {
     /// Total cycles this SM was busy (its clock when its last block retired).
     pub cycles: u64,

@@ -17,6 +17,7 @@
 
 pub mod alu;
 pub mod cache;
+pub mod fault;
 pub mod mem;
 pub mod metrics;
 pub mod regfile;
@@ -29,6 +30,7 @@ pub use alu::{
     eval_lane, AluBackend, AluFactory, AluFunc, NativeAlu, WarpAluIn, WarpAluOut, WARP_SIZE,
 };
 pub use cache::{CacheGeometry, CachedGmem, L1Cache, L1Config, MemoryConfig};
+pub use fault::{FaultEvent, FaultPlan, FaultSite, FaultState, FaultTarget, FaultTargets};
 pub use mem::{
     GlobalMem, GmemPort, GmemSnapshot, MemCost, MemTiming, SharedMem, WriteRecord,
     GMEM_PAGE_WORDS, PARAM_SEG_BYTES,
@@ -74,6 +76,11 @@ pub enum SimError {
     WriteConflict { addr: u32, first_sm: u32, second_sm: u32 },
     /// Watchdog: simulation exceeded the configured cycle budget.
     Watchdog { cycles: u64 },
+    /// A parity-detected single-event upset (SEU) in a modeled BRAM
+    /// structure ([`fault::FaultPlan`] injection). Only tag-array and
+    /// instruction-image upsets surface here — register-file and
+    /// shared-memory upsets corrupt silently by design.
+    SoftError { site: fault::FaultSite, cycle: u64, bit: u32 },
 }
 
 impl From<DecodeError> for SimError {
@@ -118,6 +125,9 @@ impl std::fmt::Display for SimError {
             ),
             SimError::Watchdog { cycles } => {
                 write!(f, "watchdog expired after {cycles} cycles")
+            }
+            SimError::SoftError { site, cycle, bit } => {
+                write!(f, "soft error: SEU detected in {site}, bit {bit}, cycle {cycle}")
             }
         }
     }

@@ -96,6 +96,19 @@ impl RegFile {
         }
     }
 
+    /// SEU injection (`sim::fault`): flip `bit` of the general-register
+    /// word selected by `sel` (reduced modulo the file size). Returns the
+    /// flipped word index, or `None` for a zero-register allocation.
+    /// Silent by design — no parity models the GP register BRAMs.
+    pub(crate) fn seu_flip(&mut self, sel: u64, bit: u32) -> Option<u32> {
+        if self.gp.is_empty() {
+            return None;
+        }
+        let word = (sel % self.gp.len() as u64) as usize;
+        self.gp[word] ^= 1i32 << (bit % 32);
+        Some(word as u32)
+    }
+
     #[inline]
     pub fn read_areg(&self, thread: u32, a: u8) -> i32 {
         debug_assert!(a < NUM_AREGS);

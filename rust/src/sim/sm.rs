@@ -33,6 +33,7 @@
 //!   re-matches `Operand`/`SpecialReg` per issue.
 
 use super::alu::{AluBackend, AluFunc, WarpAluIn, WARP_SIZE};
+use super::fault::{FaultEvent, FaultPlan, FaultSite, FaultState, FaultTarget};
 use super::mem::{GmemPort, SharedMem, PARAM_SEG_BYTES};
 use super::metrics::SmStats;
 use super::regfile::RegFile;
@@ -275,6 +276,10 @@ pub struct SmLaunch<'a> {
     /// Blocks resident at once (the Table 1 limit computed by the block
     /// scheduler).
     pub max_resident: usize,
+    /// SEU injection campaign (`sim::fault`), or `None` for the fault-free
+    /// engine. A disabled plan builds no per-SM state, so the only cost is
+    /// one `Option` branch per issued instruction.
+    pub fault: Option<&'a FaultPlan>,
 }
 
 /// Per-issue execution context threaded into [`Sm::step`]: the decoded
@@ -345,9 +350,20 @@ impl Sm {
         alu: &mut A,
     ) -> Result<SmStats, SimError> {
         self.cfg.validate()?;
-        let SmLaunch { pre: kernel, regs_per_thread, smem_bytes, params, blocks, max_resident } =
-            *launch;
+        let SmLaunch {
+            pre: kernel,
+            regs_per_thread,
+            smem_bytes,
+            params,
+            blocks,
+            max_resident,
+            fault,
+        } = *launch;
         assert!(max_resident >= 1, "block scheduler must allow one resident block");
+        // SEU schedule: seeded from (plan.seed, sm_id) and advanced by this
+        // SM's own cycle stream, which is identical on the sequential and
+        // parallel launch paths — so fault sites are path-independent.
+        let mut seu = fault.and_then(|p| FaultState::new(p, self.sm_id));
 
         let mut stats = SmStats::default();
         let mut cycle: u64 = 0;
@@ -396,6 +412,16 @@ impl Sm {
                     let (s, w) = locate(&resident, flat);
                     let slot_base = flat - w as u32;
                     cycle += rows;
+                    // SEU injection point: upsets land between issues, at
+                    // the cycle the issue port advanced to. Detected upsets
+                    // (tag/instruction parity) abort the launch here; data
+                    // upsets silently mutate state and execution continues.
+                    if let Some(st) = seu.as_mut() {
+                        if let Some(ev) = st.poll(cycle) {
+                            let pc = resident[s].warps[w].pc;
+                            self.apply_seu(ev, cycle, pc, &mut resident, &*gmem)?;
+                        }
+                    }
                     // Memory instructions drain through the single AXI
                     // master / BRAM port and block the pipeline (Fig. 3);
                     // `step` returns those extra cycles. Cache line fills
@@ -477,6 +503,54 @@ impl Sm {
         // port (all-zero on flat memory, populated by `CachedGmem`).
         stats.mem = gmem.mem_stats();
         Ok(stats)
+    }
+
+    /// Land one scheduled upset ([`FaultEvent`]) in the modeled structure
+    /// it targets. Register-file and shared-memory upsets mutate state
+    /// silently (no parity on those BRAMs); tag-array and
+    /// instruction-image upsets are parity-detected and abort the launch
+    /// with [`SimError::SoftError`]. A tag upset on a tagless (flat)
+    /// memory port lands in unused fabric and is a no-op.
+    fn apply_seu<G: GmemPort + ?Sized>(
+        &self,
+        ev: FaultEvent,
+        cycle: u64,
+        pc: u32,
+        resident: &mut [Resident],
+        gmem: &G,
+    ) -> Result<(), SimError> {
+        let n_slots = resident.len() as u64;
+        match ev.target {
+            FaultTarget::RegisterFile => {
+                let slot = (ev.sel % n_slots) as usize;
+                resident[slot].regs.seu_flip(ev.sel / n_slots, ev.bit);
+            }
+            FaultTarget::SharedMem => {
+                let slot = (ev.sel % n_slots) as usize;
+                resident[slot].shared.seu_flip(ev.sel / n_slots, ev.bit);
+            }
+            FaultTarget::L1Tags => {
+                let tags = gmem.l1_tag_count();
+                if tags > 0 {
+                    return Err(SimError::SoftError {
+                        site: FaultSite::L1Tag {
+                            sm: self.sm_id,
+                            index: (ev.sel % u64::from(tags)) as u32,
+                        },
+                        cycle,
+                        bit: ev.bit,
+                    });
+                }
+            }
+            FaultTarget::InstrImage => {
+                return Err(SimError::SoftError {
+                    site: FaultSite::Instr { sm: self.sm_id, pc },
+                    cycle,
+                    bit: ev.bit,
+                });
+            }
+        }
+        Ok(())
     }
 
     fn make_resident(
@@ -853,6 +927,7 @@ mod tests {
             params,
             blocks: &blocks,
             max_resident: 8,
+            fault: None,
         };
         sm.run(&launch, gmem, &mut alu)
     }
@@ -1105,6 +1180,7 @@ mod tests {
             params: &[],
             blocks: &blocks,
             max_resident: 2,
+            fault: None,
         };
         let stats = sm.run(&launch, &mut g, &mut alu).unwrap();
         assert_eq!(stats.blocks, 6);
@@ -1138,6 +1214,7 @@ mod tests {
             params: &[0, 0],
             blocks: &blocks,
             max_resident: 17,
+            fault: None,
         };
         let err = sm.run(&launch, &mut g, &mut alu).unwrap_err();
         assert!(matches!(err, SimError::LimitExceeded(_)), "{err}");
@@ -1162,9 +1239,96 @@ mod tests {
             params: &[5, 0],
             blocks: &blocks,
             max_resident: 8,
+            fault: None,
         };
         let stats = sm.run(&launch, gd, ad).unwrap();
         assert_eq!(stats.blocks, 1);
         assert_eq!(g.load(0).unwrap(), 5);
+    }
+
+    fn run_one_block_fault(
+        src: &str,
+        params: &[i32],
+        ntid: u32,
+        gmem: &mut GlobalMem,
+        fault: Option<&FaultPlan>,
+    ) -> Result<SmStats, SimError> {
+        let k = assemble(src).expect("assemble");
+        let pre = PreDecoded::from_kernel(&k);
+        let sm = Sm::new(SmConfig::baseline(), 0);
+        let blocks = [BlockDesc { ctaid_x: 0, ctaid_y: 0, nctaid_x: 1, nctaid_y: 1, ntid }];
+        let mut alu = NativeAlu;
+        let launch = SmLaunch {
+            pre: &pre,
+            regs_per_thread: k.regs_per_thread,
+            smem_bytes: k.smem_bytes,
+            params,
+            blocks: &blocks,
+            max_resident: 8,
+            fault,
+        };
+        sm.run(&launch, gmem, &mut alu)
+    }
+
+    #[test]
+    fn instr_image_upset_is_parity_detected() {
+        use crate::sim::FaultTargets;
+        // Mean inter-arrival 1 cycle: the first upset lands within the
+        // first few issues, long before the kernel completes.
+        let plan =
+            FaultPlan::new(0xBAD5EED, 1_000_000.0).with_targets(FaultTargets {
+                instr_image: true,
+                ..FaultTargets::none()
+            });
+        let mut g = GlobalMem::new(4096);
+        let err = run_one_block_fault(SCALE_SRC, &[0, 0], 64, &mut g, Some(&plan)).unwrap_err();
+        match err {
+            SimError::SoftError { site: FaultSite::Instr { sm: 0, .. }, cycle, .. } => {
+                assert!(cycle > 0);
+            }
+            other => panic!("expected instruction-image SoftError, got {other}"),
+        }
+    }
+
+    #[test]
+    fn tag_upsets_are_noops_on_flat_memory() {
+        use crate::sim::FaultTargets;
+        // A tag-only campaign against a tagless (flat) port lands in
+        // unused fabric: the run must complete bit- and cycle-identical
+        // to the fault-free run.
+        let plan = FaultPlan::new(0xBAD5EED, 1_000_000.0)
+            .with_targets(FaultTargets { l1_tags: true, ..FaultTargets::none() });
+        let mut clean = GlobalMem::new(4096);
+        let s0 = run_one_block_fault(SCALE_SRC, &[9, 0], 64, &mut clean, None).unwrap();
+        let mut faulted = GlobalMem::new(4096);
+        let s1 = run_one_block_fault(SCALE_SRC, &[9, 0], 64, &mut faulted, Some(&plan)).unwrap();
+        assert_eq!(s0.cycles, s1.cycles);
+        assert_eq!(clean.read_words(0, 64).unwrap(), faulted.read_words(0, 64).unwrap());
+    }
+
+    #[test]
+    fn disabled_plan_is_bit_and_cycle_identical() {
+        let zero_rate = FaultPlan::new(123, 0.0);
+        let mut a = GlobalMem::new(4096);
+        let sa = run_one_block_fault(SCALE_SRC, &[3, 0], 64, &mut a, None).unwrap();
+        let mut b = GlobalMem::new(4096);
+        let sb = run_one_block_fault(SCALE_SRC, &[3, 0], 64, &mut b, Some(&zero_rate)).unwrap();
+        assert_eq!(sa.cycles, sb.cycles);
+        assert_eq!(a.read_words(0, 64).unwrap(), b.read_words(0, 64).unwrap());
+    }
+
+    #[test]
+    fn silent_campaigns_are_deterministic_per_seed() {
+        use crate::sim::FaultTargets;
+        let plan = FaultPlan::new(0x51EE7, 50_000.0).with_targets(FaultTargets::silent());
+        let run = || {
+            let mut g = GlobalMem::new(4096);
+            let r = run_one_block_fault(SCALE_SRC, &[11, 0], 64, &mut g, Some(&plan));
+            (r, g.read_words(0, 64).unwrap())
+        };
+        let (r0, img0) = run();
+        let (r1, img1) = run();
+        assert_eq!(r0, r1, "same seed, same outcome");
+        assert_eq!(img0, img1, "same seed, same memory image");
     }
 }

@@ -2,9 +2,13 @@
 //! metrics, failure isolation, and the sharded device pool.
 
 use flexgrip::asm::assemble;
-use flexgrip::coordinator::{GpgpuService, MetricsSnapshot, Request, ServiceConfig};
+use flexgrip::coordinator::{
+    GpgpuService, MetricsSnapshot, Request, ServiceConfig, ServiceError,
+};
 use flexgrip::gpgpu::{GpgpuConfig, LaunchConfig};
 use flexgrip::kernels::BenchId;
+use std::sync::Arc;
+use std::time::Duration;
 
 #[test]
 fn bench_jobs_complete_and_verify() {
@@ -225,12 +229,87 @@ fn panicking_job_fails_its_ticket_but_not_the_shard() {
     let svc = GpgpuService::start(GpgpuConfig::new(1, 8));
     let t_bad = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 48, seed: 1 });
     let err = t_bad.wait().expect_err("invalid size must fail the ticket");
-    assert!(err.contains("panicked"), "{err}");
+    assert!(matches!(err, ServiceError::Panic(_)), "{err:?}");
+    assert!(err.to_string().contains("panicked"), "{err}");
     let t_ok = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 });
     assert!(t_ok.wait().expect("shard must survive the panic").verified);
     let m = svc.metrics();
     assert_eq!(m.jobs_failed, 1);
     assert_eq!(m.jobs_completed, 1);
+}
+
+#[test]
+fn job_failures_preserve_the_structured_sim_error() {
+    // The bad kernel's failure must travel the channel as the typed
+    // SimError it was, not a stringified copy.
+    let svc = GpgpuService::start(GpgpuConfig::new(1, 8));
+    let bad = assemble("JOIN\nEXIT").unwrap();
+    let t = svc.submit(Request::Kernel {
+        kernel: Box::new(bad),
+        launch: LaunchConfig::linear(1, 32),
+        params: vec![],
+        gmem_bytes: 4096,
+        inputs: vec![],
+        read_back: (0, 1),
+    });
+    let err = t.wait().expect_err("JOIN with an empty warp stack must fail");
+    assert!(matches!(err, ServiceError::Sim(_)), "{err:?}");
+}
+
+#[test]
+fn submit_timeout_sheds_load_when_saturated() {
+    // 1 shard, depth 1: one slow job running, one queued — the routed
+    // queue stays full, so a timed submit must give up with `Saturated`
+    // instead of blocking behind the slow job.
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 1, queue_depth: 1 },
+    );
+    let t_slow = svc.submit(Request::Bench { id: BenchId::MatMul, n: 128, seed: 1 });
+    let t_queued = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 });
+    let err = svc
+        .submit_timeout(
+            Request::Bench { id: BenchId::VecAdd, n: 32, seed: 2 },
+            Duration::from_millis(30),
+        )
+        .expect_err("full queue + busy shard must shed within the timeout");
+    assert_eq!(err, ServiceError::Saturated);
+    // The shed submit left no trace: both accepted jobs still complete.
+    assert!(t_slow.wait().unwrap().verified);
+    assert!(t_queued.wait().unwrap().verified);
+    assert_eq!(svc.metrics().jobs_completed, 2);
+}
+
+#[test]
+fn shutdown_under_load_wakes_blocked_submitters_with_structured_error() {
+    // 1 shard, depth 1: a slow job occupies the worker and a second fills
+    // the queue, so a third submitter blocks in `submit`. Stopping intake
+    // mid-drain must wake it with ServiceError::Shutdown — not leave it
+    // hanging on the condvar.
+    let svc = Arc::new(GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 1, queue_depth: 1 },
+    ));
+    let t_slow = svc.submit(Request::Bench { id: BenchId::MatMul, n: 128, seed: 3 });
+    let t_queued = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 3 });
+    let blocked = {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 4 }).wait()
+        })
+    };
+    // Let the submitter reach the backpressure wait (the slow matmul keeps
+    // the queue full far longer than this), then stop intake.
+    std::thread::sleep(Duration::from_millis(100));
+    svc.shutdown();
+    let res = blocked.join().expect("submitter thread must not panic");
+    assert_eq!(res.expect_err("blocked submit must observe shutdown"), ServiceError::Shutdown);
+    // Already-accepted work still drains.
+    assert!(t_slow.wait().unwrap().verified);
+    assert!(t_queued.wait().unwrap().verified);
+    // Submits after shutdown resolve structurally too.
+    let late = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 5 });
+    assert_eq!(late.wait().expect_err("post-shutdown submit"), ServiceError::Shutdown);
 }
 
 #[test]

@@ -1,0 +1,117 @@
+//! SEU fault-injection differential suite (ISSUE 7). Two contracts:
+//!
+//! 1. **Zero-cost when disabled**: a rate-0 (or target-less) `FaultPlan`
+//!    must be bit- and cycle-identical to running with no plan at all —
+//!    across every benchmark, flat and cached memory, 1..8 SMs, and both
+//!    launch paths.
+//! 2. **Deterministic when enabled**: the same seed draws the same fault
+//!    sites on every run and on both the sequential and parallel launch
+//!    paths (the per-SM cycle streams the injector keys on are
+//!    path-independent). Detected campaigns fail with the identical
+//!    `SimError::SoftError`; silent campaigns produce byte-identical
+//!    outcomes.
+
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
+use flexgrip::kernels::{self, BenchId, RunOptions, Workload};
+use flexgrip::sim::{CacheGeometry, FaultPlan, FaultTargets, GlobalMem, MemoryConfig, SimError};
+
+fn image(g: &GlobalMem) -> Vec<i32> {
+    g.read_words(0, g.size_bytes() as usize / 4).unwrap()
+}
+
+/// Run without golden verification (silent campaigns corrupt on purpose);
+/// returns the full memory image + cycle count, or the structured error.
+fn run_fault(
+    w: &Workload,
+    cfg: GpgpuConfig,
+    parallel: bool,
+    plan: Option<&FaultPlan>,
+) -> Result<(Vec<i32>, u64), SimError> {
+    let gpgpu = Gpgpu::new(cfg);
+    let mut g = w.make_gmem();
+    let mut opts = if parallel { RunOptions::new().parallel() } else { RunOptions::default() };
+    if let Some(p) = plan {
+        opts = opts.fault(p);
+    }
+    let run = w.run(&gpgpu, &mut g, opts)?;
+    Ok((image(&g), run.cycles))
+}
+
+#[test]
+fn disabled_plans_are_bit_and_cycle_identical_to_no_plan() {
+    let zero_rate = FaultPlan::new(0xDEAD, 0.0);
+    let no_targets = FaultPlan::new(0xDEAD, 100.0).with_targets(FaultTargets::none());
+    let geom = CacheGeometry::parse("4x64x32").unwrap();
+    for id in BenchId::ALL {
+        let w = kernels::prepare(id, 32, 0x5EED);
+        for sms in [1u32, 2, 4, 8] {
+            for cached in [false, true] {
+                let mut cfg = GpgpuConfig::new(sms, 8);
+                if cached {
+                    cfg = cfg.with_memory(MemoryConfig::with_l1(geom));
+                }
+                for parallel in [false, true] {
+                    let label =
+                        format!("{} {sms}sm cached={cached} par={parallel}", id.name());
+                    let base = run_fault(&w, cfg, parallel, None).expect("clean run");
+                    let z = run_fault(&w, cfg, parallel, Some(&zero_rate)).expect("rate-0");
+                    assert_eq!(base, z, "{label}: rate-0 plan must be invisible");
+                    let t = run_fault(&w, cfg, parallel, Some(&no_targets))
+                        .expect("target-less");
+                    assert_eq!(base, t, "{label}: target-less plan must be invisible");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn detected_campaigns_fail_identically_across_runs_and_paths() {
+    // Instruction-image upsets at mean interval 5 cycles: parity-detected
+    // within the first issues, so every run fails — and with the same
+    // seed, every run (and both launch paths) must report the *same*
+    // structured SoftError.
+    let plan = FaultPlan::new(0xC0FFEE, 200_000.0)
+        .with_targets(FaultTargets { instr_image: true, ..FaultTargets::none() });
+    let w = kernels::prepare(BenchId::MatMul, 32, 0x5EED);
+    let cfg = GpgpuConfig::new(2, 8);
+    let seq0 = run_fault(&w, cfg, false, Some(&plan));
+    let seq1 = run_fault(&w, cfg, false, Some(&plan));
+    let par = run_fault(&w, cfg, true, Some(&plan));
+    match seq0.as_ref().expect_err("mean-5-cycle instruction upsets must be detected") {
+        SimError::SoftError { .. } => {}
+        other => panic!("expected SoftError, got {other:?}"),
+    }
+    assert_eq!(seq0.as_ref().err(), seq1.as_ref().err(), "repeat runs must agree");
+    assert_eq!(seq0.as_ref().err(), par.as_ref().err(), "seq/par paths must agree");
+}
+
+#[test]
+fn silent_campaigns_are_deterministic_and_path_independent() {
+    // Register-file / shared-memory flips corrupt without detection (by
+    // design); determinism still holds: same seed => byte-identical
+    // outcome, whether that outcome is a corrupted image or a downstream
+    // architectural fault.
+    let plan = FaultPlan::new(0x51EE7, 50_000.0).with_targets(FaultTargets::silent());
+    let w = kernels::prepare(BenchId::VecAdd, 32, 0x5EED);
+    let cfg = GpgpuConfig::new(2, 8);
+    let a = run_fault(&w, cfg, false, Some(&plan));
+    let b = run_fault(&w, cfg, false, Some(&plan));
+    assert_eq!(a, b, "same seed must be byte-identical across runs");
+    let p = run_fault(&w, cfg, true, Some(&plan));
+    assert_eq!(a, p, "silent campaign must agree across launch paths");
+}
+
+#[test]
+fn different_seeds_draw_different_fault_sites() {
+    let targets = FaultTargets { instr_image: true, ..FaultTargets::none() };
+    let w = kernels::prepare(BenchId::MatMul, 32, 0x5EED);
+    let cfg = GpgpuConfig::new(1, 8);
+    let e = |seed: u64| {
+        let plan = FaultPlan::new(seed, 200_000.0).with_targets(targets);
+        run_fault(&w, cfg, false, Some(&plan)).expect_err("campaign must detect")
+    };
+    // Two seeds landing the first upset on the exact same (cycle, pc, bit)
+    // would mean the schedule ignores the seed.
+    assert_ne!(e(1), e(2), "seed must steer the fault schedule");
+}

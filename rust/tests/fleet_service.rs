@@ -1,11 +1,14 @@
 //! Heterogeneous fleet (ISSUE 3): capability routing, per-variant
-//! metrics, baseline fallback, and the registry-backed serving path.
+//! metrics, baseline fallback, and the registry-backed serving path —
+//! plus the self-healing plane (ISSUE 7): sick-shard fault campaigns,
+//! retry/re-route recovery, quarantine, and DMR.
 
 use flexgrip::coordinator::{
-    customize, FleetConfig, GpgpuService, Request, VariantSpec,
+    customize, FleetConfig, GpgpuService, RecoveryPolicy, Request, ServiceError, VariantSpec,
 };
 use flexgrip::gpgpu::GpgpuConfig;
 use flexgrip::kernels::BenchId;
+use flexgrip::sim::{FaultPlan, FaultTargets, SimError};
 
 fn variant(label: &str, depth: u32, mul: bool) -> VariantSpec {
     let mut cfg = GpgpuConfig::new(1, 8);
@@ -19,15 +22,15 @@ fn variant(label: &str, depth: u32, mul: bool) -> VariantSpec {
 
 /// Baseline + the three distinct Table-6 variants.
 fn paper_fleet() -> GpgpuService {
-    let svc = GpgpuService::start_fleet(FleetConfig {
-        variants: vec![
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![
             variant("baseline", 32, true),
             variant("stack16", 16, true),
             variant("stack0", 0, true),
             variant("nomul", 2, false),
-        ],
-        queue_depth: 16,
-    });
+        ])
+        .with_depth(16),
+    );
     for id in BenchId::PAPER {
         let r = customize::profile(id, 32, 5).expect("profile");
         svc.register_profile(id, r.refined_signature());
@@ -72,10 +75,10 @@ fn unprofiled_jobs_fall_back_to_the_most_capable_variant() {
     // Without a registered profile, the static signature of every looping
     // benchmark is stack-Unbounded: only the full-depth baseline covers
     // it, so the router must fall back there — and the job still runs.
-    let svc = GpgpuService::start_fleet(FleetConfig {
-        variants: vec![variant("nomul", 2, false), variant("baseline", 32, true)],
-        queue_depth: 16,
-    });
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![variant("nomul", 2, false), variant("baseline", 32, true)])
+            .with_depth(16),
+    );
     let out = svc
         .submit(Request::Bench { id: BenchId::MatMul, n: 32, seed: 1 })
         .wait()
@@ -98,10 +101,10 @@ fn misrouted_profile_fails_structured_not_silent() {
     // (lying) signature, so the failure surfaces as the structured
     // mid-run removed-unit trap — failing only that ticket, never
     // silently corrupting.
-    let svc = GpgpuService::start_fleet(FleetConfig {
-        variants: vec![variant("baseline", 32, true), variant("nomul", 2, false)],
-        queue_depth: 16,
-    });
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![variant("baseline", 32, true), variant("nomul", 2, false)])
+            .with_depth(16),
+    );
     let r = customize::profile(BenchId::Bitonic, 32, 5).unwrap();
     // bitonic's (mul-free) signature attached to matmul — a lying profile.
     svc.register_profile(BenchId::MatMul, r.refined_signature());
@@ -109,7 +112,7 @@ fn misrouted_profile_fails_structured_not_silent() {
         .submit(Request::Bench { id: BenchId::MatMul, n: 32, seed: 2 })
         .wait()
         .expect_err("matmul cannot run without a multiplier");
-    assert!(err.contains("multiplier"), "{err}");
+    assert!(err.to_string().contains("multiplier"), "{err}");
     // The shard survives and the aggregate counters record the failure.
     let ok = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 2 }).wait();
     assert!(ok.unwrap().verified);
@@ -125,4 +128,128 @@ fn variant_power_orders_the_routing() {
     assert!(power["nomul"] < power["stack0"]);
     assert!(power["stack0"] < power["stack16"]);
     assert!(power["stack16"] < power["baseline"]);
+}
+
+/// Instruction-image upsets at mean interval 1 cycle: parity-detected
+/// within the first issues of any launch, so every job on the sick shard
+/// fails with `SimError::SoftError` — deterministically.
+fn sick_plan() -> FaultPlan {
+    FaultPlan::new(0xBAD5EED, 1_000_000.0)
+        .with_targets(FaultTargets { instr_image: true, ..FaultTargets::none() })
+}
+
+#[test]
+fn no_recovery_loses_every_job_on_a_sick_shard() {
+    // Default policy = pre-resilience behavior: the fault fails the
+    // ticket outright.
+    let svc = GpgpuService::start_fleet(FleetConfig::new(vec![
+        variant("sick", 32, true).with_fault(0, sick_plan()),
+    ]));
+    let tickets: Vec<_> = (0..4)
+        .map(|i| svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: i }))
+        .collect();
+    for t in tickets {
+        let err = t.wait().expect_err("no recovery policy: faults lose the job");
+        assert!(matches!(err, ServiceError::Sim(SimError::SoftError { .. })), "{err:?}");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.jobs_failed, 4);
+    assert_eq!(m.soft_errors, 4);
+    assert_eq!(m.jobs_retried, 0);
+    assert_eq!(m.jobs_completed, 0);
+}
+
+#[test]
+fn retry_quarantine_completes_the_mix_and_heals_around_the_sick_shard() {
+    // "sick" listed first: with equal modeled power the router prefers
+    // the first covering variant, so every job lands there initially and
+    // the healthy peer is purely the re-route target.
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![
+            variant("sick", 32, true).with_fault(0, sick_plan()),
+            variant("healthy", 32, true),
+        ])
+        .with_policy(RecoveryPolicy::retry_quarantine(3, 2)),
+    );
+    let mix = [BenchId::VecAdd, BenchId::Reduction, BenchId::Bitonic, BenchId::Autocorr];
+    let tickets: Vec<_> = (0..8u64)
+        .map(|i| {
+            let id = mix[i as usize % mix.len()];
+            svc.submit(Request::Bench { id, n: 32, seed: i + 1 })
+        })
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().unwrap_or_else(|e| panic!("job {i}: {e}"));
+        assert!(out.verified, "job {i}: zero corrupted outputs");
+        assert_eq!(out.variant, "healthy", "job {i} must be rescued by re-route");
+        assert_eq!(out.attempts, 2, "job {i}: one fault, one rescue");
+    }
+    // 100% completion; every job faulted once on the sick shard and was
+    // re-admitted to the healthy variant.
+    let by_label: std::collections::HashMap<_, _> =
+        svc.variant_metrics().into_iter().collect();
+    let sick = &by_label["sick"];
+    let healthy = &by_label["healthy"];
+    assert_eq!(svc.metrics().jobs_failed, 0);
+    assert_eq!(healthy.jobs_completed, 8);
+    assert_eq!(sick.jobs_completed, 0);
+    assert_eq!(sick.soft_errors, 8);
+    assert_eq!(sick.jobs_retried, 8);
+    // Quarantined after 2 consecutive faults, then reinstated on
+    // probation (where later faults re-quarantine immediately).
+    assert!(sick.quarantines >= 1, "{sick:?}");
+    assert!(sick.reinstatements >= 1, "{sick:?}");
+    assert_eq!(healthy.quarantines, 0);
+    // shard_metrics exposes the same counters at shard granularity
+    // (global index 0 = the sick variant's only shard).
+    let shards = svc.shard_metrics();
+    assert_eq!(shards[0].jobs_retried, 8);
+    assert!(shards[0].quarantines >= 1);
+    assert_eq!(shards[1].jobs_completed, 8);
+}
+
+#[test]
+fn dmr_agrees_when_healthy_and_is_rescued_when_sick() {
+    // Healthy: both replicas are deterministic and identical — agree,
+    // and the ticket reports one completed job.
+    let svc =
+        GpgpuService::start_fleet(FleetConfig::new(vec![variant("baseline", 32, true)]));
+    let out = svc
+        .submit(Request::Bench { id: BenchId::Reduction, n: 32, seed: 1 }.dmr())
+        .wait()
+        .expect("healthy DMR replicas agree");
+    assert!(out.verified);
+    assert_eq!(svc.metrics().jobs_completed, 1);
+    drop(svc);
+
+    // Sick shard (detected-class campaign): a replica faults, and with a
+    // retry policy + healthy peer the DMR job is still rescued.
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![
+            variant("sick", 32, true).with_fault(0, sick_plan()),
+            variant("healthy", 32, true),
+        ])
+        .with_policy(RecoveryPolicy::retry(2)),
+    );
+    let out = svc
+        .submit(Request::Bench { id: BenchId::Reduction, n: 32, seed: 2 }.dmr())
+        .wait()
+        .expect("DMR job must be rescued by re-route");
+    assert_eq!(out.variant, "healthy");
+    assert_eq!(out.attempts, 2);
+}
+
+#[test]
+fn fleet_watchdog_override_budgets_every_job() {
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![variant("baseline", 32, true)]).with_watchdog(10),
+    );
+    let err = svc
+        .submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 })
+        .wait()
+        .expect_err("a 10-cycle budget must trip the watchdog");
+    assert!(matches!(err, ServiceError::Sim(SimError::Watchdog { .. })), "{err:?}");
+    // Watchdog expiry is deterministic, not transient: never retried.
+    assert_eq!(svc.metrics().jobs_retried, 0);
+    assert_eq!(svc.metrics().jobs_failed, 1);
 }

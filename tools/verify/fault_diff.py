@@ -1,0 +1,215 @@
+#!/usr/bin/env python3
+"""Differential for rust/src/sim/fault.rs (ISSUE-7 tentpole).
+
+Toolchain-free check of the SEU injector's determinism contract:
+
+1. Transliterates XorShift64 (rust/src/rng.rs) and FaultState
+   (rust/src/sim/fault.rs) 1:1 and replays the golden constants pinned by
+   fault.rs::schedule_matches_pinned_golden_constants — if either side
+   drifts, the cross-language contract is broken.
+2. Same (seed, sm) => byte-identical upset schedules across instances,
+   and polling every cycle vs. polling only at the due cycle yields the
+   same event stream (the property that makes injection identical on the
+   sequential and parallel launch paths, which poll at the same per-SM
+   cycle values).
+3. Different seeds / different SM ids draw different schedules.
+4. A disabled plan (rate 0 or no targets) builds no state, and a
+   reference issue-loop model runs cycle-identical with "no plan" vs.
+   "disabled plan" — the zero-cost contract of
+   tests/fault_injection.rs::disabled_plans_are_bit_and_cycle_identical.
+5. Inter-arrival sanity: drawn gaps live in [1, 2*mean] with empirical
+   mean ~= mean + 0.5 (uniform inter-arrival distribution).
+"""
+
+import random
+
+M = (1 << 64) - 1
+SM_STREAM_MIX = 0x9E3779B97F4A7C15
+
+# FaultTargets declaration order — pinned (fault.rs::target_order_is_pinned).
+TARGETS = ("register_file", "shared_mem", "l1_tags", "instr_image")
+DETECTED = ("l1_tags", "instr_image")
+SILENT = ("register_file", "shared_mem")
+
+
+class XorShift64:
+    """1:1 transliteration of rust/src/rng.rs (xorshift64*)."""
+
+    def __init__(self, seed):
+        self.state = max((seed * 2685821657736338717) & M, 1)
+
+    def next_u64(self):
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & M
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & M
+
+    def below(self, bound):
+        return self.next_u64() % max(bound, 1)
+
+
+class FaultState:
+    """1:1 transliteration of fault.rs::FaultState."""
+
+    @staticmethod
+    def new(seed, rate, targets, sm_id):
+        kinds = [t for t in TARGETS if t in targets]
+        if rate <= 0.0 or not kinds:
+            return None
+        return FaultState(seed, rate, kinds, sm_id)
+
+    def __init__(self, seed, rate, kinds, sm_id):
+        stream = seed ^ (((sm_id + 1) * SM_STREAM_MIX) & M)
+        self.rng = XorShift64(stream)
+        self.mean = max(int(1_000_000.0 / rate), 1)
+        self.next_event = 1 + self.rng.below(2 * self.mean)
+        self.kinds = kinds
+
+    def poll(self, cycle):
+        if cycle < self.next_event:
+            return None
+        target = self.kinds[self.rng.below(len(self.kinds))]
+        sel = self.rng.next_u64()
+        bit = self.rng.next_u64() % 32
+        self.next_event = cycle + 1 + self.rng.below(2 * self.mean)
+        return (target, sel, bit)
+
+
+def schedule(seed, rate, targets, sm_id, events):
+    """First `events` upsets, polled exactly at each due cycle."""
+    fs = FaultState.new(seed, rate, targets, sm_id)
+    out = []
+    for _ in range(events):
+        cycle = fs.next_event
+        assert fs.poll(cycle - 1) is None, "must not fire early"
+        ev = fs.poll(cycle)
+        assert ev is not None, "must fire at the due cycle"
+        assert fs.next_event > cycle, "reschedule must be strictly future"
+        out.append((cycle,) + ev)
+    return out
+
+
+def check_golden():
+    fs = FaultState.new(0xC0FFEE, 100.0, TARGETS, 0)
+    assert fs.mean == 10_000, fs.mean
+    assert fs.next_event == 12_812, fs.next_event
+    expected = [
+        (12_812, "register_file", 0x097A8C1C8963A82F, 0),
+        (14_584, "shared_mem", 0xF355DFB05DE6D9DF, 24),
+        (22_709, "l1_tags", 0xD5C6D2D5A0BFA0C3, 2),
+        (24_679, "shared_mem", 0x1F5BDF164719BBF4, 13),
+    ]
+    got = schedule(0xC0FFEE, 100.0, TARGETS, 0, 4)
+    assert got == expected, f"golden drift:\n  got      {got}\n  expected {expected}"
+    fs1 = FaultState.new(0xC0FFEE, 100.0, TARGETS, 1)
+    assert fs1.next_event == 6_986, fs1.next_event
+    print("golden constants OK (pinned vs fault.rs unit test)")
+
+
+def check_determinism(cases=200):
+    rnd = random.Random(1234)
+    subsets = [TARGETS, DETECTED, SILENT, ("instr_image",), ("register_file",)]
+    for _ in range(cases):
+        seed = rnd.getrandbits(64)
+        rate = rnd.choice([10.0, 250.0, 5_000.0, 200_000.0, 1_000_000.0])
+        sm = rnd.randrange(8)
+        targets = rnd.choice(subsets)
+        a = schedule(seed, rate, targets, sm, 32)
+        b = schedule(seed, rate, targets, sm, 32)
+        assert a == b, f"seed {seed:#x} sm {sm}: same plan must replay identically"
+        for _, target, _, bit in a:
+            assert target in targets and 0 <= bit < 32
+    print(f"determinism OK ({cases} random plans, 32 events each, replayed twice)")
+
+
+def check_poll_granularity(cases=40):
+    # Polling every cycle (the engine's issue loop) fires the same events
+    # at the same cycles as jumping straight to each due cycle.
+    rnd = random.Random(99)
+    horizon = 400
+    for _ in range(cases):
+        seed, sm = rnd.getrandbits(64), rnd.randrange(4)
+        dense_fs = FaultState.new(seed, 200_000.0, TARGETS, sm)
+        dense = []
+        for cycle in range(1, horizon + 1):
+            ev = dense_fs.poll(cycle)
+            if ev is not None:
+                dense.append((cycle,) + ev)
+        sparse_fs = FaultState.new(seed, 200_000.0, TARGETS, sm)
+        sparse = []
+        while sparse_fs.next_event <= horizon:
+            cycle = sparse_fs.next_event
+            sparse.append((cycle,) + sparse_fs.poll(cycle))
+        assert dense == sparse, f"seed {seed:#x} sm {sm}: poll granularity changed the schedule"
+        assert dense, "mean-5 campaign must fire within the horizon"
+    print(f"poll-granularity OK ({cases} dense-vs-sparse scans agree)")
+
+
+def check_divergence(cases=100):
+    rnd = random.Random(7)
+    for _ in range(cases):
+        s1, s2 = rnd.getrandbits(64), rnd.getrandbits(64)
+        if s1 == s2:
+            continue
+        a = schedule(s1, 1_000.0, TARGETS, 0, 4)
+        b = schedule(s2, 1_000.0, TARGETS, 0, 4)
+        assert a != b, f"seeds {s1:#x}/{s2:#x} must diverge"
+        sm_a = schedule(s1, 1_000.0, TARGETS, 0, 4)
+        sm_b = schedule(s1, 1_000.0, TARGETS, 1, 4)
+        assert sm_a != sm_b, f"seed {s1:#x}: SM streams must diverge"
+    print(f"divergence OK ({cases} seed pairs + SM-id pairs)")
+
+
+def reference_issue_loop(work, fs):
+    """Toy model of the Sm::run hook: one issue per cycle, one optional
+    fault poll per issue; detected upsets abort with (site, cycle)."""
+    trace, cycle = [], 0
+    for op in range(work):
+        cycle += 1
+        if fs is not None:
+            ev = fs.poll(cycle)
+            if ev is not None and ev[0] in DETECTED:
+                return trace, cycle, ("soft_error", ev[0], cycle, ev[2])
+        trace.append((cycle, op))
+    return trace, cycle, None
+
+
+def check_disabled_zero_cost():
+    assert FaultState.new(1, 0.0, TARGETS, 0) is None
+    assert FaultState.new(1, 50.0, (), 0) is None
+    base = reference_issue_loop(5_000, None)
+    for seed in (0xDEAD, 1, 2, 3):
+        zero_rate = reference_issue_loop(5_000, FaultState.new(seed, 0.0, TARGETS, 0))
+        no_targets = reference_issue_loop(5_000, FaultState.new(seed, 100.0, (), 0))
+        assert zero_rate == base and no_targets == base, "disabled plan must be invisible"
+    print("disabled plans OK (no state built; reference timing untouched)")
+
+
+def check_interarrival():
+    for rate, mean in [(100.0, 10_000), (1_000.0, 1_000), (200_000.0, 5)]:
+        fs = FaultState.new(42, rate, TARGETS, 0)
+        assert fs.mean == mean
+        gaps, prev = [], 0
+        for _ in range(20_000):
+            cycle = fs.next_event
+            gap = cycle - prev
+            assert 1 <= gap <= 2 * mean, (rate, gap)
+            gaps.append(gap)
+            fs.poll(cycle)
+            prev = cycle
+        emp = sum(gaps) / len(gaps)
+        want = mean + 0.5  # E[1 + U{0..2m-1}] = m + 1/2
+        assert abs(emp - want) / want < 0.02, (rate, emp, want)
+        print(f"inter-arrival OK: rate {rate:>9} -> mean gap {emp:.2f} (model {want})")
+
+
+if __name__ == "__main__":
+    check_golden()
+    check_determinism()
+    check_poll_granularity()
+    check_divergence()
+    check_disabled_zero_cost()
+    check_interarrival()
+    print("fault_diff: all checks passed")
