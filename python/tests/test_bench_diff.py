@@ -1,0 +1,91 @@
+"""Unit tests for tools/bench_diff.py (the CI bench-regression gate).
+
+Stdlib only — no jax/numpy — so this file runs wherever pytest does.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff", Path(__file__).resolve().parents[2] / "tools" / "bench_diff.py"
+)
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+def hot(points, fast=True):
+    return {"fast": fast, "points": points}
+
+
+def pt(bench, ips):
+    return {
+        "bench": bench,
+        "n": 64,
+        "warp_instrs": 1000,
+        "thread_instrs": 32000,
+        "wall_ms": 1.0,
+        "instrs_per_sec": ips,
+        "lane_occupancy": 1.0,
+        "batched_uop_pct": 90.0,
+        "queue_wait_ns": 100,
+    }
+
+
+def test_small_drift_passes():
+    cur = hot([pt("matmul", 0.95e6), pt("bitonic", 1.1e6)])
+    base = hot([pt("matmul", 1.0e6), pt("bitonic", 1.0e6)])
+    failures, warnings = bench_diff.diff_hot_path(cur, base, 0.10)
+    assert failures == []
+    assert warnings == []
+
+
+def test_regression_beyond_threshold_fails():
+    cur = hot([pt("matmul", 0.8e6)])
+    base = hot([pt("matmul", 1.0e6)])
+    failures, _ = bench_diff.diff_hot_path(cur, base, 0.10)
+    assert len(failures) == 1
+    assert "matmul" in failures[0]
+
+
+def test_fast_mode_mismatch_is_warn_only():
+    cur = hot([pt("matmul", 0.1e6)], fast=True)
+    base = hot([pt("matmul", 1.0e6)], fast=False)
+    failures, warnings = bench_diff.diff_hot_path(cur, base, 0.10)
+    assert failures == []
+    assert any("fast-mode" in w for w in warnings)
+
+
+def test_new_and_vanished_benches_warn():
+    cur = hot([pt("vecadd", 1.0e6)])
+    base = hot([pt("matmul", 1.0e6)])
+    failures, warnings = bench_diff.diff_hot_path(cur, base, 0.10)
+    assert failures == []
+    assert any("no baseline point" in w for w in warnings)
+    assert any("vanished" in w for w in warnings)
+
+
+def test_scaling_cycle_shift_warns_not_fails():
+    cur = [{"bench": "matmul", "points": [{"label": "1sm_sequential", "sim_cycles": 1500}]}]
+    base = [{"bench": "matmul", "points": [{"label": "1sm_sequential", "sim_cycles": 1000}]}]
+    warnings = bench_diff.diff_scaling(cur, base, 0.10)
+    assert len(warnings) == 1
+    assert "timing-model" in warnings[0]
+
+
+def test_missing_baseline_exits_zero(tmp_path):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(hot([pt("matmul", 1.0e6)])))
+    rc = bench_diff.main(
+        ["--current", str(cur), "--baseline", str(tmp_path / "absent.json")]
+    )
+    assert rc == 0
+
+
+def test_end_to_end_failure_exit_code(tmp_path):
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    cur.write_text(json.dumps(hot([pt("matmul", 0.5e6)])))
+    base.write_text(json.dumps(hot([pt("matmul", 1.0e6)])))
+    rc = bench_diff.main(["--current", str(cur), "--baseline", str(base)])
+    assert rc == 1

@@ -29,6 +29,7 @@
 
 use flexgrip::asm::assemble;
 use flexgrip::baseline::{self, MbTiming};
+use flexgrip::coordinator::{GpgpuService, Request, ServiceConfig};
 use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
 use flexgrip::harness::{
     bench, memory_report, resilience_report, scaling_suite, write_suite_json, HotPathPoint,
@@ -52,25 +53,47 @@ fn main() {
     println!("--- engine throughput (warp-instructions / second) ---");
     let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
     let (ips_n, samples) = if fast { (64, 3) } else { (256, 10) };
+    // Service-plane latency probe: a short burst per benchmark through a
+    // 2-shard pool measures submit-to-dispatch wait on the sharded queue
+    // (the queue_wait_ns column of BENCH_hot_path.json).
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 2, queue_depth: 8 },
+    );
+    let burst = if fast { 2u64 } else { 8 };
     let mut points = Vec::new();
     for id in BenchId::PAPER {
         let w = kernels::prepare(id, ips_n, 1);
-        let (warp_instrs, thread_instrs) = {
+        let stats = {
             let mut g = w.make_gmem();
-            let stats = w.run(&gpgpu, &mut g, RunOptions::default()).unwrap().stats;
-            (stats.instructions, stats.thread_instructions)
+            w.run(&gpgpu, &mut g, RunOptions::default()).unwrap().stats
         };
+        let (warp_instrs, thread_instrs) = (stats.instructions, stats.thread_instructions);
         let r = bench(&format!("sim_{}{}_1sm8sp", id.name(), ips_n), samples, || {
             let mut g = w.make_gmem();
             w.run(&gpgpu, &mut g, RunOptions::default()).unwrap().cycles
         });
         let wall_ms = r.median().as_secs_f64() * 1e3;
         let instrs_per_sec = warp_instrs as f64 / r.median().as_secs_f64();
+        let queue_wait_ns = {
+            let before = svc.metrics();
+            let tickets: Vec<_> = (0..burst)
+                .map(|seed| svc.submit(Request::Bench { id, n: 32, seed }))
+                .collect();
+            for t in tickets {
+                t.wait().expect("queue-probe job");
+            }
+            let after = svc.metrics();
+            let done = after.jobs_completed - before.jobs_completed;
+            if done == 0 { 0 } else { (after.queue_wait_ns - before.queue_wait_ns) / done }
+        };
         println!(
             "  -> {warp_instrs} warp-instrs / run = {:.2} M warp-instrs/s \
-             ({:.1} M lane-ops/s)",
+             ({:.1} M lane-ops/s, {:.0}% lanes, {:.0}% batched, {queue_wait_ns} ns queue)",
             instrs_per_sec / 1e6,
-            thread_instrs as f64 / r.median().as_secs_f64() / 1e6
+            thread_instrs as f64 / r.median().as_secs_f64() / 1e6,
+            100.0 * stats.lane_occupancy(),
+            stats.batched_uop_pct(),
         );
         points.push(HotPathPoint {
             bench: id.name(),
@@ -79,8 +102,12 @@ fn main() {
             thread_instrs,
             wall_ms,
             instrs_per_sec,
+            lane_occupancy: stats.lane_occupancy(),
+            batched_uop_pct: stats.batched_uop_pct(),
+            queue_wait_ns,
         });
     }
+    drop(svc);
     let report = HotPathReport { fast, points };
     report
         .write_json("BENCH_hot_path.json")

@@ -8,10 +8,12 @@
 //!
 //! `GpgpuService` hosts a *heterogeneous* fleet: each [`VariantSpec`]
 //! names a (possibly §4.2-customized) device configuration and how many
-//! shards of it to run. Every variant group has its own bounded work
-//! queue served by its shards (`Mutex<VecDeque>` + condvars —
-//! effectively work stealing inside a group: an idle shard takes the
-//! next job the moment it frees up). `submit` computes the job's
+//! shards of it to run. Every variant group has its own bounded
+//! work-stealing [`ShardedQueue`] (one deque per shard, CAS-reserved
+//! capacity, round-robin pushes; a dry shard steals from its siblings,
+//! so an idle shard takes the next job the moment one exists anywhere in
+//! the group — see `coordinator/queue.rs` for the protocol). `submit`
+//! computes the job's
 //! [`CapabilitySignature`] (profiled when registered, static otherwise)
 //! and **routes** it to the lowest-modeled-dynamic-power variant whose
 //! capabilities cover the signature, falling back to the most-capable
@@ -64,8 +66,10 @@
 //! expose.
 
 pub mod customize;
+pub mod queue;
 
 pub use customize::{analyze_kernel, profile, CustomizationReport};
+pub use queue::{PushError, ShardedQueue};
 
 use crate::asm::Kernel;
 use crate::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig, LaunchRequest};
@@ -74,10 +78,10 @@ use crate::kernels::{self, BenchId, RunOptions};
 use crate::model::{power::power, ArchParams};
 use crate::registry::{KernelRegistry, PreparedKernel};
 use crate::sim::{FaultPlan, GlobalMem, SimError, SmStats};
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -373,6 +377,9 @@ pub struct Metrics {
     pub reinstatements: AtomicU64,
     /// DMR replica disagreements detected on this shard.
     pub dmr_mismatches: AtomicU64,
+    /// Total nanoseconds jobs dispatched by this shard spent between
+    /// submit and dispatch (queue wait, including submit backpressure).
+    pub queue_wait_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -387,6 +394,7 @@ impl Metrics {
             quarantines: self.quarantines.load(Ordering::Relaxed),
             reinstatements: self.reinstatements.load(Ordering::Relaxed),
             dmr_mismatches: self.dmr_mismatches.load(Ordering::Relaxed),
+            queue_wait_ns: self.queue_wait_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -402,6 +410,7 @@ pub struct MetricsSnapshot {
     pub quarantines: u64,
     pub reinstatements: u64,
     pub dmr_mismatches: u64,
+    pub queue_wait_ns: u64,
 }
 
 impl MetricsSnapshot {
@@ -417,6 +426,7 @@ impl MetricsSnapshot {
             quarantines: self.quarantines + other.quarantines,
             reinstatements: self.reinstatements + other.reinstatements,
             dmr_mismatches: self.dmr_mismatches + other.dmr_mismatches,
+            queue_wait_ns: self.queue_wait_ns + other.queue_wait_ns,
         }
     }
 }
@@ -433,32 +443,11 @@ struct Job {
     /// Variant indices that already faulted this job (re-route excludes
     /// them while an untried covering variant remains).
     tried: Vec<usize>,
+    /// When this job entered (or re-entered) a queue — the shard that
+    /// dispatches it accumulates the elapsed wait into
+    /// [`Metrics::queue_wait_ns`].
+    enqueued_at: Instant,
     reply: mpsc::Sender<Result<JobOutput, ServiceError>>,
-}
-
-struct QueueState {
-    jobs: VecDeque<Job>,
-    shutdown: bool,
-}
-
-struct Shared {
-    state: Mutex<QueueState>,
-    /// Signalled when a job is enqueued (workers wait here).
-    not_empty: Condvar,
-    /// Signalled when a job is dequeued (backpressured submitters wait here).
-    not_full: Condvar,
-    depth: usize,
-}
-
-impl Shared {
-    fn new(depth: usize) -> Arc<Shared> {
-        Arc::new(Shared {
-            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
-            depth,
-        })
-    }
 }
 
 /// One running variant group: its queue, its shards' metrics and fault
@@ -467,7 +456,8 @@ struct Variant {
     label: String,
     cfg: GpgpuConfig,
     dyn_w: f64,
-    shared: Arc<Shared>,
+    /// Work-stealing submit queue: one deque per shard of this variant.
+    queue: ShardedQueue<Job>,
     metrics: Vec<Arc<Metrics>>,
     /// Per-local-shard SEU campaign (None = healthy).
     faults: Vec<Option<FaultPlan>>,
@@ -486,9 +476,11 @@ struct FleetInner {
 impl FleetInner {
     /// Re-admit a faulted job: the cheapest covering variant it has not
     /// faulted on yet, or back in place when every covering variant has
-    /// been tried. Retries bypass the depth limit — a worker must never
-    /// block on a full queue (possibly its own) while holding a job.
-    fn readmit(&self, job: Job, from: usize) {
+    /// been tried. Retries bypass the depth limit *and* shutdown — a
+    /// worker must never block on a full queue (possibly its own) while
+    /// holding a job, and a re-admitted job's ticket must still resolve
+    /// even mid-drain.
+    fn readmit(&self, mut job: Job, from: usize) {
         let target = self
             .variants
             .iter()
@@ -499,11 +491,8 @@ impl FleetInner {
             })
             .map(|(i, _)| i)
             .unwrap_or(from);
-        let shared = &self.variants[target].shared;
-        let mut q = shared.state.lock().expect("queue poisoned");
-        q.jobs.push_back(job);
-        drop(q);
-        shared.not_empty.notify_one();
+        job.enqueued_at = Instant::now();
+        self.variants[target].queue.push_unbounded(job);
     }
 }
 
@@ -550,7 +539,7 @@ impl GpgpuService {
                 label: spec.label,
                 cfg: spec.cfg,
                 dyn_w,
-                shared: Shared::new(depth),
+                queue: ShardedQueue::new(shards, depth),
                 metrics: (0..shards).map(|_| Arc::new(Metrics::default())).collect(),
                 faults,
             });
@@ -635,40 +624,29 @@ impl GpgpuService {
 
     fn enqueue(&self, req: Request, timeout: Option<Duration>) -> Result<JobTicket, ServiceError> {
         let sig = self.job_signature(&req);
-        let shared = &self.inner.variants[self.route(&sig)].shared;
+        let queue = &self.inner.variants[self.route(&sig)].queue;
         let (reply_tx, reply_rx) = mpsc::channel();
         let deadline = timeout.map(|t| Instant::now() + t);
-        let mut q = shared.state.lock().expect("queue poisoned");
-        while q.jobs.len() >= shared.depth && !q.shutdown {
-            match deadline {
-                None => q = shared.not_full.wait(q).expect("queue poisoned"),
-                Some(d) => {
-                    let now = Instant::now();
-                    if now >= d {
-                        return Err(ServiceError::Saturated);
-                    }
-                    let (guard, timed_out) =
-                        shared.not_full.wait_timeout(q, d - now).expect("queue poisoned");
-                    q = guard;
-                    if timed_out.timed_out() && q.jobs.len() >= shared.depth && !q.shutdown {
-                        return Err(ServiceError::Saturated);
-                    }
-                }
+        let job = Job {
+            req,
+            sig,
+            attempts: 0,
+            tried: Vec::new(),
+            enqueued_at: Instant::now(),
+            reply: reply_tx,
+        };
+        match queue.push(job, deadline) {
+            Ok(()) => Ok(JobTicket { rx: reply_rx }),
+            Err(PushError::Shutdown(job)) => {
+                // Intake stopped before (or while) this submitter waited:
+                // resolve the ticket with a structured shutdown error
+                // instead of enqueueing into a closing queue (which could
+                // leave the ticket hanging after the shards exit).
+                let _ = job.reply.send(Err(ServiceError::Shutdown));
+                Ok(JobTicket { rx: reply_rx })
             }
+            Err(PushError::Timeout(_)) => Err(ServiceError::Saturated),
         }
-        if q.shutdown {
-            // Intake stopped while this submitter was blocked: resolve the
-            // ticket with a structured shutdown error instead of enqueueing
-            // into a closing queue (which could leave the ticket hanging
-            // after the shards exit).
-            drop(q);
-            let _ = reply_tx.send(Err(ServiceError::Shutdown));
-            return Ok(JobTicket { rx: reply_rx });
-        }
-        q.jobs.push_back(Job { req, sig, attempts: 0, tried: Vec::new(), reply: reply_tx });
-        drop(q);
-        shared.not_empty.notify_one();
-        Ok(JobTicket { rx: reply_rx })
     }
 
     /// Queue a job on its routed variant; returns immediately with a
@@ -733,11 +711,7 @@ impl GpgpuService {
     /// the same way. Idempotent; `Drop` calls it before joining.
     pub fn shutdown(&self) {
         for v in &self.inner.variants {
-            let mut q = v.shared.state.lock().expect("queue poisoned");
-            q.shutdown = true;
-            drop(q);
-            v.shared.not_empty.notify_all();
-            v.shared.not_full.notify_all();
+            v.queue.shutdown();
         }
     }
 }
@@ -765,20 +739,12 @@ fn shard_worker(fleet: &FleetInner, vidx: usize, local: u32, shard: u32, metrics
     let mut consecutive = 0u32;
     let mut probation = false;
     loop {
-        let job = {
-            let mut q = v.shared.state.lock().expect("queue poisoned");
-            loop {
-                if let Some(j) = q.jobs.pop_front() {
-                    break Some(j);
-                }
-                if q.shutdown {
-                    break None;
-                }
-                q = v.shared.not_empty.wait(q).expect("queue poisoned");
-            }
-        };
-        let Some(mut job) = job else { break };
-        v.shared.not_full.notify_one();
+        // Own deque first, then steal from sibling shards; blocks while
+        // the group is live and returns None on shutdown + drained.
+        let Some(mut job) = v.queue.pop(local as usize) else { break };
+        metrics
+            .queue_wait_ns
+            .fetch_add(job.enqueued_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
         job.attempts += 1;
         // A panicking job (e.g. a malformed Bench size tripping an assert
         // in kernels::prepare) must fail its own ticket, not kill the

@@ -1,0 +1,411 @@
+//! The fleet's submit path: a bounded, shutdown-aware, work-stealing
+//! queue sharded across per-worker deques.
+//!
+//! The PR-5 coordinator funneled every variant's submits and pops through
+//! one `Mutex<VecDeque>` guarded by two `Condvar`s — correct, but every
+//! submitter and every shard contended on the same lock word, so the
+//! service plane stopped scaling past a few cores. This module keeps the
+//! exact external semantics (bounded depth, blocking and deadline'd
+//! pushes, shutdown wakeups, drain-after-shutdown) while splitting the
+//! storage into per-worker shards:
+//!
+//! * **Capacity is a single atomic**, not a lock: `push` reserves a slot
+//!   with a CAS on `len` and only then touches a shard mutex — two
+//!   submitters racing for different shards never serialize on storage.
+//! * **Pushes round-robin across shards**; each worker pops its own
+//!   shard first and **steals** from its siblings (scan order
+//!   `own, own+1, …`) when its deque is dry — an idle worker takes the
+//!   next job the moment one exists anywhere in its group.
+//! * **Blocking is the slow path only**: the `gate` mutex + condvar pair
+//!   is touched when a pusher finds the queue full, a popper finds it
+//!   empty, or a state change must wake them. Notifies happen with the
+//!   gate held and waiters re-check `len`/`shutdown` under the gate
+//!   before sleeping, so wakeups cannot be lost.
+//!
+//! One protocol subtlety: a pusher that reserved a slot publishes the
+//! item with only a shard lock held, so a popper can observe `len > 0`
+//! while every shard looks empty (the reserve→push window). The popper
+//! treats that as "work is imminent" and spins with `yield_now` instead
+//! of sleeping — the window is a few instructions long and contains no
+//! blocking.
+//!
+//! Shutdown ordering mirrors the old queue: `shutdown()` beats a
+//! concurrent deadline (a blocked pusher whose timeout and the shutdown
+//! race resolves `Shutdown`, not `Timeout`), queued items still drain
+//! (poppers return `None` only once shut down *and* empty), and
+//! [`ShardedQueue::push_unbounded`] bypasses both depth and shutdown for
+//! the coordinator's retry re-admission — a worker must never block or
+//! drop a job it is holding.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a bounded push did not enqueue; the item comes back to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue shut down before a slot opened (or was already down).
+    Shutdown(T),
+    /// The deadline elapsed with the queue still full.
+    Timeout(T),
+}
+
+/// Bounded multi-producer multi-consumer queue, sharded into per-worker
+/// deques with work stealing. See the module docs for the protocol.
+pub struct ShardedQueue<T> {
+    shards: Vec<Mutex<VecDeque<T>>>,
+    /// Items reserved or resident across all shards (may transiently
+    /// exceed any shard-sum observation — see module docs).
+    len: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Round-robin push cursor.
+    rr: AtomicUsize,
+    /// Slow-path rendezvous: waiters sleep here, state changes notify
+    /// here. Guards no data — `len`/`shutdown` are the state.
+    gate: Mutex<()>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    depth: usize,
+}
+
+impl<T> ShardedQueue<T> {
+    /// `shards` deques (≥1 forced) holding at most `depth` items total.
+    pub fn new(shards: usize, depth: usize) -> ShardedQueue<T> {
+        let shards = shards.max(1);
+        ShardedQueue {
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            len: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            rr: AtomicUsize::new(0),
+            gate: Mutex::new(()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Deposit a reserved item and wake one popper.
+    fn publish(&self, item: T) {
+        let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[s].lock().expect("shard poisoned").push_back(item);
+        let _gate = self.gate.lock().expect("gate poisoned");
+        self.not_empty.notify_one();
+    }
+
+    /// Bounded push: blocks while the queue is at depth (until `deadline`
+    /// when one is given). Shutdown wins every race — a full queue that
+    /// shuts down hands the item back as [`PushError::Shutdown`] even if
+    /// the deadline expired in the same instant (matching the PR-5
+    /// single-queue semantics).
+    pub fn push(&self, item: T, deadline: Option<Instant>) -> Result<(), PushError<T>> {
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Err(PushError::Shutdown(item));
+            }
+            let cur = self.len.load(Ordering::SeqCst);
+            if cur < self.depth {
+                // Fast path: reserve a slot without any lock.
+                if self
+                    .len
+                    .compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    self.publish(item);
+                    return Ok(());
+                }
+                continue; // lost the CAS race — re-read
+            }
+            // Full: take the gate and re-check before sleeping (a pop or
+            // shutdown between our load and the lock must not be missed).
+            let gate = self.gate.lock().expect("gate poisoned");
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Err(PushError::Shutdown(item));
+            }
+            if self.len.load(Ordering::SeqCst) < self.depth {
+                continue; // drained while we took the gate — retry the CAS
+            }
+            match deadline {
+                None => {
+                    drop(self.not_full.wait(gate).expect("gate poisoned"));
+                }
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(PushError::Timeout(item));
+                    }
+                    let (gate, timed_out) = self
+                        .not_full
+                        .wait_timeout(gate, d - now)
+                        .expect("gate poisoned");
+                    drop(gate);
+                    if timed_out.timed_out()
+                        && !self.shutdown.load(Ordering::SeqCst)
+                        && self.len.load(Ordering::SeqCst) >= self.depth
+                    {
+                        return Err(PushError::Timeout(item));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Unbounded push: ignores depth *and* shutdown. The coordinator's
+    /// retry path re-admits a job a worker is already holding — blocking
+    /// on a full queue (possibly the worker's own) would deadlock, and a
+    /// draining queue must still accept it so the ticket resolves.
+    pub fn push_unbounded(&self, item: T) {
+        self.len.fetch_add(1, Ordering::SeqCst);
+        self.publish(item);
+    }
+
+    /// Pop for worker `shard`: its own deque first, then steal from
+    /// siblings in ring order. Blocks while the queue is empty and live;
+    /// returns `None` only once shut down *and* drained.
+    pub fn pop(&self, shard: usize) -> Option<T> {
+        loop {
+            for i in 0..self.shards.len() {
+                let s = (shard + i) % self.shards.len();
+                let item = self.shards[s].lock().expect("shard poisoned").pop_front();
+                if let Some(item) = item {
+                    self.len.fetch_sub(1, Ordering::SeqCst);
+                    let _gate = self.gate.lock().expect("gate poisoned");
+                    self.not_full.notify_one();
+                    return Some(item);
+                }
+            }
+            let gate = self.gate.lock().expect("gate poisoned");
+            if self.len.load(Ordering::SeqCst) > 0 {
+                // Reserved but not yet published (or a racing push landed
+                // after our scan): the item is an instruction away — spin,
+                // don't sleep on a notify that may already have fired.
+                drop(gate);
+                std::thread::yield_now();
+                continue;
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            drop(self.not_empty.wait(gate).expect("gate poisoned"));
+        }
+    }
+
+    /// Stop intake: blocked pushers wake with [`PushError::Shutdown`],
+    /// poppers drain what is queued and then get `None`. Idempotent.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _gate = self.gate.lock().expect("gate poisoned");
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_a_single_shard() {
+        let q = ShardedQueue::new(1, 16);
+        for i in 0..5 {
+            q.push(i, None).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(0), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn any_worker_reaches_items_on_any_shard() {
+        // 4 shards, pushes round-robin: a single worker (fixed home
+        // shard) must still drain everything by stealing.
+        let q = ShardedQueue::new(4, 64);
+        for i in 0..12 {
+            q.push(i, None).unwrap();
+        }
+        let mut got: Vec<i32> = (0..12).map(|_| q.pop(2).unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deadline_push_sheds_when_full() {
+        let q = ShardedQueue::new(2, 2);
+        q.push(1, None).unwrap();
+        q.push(2, None).unwrap();
+        let deadline = Instant::now() + Duration::from_millis(30);
+        match q.push(3, Some(deadline)) {
+            Err(PushError::Timeout(item)) => assert_eq!(item, 3),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // Draining one slot lets the next deadline'd push through.
+        assert!(q.pop(0).is_some());
+        q.push(3, Some(Instant::now() + Duration::from_secs(5))).unwrap();
+    }
+
+    #[test]
+    fn shutdown_wakes_blocked_pusher() {
+        let q = Arc::new(ShardedQueue::new(2, 1));
+        q.push(0, None).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(1, None));
+        std::thread::sleep(Duration::from_millis(50));
+        q.shutdown();
+        match pusher.join().unwrap() {
+            Err(PushError::Shutdown(item)) => assert_eq!(item, 1),
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_beats_a_far_deadline() {
+        // A pusher blocked with a generous deadline must resolve Shutdown
+        // (not Timeout) when the queue goes down first.
+        let q = Arc::new(ShardedQueue::new(1, 1));
+        q.push(0, None).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || {
+            q2.push(1, Some(Instant::now() + Duration::from_secs(30)))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        q.shutdown();
+        match pusher.join().unwrap() {
+            Err(PushError::Shutdown(item)) => assert_eq!(item, 1),
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn queued_items_drain_after_shutdown() {
+        let q = ShardedQueue::new(3, 16);
+        for i in 0..6 {
+            q.push(i, None).unwrap();
+        }
+        q.shutdown();
+        assert!(matches!(q.push(99, None), Err(PushError::Shutdown(99))));
+        let mut got: Vec<i32> = (0..6).map(|_| q.pop(1).unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..6).collect::<Vec<_>>());
+        assert_eq!(q.pop(0), None);
+        assert_eq!(q.pop(2), None);
+    }
+
+    #[test]
+    fn unbounded_push_bypasses_depth_and_shutdown() {
+        let q = ShardedQueue::new(2, 1);
+        q.push(0, None).unwrap();
+        q.push_unbounded(1); // over depth
+        q.shutdown();
+        q.push_unbounded(2); // into a draining queue
+        let mut got: Vec<i32> = (0..3).map(|_| q.pop(0).unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn steal_vs_drain_race_loses_nothing() {
+        // Many workers stealing across shards while shutdown lands
+        // mid-stream: every item is popped exactly once, every worker
+        // exits with None.
+        const ITEMS: usize = 2000;
+        const WORKERS: usize = 8;
+        let q = Arc::new(ShardedQueue::new(WORKERS, ITEMS));
+        let got = Arc::new(Mutex::new(Vec::new()));
+        let workers: Vec<_> = (0..WORKERS)
+            .map(|w| {
+                let q = q.clone();
+                let got = got.clone();
+                std::thread::spawn(move || {
+                    while let Some(item) = q.pop(w) {
+                        got.lock().unwrap().push(item);
+                    }
+                })
+            })
+            .collect();
+        let mut pushed = 0usize;
+        for i in 0..ITEMS {
+            if i == ITEMS / 2 {
+                // Shut down with half the stream in flight and workers
+                // mid-pop: the rest of the pushes must bounce, the queued
+                // half must all land exactly once.
+                q.shutdown();
+            }
+            match q.push(i, None) {
+                Ok(()) => pushed += 1,
+                Err(PushError::Shutdown(item)) => assert_eq!(item, i),
+                Err(PushError::Timeout(_)) => panic!("no deadline was set"),
+            }
+        }
+        for w in workers {
+            w.join().unwrap();
+        }
+        let mut got = Arc::try_unwrap(got).unwrap().into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got.len(), pushed, "every accepted item popped");
+        got.dedup();
+        assert_eq!(got.len(), pushed, "no item popped twice");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn concurrent_pushers_and_poppers_balance() {
+        // 4 pushers × 250 items through a shallow (depth 8) 4-shard queue
+        // against 4 poppers: backpressure engages constantly and the
+        // multiset in == multiset out.
+        const PER: usize = 250;
+        let q = Arc::new(ShardedQueue::new(4, 8));
+        let got = Arc::new(Mutex::new(Vec::new()));
+        let poppers: Vec<_> = (0..4)
+            .map(|w| {
+                let q = q.clone();
+                let got = got.clone();
+                std::thread::spawn(move || {
+                    while let Some(item) = q.pop(w) {
+                        got.lock().unwrap().push(item);
+                    }
+                })
+            })
+            .collect();
+        let pushers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        q.push(p * PER + i, None).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in pushers {
+            p.join().unwrap();
+        }
+        // Wait for the queue to drain, then release the poppers.
+        while !q.is_empty() {
+            std::thread::yield_now();
+        }
+        q.shutdown();
+        for w in poppers {
+            w.join().unwrap();
+        }
+        let mut got = Arc::try_unwrap(got).unwrap().into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..4 * PER).collect::<Vec<_>>());
+    }
+}

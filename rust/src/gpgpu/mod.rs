@@ -79,9 +79,9 @@ use crate::asm::Kernel;
 use crate::isa::CapabilitySignature;
 use crate::registry::PreparedKernel;
 use crate::sim::{
-    AluBackend, AluFactory, BlockDesc, CachedGmem, FaultPlan, GlobalMem, GmemPort, GmemSnapshot,
-    L1Cache, MemoryConfig, NativeAlu, PreDecoded, SimError, Sm, SmConfig, SmLaunch, SmStats,
-    WriteRecord,
+    AluBackend, AluFactory, BlockDesc, CachedGmem, EngineMode, FaultPlan, GlobalMem, GmemPort,
+    GmemSnapshot, L1Cache, MemoryConfig, NativeAlu, PreDecoded, SimError, Sm, SmConfig, SmLaunch,
+    SmStats, WriteRecord,
 };
 use std::collections::HashMap;
 
@@ -279,6 +279,7 @@ pub struct LaunchRequest<'a> {
     memory: Option<MemoryConfig>,
     fault: Option<&'a FaultPlan>,
     watchdog: Option<u64>,
+    engine: Option<EngineMode>,
 }
 
 impl<'a> LaunchRequest<'a> {
@@ -297,6 +298,7 @@ impl<'a> LaunchRequest<'a> {
             memory: None,
             fault: None,
             watchdog: None,
+            engine: None,
         }
     }
 
@@ -360,6 +362,21 @@ impl<'a> LaunchRequest<'a> {
         self.watchdog = Some(cycles);
         self
     }
+
+    /// Override the execute-stage engine for this launch only. The
+    /// default is the device's configured engine ([`EngineMode::Vector`]
+    /// out of the box); [`EngineMode::Scalar`] forces the per-lane oracle
+    /// loop everywhere — the differential tests run every benchmark both
+    /// ways and demand bit- and cycle-identical results.
+    pub fn engine(mut self, engine: EngineMode) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Shorthand for `.engine(EngineMode::Scalar)`.
+    pub fn scalar(self) -> Self {
+        self.engine(EngineMode::Scalar)
+    }
 }
 
 /// Post-partition simulate-phase inputs, bundled so the per-path drivers
@@ -373,6 +390,7 @@ struct SimJob<'a> {
     memory: MemoryConfig,
     fault: Option<&'a FaultPlan>,
     watchdog: Option<u64>,
+    engine: Option<EngineMode>,
 }
 
 impl SimJob<'_> {
@@ -389,12 +407,15 @@ impl SimJob<'_> {
     }
 
     /// The SM configuration this job runs under: the device's, with the
-    /// per-request watchdog override applied (identically on both launch
-    /// paths, so the override cannot break bit-equivalence).
+    /// per-request watchdog and engine overrides applied (identically on
+    /// both launch paths, so the overrides cannot break bit-equivalence).
     fn sm_config(&self, base: SmConfig) -> SmConfig {
         let mut cfg = base;
         if let Some(cycles) = self.watchdog {
             cfg.watchdog_cycles = cycles;
+        }
+        if let Some(engine) = self.engine {
+            cfg.engine = engine;
         }
         cfg
     }
@@ -475,8 +496,18 @@ impl Gpgpu {
     /// module docs). Partition → simulate → merge; kernel time is the max
     /// of the per-SM busy times.
     pub fn launch(&self, req: LaunchRequest<'_>) -> Result<LaunchResult, SimError> {
-        let LaunchRequest { kernel, geometry, gmem, params, mode, sig, memory, fault, watchdog } =
-            req;
+        let LaunchRequest {
+            kernel,
+            geometry,
+            gmem,
+            params,
+            mode,
+            sig,
+            memory,
+            fault,
+            watchdog,
+            engine,
+        } = req;
         let memory = memory.unwrap_or(self.cfg.memory);
         memory.validate()?;
         let derived_pre;
@@ -497,6 +528,7 @@ impl Gpgpu {
             memory,
             fault,
             watchdog,
+            engine,
         };
         match mode {
             None => {

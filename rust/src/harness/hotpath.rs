@@ -21,6 +21,15 @@ pub struct HotPathPoint {
     pub wall_ms: f64,
     /// `warp_instrs` / median wall-clock.
     pub instrs_per_sec: f64,
+    /// Mean fraction of the 32 lanes active per issued warp-instruction
+    /// ([`crate::sim::SmStats::lane_occupancy`]).
+    pub lane_occupancy: f64,
+    /// Percentage of warp-instructions issued down the vectorized batch
+    /// path ([`crate::sim::SmStats::batched_uop_pct`]).
+    pub batched_uop_pct: f64,
+    /// Mean submit-to-dispatch latency per job through the service
+    /// plane's sharded queue, nanoseconds (0 when not measured).
+    pub queue_wait_ns: u64,
 }
 
 /// A full engine-throughput report.
@@ -52,8 +61,18 @@ impl HotPathReport {
             .map(|p| {
                 format!(
                     "{{\"bench\": \"{}\", \"n\": {}, \"warp_instrs\": {}, \
-                     \"thread_instrs\": {}, \"wall_ms\": {:.3}, \"instrs_per_sec\": {:.0}}}",
-                    p.bench, p.n, p.warp_instrs, p.thread_instrs, p.wall_ms, p.instrs_per_sec
+                     \"thread_instrs\": {}, \"wall_ms\": {:.3}, \"instrs_per_sec\": {:.0}, \
+                     \"lane_occupancy\": {:.3}, \"batched_uop_pct\": {:.1}, \
+                     \"queue_wait_ns\": {}}}",
+                    p.bench,
+                    p.n,
+                    p.warp_instrs,
+                    p.thread_instrs,
+                    p.wall_ms,
+                    p.instrs_per_sec,
+                    p.lane_occupancy,
+                    p.batched_uop_pct,
+                    p.queue_wait_ns
                 )
             })
             .collect();
@@ -77,6 +96,9 @@ mod tests {
             thread_instrs: 32_000,
             wall_ms: 1.5,
             instrs_per_sec: ips,
+            lane_occupancy: 1.0,
+            batched_uop_pct: 87.5,
+            queue_wait_ns: 12_345,
         }
     }
 
@@ -90,10 +112,13 @@ mod tests {
         assert!(json.starts_with("{\n  \"fast\": true,\n  \"points\": [\n"));
         assert!(json.contains(
             "{\"bench\": \"matmul\", \"n\": 64, \"warp_instrs\": 1000, \
-             \"thread_instrs\": 32000, \"wall_ms\": 1.500, \"instrs_per_sec\": 2000000},"
+             \"thread_instrs\": 32000, \"wall_ms\": 1.500, \"instrs_per_sec\": 2000000, \
+             \"lane_occupancy\": 1.000, \"batched_uop_pct\": 87.5, \
+             \"queue_wait_ns\": 12345},"
         ));
         assert!(json.ends_with("  ]\n}\n"));
         assert_eq!(json.matches("\"bench\"").count(), 2);
+        assert_eq!(json.matches("\"queue_wait_ns\"").count(), 2);
     }
 
     #[test]

@@ -12,7 +12,8 @@ use crate::isa::CapabilitySignature;
 use crate::registry::{KernelRegistry, PreparedKernel};
 use crate::rng::XorShift64;
 use crate::sim::{
-    AluBackend, AluFactory, FaultPlan, GlobalMem, MemoryConfig, NativeAlu, SimError, SmStats,
+    AluBackend, AluFactory, EngineMode, FaultPlan, GlobalMem, MemoryConfig, NativeAlu, SimError,
+    SmStats,
 };
 use std::sync::Arc;
 
@@ -160,6 +161,7 @@ pub struct RunOptions<'a> {
     memory: Option<MemoryConfig>,
     fault: Option<&'a FaultPlan>,
     watchdog: Option<u64>,
+    engine: Option<EngineMode>,
 }
 
 impl<'a> RunOptions<'a> {
@@ -207,6 +209,19 @@ impl<'a> RunOptions<'a> {
     pub fn watchdog(mut self, cycles: u64) -> Self {
         self.watchdog = Some(cycles);
         self
+    }
+
+    /// Override the execute-stage engine for every phase (the default is
+    /// the device's — [`EngineMode::Vector`] out of the box).
+    pub fn engine(mut self, engine: EngineMode) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Force the per-lane scalar oracle loop — shorthand for
+    /// `.engine(EngineMode::Scalar)`, used by the differential suite.
+    pub fn scalar(self) -> Self {
+        self.engine(EngineMode::Scalar)
     }
 }
 
@@ -416,6 +431,9 @@ impl Workload {
             }
             if let Some(cycles) = opts.watchdog {
                 req = req.watchdog(cycles);
+            }
+            if let Some(engine) = opts.engine {
+                req = req.engine(engine);
             }
             // Reborrow the mode per phase: a sequential backend is handed
             // out as a fresh `&mut` each launch.

@@ -70,6 +70,11 @@ pub struct SmStats {
     pub blocks: u64,
     /// Cycles the issue port idled waiting on memory/pipeline.
     pub stall_cycles: u64,
+    /// Warp-instructions issued down the vectorized batch path (all
+    /// existing lanes active, guard-free — see `EngineMode::Vector`).
+    /// Always zero on the scalar engine; excluded from cross-engine
+    /// bit-identity comparisons for exactly that reason.
+    pub batched_uops: u64,
     /// Dynamic opcode histogram (indexed by `Op as u8`).
     pub op_histogram: [u64; 32],
     /// Memory-hierarchy counters (zero on flat memory).
@@ -99,6 +104,7 @@ impl SmStats {
         self.barriers += other.barriers;
         self.blocks += other.blocks;
         self.stall_cycles += other.stall_cycles;
+        self.batched_uops += other.batched_uops;
         for (mine, theirs) in self.op_histogram.iter_mut().zip(&other.op_histogram) {
             *mine += theirs;
         }
@@ -118,6 +124,27 @@ impl SmStats {
     /// Execution time in milliseconds at the overlay clock.
     pub fn exec_time_ms(&self, clock_hz: f64) -> f64 {
         self.cycles as f64 / clock_hz * 1e3
+    }
+
+    /// Mean fraction of the 32 warp lanes active per issued instruction,
+    /// in [0, 1] — the SIMD-efficiency number the lane-vectorized engine
+    /// is gated on (1.0 = every issue ran a full warp). 0 when nothing
+    /// was issued.
+    pub fn lane_occupancy(&self) -> f64 {
+        if self.instructions == 0 {
+            return 0.0;
+        }
+        self.thread_instructions as f64
+            / (self.instructions as f64 * crate::sim::WARP_SIZE as f64)
+    }
+
+    /// Percentage of warp-instructions that issued down the vectorized
+    /// batch path (0 on the scalar engine).
+    pub fn batched_uop_pct(&self) -> f64 {
+        if self.instructions == 0 {
+            return 0.0;
+        }
+        100.0 * self.batched_uops as f64 / self.instructions as f64
     }
 }
 
@@ -162,6 +189,30 @@ mod tests {
         assert_eq!(a.mem.contention_cycles, 9);
         assert!((a.mem.hit_rate() - 4.0 / 6.0).abs() < 1e-12);
         assert_eq!(MemStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn lane_occupancy_and_batch_pct() {
+        let s = SmStats {
+            instructions: 10,
+            thread_instructions: 10 * 32,
+            batched_uops: 7,
+            ..Default::default()
+        };
+        assert!((s.lane_occupancy() - 1.0).abs() < 1e-12);
+        assert!((s.batched_uop_pct() - 70.0).abs() < 1e-12);
+        let half = SmStats { instructions: 4, thread_instructions: 64, ..Default::default() };
+        assert!((half.lane_occupancy() - 0.5).abs() < 1e-12);
+        assert_eq!(half.batched_uop_pct(), 0.0);
+        assert_eq!(SmStats::default().lane_occupancy(), 0.0);
+        assert_eq!(SmStats::default().batched_uop_pct(), 0.0);
+    }
+
+    #[test]
+    fn batched_uops_sum_under_merge() {
+        let mut a = SmStats { batched_uops: 3, ..Default::default() };
+        a.merge(&SmStats { batched_uops: 4, ..Default::default() });
+        assert_eq!(a.batched_uops, 7);
     }
 
     #[test]

@@ -135,6 +135,25 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// Which execute-stage implementation the simulator uses. Both engines
+/// are architecturally identical — bit-identical results *and* cycle
+/// counts (pinned by `tests/simd_engine.rs`) — because they share the
+/// timing model and the warp-ALU backend; they differ only in how the
+/// data-movement loops are shaped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    /// Lane-vectorized batch execution (the default): guard-free,
+    /// non-divergent micro-ops issue as whole-warp `[i32; 32]` batches
+    /// over the structure-of-arrays register file — straight-line
+    /// autovectorizable loops and `memcpy` writebacks on stable Rust.
+    /// Divergent/guarded issues fall back to the masked scalar loop.
+    #[default]
+    Vector,
+    /// Per-lane masked loops on every issue — the pre-SIMD engine, kept
+    /// as the differential oracle for the vector fast path.
+    Scalar,
+}
+
 /// Streaming-multiprocessor configuration — the architectural parameters
 /// the paper varies (§5: SP count; §4/Table 6: warp-stack depth,
 /// multiplier & third read-operand removal).
@@ -154,6 +173,9 @@ pub struct SmConfig {
     pub mem: MemTiming,
     /// Simulation watchdog (cycles); guards against runaway kernels.
     pub watchdog_cycles: u64,
+    /// Execute-stage implementation (simulator-side knob, not an
+    /// architectural parameter: both modes model the same hardware).
+    pub engine: EngineMode,
 }
 
 impl SmConfig {
@@ -167,11 +189,19 @@ impl SmConfig {
             pipeline_depth: 5,
             mem: MemTiming::default(),
             watchdog_cycles: 50_000_000_000,
+            engine: EngineMode::Vector,
         }
     }
 
     pub fn with_sp(mut self, num_sp: u32) -> SmConfig {
         self.num_sp = num_sp;
+        self
+    }
+
+    /// Run on the scalar (per-lane masked loop) engine — the differential
+    /// oracle for the vectorized default.
+    pub fn with_engine(mut self, engine: EngineMode) -> SmConfig {
+        self.engine = engine;
         self
     }
 
@@ -278,6 +308,16 @@ impl Default for SmConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn vector_engine_is_the_default() {
+        assert_eq!(SmConfig::baseline().engine, EngineMode::Vector);
+        assert_eq!(EngineMode::default(), EngineMode::Vector);
+        let c = SmConfig::baseline().with_engine(EngineMode::Scalar);
+        assert_eq!(c.engine, EngineMode::Scalar);
+        // The engine knob must not perturb architectural validation.
+        assert!(c.validate().is_ok());
+    }
 
     #[test]
     fn rows_per_warp_matches_paper() {

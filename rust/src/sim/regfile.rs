@@ -3,17 +3,37 @@
 //! register file, and the predicate register file (4 × 4-bit per thread,
 //! paper Fig. 2).
 //!
+//! # Structure-of-arrays layout
+//!
+//! The general-purpose file is laid out **register-major, warp-major,
+//! lane-minor**: word `(r * n_warps + warp) * 32 + lane` holds register
+//! `r` of lane `lane` in warp `warp`. That puts the 32 lanes of one
+//! warp's register `r` in one contiguous `[i32; 32]` slice — exactly the
+//! shape the execute stage consumes — so the Read stage is a `memcpy`
+//! ([`RegFile::read_vec`]) and the unguarded/uniform Write stage is a
+//! `memcpy` too ([`RegFile::write_warp`]), both trivially
+//! autovectorizable on stable Rust. The masked per-lane scatter
+//! ([`RegFile::write_vec`]) remains for divergent/guarded issues and is
+//! the scalar engine's differential oracle. Blocks whose size is not a
+//! warp multiple pad the last warp's missing lanes (never read: the
+//! enabled mask excludes them).
+//!
 //! Storage is flat `Vec`s indexed arithmetically — this is the hottest
-//! data structure in the simulator, so no hashing, no bounds recomputation
-//! beyond the construction-time invariants.
+//! data structure in the simulator, so no hashing, no bounds
+//! recomputation beyond the construction-time invariants.
 
+use super::alu::WARP_SIZE;
 use crate::isa::{Flags, NUM_AREGS, NUM_PREGS, RZ};
 
 /// Vector register file for one resident block: `threads × regs_per_thread`
-/// general registers, plus address and predicate files.
+/// general registers (SoA per-warp lane slices), plus address and
+/// predicate files.
 #[derive(Debug, Clone)]
 pub struct RegFile {
     regs_per_thread: u32,
+    /// Warps covered by the gp file (threads padded up to a warp multiple).
+    n_warps: u32,
+    /// SoA: `gp[(r * n_warps + warp) * 32 + lane]`.
     gp: Vec<i32>,
     addr: Vec<i32>,
     /// Packed 4-bit flags: pred[thread * NUM_PREGS + n].
@@ -22,9 +42,11 @@ pub struct RegFile {
 
 impl RegFile {
     pub fn new(threads: u32, regs_per_thread: u32) -> RegFile {
+        let n_warps = threads.div_ceil(WARP_SIZE as u32);
         RegFile {
             regs_per_thread,
-            gp: vec![0; (threads * regs_per_thread) as usize],
+            n_warps,
+            gp: vec![0; (n_warps * WARP_SIZE as u32 * regs_per_thread) as usize],
             addr: vec![0; (threads * NUM_AREGS as u32) as usize],
             pred: vec![0; (threads * NUM_PREGS as u32) as usize],
         }
@@ -32,6 +54,22 @@ impl RegFile {
 
     pub fn regs_per_thread(&self) -> u32 {
         self.regs_per_thread
+    }
+
+    /// Word index of register `r` for `thread` in the SoA layout.
+    #[inline]
+    fn gp_idx(&self, thread: u32, r: u8) -> usize {
+        let warp = thread / WARP_SIZE as u32;
+        let lane = thread % WARP_SIZE as u32;
+        ((r as u32 * self.n_warps + warp) * WARP_SIZE as u32 + lane) as usize
+    }
+
+    /// Start of the contiguous 32-lane slice of register `r` for the warp
+    /// beginning at `base_thread` (must be warp-aligned).
+    #[inline]
+    fn warp_base(&self, base_thread: u32, r: u8) -> usize {
+        debug_assert_eq!(base_thread % WARP_SIZE as u32, 0, "warp-aligned base");
+        ((r as u32 * self.n_warps + base_thread / WARP_SIZE as u32) * WARP_SIZE as u32) as usize
     }
 
     /// Read general register `r` of `thread`. RZ reads zero; registers
@@ -42,7 +80,7 @@ impl RegFile {
         if r == RZ || r as u32 >= self.regs_per_thread {
             return 0;
         }
-        self.gp[(thread * self.regs_per_thread + r as u32) as usize]
+        self.gp[self.gp_idx(thread, r)]
     }
 
     /// Write general register `r` of `thread`. Writes to RZ or beyond the
@@ -52,28 +90,27 @@ impl RegFile {
         if r == RZ || r as u32 >= self.regs_per_thread {
             return;
         }
-        self.gp[(thread * self.regs_per_thread + r as u32) as usize] = v;
+        let idx = self.gp_idx(thread, r);
+        self.gp[idx] = v;
     }
 
     /// Gather register `r` for `count` consecutive threads starting at
-    /// `base_thread` into `out[..count]` — the Read stage's vector fetch
-    /// (one stride computation per warp instead of per lane; §Perf).
+    /// the warp-aligned `base_thread` into `out[..count]` — the Read
+    /// stage's vector fetch. One contiguous `memcpy` under the SoA layout
+    /// (the seed layout strided this per lane; §Perf).
     #[inline]
     pub fn read_vec(&self, base_thread: u32, count: usize, r: u8, out: &mut [i32; 32]) {
         if r == RZ || r as u32 >= self.regs_per_thread {
             out[..count].fill(0);
             return;
         }
-        let stride = self.regs_per_thread as usize;
-        let mut idx = base_thread as usize * stride + r as usize;
-        for slot in out.iter_mut().take(count) {
-            *slot = self.gp[idx];
-            idx += stride;
-        }
+        let base = self.warp_base(base_thread, r);
+        out[..count].copy_from_slice(&self.gp[base..base + count]);
     }
 
     /// Scatter `vals` into register `r` for the threads selected by
-    /// `mask` (bit i -> thread `base_thread + i`) — the Write stage.
+    /// `mask` (bit i -> thread `base_thread + i`) — the Write stage for
+    /// divergent/guarded issues, and the scalar engine's oracle path.
     #[inline]
     pub fn write_vec(
         &mut self,
@@ -86,14 +123,26 @@ impl RegFile {
         if r == RZ || r as u32 >= self.regs_per_thread {
             return;
         }
-        let stride = self.regs_per_thread as usize;
-        let mut idx = base_thread as usize * stride + r as usize;
-        for lane in 0..count {
+        let base = self.warp_base(base_thread, r);
+        let dst = &mut self.gp[base..base + count];
+        for (lane, slot) in dst.iter_mut().enumerate() {
             if mask & (1 << lane) != 0 {
-                self.gp[idx] = vals[lane];
+                *slot = vals[lane];
             }
-            idx += stride;
         }
+    }
+
+    /// Full-warp writeback: store `vals[..count]` into register `r` of
+    /// `count` consecutive threads with no mask — the vector engine's
+    /// Write stage for batch-issued (all-lanes-active) micro-ops. One
+    /// contiguous `memcpy`.
+    #[inline]
+    pub fn write_warp(&mut self, base_thread: u32, count: usize, r: u8, vals: &[i32; 32]) {
+        if r == RZ || r as u32 >= self.regs_per_thread {
+            return;
+        }
+        let base = self.warp_base(base_thread, r);
+        self.gp[base..base + count].copy_from_slice(&vals[..count]);
     }
 
     /// SEU injection (`sim::fault`): flip `bit` of the general-register
@@ -178,5 +227,58 @@ mod tests {
         rf.write_areg(0, 1, 100);
         assert_eq!(rf.read_areg(0, 1), 100);
         assert_eq!(rf.read_areg(1, 1), 0);
+    }
+
+    #[test]
+    fn soa_vector_fetch_matches_scalar_reads_across_warps() {
+        // 2.5 warps, every (thread, reg) distinct: read_vec must agree
+        // with per-lane read() on both warp-aligned bases.
+        let mut rf = RegFile::new(80, 6);
+        for t in 0..80u32 {
+            for r in 0..6u8 {
+                rf.write(t, r, (t as i32) * 100 + r as i32);
+            }
+        }
+        for base in [0u32, 32, 64] {
+            let count = (80 - base).min(32) as usize;
+            for r in 0..6u8 {
+                let mut out = [0i32; 32];
+                rf.read_vec(base, count, r, &mut out);
+                for lane in 0..count {
+                    assert_eq!(out[lane], rf.read(base + lane as u32, r), "base {base} r {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn write_warp_equals_full_mask_write_vec() {
+        let vals = std::array::from_fn(|i| i as i32 * 7 - 3);
+        let mut a = RegFile::new(48, 5);
+        let mut b = RegFile::new(48, 5);
+        // Partial last warp: count 16, full mask over existing lanes.
+        a.write_warp(32, 16, 2, &vals);
+        b.write_vec(32, 16, 2, 0xFFFF, &vals);
+        for t in 0..48u32 {
+            assert_eq!(a.read(t, 2), b.read(t, 2), "thread {t}");
+        }
+        // RZ / over-allocation writes are discarded on both paths.
+        a.write_warp(0, 32, RZ, &vals);
+        a.write_warp(0, 32, 5, &vals);
+        assert_eq!(a.read(0, RZ), 0);
+        assert_eq!(a.read(0, 5), 0);
+    }
+
+    #[test]
+    fn masked_write_vec_leaves_unselected_lanes() {
+        let mut rf = RegFile::new(32, 4);
+        let ones = [1i32; 32];
+        rf.write_warp(0, 32, 1, &ones);
+        let twos = [2i32; 32];
+        rf.write_vec(0, 32, 1, 0x0000_00F0, &twos);
+        for t in 0..32u32 {
+            let want = if (4..8).contains(&t) { 2 } else { 1 };
+            assert_eq!(rf.read(t, 1), want, "thread {t}");
+        }
     }
 }

@@ -30,7 +30,15 @@
 //! * the Decode stage runs **once per launch**: [`PreDecoded`] lowers
 //!   every instruction to a micro-op ([`Uop`]) with operand kinds, guard,
 //!   branch targets and fault flags pre-resolved, so `step` never
-//!   re-matches `Operand`/`SpecialReg` per issue.
+//!   re-matches `Operand`/`SpecialReg` per issue;
+//! * the execute stage is **lane-vectorized** by default
+//!   ([`super::EngineMode::Vector`]): pre-decode tags guard-free datapath
+//!   micro-ops as batchable, and whenever the warp's lanes are all live
+//!   such an op issues as one whole-warp `[i32; 32]` batch — contiguous
+//!   SoA register-file slices in ([`super::RegFile`]), branch-free lane
+//!   loops, `memcpy` writeback — with the masked per-lane loop retained
+//!   as the divergent/guarded fallback and as the scalar differential
+//!   oracle (`tests/simd_engine.rs` pins bit- and cycle-identity).
 
 use super::alu::{AluBackend, AluFunc, WarpAluIn, WARP_SIZE};
 use super::fault::{FaultEvent, FaultPlan, FaultSite, FaultState, FaultTarget};
@@ -40,7 +48,7 @@ use super::regfile::RegFile;
 use super::sched::{WarpScheduler, MAX_RESIDENT_WARPS};
 use super::stack::{EntryType, StackEntry};
 use super::warp::Warp;
-use super::{SimError, SmConfig};
+use super::{EngineMode, SimError, SmConfig};
 use crate::asm::Kernel;
 use crate::isa::{Capability, Cond, Guard, Instr, Op, Operand, SpecialReg};
 
@@ -122,6 +130,12 @@ struct Uop {
     /// `guard` is conditional (pre-tested so the common unguarded path is
     /// a single branch).
     guarded: bool,
+    /// Uniform-op detector (resolved at pre-decode): guard-free datapath
+    /// micro-op eligible for whole-warp batch issue on the vector engine
+    /// whenever the warp's lanes are all live at issue time. Control
+    /// flow, barriers and the address-register moves stay scalar — they
+    /// carry no vectorizable data movement.
+    batchable: bool,
     /// §4.2 customization faults, resolved to flags at pre-decode.
     needs_mul: bool,
     needs_3ops: bool,
@@ -210,11 +224,15 @@ impl Uop {
                 })
             }
         };
+        let guarded = !instr.guard.is_unconditional();
+        let batchable = !guarded
+            && matches!(kind, UopKind::Alu(_) | UopKind::Mem(_) | UopKind::S2r { .. });
         Uop {
             kind,
             op: instr.op,
             guard: instr.guard,
-            guarded: !instr.guard.is_unconditional(),
+            guarded,
+            batchable,
             needs_mul: instr.op.uses_multiplier(),
             needs_3ops: instr.op == Op::Imad,
             next_pc: pc + instr.size as u32,
@@ -637,6 +655,19 @@ impl Sm {
         };
         cx.stats.count_op(uop.op, exec.count_ones());
 
+        // Batch issue (vector engine): a pre-decode-tagged uniform op
+        // whose lanes are all live executes as one whole-warp batch —
+        // branch-free lane loops and `memcpy` writeback over the SoA
+        // register file. Divergent/guarded issues (and everything, on
+        // the scalar oracle engine) take the masked per-lane loops.
+        // Timing is computed identically on both paths, so engine choice
+        // can never move a cycle count.
+        let batched =
+            uop.batchable && exec == w.enabled && self.cfg.engine == EngineMode::Vector;
+        if batched {
+            cx.stats.batched_uops += 1;
+        }
+
         // Default hazard: same warp re-issues only after the pipeline
         // drains (write-back of this instruction).
         w.ready_at = issue_done + (self.cfg.pipeline_depth as u64 - 1);
@@ -688,10 +719,25 @@ impl Sm {
                 }
             }
             UopKind::S2r { sr, dst } => {
-                for lane in 0..WARP_SIZE as u32 {
-                    if exec & (1 << lane) != 0 {
-                        let t = w.id * WARP_SIZE as u32 + lane;
-                        regs.write(t, dst, special_value(sr, desc, w.id, lane, t, self.sm_id));
+                if batched {
+                    let wbase = w.id * WARP_SIZE as u32;
+                    let count = WARP_SIZE.min((desc.ntid - wbase) as usize);
+                    let mut vals = [0i32; WARP_SIZE];
+                    for (lane, slot) in vals.iter_mut().enumerate().take(count) {
+                        let t = wbase + lane as u32;
+                        *slot = special_value(sr, desc, w.id, lane as u32, t, self.sm_id);
+                    }
+                    regs.write_warp(wbase, count, dst, &vals);
+                } else {
+                    for lane in 0..WARP_SIZE as u32 {
+                        if exec & (1 << lane) != 0 {
+                            let t = w.id * WARP_SIZE as u32 + lane;
+                            regs.write(
+                                t,
+                                dst,
+                                special_value(sr, desc, w.id, lane, t, self.sm_id),
+                            );
+                        }
                     }
                 }
             }
@@ -731,25 +777,52 @@ impl Sm {
                 let addr = |lane: usize| base[lane].wrapping_add(m.offset) as u32;
                 if m.load {
                     let mut out = [0i32; WARP_SIZE];
-                    for (lane, slot) in out.iter_mut().enumerate().take(count) {
-                        if exec & (1 << lane) != 0 {
-                            *slot = if m.global {
-                                cx.gmem.load(addr(lane))?
-                            } else {
-                                shared.load(addr(lane))?
-                            };
+                    if batched {
+                        // Whole-warp batch: the space dispatch is hoisted
+                        // out of the lane loop and no mask is tested.
+                        if m.global {
+                            for (lane, slot) in out.iter_mut().enumerate().take(count) {
+                                *slot = cx.gmem.load(addr(lane))?;
+                            }
+                        } else {
+                            for (lane, slot) in out.iter_mut().enumerate().take(count) {
+                                *slot = shared.load(addr(lane))?;
+                            }
                         }
+                        regs.write_warp(wbase, count, m.reg, &out);
+                    } else {
+                        for (lane, slot) in out.iter_mut().enumerate().take(count) {
+                            if exec & (1 << lane) != 0 {
+                                *slot = if m.global {
+                                    cx.gmem.load(addr(lane))?
+                                } else {
+                                    shared.load(addr(lane))?
+                                };
+                            }
+                        }
+                        regs.write_vec(wbase, count, m.reg, exec, &out);
                     }
-                    regs.write_vec(wbase, count, m.reg, exec, &out);
                 } else {
                     let mut data = [0i32; WARP_SIZE];
                     regs.read_vec(wbase, count, m.reg, &mut data);
-                    for lane in 0..count {
-                        if exec & (1 << lane) != 0 {
-                            if m.global {
+                    if batched {
+                        if m.global {
+                            for lane in 0..count {
                                 cx.gmem.store(addr(lane), data[lane])?;
-                            } else {
+                            }
+                        } else {
+                            for lane in 0..count {
                                 shared.store(addr(lane), data[lane])?;
+                            }
+                        }
+                    } else {
+                        for lane in 0..count {
+                            if exec & (1 << lane) != 0 {
+                                if m.global {
+                                    cx.gmem.store(addr(lane), data[lane])?;
+                                } else {
+                                    shared.store(addr(lane), data[lane])?;
+                                }
                             }
                         }
                     }
@@ -831,7 +904,9 @@ impl Sm {
                     CSrc::Zero => {}
                 }
                 let out = cx.alu.execute(&input);
-                // Write stage: masked vector scatter.
+                // Write stage: one `memcpy` for a batch issue, masked
+                // vector scatter otherwise. The predicate file stays
+                // per-lane (packed 4-bit flags, not a lane vector).
                 if a.setp_wb {
                     for lane in 0..count {
                         if exec & (1 << lane) != 0 {
@@ -842,6 +917,8 @@ impl Sm {
                             );
                         }
                     }
+                } else if batched {
+                    regs.write_warp(wbase, count, a.dst, &out);
                 } else {
                     regs.write_vec(wbase, count, a.dst, exec, &out);
                 }
@@ -1315,6 +1392,64 @@ mod tests {
         let sb = run_one_block_fault(SCALE_SRC, &[3, 0], 64, &mut b, Some(&zero_rate)).unwrap();
         assert_eq!(sa.cycles, sb.cycles);
         assert_eq!(a.read_words(0, 64).unwrap(), b.read_words(0, 64).unwrap());
+    }
+
+    #[test]
+    fn vector_and_scalar_engines_are_bit_and_cycle_identical() {
+        // Uniform and divergent kernels, full and partial warps: the two
+        // engines must agree on memory image, cycles and every counter
+        // except batched_uops (vector-only by definition).
+        for (src, params, ntid) in [
+            (SCALE_SRC, &[100i32, 0][..], 64u32),
+            (SCALE_SRC, &[7, 0][..], 40),
+            (DIVERGE_SRC, &[][..], 32),
+            (BARRIER_SRC, &[][..], 64),
+        ] {
+            let mut gv = GlobalMem::new(4096);
+            let sv = run_one_block_cfg(src, params, ntid, &mut gv, SmConfig::baseline())
+                .unwrap();
+            let mut gs = GlobalMem::new(4096);
+            let ss = run_one_block_cfg(
+                src,
+                params,
+                ntid,
+                &mut gs,
+                SmConfig::baseline().with_engine(EngineMode::Scalar),
+            )
+            .unwrap();
+            assert_eq!(ss.batched_uops, 0, "scalar engine must never batch");
+            let mut sv_cmp = sv.clone();
+            sv_cmp.batched_uops = 0;
+            assert_eq!(sv_cmp, ss, "stats diverged on {src}");
+            assert_eq!(
+                gv.read_words(0, 256).unwrap(),
+                gs.read_words(0, 256).unwrap(),
+                "memory image diverged on {src}"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_kernel_batches_on_the_vector_engine() {
+        let mut g = GlobalMem::new(4096);
+        let stats = run_one_block(SCALE_SRC, &[1, 0], 64, &mut g).unwrap();
+        // Every issue except the two EXITs (one per warp) is guard-free
+        // with all lanes live.
+        assert_eq!(stats.batched_uops, stats.instructions - 2, "{stats:?}");
+    }
+
+    #[test]
+    fn divergent_region_falls_back_to_the_scalar_loop() {
+        let mut g = GlobalMem::new(4096);
+        let stats = run_one_block(DIVERGE_SRC, &[], 32, &mut g).unwrap();
+        // Inside the divergent region (MOV on each path) lanes are not
+        // all live, so those issues must not batch; the guarded BRA and
+        // control ops never batch by construction.
+        assert!(stats.batched_uops > 0, "uniform prologue must batch: {stats:?}");
+        assert!(
+            stats.batched_uops + 6 <= stats.instructions,
+            "divergent bodies must stay scalar: {stats:?}"
+        );
     }
 
     #[test]

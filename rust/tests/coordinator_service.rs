@@ -313,6 +313,52 @@ fn shutdown_under_load_wakes_blocked_submitters_with_structured_error() {
 }
 
 #[test]
+fn multi_shard_steal_drains_every_ticket_under_shutdown() {
+    // 4 shards over one work-stealing queue: submits round-robin across
+    // the per-shard deques and an idle shard steals from its siblings.
+    // Stopping intake immediately after a burst races the steal scan
+    // against the drain — every accepted ticket must still resolve
+    // exactly once, and nothing may be popped twice (jobs_completed
+    // would overcount).
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 4, queue_depth: 64 },
+    );
+    let tickets: Vec<_> = (0..16)
+        .map(|i| svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: i }))
+        .collect();
+    svc.shutdown();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().unwrap_or_else(|e| panic!("drained job {i}: {e}"));
+        assert!(out.verified, "job {i}");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.jobs_completed, 16);
+    assert_eq!(m.jobs_failed, 0);
+}
+
+#[test]
+fn queue_wait_metric_accumulates_on_dispatch() {
+    // The sharded queue stamps jobs at submit and the dispatching shard
+    // accumulates the wait: after a burst behind one slow job the pool's
+    // aggregate queue_wait_ns must be visibly nonzero.
+    let svc = GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 1, queue_depth: 16 },
+    );
+    let tickets: Vec<_> = (0..4)
+        .map(|i| svc.submit(Request::Bench { id: BenchId::MatMul, n: 64, seed: i }))
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().verified);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.jobs_completed, 4);
+    // Jobs 2..4 each waited at least as long as a matmul run.
+    assert!(m.queue_wait_ns > 0, "queue wait never accumulated");
+}
+
+#[test]
 fn pool_drop_drains_queued_jobs() {
     // Tickets taken before shutdown must resolve even if the service is
     // dropped immediately after submission (graceful drain).

@@ -219,6 +219,7 @@ fn prop_simt_equals_scalar_1500_random_programs() {
             params: &[],
             blocks: &blocks,
             max_resident: 8,
+            fault: None,
         };
         sm.run(&launch, &mut gmem, &mut alu)
             .unwrap_or_else(|e| panic!("seed {seed}: SIMT fault {e}\n{src}"));

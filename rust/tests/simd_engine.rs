@@ -1,0 +1,267 @@
+//! Differential suite for the lane-vectorized execute engine (ISSUE 8).
+//!
+//! The vector engine batch-issues guard-free, fully-uniform micro-ops
+//! over contiguous SoA lane slices; the scalar engine walks lanes
+//! one-by-one and is the oracle. The two share every line of timing code
+//! and the same `AluBackend`, so the contract is total: **bit-identical
+//! memory images, cycle counts and statistics** (the `batched_uops`
+//! counter excepted — it is the one observable allowed to differ and is
+//! zeroed before comparison) across
+//!
+//! * every benchmark (`BenchId::ALL`) ×
+//! * 1/2/4/8 SMs ×
+//! * flat and L1-cached memory ×
+//! * no-fault and a seeded silent SEU campaign,
+//!
+//! plus a randomized structured-program sweep that forces divergence and
+//! guarded issues to exercise the batch/fallback switch mid-warp.
+
+use flexgrip::asm::assemble;
+use flexgrip::gpgpu::{Gpgpu, GpgpuConfig};
+use flexgrip::kernels::{self, BenchId, RunOptions, Workload};
+use flexgrip::rng::XorShift64;
+use flexgrip::sim::{
+    BlockDesc, CacheGeometry, EngineMode, FaultPlan, FaultTargets, GlobalMem, MemoryConfig,
+    NativeAlu, PreDecoded, Sm, SmConfig, SmLaunch, SmStats,
+};
+
+fn image(g: &GlobalMem) -> Vec<i32> {
+    g.read_words(0, g.size_bytes() as usize / 4).unwrap()
+}
+
+/// One run of a workload on the given engine; golden verification is
+/// skipped (fault campaigns corrupt on purpose — identity is the claim
+/// here, not correctness, which `benchmarks_correctness.rs` owns).
+fn run_engine(
+    w: &Workload,
+    cfg: GpgpuConfig,
+    engine: EngineMode,
+    plan: Option<&FaultPlan>,
+) -> (Vec<i32>, u64, SmStats) {
+    let gpgpu = Gpgpu::new(cfg);
+    let mut g = w.make_gmem();
+    let mut opts = RunOptions::new().engine(engine);
+    if let Some(p) = plan {
+        opts = opts.fault(p);
+    }
+    let run = w.run(&gpgpu, &mut g, opts).expect("engine run");
+    (image(&g), run.cycles, run.stats)
+}
+
+/// `batched_uops` is the only counter the two engines may disagree on.
+fn comparable(mut s: SmStats) -> SmStats {
+    s.batched_uops = 0;
+    s
+}
+
+#[test]
+fn vector_engine_is_bit_identical_to_scalar_across_the_matrix() {
+    let plan = FaultPlan::new(0x51D_E5EED, 40_000.0).with_targets(FaultTargets::silent());
+    let geom = CacheGeometry::parse("4x64x32").unwrap();
+    for id in BenchId::ALL {
+        let w = kernels::prepare(id, 32, 0xABCD);
+        for sms in [1u32, 2, 4, 8] {
+            for cached in [false, true] {
+                let mut cfg = GpgpuConfig::new(sms, 8);
+                if cached {
+                    cfg = cfg.with_memory(MemoryConfig::with_l1(geom));
+                }
+                for fault in [None, Some(&plan)] {
+                    let label = format!(
+                        "{} {sms}sm cached={cached} fault={}",
+                        id.name(),
+                        fault.is_some()
+                    );
+                    let (vi, vc, vs) = run_engine(&w, cfg, EngineMode::Vector, fault);
+                    let (si, sc, ss) = run_engine(&w, cfg, EngineMode::Scalar, fault);
+                    assert_eq!(vi, si, "{label}: memory images diverge");
+                    assert_eq!(vc, sc, "{label}: cycle counts diverge");
+                    assert_eq!(
+                        comparable(vs.clone()),
+                        comparable(ss.clone()),
+                        "{label}: stats diverge"
+                    );
+                    assert_eq!(ss.batched_uops, 0, "{label}: scalar engine batched");
+                    if fault.is_none() {
+                        // Every benchmark issues at least its uniform
+                        // prologue (S2R/address math) down the batch path.
+                        assert!(vs.batched_uops > 0, "{label}: vector engine never batched");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn uniform_benchmarks_batch_nearly_everything() {
+    // vecadd at a warp-multiple size has no divergence and no guards
+    // outside EXIT: the batch rate must dominate.
+    let w = kernels::prepare(BenchId::VecAdd, 64, 7);
+    let (_, _, stats) = run_engine(&w, GpgpuConfig::new(1, 8), EngineMode::Vector, None);
+    assert!(
+        stats.batched_uop_pct() > 80.0,
+        "vecadd batched only {:.1}% of issues",
+        stats.batched_uop_pct()
+    );
+    assert!((stats.lane_occupancy() - 1.0).abs() < 1e-12, "vecadd is fully uniform");
+}
+
+#[test]
+fn default_options_run_the_vector_engine() {
+    // RunOptions::default() must inherit the device default (Vector) —
+    // the perf win ships on, not behind a flag.
+    let w = kernels::prepare(BenchId::VecAdd, 32, 1);
+    let gpgpu = Gpgpu::new(GpgpuConfig::new(1, 8));
+    let mut g = w.make_gmem();
+    let run = w.run(&gpgpu, &mut g, RunOptions::default()).unwrap();
+    assert!(run.stats.batched_uops > 0);
+    w.verify(&g).expect("default run verifies");
+}
+
+// --------------------------------------------------------------------
+// Randomized divergence/guard sweep: structured programs with nested
+// SSY/BRA/JOIN regions, predicated ops and divergent EXITs, run on both
+// engines through `Sm::run` directly (one warp, 32 threads). Divergent
+// regions force the scalar fallback; reconverged stretches re-enter the
+// batch path — the switch itself is what this exercises.
+// --------------------------------------------------------------------
+
+const DATA_REGS: [u8; 5] = [1, 2, 3, 4, 5];
+const OUT_BASE: u32 = 0x1000;
+
+struct Gen {
+    rng: XorShift64,
+    src: String,
+    label: u32,
+}
+
+impl Gen {
+    fn fresh(&mut self) -> String {
+        self.label += 1;
+        format!("L{}", self.label)
+    }
+
+    fn alu(&mut self) {
+        let ops = ["IADD", "ISUB", "IMUL", "AND", "OR", "XOR", "IMIN", "IMAX", "SHL", "SHR"];
+        let op = ops[self.rng.below(ops.len() as u64) as usize];
+        let d = DATA_REGS[self.rng.below(5) as usize];
+        let a = DATA_REGS[self.rng.below(5) as usize];
+        if self.rng.bool() {
+            let imm = self.rng.range(-64, 64);
+            self.src.push_str(&format!("    {op} R{d}, R{a}, #{imm}\n"));
+        } else {
+            let b = DATA_REGS[self.rng.below(5) as usize];
+            self.src.push_str(&format!("    {op} R{d}, R{a}, R{b}\n"));
+        }
+    }
+
+    fn setp(&mut self) {
+        let a = DATA_REGS[self.rng.below(5) as usize];
+        let imm = self.rng.range(-32, 32);
+        self.src.push_str(&format!("    ISETP P0, R{a}, #{imm}\n"));
+    }
+
+    fn guarded_alu(&mut self) {
+        self.setp();
+        let conds = ["LT", "GE", "EQ", "NE", "GT", "LE"];
+        let c = conds[self.rng.below(6) as usize];
+        let d = DATA_REGS[self.rng.below(5) as usize];
+        self.src.push_str(&format!("    @P0.{c} IADD R{d}, R{d}, #1\n"));
+    }
+
+    fn if_else(&mut self, depth: u32) {
+        let (then_l, end_l) = (self.fresh(), self.fresh());
+        self.setp();
+        let conds = ["LT", "GE", "EQ", "NE", "GT", "LE"];
+        let c = conds[self.rng.below(6) as usize];
+        self.src.push_str(&format!("    SSY {end_l}\n"));
+        self.src.push_str(&format!("    @P0.{c} BRA {then_l}\n"));
+        self.body(depth);
+        self.src.push_str("    JOIN\n");
+        self.src.push_str(&format!("{then_l}:\n"));
+        self.body(depth);
+        self.src.push_str("    JOIN\n");
+        self.src.push_str(&format!("{end_l}:\n"));
+    }
+
+    fn body(&mut self, depth: u32) {
+        let n = 1 + self.rng.below(4);
+        for _ in 0..n {
+            match self.rng.below(if depth < 2 { 8 } else { 6 }) {
+                0..=3 => self.alu(),
+                4 | 5 => self.guarded_alu(),
+                _ => self.if_else(depth + 1),
+            }
+        }
+    }
+
+    fn finish(mut self) -> String {
+        self.src.push_str("    SHL R8, R0, #5\n");
+        self.src.push_str(&format!("    IADD R8, R8, #{OUT_BASE}\n"));
+        for (i, r) in DATA_REGS.iter().enumerate() {
+            self.src.push_str(&format!("    GST [R8+{}], R{r}\n", i * 4));
+        }
+        self.src.push_str("    EXIT\n");
+        self.src
+    }
+}
+
+fn random_program(seed: u64) -> String {
+    let mut g = Gen {
+        rng: XorShift64::new(seed),
+        src: String::from(
+            ".regs 12\n    IADD R1, R0, #3\n    IMUL R2, R0, R0\n    ISUB R3, R0, #7\n    MOV R4, #100\n    XOR R5, R0, #0x55\n",
+        ),
+        label: 0,
+    };
+    g.body(0);
+    g.finish()
+}
+
+fn sm_run(kernel: &flexgrip::asm::Kernel, engine: EngineMode) -> (Vec<i32>, SmStats) {
+    let pre = PreDecoded::from_kernel(kernel);
+    let sm = Sm::new(SmConfig::baseline().with_engine(engine), 0);
+    let mut gmem = GlobalMem::new(OUT_BASE + 32 * 32 + 64);
+    let blocks = [BlockDesc { ctaid_x: 0, ctaid_y: 0, nctaid_x: 1, nctaid_y: 1, ntid: 32 }];
+    let mut alu = NativeAlu;
+    let launch = SmLaunch {
+        pre: &pre,
+        regs_per_thread: kernel.regs_per_thread,
+        smem_bytes: 0,
+        params: &[],
+        blocks: &blocks,
+        max_resident: 8,
+        fault: None,
+    };
+    let stats = sm.run(&launch, &mut gmem, &mut alu).expect("random program runs");
+    (image(&gmem), stats)
+}
+
+#[test]
+fn random_divergent_programs_agree_across_engines() {
+    let mut fell_back = 0u32;
+    let mut batched = 0u32;
+    for seed in 0..200u64 {
+        let src = random_program(seed ^ 0x51D0_u64);
+        let kernel = assemble(&src).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{src}"));
+        let (vi, vs) = sm_run(&kernel, EngineMode::Vector);
+        let (si, ss) = sm_run(&kernel, EngineMode::Scalar);
+        assert_eq!(vi, si, "seed {seed}: memory images diverge\n{src}");
+        assert_eq!(
+            comparable(vs.clone()),
+            comparable(ss),
+            "seed {seed}: stats diverge\n{src}"
+        );
+        if vs.batched_uops > 0 {
+            batched += 1;
+        }
+        if vs.batched_uops < vs.instructions {
+            fell_back += 1;
+        }
+    }
+    // The sweep must genuinely exercise both paths, not degenerate into
+    // all-uniform or all-divergent programs.
+    assert!(batched > 150, "only {batched}/200 programs hit the batch path");
+    assert!(fell_back > 150, "only {fell_back}/200 programs hit the scalar fallback");
+}

@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Cross-run bench regression gate (CI `bench-regression` job).
+
+Diffs the current run's BENCH_hot_path.json (and optionally
+BENCH_scaling.json) against the artifacts of the previous successful CI
+run on main:
+
+* **hot path** — per-benchmark simulated warp-instructions/sec. A drop
+  larger than --threshold (default 10%) FAILS the job: this is the
+  wall-clock metric the SIMD engine work is gated on, measured on the
+  same runner class back to back.
+* **scaling** — per-(bench, label) simulated cycles. Deviations are
+  reported as WARNINGS only: sim_cycles is deterministic, so a change is
+  always a deliberate timing-model edit, not a perf regression — the
+  gate surfaces it for the reviewer without blocking model evolution.
+
+Warn-only (exit 0) when no baseline artifact exists (first run, expired
+retention, artifact renamed) or when the fast-mode flags differ — those
+numbers are not comparable.
+
+Stdlib only; the shapes parsed here are pinned by the Rust emitters'
+unit tests (`harness/hotpath.rs`, `harness/scaling.rs`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: str | Path):
+    """Parse a JSON report; None when the file is absent or malformed."""
+    p = Path(path)
+    if not p.is_file():
+        return None
+    try:
+        return json.loads(p.read_text())
+    except (json.JSONDecodeError, OSError):
+        return None
+
+
+def diff_hot_path(current: dict, baseline: dict, threshold: float):
+    """Compare per-bench instrs_per_sec. Returns (failures, warnings)."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    if current.get("fast") != baseline.get("fast"):
+        warnings.append(
+            "hot_path: fast-mode flags differ "
+            f"(current={current.get('fast')}, baseline={baseline.get('fast')}) "
+            "- throughput not comparable, skipping"
+        )
+        return failures, warnings
+    base_by_bench = {p["bench"]: p for p in baseline.get("points", [])}
+    for point in current.get("points", []):
+        bench = point["bench"]
+        base = base_by_bench.get(bench)
+        if base is None:
+            warnings.append(f"hot_path: no baseline point for '{bench}' - skipping")
+            continue
+        cur_ips, base_ips = point["instrs_per_sec"], base["instrs_per_sec"]
+        if base_ips <= 0:
+            warnings.append(f"hot_path: baseline for '{bench}' is zero - skipping")
+            continue
+        delta = (cur_ips - base_ips) / base_ips
+        line = (
+            f"hot_path: {bench:<12} {base_ips / 1e6:8.2f} -> {cur_ips / 1e6:8.2f} "
+            f"M warp-instrs/s ({delta:+.1%})"
+        )
+        if delta < -threshold:
+            failures.append(line + f"  [> {threshold:.0%} regression]")
+        else:
+            print("  " + line)
+    for bench in base_by_bench:
+        if bench not in {p["bench"] for p in current.get("points", [])}:
+            warnings.append(f"hot_path: benchmark '{bench}' vanished from the report")
+    return failures, warnings
+
+
+def diff_scaling(current: list, baseline: list, threshold: float):
+    """Compare per-(bench, label) sim_cycles. Returns warnings only."""
+    warnings: list[str] = []
+    base_points = {
+        (r["bench"], p["label"]): p["sim_cycles"]
+        for r in baseline
+        for p in r.get("points", [])
+    }
+    for report in current:
+        for point in report.get("points", []):
+            key = (report["bench"], point["label"])
+            base_cycles = base_points.get(key)
+            if base_cycles is None or base_cycles == 0:
+                continue
+            delta = (point["sim_cycles"] - base_cycles) / base_cycles
+            if abs(delta) > threshold:
+                warnings.append(
+                    f"scaling: {key[0]}/{key[1]} sim_cycles "
+                    f"{base_cycles} -> {point['sim_cycles']} ({delta:+.1%}) "
+                    "- deliberate timing-model change?"
+                )
+    return warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True, help="this run's BENCH_hot_path.json")
+    ap.add_argument("--baseline", required=True, help="previous run's BENCH_hot_path.json")
+    ap.add_argument("--scaling-current", help="this run's BENCH_scaling.json")
+    ap.add_argument("--scaling-baseline", help="previous run's BENCH_scaling.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="fractional warp-instrs/sec drop that fails the gate (default 0.10)",
+    )
+    args = ap.parse_args(argv)
+
+    current = load(args.current)
+    if current is None:
+        print(f"ERROR: current report {args.current} missing or unreadable")
+        return 1
+    baseline = load(args.baseline)
+    if baseline is None:
+        print(
+            f"WARN: no baseline at {args.baseline} "
+            "(first run / expired artifact) - gate passes vacuously"
+        )
+        return 0
+
+    failures, warnings = diff_hot_path(current, baseline, args.threshold)
+
+    if args.scaling_current and args.scaling_baseline:
+        scur, sbase = load(args.scaling_current), load(args.scaling_baseline)
+        if scur is not None and sbase is not None:
+            warnings += diff_scaling(scur, sbase, args.threshold)
+        else:
+            warnings.append("scaling: report missing on one side - skipping")
+
+    for w in warnings:
+        print(f"WARN: {w}")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        print(f"bench_diff: {len(failures)} regression(s) beyond {args.threshold:.0%}")
+        return 1
+    print("bench_diff: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
