@@ -73,6 +73,97 @@ def test_scaling_cycle_shift_warns_not_fails():
     assert "timing-model" in warnings[0]
 
 
+def qpt(scenario, mode, mix, spill_rate=0.0, p95=1000):
+    return {
+        "scenario": scenario,
+        "mode": mode,
+        "mix": mix,
+        "jobs": 6,
+        "completed": 6,
+        "shed": 0,
+        "spill_rate": spill_rate,
+        "spilled": 0,
+        "tie_broken": 0,
+        "scale_ups": 0,
+        "scale_downs": 0,
+        "p50_wait_ns": p95 // 2,
+        "p95_wait_ns": p95,
+    }
+
+
+def qos(points):
+    return {"n": 32, "jobs_per_point": 6, "seed": 7, "points": points}
+
+
+def test_qos_wait_regression_warns_not_fails():
+    cur = qos([qpt("homogeneous", "qos", "latency", p95=2000)])
+    base = qos([qpt("homogeneous", "qos", "latency", p95=1000)])
+    failures, warnings = bench_diff.diff_qos(cur, base, 0.25)
+    assert failures == []
+    assert len(warnings) == 1
+    assert "p95 queue wait" in warnings[0]
+
+
+def test_qos_sick_fleet_spill_increase_fails():
+    cur = qos([qpt("sick-fleet", "qos", "besteffort", spill_rate=0.25)])
+    base = qos([qpt("sick-fleet", "qos", "besteffort", spill_rate=0.0)])
+    failures, _ = bench_diff.diff_qos(cur, base, 0.25)
+    assert len(failures) == 1
+    assert "sick-fleet" in failures[0]
+
+
+def test_qos_spill_epsilon_and_static_mode_do_not_fail():
+    # Sub-epsilon wiggle on the gated point passes; the static-mode
+    # sick-fleet point is the documented-bad baseline and never fails.
+    cur = qos(
+        [
+            qpt("sick-fleet", "qos", "besteffort", spill_rate=0.01),
+            qpt("sick-fleet", "static", "besteffort", spill_rate=0.9),
+        ]
+    )
+    base = qos(
+        [
+            qpt("sick-fleet", "qos", "besteffort", spill_rate=0.0),
+            qpt("sick-fleet", "static", "besteffort", spill_rate=0.5),
+        ]
+    )
+    failures, warnings = bench_diff.diff_qos(cur, base, 0.25)
+    assert failures == []
+    assert warnings == []
+
+
+def test_qos_missing_baseline_point_warns():
+    cur = qos([qpt("elastic", "qos", "throughput")])
+    base = qos([])
+    failures, warnings = bench_diff.diff_qos(cur, base, 0.25)
+    assert failures == []
+    assert any("no baseline point" in w for w in warnings)
+
+
+def test_qos_end_to_end_failure_exit_code(tmp_path):
+    hot_cur = tmp_path / "hot_cur.json"
+    hot_base = tmp_path / "hot_base.json"
+    hot_cur.write_text(json.dumps(hot([pt("matmul", 1.0e6)])))
+    hot_base.write_text(json.dumps(hot([pt("matmul", 1.0e6)])))
+    qos_cur = tmp_path / "qos_cur.json"
+    qos_base = tmp_path / "qos_base.json"
+    qos_cur.write_text(json.dumps(qos([qpt("sick-fleet", "qos", "besteffort", spill_rate=0.5)])))
+    qos_base.write_text(json.dumps(qos([qpt("sick-fleet", "qos", "besteffort")])))
+    rc = bench_diff.main(
+        [
+            "--current",
+            str(hot_cur),
+            "--baseline",
+            str(hot_base),
+            "--qos-current",
+            str(qos_cur),
+            "--qos-baseline",
+            str(qos_base),
+        ]
+    )
+    assert rc == 1
+
+
 def test_missing_baseline_exits_zero(tmp_path):
     cur = tmp_path / "cur.json"
     cur.write_text(json.dumps(hot([pt("matmul", 1.0e6)])))

@@ -15,8 +15,17 @@
 //! the group — see `coordinator/queue.rs` for the protocol). `submit`
 //! computes the job's
 //! [`CapabilitySignature`] (profiled when registered, static otherwise)
-//! and **routes** it to the lowest-modeled-dynamic-power variant whose
-//! capabilities cover the signature, falling back to the most-capable
+//! and **routes** it through the QoS scorer in `coordinator/router.rs`:
+//! under light load the lowest-modeled-dynamic-power covering variant
+//! wins (bit-equal power ties spread round-robin instead of pinning);
+//! once that variant is pressured past the job's class-specific
+//! threshold, live signals — queue depth, in-flight jobs, shard health
+//! (quarantine state) — rescore every covering variant and the job
+//! *spills* to the best one. [`Request::qos`] tags a job with a
+//! [`QosClass`] (`Latency` / `Throughput` / `BestEffort`) that weights
+//! the score and gates admission: a deadline'd `Latency` submit sheds
+//! `Saturated` immediately when no healthy covering variant has queue
+//! slack. Uncovered signatures still fall back to the most-capable
 //! (baseline) variant — the paper's stored-bitstream scenario (§5.2) as
 //! a runtime scheduling concern. The routed signature travels with the
 //! job and the shard's launch admits on exactly that signature
@@ -24,7 +33,23 @@
 //! be re-rejected by the static one on the variant the router chose; a
 //! *lying* profile surfaces as the structured mid-run removed-unit or
 //! stack-overflow trap, failing only its own ticket. Backpressure applies
-//! per variant queue once `queue_depth` jobs are waiting.
+//! per variant queue once `queue_depth` jobs are waiting. Every
+//! admission decision lands in [`RoutingSnapshot`]
+//! (`GpgpuService::routing_stats()`): routed/spilled/tie-broken/shed per
+//! variant, elastic scale events, per-class p50/p95 queue wait.
+//!
+//! # Elastic capacity
+//!
+//! With [`FleetConfig::with_elastic`] a supervisor thread samples each
+//! variant's queue backlog every `sample_ms` and rebalances shard counts
+//! within `[min_shards, max_shards]`: sustained backlog spins up a
+//! parked shard slot (its worker thread starts on the spot), and a
+//! variant idle for `idle_samples` consecutive samples retires its
+//! highest-indexed live shard **drain-then-retire** — the retire flag
+//! stops intake at the worker's next poll, any job it already holds
+//! completes, and queued jobs remain for its siblings, so no ticket is
+//! ever lost to a scale-down. Queue shards are pre-sized to
+//! `max_shards`, so rebalancing never reallocates the queue.
 //!
 //! Kernel binaries reach the devices through the process-wide
 //! [`KernelRegistry`], so repeat launches of the same benchmark skip
@@ -67,9 +92,11 @@
 
 pub mod customize;
 pub mod queue;
+pub mod router;
 
 pub use customize::{analyze_kernel, profile, CustomizationReport};
-pub use queue::{PushError, ShardedQueue};
+pub use queue::{Popped, PushError, ShardedQueue};
+pub use router::{QosClass, RouterMode, RoutingSnapshot, VariantRouting, WaitQuantiles};
 
 use crate::asm::Kernel;
 use crate::gpgpu::{Gpgpu, GpgpuConfig, LaunchConfig, LaunchRequest};
@@ -78,10 +105,11 @@ use crate::kernels::{self, BenchId, RunOptions};
 use crate::model::{power::power, ArchParams};
 use crate::registry::{KernelRegistry, PreparedKernel};
 use crate::sim::{FaultPlan, GlobalMem, SimError, SmStats};
+use router::{RouteDecision, RouteKind, RoutingStats, VariantSignals};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -116,12 +144,33 @@ pub enum Request {
     /// the detection net for silent data-path SEU corruption that the
     /// parity-modeled checks cannot see.
     Dmr(Box<Request>),
+    /// Tag the inner request with a latency class for the QoS router
+    /// (see [`Request::qos`]). Untagged requests default to
+    /// [`QosClass::Throughput`].
+    Qos { class: QosClass, inner: Box<Request> },
 }
 
 impl Request {
     /// Wrap this request in dual-modular-redundancy mode.
     pub fn dmr(self) -> Request {
         Request::Dmr(Box::new(self))
+    }
+
+    /// Tag this request with a QoS latency class: `Latency` weighs queue
+    /// slack heavily (and sheds deadline'd submits when nothing healthy
+    /// has room), `Throughput` is the balanced default, `BestEffort`
+    /// rides the power-cheapest variant until it is nearly saturated.
+    pub fn qos(self, class: QosClass) -> Request {
+        Request::Qos { class, inner: Box::new(self) }
+    }
+}
+
+/// Peel `Qos` wrappers off a request (the outermost class wins; nesting
+/// through `Dmr` is resolved at execution, which ignores the tag).
+fn strip_qos(req: Request) -> (Request, QosClass) {
+    match req {
+        Request::Qos { class, inner } => (strip_qos(*inner).0, class),
+        other => (other, QosClass::default()),
     }
 }
 
@@ -308,6 +357,45 @@ impl RecoveryPolicy {
     }
 }
 
+/// Elastic rebalancing bounds and cadence ([`FleetConfig::with_elastic`]).
+/// Every variant's live shard count floats within
+/// `[min_shards, max_shards]`; its spec's `shards` is the starting point
+/// (clamped into the band).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticConfig {
+    /// Live-shard floor per variant (≥ 1 — a variant never loses its
+    /// last worker, so queued jobs always drain).
+    pub min_shards: u32,
+    /// Live-shard ceiling per variant; queue shards are pre-sized to
+    /// this, so scaling never reallocates.
+    pub max_shards: u32,
+    /// Supervisor sampling period, milliseconds.
+    pub sample_ms: u64,
+    /// Queued jobs per live shard that trigger a scale-up.
+    pub scale_up_backlog: f64,
+    /// Consecutive idle (zero queued, zero in-flight) samples before a
+    /// shard is retired.
+    pub idle_samples: u32,
+}
+
+impl ElasticConfig {
+    pub fn new(min_shards: u32, max_shards: u32) -> ElasticConfig {
+        let min_shards = min_shards.max(1);
+        ElasticConfig {
+            min_shards,
+            max_shards: max_shards.max(min_shards),
+            sample_ms: 5,
+            scale_up_backlog: 1.5,
+            idle_samples: 3,
+        }
+    }
+
+    pub fn with_sample_ms(mut self, ms: u64) -> ElasticConfig {
+        self.sample_ms = ms.max(1);
+        self
+    }
+}
+
 /// A heterogeneous fleet: customized variants + (normally) the baseline.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -319,6 +407,11 @@ pub struct FleetConfig {
     /// Fleet-wide per-launch cycle-budget override (default: the device
     /// watchdog).
     pub watchdog: Option<u64>,
+    /// Admission routing scheme (default: QoS scoring; `Static` keeps
+    /// the PR-3 power-only router as a measurable baseline).
+    pub mode: RouterMode,
+    /// Elastic rebalancing (default: off — shard counts are fixed).
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl FleetConfig {
@@ -330,6 +423,8 @@ impl FleetConfig {
             queue_depth: 64,
             policy: RecoveryPolicy::default(),
             watchdog: None,
+            mode: RouterMode::default(),
+            elastic: None,
         }
     }
 
@@ -356,6 +451,18 @@ impl FleetConfig {
 
     pub fn with_watchdog(mut self, cycles: u64) -> FleetConfig {
         self.watchdog = Some(cycles);
+        self
+    }
+
+    /// Select the admission routing scheme.
+    pub fn with_router(mut self, mode: RouterMode) -> FleetConfig {
+        self.mode = mode;
+        self
+    }
+
+    /// Enable the elastic rebalancer with the given bounds/cadence.
+    pub fn with_elastic(mut self, elastic: ElasticConfig) -> FleetConfig {
+        self.elastic = Some(elastic);
         self
     }
 }
@@ -438,29 +545,69 @@ impl MetricsSnapshot {
 struct Job {
     req: Request,
     sig: CapabilitySignature,
+    /// Latency class the router admitted the job under (per-class wait
+    /// accounting on dispatch).
+    class: QosClass,
     /// Executions already consumed.
     attempts: u32,
     /// Variant indices that already faulted this job (re-route excludes
     /// them while an untried covering variant remains).
     tried: Vec<usize>,
-    /// When this job entered (or re-entered) a queue — the shard that
-    /// dispatches it accumulates the elapsed wait into
-    /// [`Metrics::queue_wait_ns`].
+    /// When this job entered (or re-entered) a queue — stamped only once
+    /// a queue slot is reserved (`push_with`) and re-stamped on retry
+    /// re-admission, so the shard that dispatches it accumulates pure
+    /// queue residency into [`Metrics::queue_wait_ns`].
     enqueued_at: Instant,
     reply: mpsc::Sender<Result<JobOutput, ServiceError>>,
 }
 
-/// One running variant group: its queue, its shards' metrics and fault
-/// campaigns, and the routing key (modeled dynamic power).
+/// One shard position of a variant: its worker's metrics, health flags,
+/// and (optional) SEU campaign. Elastic fleets pre-allocate
+/// `max_shards` slots; `active` says whether a worker currently serves
+/// the slot.
+struct ShardSlot {
+    metrics: Arc<Metrics>,
+    /// Worker should keep taking jobs. Cleared by the rebalancer to
+    /// retire the shard (drain-then-retire: the worker finishes the job
+    /// it holds, leaves queued work to its siblings, and exits at its
+    /// next poll).
+    active: AtomicBool,
+    /// A worker thread currently occupies this slot (spawned and not yet
+    /// exited) — keeps a scale-up from doubling up on a slot whose
+    /// retiring worker has not finished leaving.
+    occupied: AtomicBool,
+    /// The worker is sitting out a quarantine — the router treats the
+    /// shard as unhealthy until it returns on probation.
+    quarantined: AtomicBool,
+    /// Deterministic SEU campaign (None = healthy hardware).
+    fault: Option<FaultPlan>,
+}
+
+/// One running variant group: its queue, its shard slots, live-capacity
+/// counters, and the routing key (modeled dynamic power).
 struct Variant {
     label: String,
     cfg: GpgpuConfig,
     dyn_w: f64,
-    /// Work-stealing submit queue: one deque per shard of this variant.
+    /// Work-stealing submit queue: one deque per shard slot.
     queue: ShardedQueue<Job>,
-    metrics: Vec<Arc<Metrics>>,
-    /// Per-local-shard SEU campaign (None = healthy).
-    faults: Vec<Option<FaultPlan>>,
+    slots: Vec<ShardSlot>,
+    /// Slots with a serving worker (≤ `slots.len()`).
+    live: AtomicUsize,
+    /// Jobs currently executing on this variant's shards.
+    inflight: AtomicUsize,
+    /// Global shard id of local slot 0 (ids are variant-major and stable
+    /// across rebalancing because slots are pre-allocated).
+    shard_base: u32,
+}
+
+impl Variant {
+    /// Live shards not sitting out a quarantine.
+    fn healthy(&self) -> usize {
+        let quarantined =
+            self.slots.iter().filter(|s| s.quarantined.load(Ordering::SeqCst)).count();
+        self.live.load(Ordering::SeqCst).saturating_sub(quarantined)
+    }
 }
 
 /// The fleet state shared between the service handle and every worker —
@@ -471,26 +618,54 @@ struct FleetInner {
     fallback: usize,
     policy: RecoveryPolicy,
     watchdog: Option<u64>,
+    mode: RouterMode,
+    /// Per-variant-queue capacity (the router's utilization denominator).
+    depth: usize,
+    routing: RoutingStats,
 }
 
 impl FleetInner {
-    /// Re-admit a faulted job: the cheapest covering variant it has not
-    /// faulted on yet, or back in place when every covering variant has
-    /// been tried. Retries bypass the depth limit *and* shutdown — a
-    /// worker must never block on a full queue (possibly its own) while
-    /// holding a job, and a re-admitted job's ticket must still resolve
-    /// even mid-drain.
-    fn readmit(&self, mut job: Job, from: usize) {
-        let target = self
-            .variants
+    /// Live router inputs for one job signature.
+    fn signals(&self, sig: &CapabilitySignature) -> Vec<VariantSignals> {
+        self.variants
             .iter()
-            .enumerate()
-            .filter(|(i, v)| !job.tried.contains(i) && v.cfg.sm.covers(&job.sig))
-            .min_by(|(_, a), (_, b)| {
-                a.dyn_w.partial_cmp(&b.dyn_w).expect("finite modeled power")
+            .map(|v| VariantSignals {
+                covers: v.cfg.sm.covers(sig),
+                dyn_w: v.dyn_w,
+                queued: v.queue.len(),
+                inflight: v.inflight.load(Ordering::SeqCst),
+                healthy: v.healthy(),
+                depth: self.depth,
             })
-            .map(|(i, _)| i)
-            .unwrap_or(from);
+            .collect()
+    }
+
+    fn decide(&self, class: QosClass, sig: &CapabilitySignature) -> RouteDecision {
+        router::decide(self.mode, class, &self.signals(sig), self.fallback, self.routing.rr())
+    }
+
+    /// Re-admit a faulted job: the cheapest covering variant it has not
+    /// faulted on yet — preferring one with a healthy shard, so a retry
+    /// does not queue behind the very quarantine that failed it — or
+    /// back in place when every covering variant has been tried. Retries
+    /// bypass the depth limit *and* shutdown — a worker must never block
+    /// on a full queue (possibly its own) while holding a job, and a
+    /// re-admitted job's ticket must still resolve even mid-drain.
+    fn readmit(&self, mut job: Job, from: usize) {
+        let pick = |healthy_only: bool| {
+            self.variants
+                .iter()
+                .enumerate()
+                .filter(|(i, v)| {
+                    !job.tried.contains(i)
+                        && v.cfg.sm.covers(&job.sig)
+                        && (!healthy_only || v.healthy() > 0)
+                })
+                .min_by(|(_, a), (_, b)| a.dyn_w.total_cmp(&b.dyn_w))
+                .map(|(i, _)| i)
+        };
+        let target = pick(true).or_else(|| pick(false)).unwrap_or(from);
+        // Re-stamp: the failed execution must not count as queue wait.
         job.enqueued_at = Instant::now();
         self.variants[target].queue.push_unbounded(job);
     }
@@ -500,12 +675,18 @@ impl FleetInner {
 pub struct GpgpuService {
     inner: Arc<FleetInner>,
     workers: Vec<JoinHandle<()>>,
+    /// Workers spawned by the elastic rebalancer after construction.
+    extra_workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// The rebalancer thread (elastic fleets only).
+    supervisor: Option<JoinHandle<()>>,
     /// Profile-refined signatures registered per benchmark (paper §4.1:
     /// representative-data profiling decides which bitstream suffices).
-    profiles: Mutex<HashMap<BenchId, CapabilitySignature>>,
+    /// `RwLock` (read-mostly), with explicit poison recovery: a panicked
+    /// writer must not brick every later submit.
+    profiles: RwLock<HashMap<BenchId, CapabilitySignature>>,
     /// The fallback (most capable) variant's device configuration.
     pub cfg: GpgpuConfig,
-    /// Aggregate pool shape (total shards across variants).
+    /// Aggregate pool shape (total shard slots across variants).
     pub pool: ServiceConfig,
 }
 
@@ -521,17 +702,37 @@ impl GpgpuService {
     }
 
     /// Start a heterogeneous fleet: one worker group per variant, jobs
-    /// routed by capability signature.
+    /// routed by capability signature + QoS score.
     pub fn start_fleet(fleet: FleetConfig) -> GpgpuService {
         assert!(!fleet.variants.is_empty(), "fleet needs at least one variant");
         let depth = fleet.queue_depth.max(1);
+        let elastic = fleet.elastic;
         let mut variants = Vec::with_capacity(fleet.variants.len());
+        let mut shard_base = 0u32;
         for spec in fleet.variants {
-            let shards = spec.shards.max(1) as usize;
-            let mut faults = vec![None; shards];
+            let spec_shards = spec.shards.max(1) as usize;
+            // Elastic fleets pre-allocate max_shards slots (queue shards
+            // included) and start with the spec's count clamped into the
+            // band; fixed fleets get exactly what the spec asked for.
+            let (initial, slot_count) = match &elastic {
+                Some(e) => (
+                    spec_shards.clamp(e.min_shards as usize, e.max_shards as usize),
+                    e.max_shards as usize,
+                ),
+                None => (spec_shards, spec_shards),
+            };
+            let mut slots: Vec<ShardSlot> = (0..slot_count)
+                .map(|i| ShardSlot {
+                    metrics: Arc::new(Metrics::default()),
+                    active: AtomicBool::new(i < initial),
+                    occupied: AtomicBool::new(false),
+                    quarantined: AtomicBool::new(false),
+                    fault: None,
+                })
+                .collect();
             if let Some((s, plan)) = spec.fault {
-                if let Some(slot) = faults.get_mut(s as usize) {
-                    *slot = Some(plan);
+                if let Some(slot) = slots.get_mut(s as usize) {
+                    slot.fault = Some(plan);
                 }
             }
             let dyn_w = power(&ArchParams::from_config(&spec.cfg)).dynamic_w;
@@ -539,10 +740,13 @@ impl GpgpuService {
                 label: spec.label,
                 cfg: spec.cfg,
                 dyn_w,
-                queue: ShardedQueue::new(shards, depth),
-                metrics: (0..shards).map(|_| Arc::new(Metrics::default())).collect(),
-                faults,
+                queue: ShardedQueue::new(slot_count, depth),
+                live: AtomicUsize::new(initial),
+                inflight: AtomicUsize::new(0),
+                shard_base,
+                slots,
             });
+            shard_base += slot_count as u32;
         }
         // Fallback: the most capable variant (multiplier before stack
         // depth before operand count) — "the full baseline device" in any
@@ -555,28 +759,41 @@ impl GpgpuService {
             })
             .map(|(i, _)| i)
             .expect("non-empty fleet");
+        let routing = RoutingStats::new(variants.len());
         let inner = Arc::new(FleetInner {
             variants,
             fallback,
             policy: fleet.policy,
             watchdog: fleet.watchdog,
+            mode: fleet.mode,
+            depth,
+            routing,
         });
         let mut workers = Vec::new();
-        let mut shard_base = 0u32;
-        for (vidx, v) in inner.variants.iter().enumerate() {
-            for local in 0..v.metrics.len() as u32 {
-                let fleet = inner.clone();
-                let metrics = v.metrics[local as usize].clone();
-                let shard = shard_base + local;
-                workers.push(std::thread::spawn(move || {
-                    shard_worker(&fleet, vidx, local, shard, &metrics);
-                }));
+        for vidx in 0..inner.variants.len() {
+            for local in 0..inner.variants[vidx].slots.len() {
+                if inner.variants[vidx].slots[local].active.load(Ordering::SeqCst) {
+                    workers.push(spawn_shard(&inner, vidx, local));
+                }
             }
-            shard_base += v.metrics.len() as u32;
         }
+        let extra_workers = Arc::new(Mutex::new(Vec::new()));
+        let supervisor = elastic.map(|e| {
+            let inner = inner.clone();
+            let extra = extra_workers.clone();
+            std::thread::spawn(move || rebalancer(&inner, e, &extra))
+        });
         let cfg = inner.variants[inner.fallback].cfg;
         let pool = ServiceConfig { shards: shard_base, queue_depth: depth };
-        GpgpuService { inner, workers, profiles: Mutex::new(HashMap::new()), cfg, pool }
+        GpgpuService {
+            inner,
+            workers,
+            extra_workers,
+            supervisor,
+            profiles: RwLock::new(HashMap::new()),
+            cfg,
+            pool,
+        }
     }
 
     /// Register a profile-refined signature for a benchmark (from
@@ -585,67 +802,80 @@ impl GpgpuService {
     /// conservative static ones — what lets autocorr land on a depth-16
     /// variant and matmul on a depth-0 one.
     pub fn register_profile(&self, id: BenchId, sig: CapabilitySignature) {
-        self.profiles.lock().expect("profiles poisoned").insert(id, sig);
+        // A writer that panicked mid-insert poisons the lock; the map is
+        // at worst missing that one entry (routing then falls back to the
+        // conservative static signature), so recover instead of
+        // propagating the poison to every later submit.
+        self.profiles
+            .write()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .insert(id, sig);
     }
 
     /// The signature the router admits a request on.
     fn job_signature(&self, req: &Request) -> CapabilitySignature {
         match req {
             Request::Bench { id, .. } => {
-                if let Some(sig) = self.profiles.lock().expect("profiles poisoned").get(id) {
+                let profiles =
+                    self.profiles.read().unwrap_or_else(|poisoned| poisoned.into_inner());
+                if let Some(sig) = profiles.get(id) {
                     return *sig;
                 }
+                drop(profiles);
                 KernelRegistry::global()
                     .get_or_assemble(id.source())
                     .expect("benchmark kernels must assemble")
                     .sig
             }
             Request::Kernel { kernel, .. } => kernel.signature(),
-            Request::Dmr(inner) => self.job_signature(inner),
+            Request::Dmr(inner) | Request::Qos { inner, .. } => self.job_signature(inner),
         }
     }
 
-    /// Route: the cheapest (lowest modeled dynamic power) variant whose
-    /// capabilities cover the signature; the most-capable variant if none
-    /// does (its own launch admission then reports the structured
-    /// `Unsupported` error if even the fallback cannot run the kernel).
-    fn route(&self, sig: &CapabilitySignature) -> usize {
-        self.inner
-            .variants
-            .iter()
-            .enumerate()
-            .filter(|(_, v)| v.cfg.sm.covers(sig))
-            .min_by(|(_, a), (_, b)| {
-                a.dyn_w.partial_cmp(&b.dyn_w).expect("finite modeled power")
-            })
-            .map(|(i, _)| i)
-            .unwrap_or(self.inner.fallback)
-    }
-
     fn enqueue(&self, req: Request, timeout: Option<Duration>) -> Result<JobTicket, ServiceError> {
+        let (req, class) = strip_qos(req);
         let sig = self.job_signature(&req);
-        let queue = &self.inner.variants[self.route(&sig)].queue;
+        let decision = self.inner.decide(class, &sig);
+        if decision.gated && class == QosClass::Latency && timeout.is_some() {
+            // Latency admission gate: every covering variant is saturated
+            // or unhealthy — shed now instead of burning the deadline
+            // blocked on a queue that cannot make timely progress.
+            self.inner.routing.record_shed(decision.target);
+            return Err(ServiceError::Saturated);
+        }
+        let queue = &self.inner.variants[decision.target].queue;
         let (reply_tx, reply_rx) = mpsc::channel();
         let deadline = timeout.map(|t| Instant::now() + t);
-        let job = Job {
+        let reply = reply_tx.clone();
+        // Deferred construction: `enqueued_at` is stamped only once a
+        // queue slot is reserved, so submit-side backpressure blocking
+        // never counts as queue residency (`Metrics::queue_wait_ns`).
+        let make = move || Job {
             req,
             sig,
+            class,
             attempts: 0,
             tried: Vec::new(),
             enqueued_at: Instant::now(),
-            reply: reply_tx,
+            reply,
         };
-        match queue.push(job, deadline) {
-            Ok(()) => Ok(JobTicket { rx: reply_rx }),
-            Err(PushError::Shutdown(job)) => {
+        match queue.push_with(make, deadline) {
+            Ok(()) => {
+                self.inner.routing.record_decision(decision.target, decision.kind);
+                Ok(JobTicket { rx: reply_rx })
+            }
+            Err(PushError::Shutdown(_)) => {
                 // Intake stopped before (or while) this submitter waited:
                 // resolve the ticket with a structured shutdown error
                 // instead of enqueueing into a closing queue (which could
                 // leave the ticket hanging after the shards exit).
-                let _ = job.reply.send(Err(ServiceError::Shutdown));
+                let _ = reply_tx.send(Err(ServiceError::Shutdown));
                 Ok(JobTicket { rx: reply_rx })
             }
-            Err(PushError::Timeout(_)) => Err(ServiceError::Saturated),
+            Err(PushError::Timeout(_)) => {
+                self.inner.routing.record_shed(decision.target);
+                Err(ServiceError::Saturated)
+            }
         }
     }
 
@@ -676,12 +906,13 @@ impl GpgpuService {
             .fold(MetricsSnapshot::default(), |acc, m| acc.merged(m))
     }
 
-    /// Per-shard metrics (index = global shard id, variant-major).
+    /// Per-shard metrics (index = global shard id, variant-major; elastic
+    /// fleets report every pre-allocated slot, parked ones all-zero).
     pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
         self.inner
             .variants
             .iter()
-            .flat_map(|v| v.metrics.iter().map(|m| m.snapshot()))
+            .flat_map(|v| v.slots.iter().map(|s| s.metrics.snapshot()))
             .collect()
     }
 
@@ -692,9 +923,11 @@ impl GpgpuService {
             .iter()
             .map(|v| {
                 let merged = v
-                    .metrics
+                    .slots
                     .iter()
-                    .fold(MetricsSnapshot::default(), |acc, m| acc.merged(&m.snapshot()));
+                    .fold(MetricsSnapshot::default(), |acc, s| {
+                        acc.merged(&s.metrics.snapshot())
+                    });
                 (v.label.clone(), merged)
             })
             .collect()
@@ -703,6 +936,32 @@ impl GpgpuService {
     /// (label, modeled dynamic power W) per variant — the routing order.
     pub fn variant_power(&self) -> Vec<(String, f64)> {
         self.inner.variants.iter().map(|v| (v.label.clone(), v.dyn_w)).collect()
+    }
+
+    /// Admission/rebalance observability: per-variant
+    /// routed/spilled/tie-broken/shed counts, elastic scale events, and
+    /// per-class queue-wait quantiles.
+    pub fn routing_stats(&self) -> RoutingSnapshot {
+        let labels: Vec<String> =
+            self.inner.variants.iter().map(|v| v.label.clone()).collect();
+        self.inner.routing.snapshot(&labels)
+    }
+
+    /// Per-variant capacity: (label, live shards, total slots). For
+    /// fixed fleets live == slots; elastic fleets float live within the
+    /// configured band.
+    pub fn variant_shards(&self) -> Vec<(String, u32, u32)> {
+        self.inner
+            .variants
+            .iter()
+            .map(|v| {
+                (
+                    v.label.clone(),
+                    v.live.load(Ordering::SeqCst) as u32,
+                    v.slots.len() as u32,
+                )
+            })
+            .collect()
     }
 
     /// Stop intake on every variant queue: already-queued jobs still
@@ -720,31 +979,131 @@ impl Drop for GpgpuService {
     fn drop(&mut self) {
         // Graceful shutdown: stop intake on every variant queue, let the
         // shards drain (every already-submitted ticket still resolves),
-        // then join.
+        // then join. The supervisor goes first — once it is down, no new
+        // workers can appear behind the drain of `extra_workers`.
         self.shutdown();
+        if let Some(supervisor) = self.supervisor.take() {
+            let _ = supervisor.join();
+        }
         for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let extras: Vec<JoinHandle<()>> = std::mem::take(
+            &mut *self.extra_workers.lock().unwrap_or_else(|poisoned| poisoned.into_inner()),
+        );
+        for w in extras {
             let _ = w.join();
         }
     }
 }
 
+/// Start a worker thread on `slots[local]` of variant `vidx`. Marks the
+/// slot occupied before the thread runs so a racing scale-up cannot
+/// double-book it.
+fn spawn_shard(inner: &Arc<FleetInner>, vidx: usize, local: usize) -> JoinHandle<()> {
+    inner.variants[vidx].slots[local].occupied.store(true, Ordering::SeqCst);
+    let fleet = inner.clone();
+    std::thread::spawn(move || {
+        shard_worker(&fleet, vidx, local);
+        fleet.variants[vidx].slots[local].occupied.store(false, Ordering::SeqCst);
+    })
+}
+
+/// The elastic rebalancer: samples every variant's backlog each
+/// `sample_ms` and floats live shard counts within
+/// `[min_shards, max_shards]`. Scale-up activates the first parked slot
+/// and spawns its worker; scale-down clears the highest live slot's
+/// `active` flag (drain-then-retire — the worker exits at its next poll,
+/// after finishing any job it holds). Exits once the fleet shuts down.
+fn rebalancer(inner: &Arc<FleetInner>, cfg: ElasticConfig, extra: &Mutex<Vec<JoinHandle<()>>>) {
+    let min = cfg.min_shards.max(1) as usize;
+    let mut idle = vec![0u32; inner.variants.len()];
+    loop {
+        std::thread::sleep(Duration::from_millis(cfg.sample_ms.max(1)));
+        if inner.variants.iter().any(|v| v.queue.is_shutdown()) {
+            return;
+        }
+        for (vidx, v) in inner.variants.iter().enumerate() {
+            let live = v.live.load(Ordering::SeqCst);
+            let queued = v.queue.len();
+            let inflight = v.inflight.load(Ordering::SeqCst);
+            let backlog = queued as f64 / live.max(1) as f64;
+            if backlog >= cfg.scale_up_backlog && live < v.slots.len() {
+                // A parked slot whose previous worker has fully exited
+                // (never double-book a slot mid-retirement).
+                let parked = v.slots.iter().position(|s| {
+                    !s.active.load(Ordering::SeqCst) && !s.occupied.load(Ordering::SeqCst)
+                });
+                if let Some(local) = parked {
+                    v.slots[local].active.store(true, Ordering::SeqCst);
+                    v.live.fetch_add(1, Ordering::SeqCst);
+                    let handle = spawn_shard(inner, vidx, local);
+                    extra
+                        .lock()
+                        .unwrap_or_else(|poisoned| poisoned.into_inner())
+                        .push(handle);
+                    inner.routing.scale_ups.fetch_add(1, Ordering::Relaxed);
+                }
+                idle[vidx] = 0;
+            } else if queued == 0 && inflight == 0 && live > min {
+                idle[vidx] += 1;
+                if idle[vidx] >= cfg.idle_samples {
+                    if let Some(local) =
+                        v.slots.iter().rposition(|s| s.active.load(Ordering::SeqCst))
+                    {
+                        v.slots[local].active.store(false, Ordering::SeqCst);
+                        v.live.fetch_sub(1, Ordering::SeqCst);
+                        inner.routing.scale_downs.fetch_add(1, Ordering::Relaxed);
+                    }
+                    idle[vidx] = 0;
+                }
+            } else {
+                idle[vidx] = 0;
+            }
+        }
+    }
+}
+
+/// How long a worker waits on an empty queue before re-checking its
+/// slot's retire flag — the upper bound on how stale a scale-down is.
+const WORKER_POLL: Duration = Duration::from_millis(20);
+
+/// Quarantine sleeps are sliced so a shutdown (or service drop) during a
+/// long quarantine resolves within one slice, not `quarantine_ms`.
+const QUARANTINE_SLICE: Duration = Duration::from_millis(10);
+
 /// One shard: owns a device, pulls jobs from its variant's queue until
-/// shutdown + empty queue, and tracks its own health (consecutive-fault
-/// quarantine with probation-based reinstatement).
-fn shard_worker(fleet: &FleetInner, vidx: usize, local: u32, shard: u32, metrics: &Metrics) {
+/// retired or shut down + drained, and tracks its own health
+/// (consecutive-fault quarantine with probation-based reinstatement,
+/// published to the router through the slot's `quarantined` flag).
+fn shard_worker(fleet: &FleetInner, vidx: usize, local: usize) {
     let v = &fleet.variants[vidx];
+    let slot = &v.slots[local];
+    let metrics = &slot.metrics;
+    let shard = v.shard_base + local as u32;
     let gpgpu = Gpgpu::new(v.cfg);
-    let base_fault = v.faults[local as usize];
+    let base_fault = slot.fault;
     let mut fault_nonce = 0u64;
     let mut consecutive = 0u32;
     let mut probation = false;
     loop {
-        // Own deque first, then steal from sibling shards; blocks while
-        // the group is live and returns None on shutdown + drained.
-        let Some(mut job) = v.queue.pop(local as usize) else { break };
-        metrics
-            .queue_wait_ns
-            .fetch_add(job.enqueued_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // Drain-then-retire: a cleared `active` flag stops intake here —
+        // queued jobs stay for the siblings, the job just finished (if
+        // any) already resolved its ticket.
+        if !slot.active.load(Ordering::SeqCst) {
+            break;
+        }
+        // Own deque first, then steal from sibling shards; bounded wait
+        // so the retire flag is honored even while the queue is idle.
+        let mut job = match v.queue.try_pop_for(local, WORKER_POLL) {
+            Popped::Item(job) => job,
+            Popped::Empty => continue,
+            Popped::Closed => break,
+        };
+        v.inflight.fetch_add(1, Ordering::SeqCst);
+        let wait_ns = job.enqueued_at.elapsed().as_nanos() as u64;
+        metrics.queue_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
+        fleet.routing.record_wait(job.class, wait_ns);
         job.attempts += 1;
         // A panicking job (e.g. a malformed Bench size tripping an assert
         // in kernels::prepare) must fail its own ticket, not kill the
@@ -771,6 +1130,7 @@ fn shard_worker(fleet: &FleetInner, vidx: usize, local: u32, shard: u32, metrics
                 .unwrap_or_else(|| "unknown panic".to_string());
             Err(ServiceError::Panic(msg))
         });
+        v.inflight.fetch_sub(1, Ordering::SeqCst);
         match result {
             Ok(mut out) => {
                 out.attempts = job.attempts;
@@ -804,9 +1164,22 @@ fn shard_worker(fleet: &FleetInner, vidx: usize, local: u32, shard: u32, metrics
                     if probation || consecutive >= fleet.policy.quarantine_after {
                         // Quarantine: sit out while healthy peers absorb
                         // the queue, then return on probation (one more
-                        // fault re-quarantines immediately).
+                        // fault re-quarantines immediately). The slot's
+                        // `quarantined` flag steers the QoS router away
+                        // for the duration; the sleep is sliced so
+                        // shutdown mid-quarantine resolves promptly.
                         metrics.quarantines.fetch_add(1, Ordering::Relaxed);
-                        std::thread::sleep(Duration::from_millis(fleet.policy.quarantine_ms));
+                        slot.quarantined.store(true, Ordering::SeqCst);
+                        let until =
+                            Instant::now() + Duration::from_millis(fleet.policy.quarantine_ms);
+                        loop {
+                            let remaining = until.saturating_duration_since(Instant::now());
+                            if remaining.is_zero() || v.queue.is_shutdown() {
+                                break;
+                            }
+                            std::thread::sleep(remaining.min(QUARANTINE_SLICE));
+                        }
+                        slot.quarantined.store(false, Ordering::SeqCst);
                         consecutive = 0;
                         probation = true;
                         metrics.reinstatements.fetch_add(1, Ordering::Relaxed);
@@ -828,6 +1201,10 @@ fn execute(
     watchdog: Option<u64>,
     mut fault: impl FnMut() -> Option<FaultPlan>,
 ) -> Result<JobOutput, ServiceError> {
+    if let Request::Qos { inner, .. } = req {
+        // The class was consumed at admission; execution ignores it.
+        return execute(gpgpu, shard, variant, inner, sig, watchdog, fault);
+    }
     if let Request::Dmr(inner) = req {
         let a = run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog)?;
         let b = run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog)?;
@@ -934,6 +1311,48 @@ fn run_one(
                 attempts: 1,
             })
         }
-        Request::Dmr(inner) => run_one(gpgpu, shard, variant, inner, sig, fault, watchdog),
+        Request::Dmr(inner) | Request::Qos { inner, .. } => {
+            run_one(gpgpu, shard, variant, inner, sig, fault, watchdog)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_qos_takes_the_outermost_class() {
+        let req = Request::Bench { id: BenchId::VecAdd, n: 16, seed: 1 }
+            .qos(QosClass::BestEffort)
+            .qos(QosClass::Latency);
+        let (inner, class) = strip_qos(req);
+        assert_eq!(class, QosClass::Latency);
+        assert!(matches!(inner, Request::Bench { .. }));
+        let (_, class) = strip_qos(Request::Bench { id: BenchId::VecAdd, n: 16, seed: 1 });
+        assert_eq!(class, QosClass::Throughput, "untagged default");
+    }
+
+    #[test]
+    fn poisoned_profile_lock_recovers_instead_of_bricking_submits() {
+        let svc = Arc::new(GpgpuService::start(GpgpuConfig::default()));
+        // Poison the profiles lock: a thread panics while holding the
+        // write guard (the failure mode of a profiling writer dying
+        // mid-registration).
+        let svc2 = svc.clone();
+        let poisoner = std::thread::spawn(move || {
+            let _guard = svc2.profiles.write().unwrap();
+            panic!("profiling writer dies while holding the lock");
+        });
+        assert!(poisoner.join().is_err(), "the poisoner must panic");
+        assert!(svc.profiles.is_poisoned(), "the lock must actually be poisoned");
+        // Registration and submission must both recover.
+        let report = customize::profile(BenchId::VecAdd, 16, 3).expect("profiling runs");
+        svc.register_profile(BenchId::VecAdd, report.refined_signature());
+        let out = svc
+            .submit(Request::Bench { id: BenchId::VecAdd, n: 16, seed: 3 })
+            .wait()
+            .expect("submit must survive a poisoned profiles lock");
+        assert!(out.verified);
     }
 }

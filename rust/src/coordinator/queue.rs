@@ -36,19 +36,45 @@
 //! [`ShardedQueue::push_unbounded`] bypasses both depth and shutdown for
 //! the coordinator's retry re-admission — a worker must never block or
 //! drop a job it is holding.
+//!
+//! Two QoS-era entry points sit beside `push`/`pop` with the same
+//! protocol: [`ShardedQueue::push_with`] defers item construction until
+//! a slot is reserved (so an enqueue timestamp measures queue residency,
+//! not submit-side blocking), and [`ShardedQueue::try_pop_for`] is a
+//! deadline'd pop that lets an elastic worker notice a retire flag while
+//! its queue is idle.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// Why a bounded push did not enqueue; the item comes back to the caller.
+/// Why a bounded push did not enqueue; the item (or, for
+/// [`ShardedQueue::push_with`], the deferred constructor) comes back to
+/// the caller.
 #[derive(Debug)]
 pub enum PushError<T> {
     /// The queue shut down before a slot opened (or was already down).
     Shutdown(T),
     /// The deadline elapsed with the queue still full.
     Timeout(T),
+}
+
+/// Why a slot reservation failed (internal: `push`/`push_with` translate
+/// this into [`PushError`] with the payload attached).
+enum ReserveError {
+    Shutdown,
+    Timeout,
+}
+
+/// Outcome of a timed pop ([`ShardedQueue::try_pop_for`]).
+#[derive(Debug)]
+pub enum Popped<T> {
+    Item(T),
+    /// Still live, but nothing arrived within the timeout.
+    Empty,
+    /// Shut down *and* fully drained — the worker can exit.
+    Closed,
 }
 
 /// Bounded multi-producer multi-consumer queue, sharded into per-worker
@@ -105,15 +131,15 @@ impl<T> ShardedQueue<T> {
         self.not_empty.notify_one();
     }
 
-    /// Bounded push: blocks while the queue is at depth (until `deadline`
-    /// when one is given). Shutdown wins every race — a full queue that
-    /// shuts down hands the item back as [`PushError::Shutdown`] even if
-    /// the deadline expired in the same instant (matching the PR-5
-    /// single-queue semantics).
-    pub fn push(&self, item: T, deadline: Option<Instant>) -> Result<(), PushError<T>> {
+    /// Reserve one capacity slot, blocking while the queue is at depth
+    /// (until `deadline` when one is given). On `Ok` the caller *must*
+    /// publish exactly one item. Shutdown wins every race — a full queue
+    /// that shuts down resolves `Shutdown` even if the deadline expired
+    /// in the same instant (matching the PR-5 single-queue semantics).
+    fn reserve(&self, deadline: Option<Instant>) -> Result<(), ReserveError> {
         loop {
             if self.shutdown.load(Ordering::SeqCst) {
-                return Err(PushError::Shutdown(item));
+                return Err(ReserveError::Shutdown);
             }
             let cur = self.len.load(Ordering::SeqCst);
             if cur < self.depth {
@@ -123,7 +149,6 @@ impl<T> ShardedQueue<T> {
                     .compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
                     .is_ok()
                 {
-                    self.publish(item);
                     return Ok(());
                 }
                 continue; // lost the CAS race — re-read
@@ -132,7 +157,7 @@ impl<T> ShardedQueue<T> {
             // shutdown between our load and the lock must not be missed).
             let gate = self.gate.lock().expect("gate poisoned");
             if self.shutdown.load(Ordering::SeqCst) {
-                return Err(PushError::Shutdown(item));
+                return Err(ReserveError::Shutdown);
             }
             if self.len.load(Ordering::SeqCst) < self.depth {
                 continue; // drained while we took the gate — retry the CAS
@@ -144,7 +169,7 @@ impl<T> ShardedQueue<T> {
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
-                        return Err(PushError::Timeout(item));
+                        return Err(ReserveError::Timeout);
                     }
                     let (gate, timed_out) = self
                         .not_full
@@ -155,10 +180,43 @@ impl<T> ShardedQueue<T> {
                         && !self.shutdown.load(Ordering::SeqCst)
                         && self.len.load(Ordering::SeqCst) >= self.depth
                     {
-                        return Err(PushError::Timeout(item));
+                        return Err(ReserveError::Timeout);
                     }
                 }
             }
+        }
+    }
+
+    /// Bounded push: blocks while the queue is at depth (until `deadline`
+    /// when one is given). See [`ShardedQueue::push_with`] when the item
+    /// must be constructed only once a slot exists.
+    pub fn push(&self, item: T, deadline: Option<Instant>) -> Result<(), PushError<T>> {
+        match self.reserve(deadline) {
+            Ok(()) => {
+                self.publish(item);
+                Ok(())
+            }
+            Err(ReserveError::Shutdown) => Err(PushError::Shutdown(item)),
+            Err(ReserveError::Timeout) => Err(PushError::Timeout(item)),
+        }
+    }
+
+    /// Bounded push with deferred construction: `make` runs only *after*
+    /// a capacity slot is reserved, so anything it stamps (e.g. an
+    /// enqueue timestamp) reflects actual queue entry, not submit-side
+    /// backpressure blocking. On failure the unused constructor comes
+    /// back to the caller.
+    pub fn push_with<F>(&self, make: F, deadline: Option<Instant>) -> Result<(), PushError<F>>
+    where
+        F: FnOnce() -> T,
+    {
+        match self.reserve(deadline) {
+            Ok(()) => {
+                self.publish(make());
+                Ok(())
+            }
+            Err(ReserveError::Shutdown) => Err(PushError::Shutdown(make)),
+            Err(ReserveError::Timeout) => Err(PushError::Timeout(make)),
         }
     }
 
@@ -199,6 +257,50 @@ impl<T> ShardedQueue<T> {
                 return None;
             }
             drop(self.not_empty.wait(gate).expect("gate poisoned"));
+        }
+    }
+
+    /// [`ShardedQueue::pop`] with a patience bound: blocks at most
+    /// `timeout` before reporting [`Popped::Empty`]. Elastic workers poll
+    /// with this instead of `pop` so a retire flag flipped while the
+    /// queue is idle is noticed within one poll interval; `Closed` keeps
+    /// the drain-after-shutdown contract (`Item` until empty).
+    pub fn try_pop_for(&self, shard: usize, timeout: Duration) -> Popped<T> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            for i in 0..self.shards.len() {
+                let s = (shard + i) % self.shards.len();
+                let item = self.shards[s].lock().expect("shard poisoned").pop_front();
+                if let Some(item) = item {
+                    self.len.fetch_sub(1, Ordering::SeqCst);
+                    let _gate = self.gate.lock().expect("gate poisoned");
+                    self.not_full.notify_one();
+                    return Popped::Item(item);
+                }
+            }
+            let gate = self.gate.lock().expect("gate poisoned");
+            if self.len.load(Ordering::SeqCst) > 0 {
+                // Reserved-but-unpublished window — spin like `pop`, but
+                // bounded by the deadline.
+                drop(gate);
+                if Instant::now() >= deadline {
+                    return Popped::Empty;
+                }
+                std::thread::yield_now();
+                continue;
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::Empty;
+            }
+            drop(
+                self.not_empty
+                    .wait_timeout(gate, deadline - now)
+                    .expect("gate poisoned"),
+            );
         }
     }
 
@@ -317,6 +419,60 @@ mod tests {
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2]);
         assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn push_with_constructs_the_item_only_after_a_slot_opens() {
+        // The queue-wait bugfix contract: a submitter blocked on a full
+        // queue must not have its item (and its enqueue timestamp) built
+        // until capacity actually opens.
+        let q = Arc::new(ShardedQueue::new(1, 1));
+        q.push(Instant::now(), None).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push_with(Instant::now, None));
+        std::thread::sleep(Duration::from_millis(60));
+        let drained_at = Instant::now();
+        assert!(q.pop(0).is_some());
+        assert!(pusher.join().unwrap().is_ok(), "push_with succeeds once drained");
+        match q.pop(0) {
+            Some(stamped) => assert!(
+                stamped >= drained_at,
+                "item was constructed while the submitter was still blocked"
+            ),
+            None => panic!("the deferred item must be queued"),
+        }
+    }
+
+    #[test]
+    fn push_with_hands_the_constructor_back_on_shutdown() {
+        let q: ShardedQueue<i32> = ShardedQueue::new(1, 1);
+        q.push(1, None).unwrap();
+        q.shutdown();
+        match q.push_with(|| 2, None) {
+            Err(PushError::Shutdown(make)) => assert_eq!(make(), 2),
+            Err(PushError::Timeout(_)) => panic!("no deadline was set"),
+            Ok(()) => panic!("push into a shut-down queue must fail"),
+        }
+    }
+
+    #[test]
+    fn try_pop_for_reports_empty_then_item_then_closed() {
+        let q: ShardedQueue<i32> = ShardedQueue::new(2, 4);
+        assert!(matches!(q.try_pop_for(0, Duration::from_millis(5)), Popped::Empty));
+        q.push(7, None).unwrap();
+        // Steal path: home shard 1 may be dry, the item still arrives.
+        assert!(matches!(q.try_pop_for(1, Duration::from_millis(5)), Popped::Item(7)));
+        q.shutdown();
+        assert!(matches!(q.try_pop_for(0, Duration::from_millis(5)), Popped::Closed));
+    }
+
+    #[test]
+    fn try_pop_for_drains_queued_items_before_closing() {
+        let q: ShardedQueue<i32> = ShardedQueue::new(1, 4);
+        q.push(1, None).unwrap();
+        q.shutdown();
+        assert!(matches!(q.try_pop_for(0, Duration::from_millis(5)), Popped::Item(1)));
+        assert!(matches!(q.try_pop_for(0, Duration::from_millis(5)), Popped::Closed));
     }
 
     #[test]

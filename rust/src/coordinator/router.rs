@@ -1,0 +1,627 @@
+//! QoS-aware admission routing: the decision function and its
+//! observability counters.
+//!
+//! The PR-3 router picked the lowest-modeled-dynamic-power covering
+//! variant *statically* — it never consulted queue depth or in-flight
+//! work, so a saturated cheap variant shed `Saturated` while costlier
+//! covering variants sat idle, and equal-power ties pinned all traffic
+//! to the lower variant index. [`decide`] replaces it with a two-phase
+//! scheme over live signals ([`VariantSignals`]: queue depth, in-flight
+//! jobs, modeled dynamic power, shard health):
+//!
+//! 1. **Unpressured** (the common case): route exactly like the static
+//!    router — cheapest covering variant by modeled power — except that
+//!    bit-equal power ties spread **round-robin** instead of pinning,
+//!    and variants with zero healthy (live, non-quarantined) shards are
+//!    skipped while a healthy alternative exists. A fleet with one
+//!    covering variant short-circuits before any signal is read, so
+//!    homogeneous pools are bit-identical to the static path.
+//! 2. **Pressured**: once the preferred variant's utilization crosses
+//!    the job's class-specific spill threshold, every eligible variant
+//!    is rescored as `w_load · u/(1−u) + w_power · (P/P_min)` and the
+//!    cheapest *score* wins — an M/M/1-shaped congestion term against a
+//!    normalized power term, weighted per [`QosClass`].
+//!
+//! The class also gates admission: a `Latency` job whose every covering
+//! variant is saturated or unhealthy reports `gated`, which the
+//! coordinator turns into an immediate `Saturated` shed for deadline'd
+//! submits instead of burning the deadline blocked.
+//!
+//! Every decision lands in [`RoutingStats`] (lock-free atomics): routed
+//! vs spilled vs tie-broken per variant, sheds, elastic scale events,
+//! and per-class queue-wait histograms (log₂ buckets, geometric
+//! interpolation for p50/p95) surfaced as [`RoutingSnapshot`] through
+//! `GpgpuService::routing_stats()` / `service-demo` / `harness/qos.rs`.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Per-job latency class: how much the router values queue slack vs
+/// modeled power, and whether admission is gated when nothing healthy
+/// has room.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QosClass {
+    /// Interactive: spill early (threshold 0.5), weight congestion 8×
+    /// over power, and shed immediately on a deadline'd submit when no
+    /// healthy covering variant has queue slack.
+    Latency,
+    /// The default: balanced congestion/power weighting, spill at 0.75
+    /// utilization.
+    #[default]
+    Throughput,
+    /// Batch filler: stay on the cheapest variant until it is nearly
+    /// saturated (0.95) — power efficiency dominates.
+    BestEffort,
+}
+
+impl QosClass {
+    pub const ALL: [QosClass; 3] = [QosClass::Latency, QosClass::Throughput, QosClass::BestEffort];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Latency => "latency",
+            QosClass::Throughput => "throughput",
+            QosClass::BestEffort => "besteffort",
+        }
+    }
+
+    pub(crate) fn index(self) -> usize {
+        match self {
+            QosClass::Latency => 0,
+            QosClass::Throughput => 1,
+            QosClass::BestEffort => 2,
+        }
+    }
+
+    /// Signal weights (EXPERIMENTS.md §QoS carries the same table).
+    fn weights(self) -> Weights {
+        match self {
+            QosClass::Latency => Weights { load: 4.0, power: 0.5, spill_util: 0.5 },
+            QosClass::Throughput => Weights { load: 1.0, power: 1.0, spill_util: 0.75 },
+            QosClass::BestEffort => Weights { load: 0.25, power: 2.0, spill_util: 0.95 },
+        }
+    }
+}
+
+/// How the fleet routes jobs to variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterMode {
+    /// The PR-3 behavior, kept as a measurable baseline: cheapest
+    /// covering variant by modeled power, first index on ties, no load
+    /// or health signals.
+    Static,
+    /// QoS scoring over live signals (the default).
+    #[default]
+    Qos,
+}
+
+struct Weights {
+    load: f64,
+    power: f64,
+    /// Preferred-variant utilization at which the full rescore engages.
+    spill_util: f64,
+}
+
+/// One variant's live state as the router sees it.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct VariantSignals {
+    /// Capabilities cover the job's signature.
+    pub covers: bool,
+    /// Modeled dynamic power (W) — the static routing key.
+    pub dyn_w: f64,
+    /// Jobs waiting in the variant's queue.
+    pub queued: usize,
+    /// Jobs currently executing on the variant's shards.
+    pub inflight: usize,
+    /// Live shards not sitting out a quarantine.
+    pub healthy: usize,
+    /// The variant queue's capacity bound.
+    pub depth: usize,
+}
+
+impl VariantSignals {
+    /// Occupancy over total job slots (queue capacity + one executing
+    /// job per healthy shard). A variant with no healthy shard is fully
+    /// utilized by definition — queued work there waits on probation
+    /// timers, not on compute.
+    fn util(&self) -> f64 {
+        if self.healthy == 0 {
+            return 1.0;
+        }
+        let occ = (self.queued + self.inflight) as f64;
+        (occ / (self.depth + self.healthy) as f64).min(1.0)
+    }
+
+    /// Room for one more job without blocking the submitter.
+    fn slack(&self) -> bool {
+        self.healthy > 0 && self.queued + self.inflight < self.depth + self.healthy
+    }
+}
+
+/// How a routing decision diverged (or not) from the static choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum RouteKind {
+    /// Same variant the static router would pick.
+    Routed,
+    /// A bit-equal power tie resolved by the round-robin cursor.
+    TieBroken,
+    /// Load or health moved the job off the static choice.
+    Spilled,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RouteDecision {
+    pub target: usize,
+    pub kind: RouteKind,
+    /// No healthy covering variant had queue slack (meaningful for
+    /// `Latency`: the coordinator sheds deadline'd submits immediately).
+    pub gated: bool,
+}
+
+/// M/M/1-shaped congestion: u/(1−u), capped so a saturated variant is
+/// expensive but still finitely comparable.
+fn congestion(u: f64) -> f64 {
+    const CAP: f64 = 15.0;
+    if u >= CAP / (CAP + 1.0) {
+        CAP
+    } else {
+        u / (1.0 - u)
+    }
+}
+
+/// Pick the variant for one job. Pure over its inputs apart from the
+/// round-robin tie cursor `rr`; the coordinator owns signal collection
+/// and stats recording.
+pub(crate) fn decide(
+    mode: RouterMode,
+    class: QosClass,
+    signals: &[VariantSignals],
+    fallback: usize,
+    rr: &AtomicUsize,
+) -> RouteDecision {
+    let covering: Vec<usize> =
+        (0..signals.len()).filter(|&i| signals[i].covers).collect();
+    if covering.is_empty() {
+        // Nothing covers: the most-capable variant's own launch admission
+        // reports the structured `Unsupported` error.
+        return RouteDecision { target: fallback, kind: RouteKind::Routed, gated: false };
+    }
+    // The choice the PR-3 static router would make: cheapest modeled
+    // power, first index on bit-equal ties (`min_by` keeps the first
+    // minimum) — the baseline every decision is classified against.
+    let static_choice = *covering
+        .iter()
+        .min_by(|&&a, &&b| signals[a].dyn_w.total_cmp(&signals[b].dyn_w))
+        .expect("covering is non-empty");
+    if mode == RouterMode::Static || covering.len() == 1 {
+        // Static mode, or a single covering variant (every homogeneous
+        // pool): pure pass-through, no signals read, no tie to break.
+        return RouteDecision { target: static_choice, kind: RouteKind::Routed, gated: false };
+    }
+    let w = class.weights();
+    // Health (and, for Latency, slack) gate: skip variants that cannot
+    // make progress. If that empties the candidate set, fall back to all
+    // covering variants — routing somewhere beats routing nowhere — and
+    // report the gate so deadline'd Latency submits can shed instead.
+    let mut eligible: Vec<usize> = covering
+        .iter()
+        .copied()
+        .filter(|&i| {
+            signals[i].healthy > 0 && (class != QosClass::Latency || signals[i].slack())
+        })
+        .collect();
+    let gated = eligible.is_empty();
+    if gated {
+        eligible = covering.clone();
+    }
+    let min_w = eligible
+        .iter()
+        .map(|&i| signals[i].dyn_w)
+        .min_by(f64::total_cmp)
+        .expect("eligible is non-empty");
+    let ties: Vec<usize> = eligible
+        .iter()
+        .copied()
+        .filter(|&i| signals[i].dyn_w.total_cmp(&min_w) == std::cmp::Ordering::Equal)
+        .collect();
+    let pick = if ties.len() > 1 {
+        ties[rr.fetch_add(1, Ordering::Relaxed) % ties.len()]
+    } else {
+        ties[0]
+    };
+    // Spill phase: only once the preferred variant is pressured past the
+    // class threshold does load enter the score — below it, routing is
+    // exactly the static cheapest-power choice (plus RR on ties), which
+    // keeps light-load fleets deterministic and inside the Table-6
+    // energy envelope.
+    let mut target = pick;
+    let mut via_rescore = false;
+    if signals[pick].util() >= w.spill_util {
+        let score = |i: usize| {
+            w.load * congestion(signals[i].util()) + w.power * (signals[i].dyn_w / min_w)
+        };
+        let best = eligible
+            .iter()
+            .copied()
+            .min_by(|&a, &b| score(a).total_cmp(&score(b)))
+            .expect("eligible is non-empty");
+        if best != target {
+            target = best;
+            via_rescore = true;
+        }
+    }
+    let kind = if target == static_choice {
+        if ties.len() > 1 && !via_rescore {
+            RouteKind::TieBroken
+        } else {
+            RouteKind::Routed
+        }
+    } else if !via_rescore && ties.contains(&static_choice) {
+        // The static choice was in the tie set and the cursor went
+        // elsewhere — a tie-break, not a load spill.
+        RouteKind::TieBroken
+    } else {
+        RouteKind::Spilled
+    };
+    RouteDecision { target, kind, gated }
+}
+
+/// Number of log₂ wait buckets: bucket `i` holds waits in
+/// `[2^i, 2^{i+1})` ns (bucket 0 also catches 0), bucket 39 is the
+/// ~9-minute-plus overflow.
+const WAIT_BUCKETS: usize = 40;
+
+/// Per-class queue-wait histogram — log₂ buckets so recording is one
+/// atomic increment on the dispatch path.
+struct WaitHisto {
+    buckets: [AtomicU64; WAIT_BUCKETS],
+    count: AtomicU64,
+}
+
+impl WaitHisto {
+    fn new() -> WaitHisto {
+        WaitHisto {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, ns: u64) {
+        let b = (ns.max(1).ilog2() as usize).min(WAIT_BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn load(&self) -> ([u64; WAIT_BUCKETS], u64) {
+        (
+            std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            self.count.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Quantile from a log₂ histogram, geometrically interpolated within the
+/// landing bucket (so a p95 shift well under one bucket width is still
+/// visible to the bench-regression gate).
+fn quantile(buckets: &[u64; WAIT_BUCKETS], count: u64, q: f64) -> u64 {
+    if count == 0 {
+        return 0;
+    }
+    let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+    let mut cum = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        if b == 0 {
+            continue;
+        }
+        cum += b;
+        if cum >= target {
+            let lower = 1u64 << i;
+            let into = (target - (cum - b)) as f64 / b as f64; // (0, 1]
+            return (lower as f64 * 2f64.powf(into)) as u64;
+        }
+    }
+    1u64 << (WAIT_BUCKETS - 1)
+}
+
+struct VariantCounters {
+    routed: AtomicU64,
+    spilled: AtomicU64,
+    tie_broken: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// Lock-free admission/rebalance observability, owned by the fleet.
+pub(crate) struct RoutingStats {
+    variants: Vec<VariantCounters>,
+    pub(crate) scale_ups: AtomicU64,
+    pub(crate) scale_downs: AtomicU64,
+    waits: [WaitHisto; 3],
+    rr: AtomicUsize,
+}
+
+impl RoutingStats {
+    pub(crate) fn new(variants: usize) -> RoutingStats {
+        RoutingStats {
+            variants: (0..variants)
+                .map(|_| VariantCounters {
+                    routed: AtomicU64::new(0),
+                    spilled: AtomicU64::new(0),
+                    tie_broken: AtomicU64::new(0),
+                    shed: AtomicU64::new(0),
+                })
+                .collect(),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
+            waits: [WaitHisto::new(), WaitHisto::new(), WaitHisto::new()],
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub(crate) fn rr(&self) -> &AtomicUsize {
+        &self.rr
+    }
+
+    /// Count an *admitted* decision (sheds are recorded separately).
+    pub(crate) fn record_decision(&self, target: usize, kind: RouteKind) {
+        let c = &self.variants[target];
+        match kind {
+            RouteKind::Routed => c.routed.fetch_add(1, Ordering::Relaxed),
+            RouteKind::Spilled => c.spilled.fetch_add(1, Ordering::Relaxed),
+            RouteKind::TieBroken => c.tie_broken.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    /// Count a job shed as `Saturated` (admission gate or queue timeout)
+    /// against the variant it would have landed on.
+    pub(crate) fn record_shed(&self, target: usize) {
+        self.variants[target].shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one dispatched job's queue residency under its class.
+    pub(crate) fn record_wait(&self, class: QosClass, ns: u64) {
+        self.waits[class.index()].record(ns);
+    }
+
+    pub(crate) fn snapshot(&self, labels: &[String]) -> RoutingSnapshot {
+        let variants = labels
+            .iter()
+            .zip(&self.variants)
+            .map(|(label, c)| VariantRouting {
+                label: label.clone(),
+                routed: c.routed.load(Ordering::Relaxed),
+                spilled: c.spilled.load(Ordering::Relaxed),
+                tie_broken: c.tie_broken.load(Ordering::Relaxed),
+                shed: c.shed.load(Ordering::Relaxed),
+            })
+            .collect();
+        let mut merged = [0u64; WAIT_BUCKETS];
+        let mut merged_count = 0u64;
+        let classes = std::array::from_fn(|i| {
+            let (buckets, count) = self.waits[i].load();
+            for (m, b) in merged.iter_mut().zip(buckets.iter()) {
+                *m += b;
+            }
+            merged_count += count;
+            WaitQuantiles {
+                jobs: count,
+                p50_ns: quantile(&buckets, count, 0.50),
+                p95_ns: quantile(&buckets, count, 0.95),
+            }
+        });
+        RoutingSnapshot {
+            variants,
+            scale_ups: self.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.scale_downs.load(Ordering::Relaxed),
+            classes,
+            overall: WaitQuantiles {
+                jobs: merged_count,
+                p50_ns: quantile(&merged, merged_count, 0.50),
+                p95_ns: quantile(&merged, merged_count, 0.95),
+            },
+        }
+    }
+}
+
+/// Admission counters for one variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantRouting {
+    pub label: String,
+    /// Jobs admitted on the static-equivalent choice.
+    pub routed: u64,
+    /// Jobs moved off the static choice by load or health.
+    pub spilled: u64,
+    /// Jobs landed here by round-robin among bit-equal power ties.
+    pub tie_broken: u64,
+    /// Jobs shed as `Saturated` that were headed here.
+    pub shed: u64,
+}
+
+impl VariantRouting {
+    /// Total jobs admitted to this variant.
+    pub fn admitted(&self) -> u64 {
+        self.routed + self.spilled + self.tie_broken
+    }
+}
+
+/// Queue-wait quantiles for one latency class (or the merged fleet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WaitQuantiles {
+    pub jobs: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+}
+
+/// Point-in-time routing/rebalancing report
+/// (`GpgpuService::routing_stats()`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingSnapshot {
+    pub variants: Vec<VariantRouting>,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Indexed like [`QosClass::ALL`].
+    pub classes: [WaitQuantiles; 3],
+    pub overall: WaitQuantiles,
+}
+
+impl RoutingSnapshot {
+    pub fn class(&self, class: QosClass) -> WaitQuantiles {
+        self.classes[class.index()]
+    }
+
+    /// Fleet-wide spilled jobs.
+    pub fn spilled(&self) -> u64 {
+        self.variants.iter().map(|v| v.spilled).sum()
+    }
+
+    /// Fleet-wide tie-broken jobs.
+    pub fn tie_broken(&self) -> u64 {
+        self.variants.iter().map(|v| v.tie_broken).sum()
+    }
+
+    /// Fleet-wide sheds.
+    pub fn shed(&self) -> u64 {
+        self.variants.iter().map(|v| v.shed).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(dyn_w: f64) -> VariantSignals {
+        VariantSignals { covers: true, dyn_w, queued: 0, inflight: 0, healthy: 1, depth: 4 }
+    }
+
+    #[test]
+    fn single_covering_variant_is_pure_pass_through() {
+        let rr = AtomicUsize::new(0);
+        let mut sick = idle(1.0);
+        sick.healthy = 0; // even an unhealthy sole variant is the target
+        let d = decide(RouterMode::Qos, QosClass::Latency, &[sick], 0, &rr);
+        assert_eq!(d.target, 0);
+        assert_eq!(d.kind, RouteKind::Routed);
+        assert_eq!(rr.load(Ordering::Relaxed), 0, "no signal consulted");
+    }
+
+    #[test]
+    fn uncovered_signature_lands_on_the_fallback() {
+        let rr = AtomicUsize::new(0);
+        let mut s = idle(1.0);
+        s.covers = false;
+        let d = decide(RouterMode::Qos, QosClass::Throughput, &[s, s], 1, &rr);
+        assert_eq!(d.target, 1);
+    }
+
+    #[test]
+    fn static_mode_pins_the_first_minimum_on_ties() {
+        let rr = AtomicUsize::new(0);
+        let signals = [idle(1.0), idle(1.0)];
+        for _ in 0..8 {
+            let d = decide(RouterMode::Static, QosClass::Throughput, &signals, 0, &rr);
+            assert_eq!(d.target, 0, "static ties pin to the lower index");
+            assert_eq!(d.kind, RouteKind::Routed);
+        }
+    }
+
+    #[test]
+    fn qos_mode_spreads_bit_equal_ties_round_robin() {
+        let rr = AtomicUsize::new(0);
+        let signals = [idle(1.0), idle(1.0)];
+        let picks: Vec<usize> = (0..6)
+            .map(|_| {
+                let d = decide(RouterMode::Qos, QosClass::Throughput, &signals, 0, &rr);
+                assert_eq!(d.kind, RouteKind::TieBroken);
+                d.target
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn unhealthy_cheap_variant_spills_to_the_healthy_one() {
+        let rr = AtomicUsize::new(0);
+        let mut sick = idle(1.0);
+        sick.healthy = 0;
+        let healthy = idle(1.5);
+        let d = decide(RouterMode::Qos, QosClass::Throughput, &[sick, healthy], 1, &rr);
+        assert_eq!(d.target, 1);
+        assert_eq!(d.kind, RouteKind::Spilled);
+        assert!(!d.gated);
+    }
+
+    #[test]
+    fn saturated_cheap_variant_spills_to_the_idle_costlier_one() {
+        let rr = AtomicUsize::new(0);
+        let mut busy = idle(1.0);
+        busy.queued = 4; // depth 4, 1 healthy shard -> util 0.8
+        let d = decide(RouterMode::Qos, QosClass::Throughput, &[busy, idle(1.5)], 1, &rr);
+        assert_eq!(d.target, 1);
+        assert_eq!(d.kind, RouteKind::Spilled);
+    }
+
+    #[test]
+    fn besteffort_rides_the_cheap_variant_through_moderate_load() {
+        // Same pressure as above, but BestEffort's 0.95 spill threshold
+        // keeps it on the power-optimal variant where Latency leaves.
+        let rr = AtomicUsize::new(0);
+        let mut busy = idle(1.0);
+        busy.queued = 4;
+        let be = decide(RouterMode::Qos, QosClass::BestEffort, &[busy, idle(1.5)], 1, &rr);
+        assert_eq!(be.target, 0);
+        assert_eq!(be.kind, RouteKind::Routed);
+        let lat = decide(RouterMode::Qos, QosClass::Latency, &[busy, idle(1.5)], 1, &rr);
+        assert_eq!(lat.target, 1);
+    }
+
+    #[test]
+    fn latency_gate_reports_when_nothing_healthy_has_slack() {
+        let rr = AtomicUsize::new(0);
+        let mut full = idle(1.0);
+        full.queued = 4;
+        full.inflight = 1; // occupancy 5 == depth 4 + 1 healthy -> no slack
+        let d = decide(RouterMode::Qos, QosClass::Latency, &[full, full], 0, &rr);
+        assert!(d.gated);
+        // Throughput only gates on health, not slack.
+        let d = decide(RouterMode::Qos, QosClass::Throughput, &[full, full], 0, &rr);
+        assert!(!d.gated);
+    }
+
+    #[test]
+    fn wait_histogram_quantiles_interpolate_geometrically() {
+        let stats = RoutingStats::new(1);
+        for _ in 0..90 {
+            stats.record_wait(QosClass::Throughput, 1_000);
+        }
+        for _ in 0..10 {
+            stats.record_wait(QosClass::Throughput, 1_000_000);
+        }
+        let snap = stats.snapshot(&["v".to_string()]);
+        let q = snap.class(QosClass::Throughput);
+        assert_eq!(q.jobs, 100);
+        // p50 lands in the 1000ns bucket [512, 1024), p95 in the 1M
+        // bucket [2^19, 2^20); geometric interpolation keeps both inside.
+        assert!((512..2048).contains(&q.p50_ns), "p50 {} out of bucket", q.p50_ns);
+        assert!((524_288..2_097_152).contains(&q.p95_ns), "p95 {} out of bucket", q.p95_ns);
+        assert!(q.p95_ns > q.p50_ns);
+        assert_eq!(snap.overall.jobs, 100);
+        assert_eq!(snap.class(QosClass::Latency).jobs, 0);
+    }
+
+    #[test]
+    fn decision_counters_split_by_kind() {
+        let stats = RoutingStats::new(2);
+        stats.record_decision(0, RouteKind::Routed);
+        stats.record_decision(0, RouteKind::Routed);
+        stats.record_decision(1, RouteKind::Spilled);
+        stats.record_decision(1, RouteKind::TieBroken);
+        stats.record_shed(0);
+        let snap = stats.snapshot(&["a".to_string(), "b".to_string()]);
+        assert_eq!(snap.variants[0].routed, 2);
+        assert_eq!(snap.variants[0].shed, 1);
+        assert_eq!(snap.variants[1].spilled, 1);
+        assert_eq!(snap.variants[1].tie_broken, 1);
+        assert_eq!(snap.variants[1].admitted(), 2);
+        assert_eq!(snap.spilled(), 1);
+        assert_eq!(snap.tie_broken(), 1);
+        assert_eq!(snap.shed(), 1);
+    }
+}

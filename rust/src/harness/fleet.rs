@@ -19,7 +19,7 @@
 //!    on the five-benchmark mix).
 
 use crate::coordinator::{
-    customize, FleetConfig, GpgpuService, Request, ServiceConfig, VariantSpec,
+    customize, FleetConfig, GpgpuService, Request, RouterMode, ServiceConfig, VariantSpec,
 };
 use crate::gpgpu::GpgpuConfig;
 use crate::kernels::BenchId;
@@ -144,7 +144,12 @@ pub fn fleet_report_with_memory(
             variants.push(VariantSpec::new(p.recommended.label(), cfg));
         }
     }
-    let fleet = GpgpuService::start_fleet(FleetConfig::new(variants));
+    // Static routing on purpose: this harness is the Table-6 *energy*
+    // experiment — every job must land on its power-optimal variant
+    // deterministically, independent of burst-induced queue pressure.
+    // The dynamic QoS router has its own sweep (`harness/qos.rs`).
+    let fleet =
+        GpgpuService::start_fleet(FleetConfig::new(variants).with_router(RouterMode::Static));
     for p in &profiles {
         fleet.register_profile(p.bench, p.refined_signature());
     }

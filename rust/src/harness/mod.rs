@@ -10,6 +10,7 @@ mod jsonfmt;
 pub mod memory;
 pub mod microbench;
 pub mod paper;
+pub mod qos;
 pub mod resilience;
 pub mod scaling;
 pub mod tables;
@@ -20,6 +21,7 @@ pub use fleet::{fleet_report, fleet_report_with_memory, FleetBenchPoint, FleetRe
 pub use hotpath::{HotPathPoint, HotPathReport};
 pub use memory::{memory_report, MemoryPoint, MemoryReport};
 pub use microbench::{bench, BenchResult};
+pub use qos::{qos_report, QosPoint, QosReport};
 pub use resilience::{resilience_report, ResiliencePoint, ResilienceReport};
 pub use scaling::{
     scaling_report, scaling_suite, suite_json, write_suite_json, ScalingPoint, ScalingReport,

@@ -1,0 +1,327 @@
+//! QoS routing sweep (`BENCH_qos.json`): the dynamic admission router
+//! and the elastic rebalancer measured against the static baseline
+//! (EXPERIMENTS.md §QoS).
+//!
+//! Scenarios:
+//! 1. `homogeneous` — a single-variant pool per pure class mix: the
+//!    pass-through guarantee (routing bit-identical to the static path —
+//!    no spills, no tie-breaks) plus per-class queue-wait quantiles;
+//! 2. `hetero-tie` — two bit-equal-power variants under a serial mixed
+//!    class mix: every admission is a round-robin tie-break and both
+//!    variants take work (the tie-starvation bugfix, measured);
+//! 3. `sick-fleet` — an equal-power pair where the static favorite
+//!    carries a saturating SEU campaign, swept in `static` and `qos`
+//!    router modes with tight queues and deadline'd submits: the static
+//!    router keeps feeding the quarantined favorite and sheds
+//!    `Saturated`, the QoS router spills to the healthy peer and
+//!    completes. This is the headline regression gate — `spill_rate` is
+//!    the fraction of measured submissions shed as `Saturated`, and
+//!    [`qos_report`] asserts the static mode sheds at least half the mix
+//!    while the QoS mode completes ≥ 95% of it;
+//! 4. `elastic` — a compute burst against a 1-shard elastic variant: the
+//!    rebalancer scales up under backlog and retires the extra shards
+//!    (drain-then-retire) once the burst drains.
+
+use crate::coordinator::{
+    ElasticConfig, FleetConfig, GpgpuService, QosClass, RecoveryPolicy, Request, RouterMode,
+    VariantSpec,
+};
+use crate::gpgpu::GpgpuConfig;
+use crate::kernels::BenchId;
+use crate::sim::FaultPlan;
+use std::time::{Duration, Instant};
+
+/// One (scenario, router-mode, class-mix) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct QosPoint {
+    pub scenario: &'static str,
+    /// Router mode the fleet ran under (`static` or `qos`).
+    pub mode: &'static str,
+    /// Latency-class mix submitted (`latency` / `throughput` /
+    /// `besteffort` / `mixed`).
+    pub mix: &'static str,
+    /// Measured submissions (warm-up jobs excluded).
+    pub jobs: u32,
+    pub completed: u64,
+    /// Submissions shed as `Saturated` (admission gate or queue timeout).
+    pub shed: u64,
+    /// `shed / jobs` — the sick-fleet regression gate in
+    /// `tools/bench_diff.py`.
+    pub spill_rate: f64,
+    /// Jobs the router moved off the static power choice (load/health).
+    pub spilled: u64,
+    /// Jobs landed by round-robin among bit-equal power ties.
+    pub tie_broken: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub p50_wait_ns: u64,
+    pub p95_wait_ns: u64,
+}
+
+/// The whole sweep.
+#[derive(Debug, Clone)]
+pub struct QosReport {
+    pub n: u32,
+    pub jobs_per_point: u32,
+    pub seed: u64,
+    pub points: Vec<QosPoint>,
+}
+
+impl QosReport {
+    /// Hand-rolled JSON (shared `jsonfmt` framing; no serde offline).
+    pub fn to_json(&self) -> String {
+        let header = [
+            format!("\"n\": {}", self.n),
+            format!("\"jobs_per_point\": {}", self.jobs_per_point),
+            format!("\"seed\": {}", self.seed),
+        ];
+        let points: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"scenario\": \"{}\", \"mode\": \"{}\", \"mix\": \"{}\", \
+                     \"jobs\": {}, \"completed\": {}, \"shed\": {}, \"spill_rate\": {:.4}, \
+                     \"spilled\": {}, \"tie_broken\": {}, \"scale_ups\": {}, \
+                     \"scale_downs\": {}, \"p50_wait_ns\": {}, \"p95_wait_ns\": {}}}",
+                    p.scenario,
+                    p.mode,
+                    p.mix,
+                    p.jobs,
+                    p.completed,
+                    p.shed,
+                    p.spill_rate,
+                    p.spilled,
+                    p.tie_broken,
+                    p.scale_ups,
+                    p.scale_downs,
+                    p.p50_wait_ns,
+                    p.p95_wait_ns
+                )
+            })
+            .collect();
+        super::jsonfmt::frame(&header, &points)
+    }
+
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Fold a finished service's routing snapshot into a sweep point.
+fn point(
+    scenario: &'static str,
+    mode: &'static str,
+    mix: &'static str,
+    jobs: u32,
+    completed: u64,
+    shed: u64,
+    svc: &GpgpuService,
+) -> QosPoint {
+    let snap = svc.routing_stats();
+    QosPoint {
+        scenario,
+        mode,
+        mix,
+        jobs,
+        completed,
+        shed,
+        spill_rate: if jobs == 0 { 0.0 } else { shed as f64 / f64::from(jobs) },
+        spilled: snap.spilled(),
+        tie_broken: snap.tie_broken(),
+        scale_ups: snap.scale_ups,
+        scale_downs: snap.scale_downs,
+        p50_wait_ns: snap.overall.p50_ns,
+        p95_wait_ns: snap.overall.p95_ns,
+    }
+}
+
+/// Scenario 1: a homogeneous 2-shard pool under one pure class mix. A
+/// single covering variant short-circuits the router before any signal
+/// is read, so this measures the pass-through path (and the per-class
+/// wait accounting) only.
+fn homogeneous_point(class: QosClass, n: u32, jobs: u32, seed: u64) -> QosPoint {
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![VariantSpec::new("pool", GpgpuConfig::new(1, 8)).with_shards(2)])
+            .with_depth(16),
+    );
+    let tickets: Vec<_> = (0..jobs)
+        .map(|k| {
+            svc.submit(
+                Request::Bench { id: BenchId::VecAdd, n, seed: seed + u64::from(k) }.qos(class),
+            )
+        })
+        .collect();
+    let completed = tickets.into_iter().filter_map(|t| t.wait().ok()).count() as u64;
+    point("homogeneous", "qos", class.name(), jobs, completed, 0, &svc)
+}
+
+/// Scenario 2: two bit-equal-power variants, serial mixed-class replay.
+/// Every admission is a power tie, so the round-robin cursor must
+/// alternate — the regression surface of the old `min_by` pinning bug.
+fn tie_point(n: u32, jobs: u32, seed: u64) -> QosPoint {
+    let base = GpgpuConfig::new(1, 8);
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![VariantSpec::new("tie-a", base), VariantSpec::new("tie-b", base)])
+            .with_depth(16),
+    );
+    let mut completed = 0u64;
+    for k in 0..jobs {
+        let class = QosClass::ALL[k as usize % QosClass::ALL.len()];
+        let req = Request::Bench { id: BenchId::VecAdd, n, seed: seed + u64::from(k) }.qos(class);
+        if svc.submit(req).wait().is_ok() {
+            completed += 1;
+        }
+    }
+    let snap = svc.routing_stats();
+    assert_eq!(snap.tie_broken(), u64::from(jobs), "equal-power pair: every admission is a tie");
+    assert!(snap.variants.iter().all(|v| v.admitted() > 0), "no variant starves on the tie");
+    point("hetero-tie", "qos", "mixed", jobs, completed, 0, &svc)
+}
+
+fn mode_name(mode: RouterMode) -> &'static str {
+    match mode {
+        RouterMode::Static => "static",
+        RouterMode::Qos => "qos",
+    }
+}
+
+/// Scenario 3: the sick favorite. Both variants tie bit-for-bit on
+/// modeled power and the sick one sits at the lower index, so the static
+/// router pins every job to it — even while its only shard sits out a
+/// quarantine, where tight queues + deadline'd submits turn the pin into
+/// `Saturated` sheds. The QoS router sees the quarantine (zero healthy
+/// shards) and spills the same mix to the healthy peer.
+fn sick_point(mode: RouterMode, n: u32, jobs: u32, seed: u64) -> QosPoint {
+    let base = GpgpuConfig::new(1, 8);
+    let sick = VariantSpec::new("sick", base)
+        .with_fault(0, FaultPlan::new(0xBAD_5EED ^ seed, 1_000_000.0));
+    // One fault quarantines; 500 ms covers the whole deadline'd submit
+    // loop (at most `jobs` × 25 ms) with ~2x margin.
+    let policy = RecoveryPolicy { max_attempts: 2, quarantine_after: 1, quarantine_ms: 500 };
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![sick, VariantSpec::new("healthy", base)])
+            .with_depth(2)
+            .with_policy(policy)
+            .with_router(mode),
+    );
+    // Warm-up: one job faults on the sick favorite, is rescued on the
+    // healthy peer, and trips the sick shard into quarantine. The short
+    // sleep lets the quarantine flag publish before the measured loop.
+    svc.submit(Request::Bench { id: BenchId::VecAdd, n, seed })
+        .wait()
+        .expect("warm-up job is rescued on the healthy peer");
+    std::thread::sleep(Duration::from_millis(10));
+    let mut tickets = Vec::new();
+    let mut shed = 0u64;
+    for k in 0..jobs {
+        let req = Request::Bench { id: BenchId::VecAdd, n, seed: seed + 1 + u64::from(k) };
+        match svc.submit_timeout(req, Duration::from_millis(25)) {
+            Ok(t) => tickets.push(t),
+            Err(_) => shed += 1,
+        }
+    }
+    let completed = tickets.into_iter().filter_map(|t| t.wait().ok()).count() as u64;
+    point("sick-fleet", mode_name(mode), "throughput", jobs, completed, shed, &svc)
+}
+
+/// Scenario 4: a matmul burst against a 1-shard elastic variant
+/// (`[1, 3]` band, 1 ms sampling). Backlog spins parked slots up;
+/// after the drain the idle samples retire them again.
+fn elastic_point(n: u32, jobs: u32, seed: u64) -> QosPoint {
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![VariantSpec::new("elastic", GpgpuConfig::new(1, 8))])
+            .with_depth(64)
+            .with_elastic(ElasticConfig::new(1, 3).with_sample_ms(1)),
+    );
+    // Multi-millisecond jobs so the burst outlives the sampling period.
+    let n = n.max(64);
+    let tickets: Vec<_> = (0..jobs)
+        .map(|k| svc.submit(Request::Bench { id: BenchId::MatMul, n, seed: seed + u64::from(k) }))
+        .collect();
+    let completed = tickets.into_iter().filter_map(|t| t.wait().ok()).count() as u64;
+    // Drain-then-retire is asynchronous: give the supervisor up to 2 s of
+    // idle samples to retire the shards it spun up.
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while svc.routing_stats().scale_downs == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    point("elastic", "qos", "throughput", jobs, completed, 0, &svc)
+}
+
+/// Run the full sweep: `jobs_per_point` jobs per cell (floored at 6 so
+/// the tight sick-fleet queues are actually pressured), problem size `n`
+/// (power of two, 32..=256). Asserts the sick-fleet acceptance gate:
+/// static mode sheds at least half the mix, QoS mode completes ≥ 95%.
+pub fn qos_report(n: u32, jobs_per_point: u32, seed: u64) -> QosReport {
+    let jobs = jobs_per_point.max(6);
+    let mut points = Vec::new();
+    for class in QosClass::ALL {
+        points.push(homogeneous_point(class, n, jobs, seed));
+    }
+    points.push(tie_point(n, jobs, seed));
+    let sick_static = sick_point(RouterMode::Static, n, jobs, seed);
+    let sick_qos = sick_point(RouterMode::Qos, n, jobs, seed);
+    assert!(
+        sick_static.shed >= u64::from(jobs / 2),
+        "static router must shed under the quarantined favorite (shed {} of {jobs})",
+        sick_static.shed
+    );
+    assert!(
+        sick_qos.completed * 100 >= u64::from(jobs) * 95,
+        "QoS router must complete >= 95% of the mix the static router sheds ({} of {jobs})",
+        sick_qos.completed
+    );
+    points.push(sick_static);
+    points.push(sick_qos);
+    points.push(elastic_point(n, jobs, seed));
+    QosReport { n, jobs_per_point: jobs, seed, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_the_scenarios_and_gates_the_sick_fleet() {
+        let r = qos_report(32, 6, 7);
+        assert_eq!(r.points.len(), 7);
+        for p in &r.points {
+            let at = format!("{} {} {}", p.scenario, p.mode, p.mix);
+            assert_eq!(u64::from(p.jobs), p.completed + p.shed, "{at}: every submission resolves");
+            if p.scenario == "homogeneous" {
+                // Pass-through guarantee: one covering variant means the
+                // QoS path is bit-identical to static routing.
+                assert_eq!(p.completed, u64::from(p.jobs), "{at}");
+                assert_eq!(p.spilled, 0, "{at}");
+                assert_eq!(p.tie_broken, 0, "{at}");
+            }
+        }
+        let find = |scenario: &str, mode: &str| {
+            r.points
+                .iter()
+                .find(|p| p.scenario == scenario && p.mode == mode)
+                .unwrap_or_else(|| panic!("missing point {scenario}/{mode}"))
+        };
+        let sick_static = find("sick-fleet", "static");
+        let sick_qos = find("sick-fleet", "qos");
+        assert!(sick_static.shed > 0, "static mode must shed into the quarantine");
+        assert!(sick_static.spill_rate > sick_qos.spill_rate);
+        assert!(sick_qos.spilled > 0, "QoS mode routes around the quarantine");
+        let elastic = find("elastic", "qos");
+        assert!(elastic.scale_ups >= 1, "burst backlog must spin up a shard");
+        assert!(elastic.scale_downs >= 1, "idle drain must retire a shard");
+        assert_eq!(elastic.completed, u64::from(elastic.jobs));
+        let json = r.to_json();
+        for field in [
+            "\"scenario\": \"sick-fleet\"",
+            "\"mode\": \"static\"",
+            "\"mix\": \"besteffort\"",
+            "\"spill_rate\"",
+            "\"scale_downs\"",
+            "\"p95_wait_ns\"",
+        ] {
+            assert!(json.contains(field), "{json}");
+        }
+    }
+}

@@ -3,8 +3,9 @@
 //!
 //! Methodology:
 //! 1. build a two-variant fleet — a "sick" shard carrying a deterministic
-//!    [`FaultPlan`] campaign (listed first, so the power-ordered router
-//!    sends every job there initially) and a healthy peer;
+//!    [`FaultPlan`] campaign and an equal-power healthy peer (the QoS
+//!    router spreads the bit-equal power tie round-robin, so the sick
+//!    shard sees every other job until quarantine steers traffic away);
 //! 2. replay a small benchmark mix serially for every point of the
 //!    {fault-rate} x {no-recovery, retry, retry+quarantine, DMR} grid,
 //!    timing each ticket submit-to-wait;

@@ -7,7 +7,9 @@
 //!   limits     print the Table-1 physical limits
 //!   asm        assemble a .flex file and dump the binary layout
 
-use flexgrip::coordinator::{self, FleetConfig, GpgpuService, RecoveryPolicy, Request, VariantSpec};
+use flexgrip::coordinator::{
+    self, FleetConfig, GpgpuService, QosClass, RecoveryPolicy, Request, VariantSpec,
+};
 use flexgrip::gpgpu::GpgpuConfig;
 use flexgrip::harness::{tables, Evaluation};
 use flexgrip::kernels::{self, BenchId, RunOptions};
@@ -25,12 +27,14 @@ fn usage() -> ! {
          flexgrip customize --bench <name> [--n 64]\n  \
          flexgrip limits\n  \
          flexgrip asm --file <kernel.flex>\n  \
-         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1] [--cache WxSxL] [--watchdog CYCLES] [--fault-rate R] [--fault-seed N] [--retries K]\n  \
+         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1] [--cache WxSxL] [--watchdog CYCLES] [--fault-rate R] [--fault-seed N] [--retries K] [--qos CLASS]\n  \
          flexgrip fleet-demo [--n 64] [--jobs 4] [--seed N] [--cache WxSxL] [--out BENCH_fleet.json]\n  \
-         flexgrip resilience [--n 32] [--jobs 6] [--seed N] [--out BENCH_resilience.json]\n\n\
+         flexgrip resilience [--n 32] [--jobs 6] [--seed N] [--out BENCH_resilience.json]\n  \
+         flexgrip qos [--n 32] [--jobs 12] [--seed N] [--out BENCH_qos.json]\n\n\
          benchmarks: autocorr bitonic matmul reduction transpose vecadd memstress\n\
          --cache takes an L1 geometry WAYSxSETSxLINE_BYTES, e.g. 4x64x32\n\
-         --fault-rate is expected SEU upsets per million simulated cycles (seeded, deterministic)"
+         --fault-rate is expected SEU upsets per million simulated cycles (seeded, deterministic)\n\
+         --qos tags submitted jobs with a latency class: latency|throughput|besteffort"
     );
     std::process::exit(2);
 }
@@ -109,6 +113,20 @@ fn decorate<'a>(
         opts = opts.watchdog(cycles);
     }
     opts
+}
+
+/// Parse the optional `--qos CLASS` flag (jobs stay untagged when
+/// absent).
+fn qos_flag(flags: &HashMap<String, String>) -> Option<QosClass> {
+    flags.get("qos").map(|v| match v.as_str() {
+        "latency" => QosClass::Latency,
+        "throughput" => QosClass::Throughput,
+        "besteffort" => QosClass::BestEffort,
+        other => {
+            eprintln!("unknown QoS class `{other}` (latency|throughput|besteffort)");
+            std::process::exit(2);
+        }
+    })
 }
 
 fn bench_id(flags: &HashMap<String, String>) -> BenchId {
@@ -341,13 +359,14 @@ fn cmd_asm(flags: HashMap<String, String>) -> ExitCode {
 /// N device shards and print per-shard + aggregate metrics. `--fault-rate`
 /// injects a seeded SEU campaign on shard 0 (pair with `--retries` to
 /// watch the recovery plane rescue the jobs); `--watchdog` caps every
-/// job's cycle budget.
+/// job's cycle budget; `--qos` tags every job with a latency class.
 fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     let shards: u32 = get(&flags, "shards", 2);
     let jobs: u32 = get(&flags, "jobs", 8);
     let n: u32 = get(&flags, "n", 64);
     let sms: u32 = get(&flags, "sms", 1);
     let retries: u32 = get(&flags, "retries", 1);
+    let qos = qos_flag(&flags);
     let mut spec =
         VariantSpec::new("pool", GpgpuConfig::new(sms, 8).with_memory(memory_flag(&flags)))
             .with_shards(shards.max(1));
@@ -371,10 +390,10 @@ fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     ];
     let tickets: Vec<_> = (0..jobs)
         .map(|i| {
-            svc.submit(Request::Bench {
-                id: mix[i as usize % mix.len()],
-                n,
-                seed: i as u64 + 1,
+            let req = Request::Bench { id: mix[i as usize % mix.len()], n, seed: i as u64 + 1 };
+            svc.submit(match qos {
+                Some(class) => req.qos(class),
+                None => req,
             })
         })
         .collect();
@@ -398,6 +417,27 @@ fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
         "aggregate: {} ok / {} failed, {} cycles, {} instructions",
         m.jobs_completed, m.jobs_failed, m.total_cycles, m.total_instructions
     );
+    let rs = svc.routing_stats();
+    for (v, (label, live, slots)) in rs.variants.iter().zip(svc.variant_shards()) {
+        println!(
+            "routing[{label}]: {} routed, {} spilled, {} tie-broken, {} shed  \
+             ({live}/{slots} shards live)",
+            v.routed, v.spilled, v.tie_broken, v.shed
+        );
+    }
+    println!("scale events: {} up / {} down", rs.scale_ups, rs.scale_downs);
+    for class in QosClass::ALL {
+        let q = rs.class(class);
+        if q.jobs > 0 {
+            println!(
+                "queue wait [{:<10}]: p50 {} ns, p95 {} ns over {} jobs",
+                class.name(),
+                q.p50_ns,
+                q.p95_ns,
+                q.jobs
+            );
+        }
+    }
     ExitCode::SUCCESS
 }
 
@@ -495,6 +535,45 @@ fn cmd_resilience(flags: HashMap<String, String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// QoS routing sweep: the dynamic admission router and the elastic
+/// rebalancer measured against the static baseline (EXPERIMENTS.md
+/// §QoS; `BENCH_qos.json` when --out is given). The harness itself
+/// asserts the sick-fleet acceptance gate (static mode sheds, QoS mode
+/// completes ≥ 95% of the same mix).
+fn cmd_qos(flags: HashMap<String, String>) -> ExitCode {
+    let n: u32 = get(&flags, "n", 32);
+    let jobs: u32 = get(&flags, "jobs", 12);
+    let seed: u64 = get(&flags, "seed", flexgrip::harness::eval::EVAL_SEED);
+    let r = flexgrip::harness::qos_report(n, jobs, seed);
+    println!("qos sweep: {} jobs/point at n={n} (seed {seed})", r.jobs_per_point);
+    for p in &r.points {
+        println!(
+            "  {:<11} [{:<6}] mix {:<10} {:>2}/{} completed, {} shed (spill rate {:.2})  \
+             {} spilled, {} tie-broken, {}+/{}- scale  p95 wait {} ns",
+            p.scenario,
+            p.mode,
+            p.mix,
+            p.completed,
+            p.jobs,
+            p.shed,
+            p.spill_rate,
+            p.spilled,
+            p.tie_broken,
+            p.scale_ups,
+            p.scale_downs,
+            p.p95_wait_ns
+        );
+    }
+    if let Some(path) = flags.get("out") {
+        if let Err(e) = r.write_json(path) {
+            eprintln!("writing {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+        println!("  wrote {path}");
+    }
+    ExitCode::SUCCESS
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
@@ -513,6 +592,7 @@ fn main() -> ExitCode {
         "service-demo" => cmd_service_demo(parse_flags(&rest)),
         "fleet-demo" => cmd_fleet_demo(parse_flags(&rest)),
         "resilience" => cmd_resilience(parse_flags(&rest)),
+        "qos" => cmd_qos(parse_flags(&rest)),
         _ => usage(),
     }
 }

@@ -161,9 +161,12 @@ fn no_recovery_loses_every_job_on_a_sick_shard() {
 
 #[test]
 fn retry_quarantine_completes_the_mix_and_heals_around_the_sick_shard() {
-    // "sick" listed first: with equal modeled power the router prefers
-    // the first covering variant, so every job lands there initially and
-    // the healthy peer is purely the re-route target.
+    // The two variants tie bit-for-bit on modeled power, so the QoS
+    // router spreads jobs across both round-robin (and steers off the
+    // sick shard once it is quarantined). What must hold regardless of
+    // which variant any individual job lands on first: every job
+    // completes verified, every sick-shard fault is rescued by re-route,
+    // and the quarantine plane engages on the sick shard only.
     let svc = GpgpuService::start_fleet(
         FleetConfig::new(vec![
             variant("sick", 32, true).with_fault(0, sick_plan()),
@@ -181,20 +184,19 @@ fn retry_quarantine_completes_the_mix_and_heals_around_the_sick_shard() {
     for (i, t) in tickets.into_iter().enumerate() {
         let out = t.wait().unwrap_or_else(|e| panic!("job {i}: {e}"));
         assert!(out.verified, "job {i}: zero corrupted outputs");
-        assert_eq!(out.variant, "healthy", "job {i} must be rescued by re-route");
-        assert_eq!(out.attempts, 2, "job {i}: one fault, one rescue");
+        assert_eq!(out.variant, "healthy", "job {i} must complete on the healthy peer");
+        assert!(out.attempts <= 2, "job {i}: at most one fault + one rescue");
     }
-    // 100% completion; every job faulted once on the sick shard and was
-    // re-admitted to the healthy variant.
-    let by_label: std::collections::HashMap<_, _> =
-        svc.variant_metrics().into_iter().collect();
+    // 100% completion on the healthy peer; every job the sick shard
+    // faulted was re-admitted rather than lost.
+    let by_label: std::collections::HashMap<_, _> = svc.variant_metrics().into_iter().collect();
     let sick = &by_label["sick"];
     let healthy = &by_label["healthy"];
     assert_eq!(svc.metrics().jobs_failed, 0);
     assert_eq!(healthy.jobs_completed, 8);
     assert_eq!(sick.jobs_completed, 0);
-    assert_eq!(sick.soft_errors, 8);
-    assert_eq!(sick.jobs_retried, 8);
+    assert!(sick.soft_errors >= 1, "the round-robin must feed the sick shard: {sick:?}");
+    assert_eq!(sick.jobs_retried, sick.soft_errors, "every fault is rescued: {sick:?}");
     // Quarantined after 2 consecutive faults, then reinstated on
     // probation (where later faults re-quarantine immediately).
     assert!(sick.quarantines >= 1, "{sick:?}");
@@ -203,7 +205,7 @@ fn retry_quarantine_completes_the_mix_and_heals_around_the_sick_shard() {
     // shard_metrics exposes the same counters at shard granularity
     // (global index 0 = the sick variant's only shard).
     let shards = svc.shard_metrics();
-    assert_eq!(shards[0].jobs_retried, 8);
+    assert_eq!(shards[0].jobs_retried, sick.jobs_retried);
     assert!(shards[0].quarantines >= 1);
     assert_eq!(shards[1].jobs_completed, 8);
 }

@@ -1,0 +1,272 @@
+//! QoS router + elastic rebalancer (ISSUE 9): round-robin tie spread,
+//! latency-class admission gating, the sick-fleet spill case the static
+//! router fails, queue-wait stamping, and the scale-up/down lifecycle
+//! racing shutdown.
+
+use flexgrip::coordinator::{
+    ElasticConfig, FleetConfig, GpgpuService, QosClass, RecoveryPolicy, Request, RouterMode,
+    ServiceConfig, ServiceError, VariantSpec,
+};
+use flexgrip::gpgpu::GpgpuConfig;
+use flexgrip::kernels::BenchId;
+use flexgrip::sim::{FaultPlan, FaultTargets};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Two variants tying bit-for-bit on modeled dynamic power.
+fn tie_pair() -> FleetConfig {
+    let base = GpgpuConfig::new(1, 8);
+    FleetConfig::new(vec![VariantSpec::new("tie-a", base), VariantSpec::new("tie-b", base)])
+}
+
+/// Instruction-image upsets at mean interval 1 cycle: every job on the
+/// sick shard fails parity-detected, deterministically.
+fn sick_plan() -> FaultPlan {
+    FaultPlan::new(0xBAD5EED, 1_000_000.0)
+        .with_targets(FaultTargets { instr_image: true, ..FaultTargets::none() })
+}
+
+#[test]
+fn equal_power_ties_spread_round_robin_instead_of_pinning() {
+    // The old router's `min_by` kept the first minimum, so a bit-equal
+    // power tie starved every variant after the first. Serial submits
+    // against an idle pair must now alternate exactly.
+    let svc = GpgpuService::start_fleet(tie_pair().with_depth(8));
+    for k in 0..6u64 {
+        let out =
+            svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: k }).wait().unwrap();
+        assert!(out.verified);
+    }
+    let by_label: std::collections::HashMap<_, _> = svc.variant_metrics().into_iter().collect();
+    assert_eq!(by_label["tie-a"].jobs_completed, 3, "tie must not pin to the first variant");
+    assert_eq!(by_label["tie-b"].jobs_completed, 3, "tie must not starve the second variant");
+    let rs = svc.routing_stats();
+    assert_eq!(rs.tie_broken(), 6);
+    assert_eq!(rs.spilled(), 0);
+    assert_eq!(rs.shed(), 0);
+}
+
+#[test]
+fn homogeneous_fleet_routing_is_identical_across_router_modes() {
+    // A single covering variant short-circuits the QoS scorer before any
+    // signal is read: both modes must produce the same pure pass-through
+    // admission stream, whatever classes the jobs carry.
+    for mode in [RouterMode::Static, RouterMode::Qos] {
+        let pool = VariantSpec::new("pool", GpgpuConfig::new(1, 8)).with_shards(2);
+        let svc = GpgpuService::start_fleet(
+            FleetConfig::new(vec![pool]).with_depth(8).with_router(mode),
+        );
+        let classes = [QosClass::Latency, QosClass::Throughput, QosClass::BestEffort];
+        let tickets: Vec<_> = (0..6u64)
+            .map(|k| {
+                let req = Request::Bench { id: BenchId::VecAdd, n: 32, seed: k };
+                svc.submit(req.qos(classes[k as usize % classes.len()]))
+            })
+            .collect();
+        for t in tickets {
+            assert!(t.wait().unwrap().verified);
+        }
+        let rs = svc.routing_stats();
+        assert_eq!(rs.variants[0].routed, 6, "{mode:?}: every admission is a plain route");
+        assert_eq!(rs.tie_broken(), 0, "{mode:?}");
+        assert_eq!(rs.spilled(), 0, "{mode:?}");
+        assert_eq!(rs.shed(), 0, "{mode:?}");
+    }
+}
+
+#[test]
+fn deadlined_latency_submit_sheds_immediately_when_nothing_has_slack() {
+    // Fill a depth-1 tie pair until occupancy == depth + healthy on both
+    // variants. A deadline'd Latency submit must then shed at admission
+    // (the gate), not after burning its generous queue timeout.
+    let svc = GpgpuService::start_fleet(tie_pair().with_depth(1));
+    let busy: Vec<_> = (0..4u64)
+        .map(|k| svc.submit(Request::Bench { id: BenchId::MatMul, n: 64, seed: k }))
+        .collect();
+    let t0 = Instant::now();
+    let err = svc
+        .submit_timeout(
+            Request::Bench { id: BenchId::VecAdd, n: 32, seed: 9 }.qos(QosClass::Latency),
+            Duration::from_secs(5),
+        )
+        .expect_err("latency admission gate must shed");
+    assert_eq!(err, ServiceError::Saturated);
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "the gate sheds at admission, not after the 5 s queue timeout"
+    );
+    assert_eq!(svc.routing_stats().shed(), 1);
+    for t in busy {
+        assert!(t.wait().unwrap().verified, "the shed left no trace on accepted work");
+    }
+}
+
+#[test]
+fn backpressure_blocking_is_excluded_from_queue_wait() {
+    // 1 shard, depth 1: a slow matmul runs, a vecadd queues behind it,
+    // and a third submitter blocks on the full queue for ~the whole
+    // matmul. The blocked job's wait clock must start when its queue
+    // slot opened — the old stamp-before-push bug counted the blocking
+    // too, doubling the aggregate.
+    let svc = Arc::new(GpgpuService::start_pool(
+        GpgpuConfig::new(1, 8),
+        ServiceConfig { shards: 1, queue_depth: 1 },
+    ));
+    let start = Instant::now();
+    let t_slow = svc.submit(Request::Bench { id: BenchId::MatMul, n: 64, seed: 1 });
+    let t_queued = svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 });
+    let blocked = {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 2 }).wait()
+        })
+    };
+    assert!(t_slow.wait().unwrap().verified);
+    let matmul_wall = start.elapsed();
+    assert!(t_queued.wait().unwrap().verified);
+    assert!(blocked.join().unwrap().unwrap().verified);
+    let wait_ns = u128::from(svc.metrics().queue_wait_ns);
+    // Queued vecadd waited ~one matmul; the blocked job only ~one vecadd.
+    // With the bug the blocked job also waited ~one matmul, pushing the
+    // aggregate toward 2x.
+    assert!(wait_ns > 0, "the queued job's residency must accumulate");
+    assert!(
+        wait_ns < matmul_wall.as_nanos() * 3 / 2,
+        "queue wait {wait_ns} ns vs matmul wall {} ns: submit blocking leaked into the metric",
+        matmul_wall.as_nanos()
+    );
+}
+
+#[test]
+fn per_class_wait_quantiles_follow_the_submitted_mix() {
+    let svc = GpgpuService::start(GpgpuConfig::default());
+    let submit = |req: Request| assert!(svc.submit(req).wait().unwrap().verified);
+    for k in 0..2u64 {
+        submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: k }.qos(QosClass::Latency));
+    }
+    // Untagged requests default to Throughput.
+    submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 7 });
+    for k in 0..3u64 {
+        let req = Request::Bench { id: BenchId::VecAdd, n: 32, seed: 10 + k };
+        submit(req.qos(QosClass::BestEffort));
+    }
+    let rs = svc.routing_stats();
+    assert_eq!(rs.class(QosClass::Latency).jobs, 2);
+    assert_eq!(rs.class(QosClass::Throughput).jobs, 1);
+    assert_eq!(rs.class(QosClass::BestEffort).jobs, 3);
+    assert_eq!(rs.overall.jobs, 6);
+    assert!(rs.overall.p95_ns >= rs.overall.p50_ns);
+}
+
+/// Run the sick-fleet scenario: an equal-power pair whose static
+/// favorite faults every job and quarantines, tight queues, deadline'd
+/// submits. Returns (completed, shed, spilled) over 8 measured jobs.
+fn sick_fleet_outcome(mode: RouterMode) -> (u64, u64, u64) {
+    let base = GpgpuConfig::new(1, 8);
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![
+            VariantSpec::new("sick", base).with_fault(0, sick_plan()),
+            VariantSpec::new("healthy", base),
+        ])
+        .with_depth(2)
+        .with_policy(RecoveryPolicy { max_attempts: 2, quarantine_after: 1, quarantine_ms: 500 })
+        .with_router(mode),
+    );
+    // Warm-up: faults on the sick favorite, rescued on the healthy peer,
+    // trips the 500 ms quarantine that the measured loop runs inside.
+    svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: 1 })
+        .wait()
+        .expect("warm-up rescued on the healthy peer");
+    std::thread::sleep(Duration::from_millis(10));
+    let mut tickets = Vec::new();
+    let mut shed = 0u64;
+    for k in 0..8u64 {
+        let req = Request::Bench { id: BenchId::VecAdd, n: 32, seed: 2 + k };
+        match svc.submit_timeout(req, Duration::from_millis(30)) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                assert_eq!(e, ServiceError::Saturated);
+                shed += 1;
+            }
+        }
+    }
+    let completed = tickets.into_iter().filter_map(|t| t.wait().ok()).count() as u64;
+    (completed, shed, svc.routing_stats().spilled())
+}
+
+#[test]
+fn qos_router_completes_the_mix_the_static_router_sheds() {
+    // The ISSUE-9 acceptance case: the static router keeps pinning jobs
+    // to its quarantined power favorite and sheds most of the mix; the
+    // QoS router sees the quarantine and spills the same mix to the
+    // healthy peer, completing >= 95% of it.
+    let (static_done, static_shed, _) = sick_fleet_outcome(RouterMode::Static);
+    assert!(
+        static_shed >= 4,
+        "static router must shed into the quarantine (completed {static_done}, \
+         shed {static_shed})"
+    );
+    let (qos_done, qos_shed, qos_spilled) = sick_fleet_outcome(RouterMode::Qos);
+    assert!(
+        qos_done * 100 >= 8 * 95,
+        "QoS router must complete >= 95% of the mix (completed {qos_done}, shed {qos_shed})"
+    );
+    assert!(qos_spilled >= 8, "the rescue is visible as spills to the healthy peer");
+}
+
+#[test]
+fn elastic_fleet_scales_up_under_backlog_and_retires_when_idle() {
+    let svc = GpgpuService::start_fleet(
+        FleetConfig::new(vec![VariantSpec::new("elastic", GpgpuConfig::new(1, 8))])
+            .with_depth(64)
+            .with_elastic(ElasticConfig::new(1, 3).with_sample_ms(1)),
+    );
+    assert_eq!(svc.variant_shards(), vec![("elastic".to_string(), 1, 3)]);
+    let tickets: Vec<_> = (0..10u64)
+        .map(|k| svc.submit(Request::Bench { id: BenchId::MatMul, n: 64, seed: k }))
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().verified);
+    }
+    assert!(
+        svc.routing_stats().scale_ups >= 1,
+        "a 10-job backlog on one live shard must spin up capacity"
+    );
+    // Drain-then-retire is asynchronous; poll for the idle retirement.
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while svc.routing_stats().scale_downs == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(svc.routing_stats().scale_downs >= 1, "idle fleet must retire the extra shards");
+    let (_, live, slots) = svc.variant_shards().remove(0);
+    assert!((1..=slots).contains(&live), "live {live} outside [1, {slots}]");
+    assert_eq!(svc.metrics().jobs_completed, 10);
+}
+
+#[test]
+fn shutdown_races_the_rebalancer_without_losing_tickets() {
+    // Race `shutdown()` against three phases of the elastic lifecycle
+    // (mid-burst scale-up, mid-drain, post-drain retirement): every
+    // accepted ticket must still resolve, none may hang or be lost to a
+    // retiring shard.
+    for settle_ms in [0u64, 5, 60] {
+        let svc = GpgpuService::start_fleet(
+            FleetConfig::new(vec![VariantSpec::new("elastic", GpgpuConfig::new(1, 8))])
+                .with_depth(64)
+                .with_elastic(ElasticConfig::new(1, 2).with_sample_ms(1)),
+        );
+        let tickets: Vec<_> = (0..8u64)
+            .map(|k| svc.submit(Request::Bench { id: BenchId::VecAdd, n: 32, seed: k }))
+            .collect();
+        std::thread::sleep(Duration::from_millis(settle_ms));
+        svc.shutdown();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let out = t
+                .wait()
+                .unwrap_or_else(|e| panic!("settle {settle_ms} ms: job {i} lost: {e}"));
+            assert!(out.verified, "settle {settle_ms} ms: job {i}");
+        }
+        assert_eq!(svc.metrics().jobs_completed, 8, "settle {settle_ms} ms");
+        drop(svc);
+    }
+}

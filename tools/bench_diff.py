@@ -13,6 +13,12 @@ run on main:
   reported as WARNINGS only: sim_cycles is deterministic, so a change is
   always a deliberate timing-model edit, not a perf regression — the
   gate surfaces it for the reviewer without blocking model evolution.
+* **qos** — per-(scenario, mode, mix) routing sweep (BENCH_qos.json).
+  p95 queue-wait growth beyond --qos-wait-threshold (default 25%) is a
+  WARNING (wall-clock waits on shared runners are noisy); a spill-rate
+  increase on the sick-fleet qos-mode point FAILS the job — that rate is
+  deterministic and is the acceptance metric for QoS admission (the
+  router completing the jobs the static baseline sheds).
 
 Warn-only (exit 0) when no baseline artifact exists (first run, expired
 retention, artifact renamed) or when the fast-mode flags differ — those
@@ -102,12 +108,57 @@ def diff_scaling(current: list, baseline: list, threshold: float):
     return warnings
 
 
+def diff_qos(current: dict, baseline: dict, wait_threshold: float = 0.25):
+    """Compare QoS routing points by (scenario, mode, mix).
+
+    Returns (failures, warnings): queue-wait drift warns, a sick-fleet
+    qos-mode spill-rate increase (beyond a 0.02 epsilon for the odd
+    timing straggler) fails.
+    """
+    failures: list[str] = []
+    warnings: list[str] = []
+    base_by_key = {
+        (p["scenario"], p["mode"], p["mix"]): p for p in baseline.get("points", [])
+    }
+    for point in current.get("points", []):
+        key = (point["scenario"], point["mode"], point["mix"])
+        name = "/".join(key)
+        base = base_by_key.get(key)
+        if base is None:
+            warnings.append(f"qos: no baseline point for '{name}' - skipping")
+            continue
+        base_p95, cur_p95 = base["p95_wait_ns"], point["p95_wait_ns"]
+        if base_p95 > 0:
+            delta = (cur_p95 - base_p95) / base_p95
+            if delta > wait_threshold:
+                warnings.append(
+                    f"qos: {name} p95 queue wait {base_p95} -> {cur_p95} ns "
+                    f"({delta:+.1%}) - admission latency regression?"
+                )
+        spill_delta = point["spill_rate"] - base["spill_rate"]
+        if point["scenario"] == "sick-fleet" and point["mode"] == "qos" and spill_delta > 0.02:
+            failures.append(
+                f"qos: {name} spill rate {base['spill_rate']:.4f} -> "
+                f"{point['spill_rate']:.4f} - the QoS router is shedding jobs "
+                "the healthy peer could absorb"
+            )
+    return failures, warnings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True, help="this run's BENCH_hot_path.json")
     ap.add_argument("--baseline", required=True, help="previous run's BENCH_hot_path.json")
     ap.add_argument("--scaling-current", help="this run's BENCH_scaling.json")
     ap.add_argument("--scaling-baseline", help="previous run's BENCH_scaling.json")
+    ap.add_argument("--qos-current", help="this run's BENCH_qos.json")
+    ap.add_argument("--qos-baseline", help="previous run's BENCH_qos.json")
+    ap.add_argument(
+        "--qos-wait-threshold",
+        type=float,
+        default=0.25,
+        help="fractional p95 queue-wait growth that warns (default 0.25)",
+    )
     ap.add_argument(
         "--threshold",
         type=float,
@@ -137,12 +188,21 @@ def main(argv=None) -> int:
         else:
             warnings.append("scaling: report missing on one side - skipping")
 
+    if args.qos_current and args.qos_baseline:
+        qcur, qbase = load(args.qos_current), load(args.qos_baseline)
+        if qcur is not None and qbase is not None:
+            qfail, qwarn = diff_qos(qcur, qbase, args.qos_wait_threshold)
+            failures += qfail
+            warnings += qwarn
+        else:
+            warnings.append("qos: report missing on one side - skipping")
+
     for w in warnings:
         print(f"WARN: {w}")
     for f in failures:
         print(f"FAIL: {f}")
     if failures:
-        print(f"bench_diff: {len(failures)} regression(s) beyond {args.threshold:.0%}")
+        print(f"bench_diff: {len(failures)} gate failure(s)")
         return 1
     print("bench_diff: no regressions")
     return 0
