@@ -140,6 +140,127 @@ def test_qos_missing_baseline_point_warns():
     assert any("no baseline point" in w for w in warnings)
 
 
+def rpt(policy, protection="parity", aging="transient", rate=20000.0, jobs=6, completed=6, **extra):
+    point = {
+        "policy": policy,
+        "protection": protection,
+        "aging": aging,
+        "fault_rate": rate,
+        "jobs": jobs,
+        "completed": completed,
+        "availability": completed / jobs,
+        "rescued": 0,
+        "lost": jobs - completed,
+        "corrupted": 0,
+        "corrected": 0,
+        "uncorrectable": 0,
+        "restarts": 0,
+        "replayed_cycles": 0,
+        "soft_errors": 0,
+        "retries": 0,
+        "quarantines": 0,
+        "reinstatements": 0,
+        "dmr_mismatches": 0,
+        "tmr_outvoted": 0,
+        "mean_clean_ms": 1.0,
+        "mean_rescued_ms": 0.0,
+        "retry_overhead_ms": 0.0,
+    }
+    point.update(extra)
+    return point
+
+
+def res(points):
+    return {"n": 32, "jobs_per_point": 6, "seed": 7, "points": points}
+
+
+def test_resilience_availability_drop_fails():
+    cur = res([rpt("checkpoint", "ecc+scrub", "stuck-at", completed=3)])
+    base = res([rpt("checkpoint", "ecc+scrub", "stuck-at", completed=6)])
+    failures, warnings = bench_diff.diff_resilience(cur, base)
+    assert len(failures) == 1
+    assert "availability" in failures[0] and "checkpoint/ecc+scrub/stuck-at" in failures[0]
+    assert warnings == []
+
+
+def test_resilience_sub_epsilon_wiggle_and_improvement_pass():
+    cur = res(
+        [
+            rpt("rerun", completed=6, availability=0.99),
+            rpt("tmr", "ecc", "stuck-at", completed=6),
+        ]
+    )
+    base = res(
+        [
+            rpt("rerun", completed=6, availability=1.0),
+            rpt("tmr", "ecc", "stuck-at", completed=4),
+        ]
+    )
+    failures, warnings = bench_diff.diff_resilience(cur, base)
+    assert failures == []
+    assert warnings == []
+
+
+def test_resilience_served_corruption_fails():
+    cur = res([rpt("rerun", corrupted=1)])
+    base = res([rpt("rerun")])
+    failures, _ = bench_diff.diff_resilience(cur, base)
+    assert len(failures) == 1
+    assert "corrupted" in failures[0]
+
+
+def test_resilience_pre_ecc_baseline_warns_but_compares_availability():
+    # A baseline from before the protection/aging axes existed: no
+    # protection/aging keys (defaulted to parity/transient) and no
+    # corrected/availability fields — warn, but still gate availability.
+    old = {
+        "policy": "rerun",
+        "fault_rate": 20000.0,
+        "jobs": 6,
+        "completed": 6,
+        "rescued": 0,
+        "lost": 0,
+        "corrupted": 0,
+    }
+    cur = res([rpt("rerun", completed=3)])
+    failures, warnings = bench_diff.diff_resilience(cur, res([old]))
+    assert any("predates field" in w and "corrected" in w for w in warnings)
+    assert len(failures) == 1, "availability is still gated against the old shape"
+
+
+def test_resilience_new_and_vanished_points_warn():
+    cur = res([rpt("tmr", "ecc", "stuck-at")])
+    base = res([rpt("dmr", "ecc", "stuck-at")])
+    failures, warnings = bench_diff.diff_resilience(cur, base)
+    assert failures == []
+    assert any("no baseline point" in w for w in warnings)
+    assert any("vanished" in w for w in warnings)
+
+
+def test_resilience_end_to_end_failure_exit_code(tmp_path):
+    hot_cur = tmp_path / "hot_cur.json"
+    hot_base = tmp_path / "hot_base.json"
+    hot_cur.write_text(json.dumps(hot([pt("matmul", 1.0e6)])))
+    hot_base.write_text(json.dumps(hot([pt("matmul", 1.0e6)])))
+    res_cur = tmp_path / "res_cur.json"
+    res_base = tmp_path / "res_base.json"
+    res_cur.write_text(json.dumps(res([rpt("checkpoint", "ecc+scrub", "stuck-at", completed=2)])))
+    res_base.write_text(json.dumps(res([rpt("checkpoint", "ecc+scrub", "stuck-at", completed=6)])))
+    rc = bench_diff.main(
+        [
+            "--current",
+            str(hot_cur),
+            "--baseline",
+            str(hot_base),
+            "--resilience-current",
+            str(res_cur),
+            "--resilience-baseline",
+            str(res_base),
+        ]
+    )
+    assert rc == 1
+
+
 def test_qos_end_to_end_failure_exit_code(tmp_path):
     hot_cur = tmp_path / "hot_cur.json"
     hot_base = tmp_path / "hot_base.json"

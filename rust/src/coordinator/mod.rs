@@ -73,10 +73,23 @@
 //! probation, where a single further fault re-quarantines it.
 //! [`VariantSpec::with_fault`] marks one shard of a variant sick with a
 //! deterministic [`FaultPlan`], reseeded per execution so retries and
-//! DMR replicas draw fresh fault sites. [`Request::dmr`] wraps any
+//! redundant replicas draw fresh fault sites. [`Request::dmr`] wraps any
 //! request in dual-modular redundancy — run twice, compare outputs —
-//! catching the silent data-path corruption class parity cannot see.
-//! [`GpgpuService::submit_timeout`] sheds load with
+//! catching the silent data-path corruption class parity cannot see;
+//! [`Request::tmr`] goes one further with triple-modular redundancy,
+//! majority-voting three replicas so a single corrupted replica is
+//! *masked* rather than merely detected (a three-way split fails with
+//! [`ServiceError::TmrInconclusive`]). Redundancy wrappers do not nest:
+//! `dmr().dmr()` or `tmr().dmr()` multiplies executions without adding
+//! coverage, so submit rejects the shape with
+//! [`ServiceError::NestedRedundancy`] before it reaches a queue.
+//! [`FleetConfig::with_checkpoint`] arms every launch with the
+//! barrier-checkpoint/restart policy from `sim/sm.rs`: uncorrectable
+//! upsets replay from the last block-wide barrier instead of failing the
+//! job, and an escaped `SoftError` on a checkpoint-armed fleet is treated
+//! as a cheap re-admit — it re-routes without accruing a quarantine
+//! strike, since the launch already burned its restart budget on genuine
+//! fault pressure. [`GpgpuService::submit_timeout`] sheds load with
 //! [`ServiceError::Saturated`] instead of blocking forever, and
 //! submitters blocked on a full queue resolve their tickets with
 //! [`ServiceError::Shutdown`] when the service drops mid-drain.
@@ -104,7 +117,7 @@ use crate::isa::CapabilitySignature;
 use crate::kernels::{self, BenchId, RunOptions};
 use crate::model::{power::power, ArchParams};
 use crate::registry::{KernelRegistry, PreparedKernel};
-use crate::sim::{FaultPlan, GlobalMem, SimError, SmStats};
+use crate::sim::{CheckpointPolicy, FaultPlan, GlobalMem, SimError, SmStats};
 use router::{RouteDecision, RouteKind, RoutingStats, VariantSignals};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -144,6 +157,14 @@ pub enum Request {
     /// the detection net for silent data-path SEU corruption that the
     /// parity-modeled checks cannot see.
     Dmr(Box<Request>),
+    /// Triple-modular redundancy: execute the inner request three times
+    /// and majority-vote the outputs (cycles, read-back data,
+    /// verification outcome). Where DMR only *detects* divergence, TMR
+    /// *corrects* it — a single corrupted or failed replica is outvoted
+    /// by the agreeing pair and masked
+    /// ([`MetricsSnapshot::tmr_outvoted`] counts the masks); a three-way
+    /// disagreement fails with [`ServiceError::TmrInconclusive`].
+    Tmr(Box<Request>),
     /// Tag the inner request with a latency class for the QoS router
     /// (see [`Request::qos`]). Untagged requests default to
     /// [`QosClass::Throughput`].
@@ -154,6 +175,13 @@ impl Request {
     /// Wrap this request in dual-modular-redundancy mode.
     pub fn dmr(self) -> Request {
         Request::Dmr(Box::new(self))
+    }
+
+    /// Wrap this request in triple-modular-redundancy mode: three
+    /// replicas, majority vote. Unlike [`Request::dmr`] (detect-only),
+    /// TMR masks a single corrupted replica and still serves the job.
+    pub fn tmr(self) -> Request {
+        Request::Tmr(Box::new(self))
     }
 
     /// Tag this request with a QoS latency class: `Latency` weighs queue
@@ -171,6 +199,18 @@ fn strip_qos(req: Request) -> (Request, QosClass) {
     match req {
         Request::Qos { class, inner } => (strip_qos(*inner).0, class),
         other => (other, QosClass::default()),
+    }
+}
+
+/// Redundancy wrappers (`Dmr`/`Tmr`) along the request chain, looking
+/// through QoS tags. More than one is a rejected shape: `dmr().dmr()`
+/// runs the kernel four times to detect exactly what one wrapper already
+/// detects, and `tmr().dmr()` votes on votes — cost without coverage.
+fn redundancy_depth(req: &Request) -> u32 {
+    match req {
+        Request::Dmr(inner) | Request::Tmr(inner) => 1 + redundancy_depth(inner),
+        Request::Qos { inner, .. } => redundancy_depth(inner),
+        _ => 0,
     }
 }
 
@@ -195,6 +235,13 @@ pub enum ServiceError {
     Saturated,
     /// DMR replicas disagreed — silent corruption caught by redundancy.
     DmrMismatch { variant: String },
+    /// All three TMR replicas produced distinct outputs — no majority to
+    /// vote with, so redundancy cannot say which replica to trust.
+    TmrInconclusive { variant: String },
+    /// The request nested redundancy wrappers (`dmr().dmr()`,
+    /// `tmr().dmr()`, ...) — rejected at submit: stacked redundancy
+    /// multiplies executions without adding detection or correction.
+    NestedRedundancy,
 }
 
 impl ServiceError {
@@ -208,6 +255,7 @@ impl ServiceError {
             ServiceError::Sim(SimError::SoftError { .. })
                 | ServiceError::Verify(_)
                 | ServiceError::DmrMismatch { .. }
+                | ServiceError::TmrInconclusive { .. }
         )
     }
 }
@@ -222,6 +270,12 @@ impl std::fmt::Display for ServiceError {
             ServiceError::Saturated => write!(f, "service saturated: submit queue full"),
             ServiceError::DmrMismatch { variant } => {
                 write!(f, "DMR mismatch on variant {variant}: replica outputs disagree")
+            }
+            ServiceError::TmrInconclusive { variant } => {
+                write!(f, "TMR inconclusive on variant {variant}: all three replicas disagree")
+            }
+            ServiceError::NestedRedundancy => {
+                write!(f, "nested redundancy wrappers rejected: DMR/TMR do not compose")
             }
         }
     }
@@ -412,6 +466,12 @@ pub struct FleetConfig {
     pub mode: RouterMode,
     /// Elastic rebalancing (default: off — shard counts are fixed).
     pub elastic: Option<ElasticConfig>,
+    /// Barrier checkpoint/restart policy applied to every launch
+    /// (default: off — an uncorrectable upset fails the execution). When
+    /// armed, escaped `SoftError`s also stop counting as quarantine
+    /// strikes: the launch already replayed through its restart budget,
+    /// so the escape reflects fault pressure, not a sick shard.
+    pub checkpoint: Option<CheckpointPolicy>,
 }
 
 impl FleetConfig {
@@ -425,6 +485,7 @@ impl FleetConfig {
             watchdog: None,
             mode: RouterMode::default(),
             elastic: None,
+            checkpoint: None,
         }
     }
 
@@ -465,6 +526,14 @@ impl FleetConfig {
         self.elastic = Some(elastic);
         self
     }
+
+    /// Arm every launch with barrier checkpoint/restart: uncorrectable
+    /// upsets replay from the last block-wide barrier reconvergence
+    /// instead of failing the job (`sim/sm.rs` checkpoint machinery).
+    pub fn with_checkpoint(mut self, policy: CheckpointPolicy) -> FleetConfig {
+        self.checkpoint = Some(policy);
+        self
+    }
 }
 
 /// Aggregate counters for one shard.
@@ -484,6 +553,9 @@ pub struct Metrics {
     pub reinstatements: AtomicU64,
     /// DMR replica disagreements detected on this shard.
     pub dmr_mismatches: AtomicU64,
+    /// TMR replicas outvoted (masked) on this shard — each one is a
+    /// corrupted or failed replica the majority corrected through.
+    pub tmr_outvoted: AtomicU64,
     /// Total nanoseconds jobs dispatched by this shard spent between
     /// submit and dispatch (queue wait, including submit backpressure).
     pub queue_wait_ns: AtomicU64,
@@ -501,6 +573,7 @@ impl Metrics {
             quarantines: self.quarantines.load(Ordering::Relaxed),
             reinstatements: self.reinstatements.load(Ordering::Relaxed),
             dmr_mismatches: self.dmr_mismatches.load(Ordering::Relaxed),
+            tmr_outvoted: self.tmr_outvoted.load(Ordering::Relaxed),
             queue_wait_ns: self.queue_wait_ns.load(Ordering::Relaxed),
         }
     }
@@ -517,6 +590,7 @@ pub struct MetricsSnapshot {
     pub quarantines: u64,
     pub reinstatements: u64,
     pub dmr_mismatches: u64,
+    pub tmr_outvoted: u64,
     pub queue_wait_ns: u64,
 }
 
@@ -533,6 +607,7 @@ impl MetricsSnapshot {
             quarantines: self.quarantines + other.quarantines,
             reinstatements: self.reinstatements + other.reinstatements,
             dmr_mismatches: self.dmr_mismatches + other.dmr_mismatches,
+            tmr_outvoted: self.tmr_outvoted + other.tmr_outvoted,
             queue_wait_ns: self.queue_wait_ns + other.queue_wait_ns,
         }
     }
@@ -619,6 +694,9 @@ struct FleetInner {
     policy: RecoveryPolicy,
     watchdog: Option<u64>,
     mode: RouterMode,
+    /// Barrier checkpoint/restart policy every launch runs under
+    /// ([`FleetConfig::with_checkpoint`]).
+    checkpoint: Option<CheckpointPolicy>,
     /// Per-variant-queue capacity (the router's utilization denominator).
     depth: usize,
     routing: RoutingStats,
@@ -766,6 +844,7 @@ impl GpgpuService {
             policy: fleet.policy,
             watchdog: fleet.watchdog,
             mode: fleet.mode,
+            checkpoint: fleet.checkpoint,
             depth,
             routing,
         });
@@ -828,12 +907,22 @@ impl GpgpuService {
                     .sig
             }
             Request::Kernel { kernel, .. } => kernel.signature(),
-            Request::Dmr(inner) | Request::Qos { inner, .. } => self.job_signature(inner),
+            Request::Dmr(inner) | Request::Tmr(inner) | Request::Qos { inner, .. } => {
+                self.job_signature(inner)
+            }
         }
     }
 
     fn enqueue(&self, req: Request, timeout: Option<Duration>) -> Result<JobTicket, ServiceError> {
         let (req, class) = strip_qos(req);
+        if redundancy_depth(&req) > 1 {
+            // Stacked DMR/TMR wrappers are a rejected shape, not a
+            // queueable job: resolve the ticket with the typed error (like
+            // the shutdown path) so `submit` callers still get a ticket.
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let _ = reply_tx.send(Err(ServiceError::NestedRedundancy));
+            return Ok(JobTicket { rx: reply_rx });
+        }
         let sig = self.job_signature(&req);
         let decision = self.inner.decide(class, &sig);
         if decision.gated && class == QosClass::Latency && timeout.is_some() {
@@ -1110,17 +1199,27 @@ fn shard_worker(fleet: &FleetInner, vidx: usize, local: usize) {
         // shard — a dead shard would leave later tickets hanging forever.
         let nonce = &mut fault_nonce;
         let result = catch_unwind(AssertUnwindSafe(|| {
-            execute(&gpgpu, shard, &v.label, &job.req, job.sig, fleet.watchdog, || {
-                base_fault.map(|p| {
-                    *nonce = nonce.wrapping_add(1);
-                    // Fresh fault sites per execution: replays and DMR
-                    // replicas must not repeat the same upsets.
-                    FaultPlan {
-                        seed: p.seed ^ nonce.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                        ..p
-                    }
-                })
-            })
+            execute(
+                &gpgpu,
+                shard,
+                &v.label,
+                &job.req,
+                job.sig,
+                fleet.watchdog,
+                fleet.checkpoint,
+                metrics,
+                || {
+                    base_fault.map(|p| {
+                        *nonce = nonce.wrapping_add(1);
+                        // Fresh fault sites per execution: replays and
+                        // DMR/TMR replicas must not repeat the same upsets.
+                        FaultPlan {
+                            seed: p.seed ^ nonce.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                            ..p
+                        }
+                    })
+                },
+            )
         }))
         .unwrap_or_else(|payload| {
             let msg = payload
@@ -1145,6 +1244,13 @@ fn shard_worker(fleet: &FleetInner, vidx: usize, local: usize) {
             }
             Err(err) => {
                 let transient = err.is_transient();
+                // A checkpoint-armed fleet treats an escaped SoftError as
+                // a cheap re-admit, not a health strike: the launch
+                // already replayed through its restart budget, so the
+                // escape measures fault pressure, not shard sickness.
+                let strikes = transient
+                    && !(fleet.checkpoint.is_some()
+                        && matches!(err, ServiceError::Sim(SimError::SoftError { .. })));
                 if transient {
                     metrics.soft_errors.fetch_add(1, Ordering::Relaxed);
                     if matches!(err, ServiceError::DmrMismatch { .. }) {
@@ -1159,7 +1265,7 @@ fn shard_worker(fleet: &FleetInner, vidx: usize, local: usize) {
                     metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                     let _ = job.reply.send(Err(err));
                 }
-                if transient && fleet.policy.quarantine_after > 0 {
+                if strikes && fleet.policy.quarantine_after > 0 {
                     consecutive += 1;
                     if probation || consecutive >= fleet.policy.quarantine_after {
                         // Quarantine: sit out while healthy peers absorb
@@ -1190,8 +1296,12 @@ fn shard_worker(fleet: &FleetInner, vidx: usize, local: usize) {
     }
 }
 
-/// Execute one routed job, unwrapping DMR: the inner request runs twice
-/// (each replica drawing its own fault plan) and the outputs must agree.
+/// Execute one routed job, unwrapping redundancy: a DMR inner request
+/// runs twice (each replica drawing its own fault plan) and the outputs
+/// must agree; a TMR inner request runs three times and the majority
+/// output wins ([`tmr_vote`]), with each masked replica counted into the
+/// shard's `tmr_outvoted` metric.
+#[allow(clippy::too_many_arguments)]
 fn execute(
     gpgpu: &Gpgpu,
     shard: u32,
@@ -1199,28 +1309,98 @@ fn execute(
     req: &Request,
     sig: CapabilitySignature,
     watchdog: Option<u64>,
+    checkpoint: Option<CheckpointPolicy>,
+    metrics: &Metrics,
     mut fault: impl FnMut() -> Option<FaultPlan>,
 ) -> Result<JobOutput, ServiceError> {
     if let Request::Qos { inner, .. } = req {
         // The class was consumed at admission; execution ignores it.
-        return execute(gpgpu, shard, variant, inner, sig, watchdog, fault);
+        return execute(gpgpu, shard, variant, inner, sig, watchdog, checkpoint, metrics, fault);
     }
     if let Request::Dmr(inner) = req {
-        let a = run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog)?;
-        let b = run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog)?;
+        let a = run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog, checkpoint)?;
+        let b = run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog, checkpoint)?;
         return if a.cycles == b.cycles && a.data == b.data && a.verified == b.verified {
             Ok(a)
         } else {
             Err(ServiceError::DmrMismatch { variant: variant.to_string() })
         };
     }
-    run_one(gpgpu, shard, variant, req, sig, fault(), watchdog)
+    if let Request::Tmr(inner) = req {
+        let replicas = [
+            run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog, checkpoint),
+            run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog, checkpoint),
+            run_one(gpgpu, shard, variant, inner, sig, fault(), watchdog, checkpoint),
+        ];
+        let (voted, outvoted) = tmr_vote(replicas, variant);
+        if outvoted > 0 {
+            metrics.tmr_outvoted.fetch_add(outvoted, Ordering::Relaxed);
+        }
+        return voted;
+    }
+    run_one(gpgpu, shard, variant, req, sig, fault(), watchdog, checkpoint)
+}
+
+/// Majority-vote three TMR replica results. A pair of successful
+/// replicas agreeing on (cycles, read-back data, verification outcome)
+/// wins; every replica outside the winning key — a divergent output *or*
+/// an outright failure — is masked and counted as outvoted. With no
+/// agreeing pair, three clean-but-distinct outputs are
+/// [`ServiceError::TmrInconclusive`] (redundancy cannot say which
+/// replica to trust), and otherwise the first replica error surfaces
+/// unchanged so retry classification still sees the underlying fault.
+fn tmr_vote(
+    replicas: [Result<JobOutput, ServiceError>; 3],
+    variant: &str,
+) -> (Result<JobOutput, ServiceError>, u64) {
+    let mut winner = None;
+    'search: for (i, a) in replicas.iter().enumerate() {
+        let Ok(a) = a else { continue };
+        for b in replicas.iter().skip(i + 1) {
+            if let Ok(b) = b {
+                if a.cycles == b.cycles && a.data == b.data && a.verified == b.verified {
+                    winner = Some(i);
+                    break 'search;
+                }
+            }
+        }
+    }
+    match winner {
+        Some(i) => {
+            let Ok(w) = &replicas[i] else { unreachable!("winner is a success") };
+            let (cycles, data, verified) = (w.cycles, w.data.clone(), w.verified);
+            let agreeing = replicas
+                .iter()
+                .filter(|r| {
+                    matches!(r, Ok(o) if o.cycles == cycles && o.data == data
+                        && o.verified == verified)
+                })
+                .count() as u64;
+            let out = replicas
+                .into_iter()
+                .nth(i)
+                .and_then(Result::ok)
+                .expect("winner index holds a success");
+            (Ok(out), 3 - agreeing)
+        }
+        None if replicas.iter().all(Result::is_ok) => {
+            (Err(ServiceError::TmrInconclusive { variant: variant.to_string() }), 0)
+        }
+        None => {
+            let err = replicas
+                .into_iter()
+                .find_map(Result::err)
+                .expect("no winning pair and not all succeeded");
+            (Err(err), 0)
+        }
+    }
 }
 
 /// Execute one routed job. `sig` is the signature the router admitted the
 /// job on (profile-refined for registered benchmarks): the launch admits
 /// on exactly that signature, and the mid-run removed-unit / stack traps
 /// are the structured backstop if a registered profile over-promised.
+#[allow(clippy::too_many_arguments)]
 fn run_one(
     gpgpu: &Gpgpu,
     shard: u32,
@@ -1229,6 +1409,7 @@ fn run_one(
     sig: CapabilitySignature,
     fault: Option<FaultPlan>,
     watchdog: Option<u64>,
+    checkpoint: Option<CheckpointPolicy>,
 ) -> Result<JobOutput, ServiceError> {
     match req {
         Request::Bench { id, n, seed } => {
@@ -1240,6 +1421,9 @@ fn run_one(
             }
             if let Some(cycles) = watchdog {
                 opts = opts.watchdog(cycles);
+            }
+            if let Some(policy) = checkpoint {
+                opts = opts.checkpoint(policy);
             }
             let run = w.run(gpgpu, &mut gmem, opts).map_err(ServiceError::Sim)?;
             let verified = w.verify(&gmem).map(|_| true).map_err(ServiceError::Verify)?;
@@ -1278,6 +1462,9 @@ fn run_one(
             if let Some(cycles) = watchdog {
                 first = first.watchdog(cycles);
             }
+            if let Some(policy) = checkpoint {
+                first = first.checkpoint(policy);
+            }
             let launched = match gpgpu.launch(first.parallel()) {
                 Err(SimError::WriteConflict { .. }) => {
                     // Arbitrary user kernels may legally overlap writes
@@ -1290,6 +1477,9 @@ fn run_one(
                     }
                     if let Some(cycles) = watchdog {
                         second = second.watchdog(cycles);
+                    }
+                    if let Some(policy) = checkpoint {
+                        second = second.checkpoint(policy);
                     }
                     gpgpu.launch(second)
                 }
@@ -1311,8 +1501,8 @@ fn run_one(
                 attempts: 1,
             })
         }
-        Request::Dmr(inner) | Request::Qos { inner, .. } => {
-            run_one(gpgpu, shard, variant, inner, sig, fault, watchdog)
+        Request::Dmr(inner) | Request::Tmr(inner) | Request::Qos { inner, .. } => {
+            run_one(gpgpu, shard, variant, inner, sig, fault, watchdog, checkpoint)
         }
     }
 }
@@ -1320,6 +1510,43 @@ fn run_one(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::{FaultSite, FaultState, FaultTargets};
+
+    /// The worker's per-execution reseed constant: execution `k` on a
+    /// sick shard draws its faults from `seed ^ k * GOLDEN`.
+    const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+    fn bench() -> Request {
+        Request::Bench { id: BenchId::VecAdd, n: 64, seed: 1 }
+    }
+
+    /// Clean cycle count of [`bench`] on the default device — the time
+    /// base the fault-window seed searches below are anchored to.
+    fn clean_cycles() -> u64 {
+        let svc = GpgpuService::start(GpgpuConfig::default());
+        svc.submit(bench()).wait().expect("clean bench runs").cycles
+    }
+
+    /// Search for a base seed whose *first-execution* fault schedule
+    /// (nonce 1 on a fresh shard) fires exactly once inside a clean run:
+    /// first upset before `clean / 2`, next one far beyond the replay.
+    fn one_shot_plan(clean: u64, rate: f64) -> FaultPlan {
+        (0u64..)
+            .map(|n| {
+                FaultPlan::new(n, rate).with_targets(FaultTargets {
+                    instr_image: true,
+                    ..FaultTargets::none()
+                })
+            })
+            .find(|p| {
+                let eff = FaultPlan { seed: p.seed ^ GOLDEN, ..*p };
+                let mut fs = FaultState::new(&eff, 0).expect("enabled plan");
+                let e1 = fs.next_event();
+                fs.poll(e1);
+                e1 < clean / 2 && fs.next_event() > e1 + 4 * clean
+            })
+            .expect("a one-shot seed exists")
+    }
 
     #[test]
     fn strip_qos_takes_the_outermost_class() {
@@ -1354,5 +1581,181 @@ mod tests {
             .wait()
             .expect("submit must survive a poisoned profiles lock");
         assert!(out.verified);
+    }
+
+    #[test]
+    fn nested_redundancy_is_rejected_with_a_typed_error() {
+        let svc = GpgpuService::start(GpgpuConfig::default());
+        for req in [
+            bench().dmr().dmr(),
+            bench().tmr().dmr(),
+            bench().tmr().tmr(),
+            bench().dmr().qos(QosClass::Latency).tmr(),
+        ] {
+            let err = svc.submit(req).wait().unwrap_err();
+            assert_eq!(err, ServiceError::NestedRedundancy);
+            assert!(!err.is_transient(), "a rejected shape never earns a retry");
+        }
+        assert_eq!(svc.metrics().jobs_failed, 0, "rejected before reaching any shard");
+        // Single wrappers (with or without a QoS tag) still run.
+        assert!(svc.submit(bench().dmr()).wait().expect("dmr runs").verified);
+        assert!(svc.submit(bench().tmr().qos(QosClass::BestEffort)).wait().unwrap().verified);
+    }
+
+    #[test]
+    fn service_error_transience_classification_table() {
+        let soft = ServiceError::Sim(SimError::SoftError {
+            site: FaultSite::L1Tag { sm: 0, index: 3 },
+            cycle: 17,
+            bit: 5,
+        });
+        let table = [
+            (soft, true),
+            (ServiceError::Verify("golden mismatch".into()), true),
+            (ServiceError::DmrMismatch { variant: "v".into() }, true),
+            (ServiceError::TmrInconclusive { variant: "v".into() }, true),
+            (ServiceError::Sim(SimError::Watchdog { cycles: 1 }), false),
+            (
+                ServiceError::Sim(SimError::MemFault {
+                    space: "global",
+                    addr: 4,
+                    reason: "out of bounds",
+                }),
+                false,
+            ),
+            (ServiceError::Sim(SimError::LimitExceeded("block too big".into())), false),
+            (ServiceError::Sim(SimError::RanOffCode { warp: 0, pc: 9 }), false),
+            (ServiceError::Panic("assert tripped".into()), false),
+            (ServiceError::Shutdown, false),
+            (ServiceError::Saturated, false),
+            (ServiceError::NestedRedundancy, false),
+        ];
+        for (err, want) in table {
+            assert_eq!(err.is_transient(), want, "{err}");
+        }
+    }
+
+    fn replica(cycles: u64, data: &[i32]) -> JobOutput {
+        JobOutput {
+            label: "t".into(),
+            cycles,
+            exec_time_ms: 0.0,
+            stats: SmStats::default(),
+            data: data.to_vec(),
+            verified: true,
+            shard: 0,
+            variant: "v".into(),
+            attempts: 1,
+        }
+    }
+
+    #[test]
+    fn tmr_vote_masks_one_corrupted_or_failed_replica() {
+        // Corrupted middle replica: the agreeing pair wins, one mask.
+        let (r, outvoted) =
+            tmr_vote([Ok(replica(10, &[1])), Ok(replica(10, &[2])), Ok(replica(10, &[1]))], "v");
+        assert_eq!(r.expect("majority wins").data, vec![1]);
+        assert_eq!(outvoted, 1);
+        // Failed middle replica: still a majority of successes.
+        let (r, outvoted) = tmr_vote(
+            [
+                Ok(replica(10, &[1])),
+                Err(ServiceError::Verify("corrupt".into())),
+                Ok(replica(10, &[1])),
+            ],
+            "v",
+        );
+        assert!(r.is_ok());
+        assert_eq!(outvoted, 1);
+        // Unanimous vote: nothing masked.
+        let (r, outvoted) =
+            tmr_vote([Ok(replica(10, &[1])), Ok(replica(10, &[1])), Ok(replica(10, &[1]))], "v");
+        assert!(r.is_ok());
+        assert_eq!(outvoted, 0);
+    }
+
+    #[test]
+    fn tmr_vote_without_a_majority_surfaces_the_right_error() {
+        // Three clean but distinct outputs: no replica is trustworthy.
+        let (r, outvoted) =
+            tmr_vote([Ok(replica(1, &[1])), Ok(replica(2, &[2])), Ok(replica(3, &[3]))], "v");
+        assert_eq!(r.unwrap_err(), ServiceError::TmrInconclusive { variant: "v".into() });
+        assert_eq!(outvoted, 0);
+        // A failure majority surfaces the first underlying fault intact,
+        // so retry classification still sees the real error class.
+        let (r, _) = tmr_vote(
+            [
+                Err(ServiceError::Verify("first".into())),
+                Ok(replica(1, &[1])),
+                Err(ServiceError::Verify("second".into())),
+            ],
+            "v",
+        );
+        assert_eq!(r.unwrap_err(), ServiceError::Verify("first".into()));
+    }
+
+    #[test]
+    fn tmr_on_healthy_hardware_votes_unanimously() {
+        let svc = GpgpuService::start(GpgpuConfig::default());
+        let plain = svc.submit(bench()).wait().expect("plain run");
+        let tmr = svc.submit(bench().tmr()).wait().expect("tmr run");
+        assert!(tmr.verified);
+        assert_eq!(tmr.cycles, plain.cycles, "replicas vote on the bit-identical output");
+        assert_eq!(svc.metrics().tmr_outvoted, 0, "healthy replicas never outvote");
+    }
+
+    #[test]
+    fn checkpointed_fleet_rescues_uncorrectable_faults() {
+        let clean = clean_cycles();
+        let plan = one_shot_plan(clean, 50.0);
+        let fleet = FleetConfig::new(vec![
+            VariantSpec::new("sick", GpgpuConfig::default()).with_fault(0, plan)
+        ])
+        .with_checkpoint(CheckpointPolicy::at_barriers());
+        let svc = GpgpuService::start_fleet(fleet);
+        let out = svc.submit(bench()).wait().expect("checkpoint rescues the launch");
+        assert!(out.verified);
+        assert!(out.stats.restarts >= 1, "the seeded upset must force a replay");
+        assert!(out.cycles > clean, "replayed cycles are real wall-clock");
+        let m = svc.metrics();
+        assert_eq!(m.jobs_failed, 0);
+        assert_eq!(m.soft_errors, 0, "the fault never escaped the launch");
+    }
+
+    #[test]
+    fn checkpoint_armed_fleets_exempt_soft_error_escapes_from_quarantine() {
+        let clean = clean_cycles();
+        let plan = one_shot_plan(clean, 50.0);
+        let sick = || {
+            vec![VariantSpec::new("sick", GpgpuConfig::default()).with_fault(0, plan)]
+        };
+        let policy = RecoveryPolicy::retry_quarantine(1, 1);
+        // Zero restart budget: the checkpoint machinery is armed but the
+        // upset still escapes — the strike exemption alone is under test.
+        let armed = GpgpuService::start_fleet(
+            FleetConfig::new(sick())
+                .with_policy(policy)
+                .with_checkpoint(CheckpointPolicy::at_barriers().with_max_restarts(0)),
+        );
+        let err = armed.submit(bench()).wait().unwrap_err();
+        assert!(matches!(err, ServiceError::Sim(SimError::SoftError { .. })), "{err}");
+        // A (wrong) strike would land within microseconds of the reply;
+        // a short grace makes a broken exemption show up here.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(armed.metrics().quarantines, 0, "escape is fault pressure, not sickness");
+        drop(armed);
+        // Control: the identical escape on a checkpoint-less fleet is a
+        // health strike and quarantines the shard. The counters land
+        // after the reply resolves, so poll up to a deadline.
+        let bare = GpgpuService::start_fleet(FleetConfig::new(sick()).with_policy(policy));
+        let err = bare.submit(bench()).wait().unwrap_err();
+        assert!(matches!(err, ServiceError::Sim(SimError::SoftError { .. })), "{err}");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while bare.metrics().reinstatements < 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let m = bare.metrics();
+        assert_eq!(m.quarantines, 1);
+        assert_eq!(m.reinstatements, 1, "the shard returns on probation");
     }
 }

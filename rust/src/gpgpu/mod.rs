@@ -79,9 +79,9 @@ use crate::asm::Kernel;
 use crate::isa::CapabilitySignature;
 use crate::registry::PreparedKernel;
 use crate::sim::{
-    AluBackend, AluFactory, BlockDesc, CachedGmem, EngineMode, FaultPlan, GlobalMem, GmemPort,
-    GmemSnapshot, L1Cache, MemoryConfig, NativeAlu, PreDecoded, SimError, Sm, SmConfig, SmLaunch,
-    SmStats, WriteRecord,
+    AluBackend, AluFactory, BlockDesc, CachedGmem, CheckpointPolicy, EngineMode, FaultPlan,
+    GlobalMem, GmemPort, GmemSnapshot, L1Cache, MemoryConfig, NativeAlu, PreDecoded, SimError, Sm,
+    SmConfig, SmLaunch, SmStats, WriteRecord,
 };
 use std::collections::HashMap;
 
@@ -221,6 +221,17 @@ impl LaunchResult {
     pub fn mem_stats(&self) -> crate::sim::MemStats {
         self.total.mem
     }
+
+    /// Checkpoint restarts taken across all SMs (zero without a
+    /// [`LaunchRequest::checkpoint`] policy).
+    pub fn restarts(&self) -> u64 {
+        self.total.restarts
+    }
+
+    /// Cycles re-executed because of checkpoint restarts, summed over SMs.
+    pub fn replayed_cycles(&self) -> u64 {
+        self.total.replayed_cycles
+    }
 }
 
 /// The kernel a [`LaunchRequest`] targets: a raw [`Kernel`] (signature and
@@ -280,6 +291,7 @@ pub struct LaunchRequest<'a> {
     fault: Option<&'a FaultPlan>,
     watchdog: Option<u64>,
     engine: Option<EngineMode>,
+    checkpoint: Option<CheckpointPolicy>,
 }
 
 impl<'a> LaunchRequest<'a> {
@@ -299,6 +311,7 @@ impl<'a> LaunchRequest<'a> {
             fault: None,
             watchdog: None,
             engine: None,
+            checkpoint: None,
         }
     }
 
@@ -377,6 +390,19 @@ impl<'a> LaunchRequest<'a> {
     pub fn scalar(self) -> Self {
         self.engine(EngineMode::Scalar)
     }
+
+    /// Barrier checkpoint/restart for this launch: each SM snapshots live
+    /// state at launch start and at every block-wide barrier
+    /// reconvergence, and an uncorrectable fault restores the latest
+    /// snapshot (up to `policy.max_restarts` times) instead of failing
+    /// the launch. Restart counts and replayed-cycle overhead surface in
+    /// [`LaunchResult::restarts`] / [`LaunchResult::replayed_cycles`].
+    /// Replay is deterministic, so a rescued launch stays bit-identical
+    /// to a fault-free run.
+    pub fn checkpoint(mut self, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = Some(policy);
+        self
+    }
 }
 
 /// Post-partition simulate-phase inputs, bundled so the per-path drivers
@@ -391,6 +417,7 @@ struct SimJob<'a> {
     fault: Option<&'a FaultPlan>,
     watchdog: Option<u64>,
     engine: Option<EngineMode>,
+    checkpoint: Option<CheckpointPolicy>,
 }
 
 impl SimJob<'_> {
@@ -403,6 +430,7 @@ impl SimJob<'_> {
             blocks,
             max_resident: self.max_resident as usize,
             fault: self.fault,
+            checkpoint: self.checkpoint,
         }
     }
 
@@ -507,6 +535,7 @@ impl Gpgpu {
             fault,
             watchdog,
             engine,
+            checkpoint,
         } = req;
         let memory = memory.unwrap_or(self.cfg.memory);
         memory.validate()?;
@@ -529,6 +558,7 @@ impl Gpgpu {
             fault,
             watchdog,
             engine,
+            checkpoint,
         };
         match mode {
             None => {
@@ -1020,6 +1050,47 @@ mod tests {
         let par = run(true);
         assert!(matches!(seq, SimError::SoftError { .. }), "{seq}");
         assert_eq!(seq, par, "fault sites must be path-independent");
+    }
+
+    #[test]
+    fn checkpoint_rescues_launches_on_both_paths_bit_identically() {
+        use crate::sim::{CheckpointPolicy, FaultPlan, FaultState, FaultTargets};
+        let k = assemble(SRC).unwrap();
+        let (g_clean, r_clean) = launch(GpgpuConfig::new(1, 8), 4, 64);
+        let c = r_clean.per_sm[0].cycles;
+        // One parity-fatal instruction upset mid-run, the next far past the
+        // replayed completion (same seed-search idea as the SM-level test).
+        let targets = FaultTargets { instr_image: true, ..FaultTargets::none() };
+        let plan = (0u64..)
+            .map(|n| FaultPlan::new(0xCC + n, 50.0).with_targets(targets))
+            .find(|p| {
+                let mut st = FaultState::new(p, 0).unwrap();
+                let e1 = st.next_event();
+                e1 < c / 2 && {
+                    st.poll(e1);
+                    st.next_event() > e1 + 4 * c
+                }
+            })
+            .expect("seed search is unbounded");
+        let run = |parallel: bool| {
+            let mut g = GlobalMem::new(4 * 64 * 4 + 64);
+            let mut req = LaunchRequest::new(&k, LaunchConfig::linear(4, 64), &mut g)
+                .fault(&plan)
+                .checkpoint(CheckpointPolicy::at_barriers());
+            if parallel {
+                req = req.parallel();
+            }
+            let r = Gpgpu::new(GpgpuConfig::new(1, 8)).launch(req).unwrap();
+            (r, g.read_words(0, 256).unwrap())
+        };
+        let (rs, img_s) = run(false);
+        let (rp, img_p) = run(true);
+        assert_eq!(rs.restarts(), 1, "exactly one rescue");
+        assert!(rs.replayed_cycles() > 0);
+        assert_eq!(rs.total.cycles, rp.total.cycles, "restart is path-independent");
+        assert_eq!(rp.restarts(), 1);
+        assert_eq!(img_s, img_p);
+        assert_eq!(img_s, g_clean.read_words(0, 256).unwrap(), "rescued == fault-free");
     }
 
     #[test]

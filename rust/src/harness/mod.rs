@@ -22,7 +22,9 @@ pub use hotpath::{HotPathPoint, HotPathReport};
 pub use memory::{memory_report, MemoryPoint, MemoryReport};
 pub use microbench::{bench, BenchResult};
 pub use qos::{qos_report, QosPoint, QosReport};
-pub use resilience::{resilience_report, ResiliencePoint, ResilienceReport};
+pub use resilience::{
+    resilience_report, resilience_report_scoped, ResiliencePoint, ResilienceReport, SweepScope,
+};
 pub use scaling::{
     scaling_report, scaling_suite, suite_json, write_suite_json, ScalingPoint, ScalingReport,
 };

@@ -1,20 +1,31 @@
-//! Resilience sweep (`BENCH_resilience.json`): recovery-policy comparison
-//! under seeded SEU campaigns (EXPERIMENTS.md §Resilience).
+//! Resilience sweep (`BENCH_resilience.json`): correct-and-continue
+//! policy comparison under seeded SEU campaigns (EXPERIMENTS.md
+//! §Resilience).
 //!
 //! Methodology:
-//! 1. build a two-variant fleet — a "sick" shard carrying a deterministic
-//!    [`FaultPlan`] campaign and an equal-power healthy peer (the QoS
-//!    router spreads the bit-equal power tie round-robin, so the sick
-//!    shard sees every other job until quarantine steers traffic away);
+//! 1. build an *all-sick* single-variant fleet — one shard carrying a
+//!    deterministic [`FaultPlan`] campaign and no healthy peer, so every
+//!    retry re-lands on the faulted hardware. That is the paper's
+//!    stranded-satellite scenario: when the deployed FPGA is the only
+//!    FPGA, recovery has to come from protection and replay, not from
+//!    re-routing;
 //! 2. replay a small benchmark mix serially for every point of the
-//!    {fault-rate} x {no-recovery, retry, retry+quarantine, DMR} grid,
-//!    timing each ticket submit-to-wait;
-//! 3. report jobs rescued (completed with `attempts > 1`), jobs lost,
-//!    corrupted outputs served (completed but unverified — the acceptance
-//!    bar is zero under every policy), retry latency overhead (mean
-//!    rescued-job latency minus mean first-try latency), and the shard
-//!    health counters (soft errors, retries, quarantines, reinstatements,
-//!    DMR mismatches).
+//!    {parity, ecc, ecc+scrub} x {transient, stuck-at} x
+//!    {rerun, checkpoint, dmr, tmr} stress grid (plus one clean
+//!    rate-0 row per policy), timing each ticket submit-to-wait;
+//! 3. report availability (completed / jobs), jobs rescued (completed
+//!    with `attempts > 1`), jobs lost, corrupted outputs served (must
+//!    stay zero under every policy), ECC correction and checkpoint
+//!    replay counters, retry latency overhead, and the fleet health
+//!    counters (soft errors, retries, quarantines, reinstatements,
+//!    DMR mismatches, TMR outvotes).
+//!
+//! The headline contrast: under stuck-at aging, parity + rerun keeps
+//! re-executing into the same defective BRAM cells and loses a large
+//! fraction of the mix, while ECC + scrubbing + barrier checkpointing
+//! corrects the transients, drains the stuck sites, and replays through
+//! the rare uncorrectable double hits — completing nearly everything on
+//! the same sick hardware.
 //!
 //! Rate 0 disables the campaign entirely (the injector's zero-cost
 //! contract), giving each policy a clean reference row.
@@ -22,21 +33,54 @@
 use crate::coordinator::{FleetConfig, GpgpuService, RecoveryPolicy, Request, VariantSpec};
 use crate::gpgpu::GpgpuConfig;
 use crate::kernels::BenchId;
-use crate::sim::FaultPlan;
+use crate::sim::{CheckpointPolicy, FaultPlan, ProtectionConfig};
 use std::time::Instant;
 
-/// Upsets per million simulated cycles, swept per policy. 0 = campaign
-/// disabled; 200k = mean interval 5 cycles (faults within any launch);
-/// 1M = mean interval 1 cycle (saturating).
-pub const FAULT_RATES: [f64; 3] = [0.0, 200_000.0, 1_000_000.0];
+/// Upsets per million simulated cycles on the stress rows: mean interval
+/// 50 cycles — several upsets inside every launch of the mix, without
+/// saturating the checkpoint replay budget.
+pub const STRESS_RATE: f64 = 20_000.0;
 
-/// One (policy, fault-rate) cell of the sweep grid.
+/// Fraction of stress-row upsets that leave a stuck-at (aged) BRAM cell
+/// behind on the `stuck-at` rows of the aging axis.
+pub const STUCK_FRACTION: f64 = 0.3;
+
+/// The recovery-policy axis. Every policy rides on `retry(3)`; they
+/// differ in what each execution does about faults: `rerun` only
+/// re-executes, `checkpoint` replays from barrier checkpoints,
+/// `dmr`/`tmr` wrap the request in modular redundancy.
+pub const POLICIES: [&str; 4] = ["rerun", "checkpoint", "dmr", "tmr"];
+
+/// The protection axis for the stress rows.
+pub const PROTECTIONS: [&str; 3] = ["parity", "ecc", "ecc+scrub"];
+
+/// Optional restriction of the sweep grid (the CLI's `--protect`,
+/// `--checkpoint`/`--tmr` and `--stuck-at` flags). Default = full grid.
+#[derive(Debug, Clone, Default)]
+pub struct SweepScope {
+    /// Restrict the protection axis to one mode (None = all three).
+    pub protection: Option<String>,
+    /// Restrict the policy axis to these policies (empty = all four).
+    pub policies: Vec<String>,
+    /// Override the stuck-at fraction of the aging stress rows.
+    pub stuck_fraction: Option<f64>,
+}
+
+/// One (policy, protection, aging, fault-rate) cell of the sweep grid.
 #[derive(Debug, Clone)]
 pub struct ResiliencePoint {
     pub policy: &'static str,
+    /// Protection mode of the sick shard's BRAMs: `parity`, `ecc`, or
+    /// `ecc+scrub` (clean rows report `parity`, the default hardware).
+    pub protection: &'static str,
+    /// Aging mode of the campaign: `transient` (every upset decays) or
+    /// `stuck-at` (a fraction of upsets leave defective cells behind).
+    pub aging: &'static str,
     pub fault_rate: f64,
     pub jobs: u32,
     pub completed: u64,
+    /// `completed / jobs` — the headline availability number.
+    pub availability: f64,
     /// Completed jobs that needed more than one execution.
     pub rescued: u64,
     /// Tickets that resolved with an error.
@@ -44,13 +88,23 @@ pub struct ResiliencePoint {
     /// Completed jobs whose output failed golden verification — corrupted
     /// results actually served. Must stay zero under every policy.
     pub corrupted: u64,
+    /// ECC single-bit corrections inside completed launches.
+    pub corrected: u64,
+    /// Uncorrectable (aged-site) ECC hits inside completed launches.
+    pub uncorrectable: u64,
+    /// Checkpoint restarts inside completed launches.
+    pub restarts: u64,
+    /// Cycles replayed by those restarts.
+    pub replayed_cycles: u64,
     /// Transient fault-class failures observed fleet-wide (detected SEUs,
-    /// verify rejects, DMR mismatches).
+    /// verify rejects, DMR mismatches, TMR inconclusives).
     pub soft_errors: u64,
     pub retries: u64,
     pub quarantines: u64,
     pub reinstatements: u64,
     pub dmr_mismatches: u64,
+    /// TMR replicas outvoted (masked) by their majority.
+    pub tmr_outvoted: u64,
     /// Mean submit-to-wait latency of first-try completions (ms).
     pub mean_clean_ms: f64,
     /// Mean submit-to-wait latency of rescued completions (ms).
@@ -82,24 +136,35 @@ impl ResilienceReport {
             .iter()
             .map(|p| {
                 format!(
-                    "{{\"policy\": \"{}\", \"fault_rate\": {:.1}, \"jobs\": {}, \
-                     \"completed\": {}, \"rescued\": {}, \"lost\": {}, \"corrupted\": {}, \
-                     \"soft_errors\": {}, \"retries\": {}, \"quarantines\": {}, \
-                     \"reinstatements\": {}, \"dmr_mismatches\": {}, \
+                    "{{\"policy\": \"{}\", \"protection\": \"{}\", \"aging\": \"{}\", \
+                     \"fault_rate\": {:.1}, \"jobs\": {}, \"completed\": {}, \
+                     \"availability\": {:.4}, \"rescued\": {}, \"lost\": {}, \
+                     \"corrupted\": {}, \"corrected\": {}, \"uncorrectable\": {}, \
+                     \"restarts\": {}, \"replayed_cycles\": {}, \"soft_errors\": {}, \
+                     \"retries\": {}, \"quarantines\": {}, \"reinstatements\": {}, \
+                     \"dmr_mismatches\": {}, \"tmr_outvoted\": {}, \
                      \"mean_clean_ms\": {:.3}, \"mean_rescued_ms\": {:.3}, \
                      \"retry_overhead_ms\": {:.3}}}",
                     p.policy,
+                    p.protection,
+                    p.aging,
                     p.fault_rate,
                     p.jobs,
                     p.completed,
+                    p.availability,
                     p.rescued,
                     p.lost,
                     p.corrupted,
+                    p.corrected,
+                    p.uncorrectable,
+                    p.restarts,
+                    p.replayed_cycles,
                     p.soft_errors,
                     p.retries,
                     p.quarantines,
                     p.reinstatements,
                     p.dmr_mismatches,
+                    p.tmr_outvoted,
                     p.mean_clean_ms,
                     p.mean_rescued_ms,
                     p.retry_overhead_ms
@@ -114,15 +179,12 @@ impl ResilienceReport {
     }
 }
 
-/// The four compared policies. DMR rides on a retry policy so a mismatch
-/// (or a detected replica fault) re-routes instead of losing the job.
-fn policies() -> [(&'static str, RecoveryPolicy, bool); 4] {
-    [
-        ("no-recovery", RecoveryPolicy::default(), false),
-        ("retry", RecoveryPolicy::retry(3), false),
-        ("retry-quarantine", RecoveryPolicy::retry_quarantine(3, 2), false),
-        ("dmr", RecoveryPolicy::retry(3), true),
-    ]
+fn protection_config(label: &str) -> ProtectionConfig {
+    match label {
+        "ecc" => ProtectionConfig::ecc(),
+        "ecc+scrub" => ProtectionConfig::ecc_scrub(),
+        _ => ProtectionConfig::parity(),
+    }
 }
 
 fn mean(v: &[f64]) -> f64 {
@@ -133,32 +195,46 @@ fn mean(v: &[f64]) -> f64 {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn sweep_point(
-    policy: (&'static str, RecoveryPolicy, bool),
+    policy: &'static str,
+    protection: &'static str,
+    aging: &'static str,
     rate: f64,
+    stuck: f64,
     n: u32,
     jobs: u32,
     seed: u64,
 ) -> ResiliencePoint {
-    let (label, recovery, dmr) = policy;
     let base = GpgpuConfig::new(1, 8);
     let mut sick = VariantSpec::new("sick", base);
     if rate > 0.0 {
-        sick = sick.with_fault(0, FaultPlan::new(0xBAD5EED ^ seed, rate));
+        let plan = FaultPlan::new(0xBAD5EED ^ seed, rate)
+            .with_protection(protection_config(protection))
+            .with_stuck_at(if aging == "stuck-at" { stuck } else { 0.0 });
+        sick = sick.with_fault(0, plan);
     }
-    let svc = GpgpuService::start_fleet(
-        FleetConfig::new(vec![sick, VariantSpec::new("healthy", base)]).with_policy(recovery),
-    );
+    let mut fleet = FleetConfig::new(vec![sick]).with_policy(RecoveryPolicy::retry(3));
+    if policy == "checkpoint" {
+        fleet = fleet.with_checkpoint(CheckpointPolicy::at_barriers());
+    }
+    let svc = GpgpuService::start_fleet(fleet);
 
     // Serial replay: each ticket is timed submit-to-wait, so rescued jobs
-    // carry their full detect + re-route + re-execute latency.
+    // carry their full detect + re-admit + re-execute latency.
     let mix = [BenchId::VecAdd, BenchId::Reduction, BenchId::Bitonic];
     let (mut completed, mut rescued, mut lost, mut corrupted) = (0u64, 0u64, 0u64, 0u64);
+    let (mut corrected, mut uncorrectable) = (0u64, 0u64);
+    let (mut restarts, mut replayed_cycles) = (0u64, 0u64);
     let (mut clean_ms, mut rescued_ms) = (Vec::new(), Vec::new());
     for k in 0..jobs {
         let id = mix[k as usize % mix.len()];
         let req = Request::Bench { id, n, seed: seed + u64::from(k) };
-        let req = if dmr { req.dmr() } else { req };
+        let req = match policy {
+            "dmr" => req.dmr(),
+            "tmr" => req.tmr(),
+            _ => req,
+        };
         let t0 = Instant::now();
         match svc.submit(req).wait() {
             Ok(out) => {
@@ -167,6 +243,10 @@ fn sweep_point(
                 if !out.verified {
                     corrupted += 1;
                 }
+                corrected += out.stats.fault.corrected;
+                uncorrectable += out.stats.fault.uncorrectable;
+                restarts += out.stats.restarts;
+                replayed_cycles += out.stats.replayed_cycles;
                 if out.attempts > 1 {
                     rescued += 1;
                     rescued_ms.push(ms);
@@ -187,70 +267,187 @@ fn sweep_point(
         mean_rescued_ms - mean_clean_ms
     };
     ResiliencePoint {
-        policy: label,
+        policy,
+        protection,
+        aging,
         fault_rate: rate,
         jobs,
         completed,
+        availability: completed as f64 / f64::from(jobs.max(1)),
         rescued,
         lost,
         corrupted,
+        corrected,
+        uncorrectable,
+        restarts,
+        replayed_cycles,
         soft_errors: m.soft_errors,
         retries: m.jobs_retried,
         quarantines: m.quarantines,
         reinstatements: m.reinstatements,
         dmr_mismatches: m.dmr_mismatches,
+        tmr_outvoted: m.tmr_outvoted,
         mean_clean_ms,
         mean_rescued_ms,
         retry_overhead_ms,
     }
 }
 
-/// Run the full {rate} x {policy} grid: `jobs_per_point` jobs of the
-/// benchmark mix per cell, at problem size `n` (power of two, 32..=256).
-pub fn resilience_report(n: u32, jobs_per_point: u32, seed: u64) -> ResilienceReport {
+/// Run the sweep restricted by `scope`: one clean rate-0 row per selected
+/// policy, then the {protection} x {transient, stuck-at} x {policy}
+/// stress grid at [`STRESS_RATE`]. The full grid is 4 + 24 = 28 points.
+pub fn resilience_report_scoped(
+    n: u32,
+    jobs_per_point: u32,
+    seed: u64,
+    scope: &SweepScope,
+) -> ResilienceReport {
     let jobs = jobs_per_point.max(1);
-    let mut points = Vec::with_capacity(FAULT_RATES.len() * policies().len());
-    for rate in FAULT_RATES {
-        for policy in policies() {
-            points.push(sweep_point(policy, rate, n, jobs, seed));
+    let stuck = scope.stuck_fraction.unwrap_or(STUCK_FRACTION);
+    let policies: Vec<&'static str> = POLICIES
+        .into_iter()
+        .filter(|p| scope.policies.is_empty() || scope.policies.iter().any(|s| s == p))
+        .collect();
+    let protections: Vec<&'static str> = PROTECTIONS
+        .into_iter()
+        .filter(|p| match scope.protection.as_deref() {
+            None => true,
+            Some(s) => s == *p,
+        })
+        .collect();
+    let mut points = Vec::new();
+    // Clean reference rows: the zero-cost contract of a disabled campaign.
+    for &policy in &policies {
+        points.push(sweep_point(policy, "parity", "transient", 0.0, 0.0, n, jobs, seed));
+    }
+    for &protection in &protections {
+        for aging in ["transient", "stuck-at"] {
+            for &policy in &policies {
+                points.push(sweep_point(
+                    policy,
+                    protection,
+                    aging,
+                    STRESS_RATE,
+                    stuck,
+                    n,
+                    jobs,
+                    seed,
+                ));
+            }
         }
     }
     ResilienceReport { n, jobs_per_point: jobs, seed, points }
+}
+
+/// Run the full {clean} + {protection} x {aging} x {policy} grid:
+/// `jobs_per_point` jobs of the benchmark mix per cell, at problem size
+/// `n` (power of two, 32..=256).
+pub fn resilience_report(n: u32, jobs_per_point: u32, seed: u64) -> ResilienceReport {
+    resilience_report_scoped(n, jobs_per_point, seed, &SweepScope::default())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn find<'a>(
+        r: &'a ResilienceReport,
+        policy: &str,
+        protection: &str,
+        aging: &str,
+    ) -> &'a ResiliencePoint {
+        r.points
+            .iter()
+            .find(|p| {
+                p.policy == policy
+                    && p.protection == protection
+                    && p.aging == aging
+                    && p.fault_rate > 0.0
+            })
+            .expect("grid point exists")
+    }
+
     #[test]
     fn sweep_covers_the_grid_and_never_serves_corruption() {
         let r = resilience_report(32, 3, 7);
-        assert_eq!(r.points.len(), FAULT_RATES.len() * 4);
+        assert_eq!(r.points.len(), 4 + 24, "4 clean rows + 3x2x4 stress grid");
         for p in &r.points {
-            let at = format!("{} @ rate {}", p.policy, p.fault_rate);
+            let at = format!("{}/{}/{} @ rate {}", p.policy, p.protection, p.aging, p.fault_rate);
             assert_eq!(u64::from(p.jobs), p.completed + p.lost, "{at}: every ticket resolves");
             assert_eq!(p.corrupted, 0, "{at}: verification gates completion");
+            let avail = p.completed as f64 / f64::from(p.jobs);
+            assert!((p.availability - avail).abs() < 1e-9, "{at}");
             if p.fault_rate == 0.0 {
                 // The injector's zero-cost contract: a disabled campaign
                 // behaves exactly like no campaign.
                 assert_eq!(p.completed, u64::from(p.jobs), "{at}");
                 assert_eq!(p.soft_errors, 0, "{at}");
                 assert_eq!(p.rescued, 0, "{at}");
-                assert_eq!(p.quarantines, 0, "{at}");
+                assert_eq!(p.corrected, 0, "{at}");
+                assert_eq!(p.restarts, 0, "{at}");
+                assert_eq!(p.tmr_outvoted, 0, "{at}");
             }
-            if p.policy == "no-recovery" {
-                assert_eq!(p.retries, 0, "{at}: max_attempts 1 never retries");
-                assert_eq!(p.rescued, 0, "{at}");
+            if p.aging == "transient" {
+                // Aged sites only come from stuck-at upsets, and only
+                // aged sites defeat SECDED.
+                assert_eq!(p.uncorrectable, 0, "{at}");
             }
-            if !p.policy.contains("quarantine") {
-                assert_eq!(p.quarantines, 0, "{at}: policy has quarantine disabled");
+            if p.policy != "checkpoint" {
+                assert_eq!(p.restarts, 0, "{at}: replay needs the checkpoint policy");
+                assert_eq!(p.replayed_cycles, 0, "{at}");
+            }
+            if p.protection == "parity" {
+                assert_eq!(p.corrected, 0, "{at}: parity detects, never corrects");
             }
         }
+        // Headline contrast (test-scale): on stuck-at hardware, parity +
+        // rerun loses at least a third of the mix, while ECC + scrubbing
+        // + checkpointing completes more — on the very same sick shard.
+        let pr = find(&r, "rerun", "parity", "stuck-at");
+        let cc = find(&r, "checkpoint", "ecc+scrub", "stuck-at");
+        assert!(
+            3 * pr.lost >= u64::from(pr.jobs),
+            "parity+rerun must lose >= 1/3 of the mix, lost {} of {}",
+            pr.lost,
+            pr.jobs
+        );
+        assert!(
+            cc.completed >= u64::from(cc.jobs) - 1,
+            "ecc+scrub+checkpoint must complete nearly everything, completed {} of {}",
+            cc.completed,
+            cc.jobs
+        );
+        assert!(cc.completed > pr.completed, "the tentpole stack beats parity+rerun");
+        assert!(cc.corrected > 0, "ECC corrections must actually fire under stress");
+
         let json = r.to_json();
-        for field in
-            ["\"policy\": \"retry-quarantine\"", "\"fault_rate\": 1000000.0", "\"rescued\""]
-        {
+        for field in [
+            "\"policy\": \"checkpoint\"",
+            "\"protection\": \"ecc+scrub\"",
+            "\"aging\": \"stuck-at\"",
+            "\"availability\"",
+            "\"tmr_outvoted\"",
+            "\"replayed_cycles\"",
+        ] {
             assert!(json.contains(field), "{json}");
         }
+    }
+
+    #[test]
+    fn scoped_sweep_restricts_the_axes() {
+        let scope = SweepScope {
+            protection: Some("ecc".into()),
+            policies: vec!["rerun".into(), "checkpoint".into()],
+            stuck_fraction: Some(1.0),
+        };
+        let r = resilience_report_scoped(32, 1, 7, &scope);
+        // 2 clean rows + {ecc} x {transient, stuck-at} x {rerun, checkpoint}.
+        assert_eq!(r.points.len(), 2 + 4);
+        assert!(r.points.iter().all(|p| p.policy == "rerun" || p.policy == "checkpoint"));
+        assert!(r
+            .points
+            .iter()
+            .filter(|p| p.fault_rate > 0.0)
+            .all(|p| p.protection == "ecc"));
     }
 }

@@ -12,8 +12,8 @@ use crate::isa::CapabilitySignature;
 use crate::registry::{KernelRegistry, PreparedKernel};
 use crate::rng::XorShift64;
 use crate::sim::{
-    AluBackend, AluFactory, EngineMode, FaultPlan, GlobalMem, MemoryConfig, NativeAlu, SimError,
-    SmStats,
+    AluBackend, AluFactory, CheckpointPolicy, EngineMode, FaultPlan, GlobalMem, MemoryConfig,
+    NativeAlu, SimError, SmStats,
 };
 use std::sync::Arc;
 
@@ -162,6 +162,7 @@ pub struct RunOptions<'a> {
     fault: Option<&'a FaultPlan>,
     watchdog: Option<u64>,
     engine: Option<EngineMode>,
+    checkpoint: Option<CheckpointPolicy>,
 }
 
 impl<'a> RunOptions<'a> {
@@ -222,6 +223,14 @@ impl<'a> RunOptions<'a> {
     /// `.engine(EngineMode::Scalar)`, used by the differential suite.
     pub fn scalar(self) -> Self {
         self.engine(EngineMode::Scalar)
+    }
+
+    /// Barrier checkpoint/restart on every phase (see
+    /// [`LaunchRequest::checkpoint`]): uncorrectable faults restore the
+    /// latest barrier snapshot instead of failing the launch.
+    pub fn checkpoint(mut self, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = Some(policy);
+        self
     }
 }
 
@@ -434,6 +443,9 @@ impl Workload {
             }
             if let Some(engine) = opts.engine {
                 req = req.engine(engine);
+            }
+            if let Some(policy) = opts.checkpoint {
+                req = req.checkpoint(policy);
             }
             // Reborrow the mode per phase: a sequential backend is handed
             // out as a fresh `&mut` each launch.

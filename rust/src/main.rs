@@ -15,25 +15,28 @@ use flexgrip::harness::{tables, Evaluation};
 use flexgrip::kernels::{self, BenchId, RunOptions};
 use flexgrip::model::{area::area, power::power, ArchParams};
 use flexgrip::runtime::{Artifacts, XlaAlu};
-use flexgrip::sim::{CacheGeometry, FaultPlan, MemoryConfig};
+use flexgrip::sim::{CacheGeometry, CheckpointPolicy, FaultPlan, MemoryConfig, ProtectionConfig};
 use std::collections::HashMap;
 use std::process::ExitCode;
 
 fn usage() -> ! {
     eprintln!(
         "usage:\n  \
-         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla] [--parallel] [--cache WxSxL] [--watchdog CYCLES] [--fault-rate R] [--fault-seed N]\n  \
+         flexgrip run --bench <name> [--n 256] [--sms 1] [--sp 8] [--seed N] [--backend native|xla] [--parallel] [--cache WxSxL] [--watchdog CYCLES] [--fault-rate R] [--fault-seed N] [--protect MODE] [--stuck-at FRAC] [--checkpoint] [--tmr]\n  \
          flexgrip report [--all] [--table 1..6] [--fig 4|5] [--sweep] [--size 256]\n  \
          flexgrip customize --bench <name> [--n 64]\n  \
          flexgrip limits\n  \
          flexgrip asm --file <kernel.flex>\n  \
-         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1] [--cache WxSxL] [--watchdog CYCLES] [--fault-rate R] [--fault-seed N] [--retries K] [--qos CLASS]\n  \
+         flexgrip service-demo [--shards 2] [--jobs 8] [--n 64] [--sms 1] [--cache WxSxL] [--watchdog CYCLES] [--fault-rate R] [--fault-seed N] [--protect MODE] [--stuck-at FRAC] [--checkpoint] [--tmr] [--retries K] [--qos CLASS]\n  \
          flexgrip fleet-demo [--n 64] [--jobs 4] [--seed N] [--cache WxSxL] [--out BENCH_fleet.json]\n  \
-         flexgrip resilience [--n 32] [--jobs 6] [--seed N] [--out BENCH_resilience.json]\n  \
+         flexgrip resilience [--n 32] [--jobs 6] [--seed N] [--protect MODE] [--stuck-at FRAC] [--checkpoint] [--tmr] [--out BENCH_resilience.json]\n  \
          flexgrip qos [--n 32] [--jobs 12] [--seed N] [--out BENCH_qos.json]\n\n\
          benchmarks: autocorr bitonic matmul reduction transpose vecadd memstress\n\
          --cache takes an L1 geometry WAYSxSETSxLINE_BYTES, e.g. 4x64x32\n\
          --fault-rate is expected SEU upsets per million simulated cycles (seeded, deterministic)\n\
+         --protect picks the BRAM protection: parity|ecc|ecc+scrub, or per-class rf|smem|l1|instr=MODE pairs\n\
+         --stuck-at ages that fraction of upsets into stuck-at BRAM cells; --checkpoint arms barrier checkpoint/restart\n\
+         --tmr runs triple-modular redundancy (majority vote over three replicas)\n\
          --qos tags submitted jobs with a latency class: latency|throughput|besteffort"
     );
     std::process::exit(2);
@@ -99,12 +102,13 @@ fn get_opt<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str) -> 
     })
 }
 
-/// Apply the optional per-request SEU campaign and cycle budget to a
-/// launch's options.
+/// Apply the optional per-request SEU campaign, cycle budget and
+/// checkpoint policy to a launch's options.
 fn decorate<'a>(
     mut opts: RunOptions<'a>,
     fault: Option<&'a FaultPlan>,
     watchdog: Option<u64>,
+    checkpoint: Option<CheckpointPolicy>,
 ) -> RunOptions<'a> {
     if let Some(plan) = fault {
         opts = opts.fault(plan);
@@ -112,7 +116,37 @@ fn decorate<'a>(
     if let Some(cycles) = watchdog {
         opts = opts.watchdog(cycles);
     }
+    if let Some(policy) = checkpoint {
+        opts = opts.checkpoint(policy);
+    }
     opts
+}
+
+/// Assemble the optional SEU campaign from `--fault-rate`, `--fault-seed`,
+/// `--protect` and `--stuck-at` (exits with a parse message on a bad
+/// protection spec).
+fn fault_flag(flags: &HashMap<String, String>) -> Option<FaultPlan> {
+    get_opt::<f64>(flags, "fault-rate").map(|rate| {
+        let mut plan = FaultPlan::new(get(flags, "fault-seed", 1), rate);
+        if let Some(spec) = flags.get("protect") {
+            match ProtectionConfig::parse(spec) {
+                Ok(protect) => plan = plan.with_protection(protect),
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        if let Some(fraction) = get_opt::<f64>(flags, "stuck-at") {
+            plan = plan.with_stuck_at(fraction);
+        }
+        plan
+    })
+}
+
+/// `--checkpoint` arms the barrier checkpoint/restart policy.
+fn checkpoint_flag(flags: &HashMap<String, String>) -> Option<CheckpointPolicy> {
+    flags.contains_key("checkpoint").then(CheckpointPolicy::at_barriers)
 }
 
 /// Parse the optional `--qos CLASS` flag (jobs stay untagged when
@@ -152,10 +186,17 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
     }
 
     let watchdog: Option<u64> = get_opt(&flags, "watchdog");
-    let fault: Option<FaultPlan> = get_opt::<f64>(&flags, "fault-rate")
-        .map(|rate| FaultPlan::new(get(&flags, "fault-seed", 1), rate));
+    let fault = fault_flag(&flags);
+    let checkpoint = checkpoint_flag(&flags);
 
     let cfg = GpgpuConfig::new(sms, sp).with_memory(memory_flag(&flags));
+    if flags.contains_key("tmr") {
+        if backend != "native" {
+            eprintln!("--tmr requires --backend native (replicas run in-process)");
+            return ExitCode::FAILURE;
+        }
+        return run_tmr(id, n, seed, cfg, parallel, fault, watchdog, checkpoint);
+    }
     let gpgpu = flexgrip::gpgpu::Gpgpu::new(cfg);
     let w = kernels::prepare(id, n, seed);
     let mut gmem = w.make_gmem();
@@ -163,11 +204,13 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
         "native" if parallel => w.run(
             &gpgpu,
             &mut gmem,
-            decorate(RunOptions::new().parallel(), fault.as_ref(), watchdog),
+            decorate(RunOptions::new().parallel(), fault.as_ref(), watchdog, checkpoint),
         ),
-        "native" => {
-            w.run(&gpgpu, &mut gmem, decorate(RunOptions::default(), fault.as_ref(), watchdog))
-        }
+        "native" => w.run(
+            &gpgpu,
+            &mut gmem,
+            decorate(RunOptions::default(), fault.as_ref(), watchdog, checkpoint),
+        ),
         "xla" => {
             let arts = match Artifacts::open_default() {
                 Ok(a) => std::sync::Arc::new(a),
@@ -186,7 +229,12 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
             w.run(
                 &gpgpu,
                 &mut gmem,
-                decorate(RunOptions::new().sequential(&mut alu), fault.as_ref(), watchdog),
+                decorate(
+                    RunOptions::new().sequential(&mut alu),
+                    fault.as_ref(),
+                    watchdog,
+                    checkpoint,
+                ),
             )
         }
         other => {
@@ -246,6 +294,58 @@ fn cmd_run(flags: HashMap<String, String>) -> ExitCode {
         p.dynamic_w * run.exec_time_ms()
     );
     ExitCode::SUCCESS
+}
+
+/// `run --tmr`: launch three in-process replicas of the benchmark with
+/// decorrelated fault seeds and majority-vote on (cycles, verified
+/// output). One corrupted or failed replica is masked; a three-way
+/// disagreement prints an inconclusive verdict and fails the run.
+#[allow(clippy::too_many_arguments)]
+fn run_tmr(
+    id: BenchId,
+    n: u32,
+    seed: u64,
+    cfg: GpgpuConfig,
+    parallel: bool,
+    fault: Option<FaultPlan>,
+    watchdog: Option<u64>,
+    checkpoint: Option<CheckpointPolicy>,
+) -> ExitCode {
+    let gpgpu = flexgrip::gpgpu::Gpgpu::new(cfg);
+    let mut votes: Vec<(u64, bool)> = Vec::with_capacity(3);
+    for r in 0..3u64 {
+        let plan = fault.map(|p| FaultPlan { seed: p.seed.wrapping_add(r), ..p });
+        let w = kernels::prepare(id, n, seed);
+        let mut gmem = w.make_gmem();
+        let base = if parallel { RunOptions::new().parallel() } else { RunOptions::default() };
+        match w.run(&gpgpu, &mut gmem, decorate(base, plan.as_ref(), watchdog, checkpoint)) {
+            Ok(run) => {
+                let verified = w.verify(&gmem).is_ok();
+                println!("replica {r}: {} cycles, verified={verified}", run.cycles);
+                votes.push((run.cycles, verified));
+            }
+            Err(e) => {
+                eprintln!("replica {r} failed: {e}");
+                votes.push((0, false));
+            }
+        }
+    }
+    let winner = votes.iter().copied().find(|&(cycles, verified)| {
+        verified && votes.iter().filter(|&&v| v == (cycles, verified)).count() >= 2
+    });
+    match winner {
+        Some((cycles, _)) => {
+            println!(
+                "TMR vote: majority agreed on {cycles} cycles (verified against the host golden \
+                 reference)"
+            );
+            ExitCode::SUCCESS
+        }
+        None => {
+            eprintln!("TMR inconclusive: no verified majority across the three replicas");
+            ExitCode::FAILURE
+        }
+    }
 }
 
 fn cmd_report(flags: HashMap<String, String>) -> ExitCode {
@@ -358,8 +458,10 @@ fn cmd_asm(flags: HashMap<String, String>) -> ExitCode {
 /// Coordinator pool smoke: submit a batch of mixed benchmark jobs across
 /// N device shards and print per-shard + aggregate metrics. `--fault-rate`
 /// injects a seeded SEU campaign on shard 0 (pair with `--retries` to
-/// watch the recovery plane rescue the jobs); `--watchdog` caps every
-/// job's cycle budget; `--qos` tags every job with a latency class.
+/// watch the recovery plane rescue the jobs, `--protect`/`--stuck-at` to
+/// shape the campaign, `--checkpoint` to arm barrier checkpoint/restart,
+/// or `--tmr` to triple every job and majority-vote); `--watchdog` caps
+/// every job's cycle budget; `--qos` tags every job with a latency class.
 fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     let shards: u32 = get(&flags, "shards", 2);
     let jobs: u32 = get(&flags, "jobs", 8);
@@ -370,8 +472,8 @@ fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     let mut spec =
         VariantSpec::new("pool", GpgpuConfig::new(sms, 8).with_memory(memory_flag(&flags)))
             .with_shards(shards.max(1));
-    if let Some(rate) = get_opt::<f64>(&flags, "fault-rate") {
-        spec = spec.with_fault(0, FaultPlan::new(get(&flags, "fault-seed", 1), rate));
+    if let Some(plan) = fault_flag(&flags) {
+        spec = spec.with_fault(0, plan);
     }
     let mut fleet = FleetConfig::new(vec![spec]).with_depth(16);
     if retries > 1 {
@@ -380,6 +482,10 @@ fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     if let Some(cycles) = get_opt(&flags, "watchdog") {
         fleet = fleet.with_watchdog(cycles);
     }
+    if let Some(policy) = checkpoint_flag(&flags) {
+        fleet = fleet.with_checkpoint(policy);
+    }
+    let tmr = flags.contains_key("tmr");
     let svc = GpgpuService::start_fleet(fleet);
     let mix = [
         BenchId::VecAdd,
@@ -390,7 +496,10 @@ fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
     ];
     let tickets: Vec<_> = (0..jobs)
         .map(|i| {
-            let req = Request::Bench { id: mix[i as usize % mix.len()], n, seed: i as u64 + 1 };
+            let mut req = Request::Bench { id: mix[i as usize % mix.len()], n, seed: i as u64 + 1 };
+            if tmr {
+                req = req.tmr();
+            }
             svc.submit(match qos {
                 Some(class) => req.qos(class),
                 None => req,
@@ -417,6 +526,12 @@ fn cmd_service_demo(flags: HashMap<String, String>) -> ExitCode {
         "aggregate: {} ok / {} failed, {} cycles, {} instructions",
         m.jobs_completed, m.jobs_failed, m.total_cycles, m.total_instructions
     );
+    if m.tmr_outvoted > 0 || m.dmr_mismatches > 0 {
+        println!(
+            "redundancy: {} TMR replica(s) outvoted, {} DMR mismatch(es)",
+            m.tmr_outvoted, m.dmr_mismatches
+        );
+    }
     let rs = svc.routing_stats();
     for (v, (label, live, slots)) in rs.variants.iter().zip(svc.variant_shards()) {
         println!(
@@ -494,29 +609,52 @@ fn cmd_fleet_demo(flags: HashMap<String, String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
-/// Resilience sweep: replay a job mix through every recovery policy at
-/// every campaign rate and print the rescue/loss table (EXPERIMENTS.md
-/// §Resilience; `BENCH_resilience.json` when --out is given).
+/// Resilience sweep: replay a job mix through every recovery policy ×
+/// BRAM protection mode × fault-aging profile and print the
+/// availability table (EXPERIMENTS.md §Resilience;
+/// `BENCH_resilience.json` when --out is given). `--protect` pins the
+/// protection axis to one mode; `--checkpoint`/`--tmr` restrict the
+/// policy axis; `--stuck-at` overrides the aged-upset fraction.
 fn cmd_resilience(flags: HashMap<String, String>) -> ExitCode {
     let n: u32 = get(&flags, "n", 32);
     let jobs: u32 = get(&flags, "jobs", 6);
     let seed: u64 = get(&flags, "seed", flexgrip::harness::eval::EVAL_SEED);
-    let r = flexgrip::harness::resilience_report(n, jobs, seed);
+    let mut scope = flexgrip::harness::SweepScope::default();
+    if let Some(mode) = flags.get("protect") {
+        if !flexgrip::harness::resilience::PROTECTIONS.contains(&mode.as_str()) {
+            eprintln!("unknown protection mode `{mode}` (parity|ecc|ecc+scrub)");
+            std::process::exit(2);
+        }
+        scope.protection = Some(mode.clone());
+    }
+    scope.stuck_fraction = get_opt(&flags, "stuck-at");
+    if flags.contains_key("checkpoint") {
+        scope.policies.push("checkpoint".to_string());
+    }
+    if flags.contains_key("tmr") {
+        scope.policies.push("tmr".to_string());
+    }
+    let r = flexgrip::harness::resilience_report_scoped(n, jobs, seed, &scope);
     println!("resilience sweep: {} jobs/point at n={n} (seed {seed})", r.jobs_per_point);
     for p in &r.points {
         println!(
-            "  {:<17} rate {:>9.0}  {}/{} completed ({} rescued, {} lost, {} corrupted)  \
-             {} soft errors, {} retries, {} quarantines  (+{:.1} ms retry overhead)",
+            "  {:<10} {:<9} {:<9} rate {:>7.0}  {}/{} completed ({} rescued, {} lost, \
+             {} corrupted)  {} corrected, {} uncorrectable, {} restarts  \
+             {} soft errors, {} retries  (+{:.1} ms retry overhead)",
             p.policy,
+            p.protection,
+            p.aging,
             p.fault_rate,
             p.completed,
             p.jobs,
             p.rescued,
             p.lost,
             p.corrupted,
+            p.corrected,
+            p.uncorrectable,
+            p.restarts,
             p.soft_errors,
             p.retries,
-            p.quarantines,
             p.retry_overhead_ms
         );
     }

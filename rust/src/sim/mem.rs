@@ -246,6 +246,25 @@ impl SharedMem {
         Some(word as u32)
     }
 
+    /// Number of SEU-addressable shared-memory words (the modulus the
+    /// injector reduces site selectors by).
+    pub(crate) fn seu_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Stuck-at re-corruption (`sim::fault` aging): force `bit` of `word`
+    /// set, as a defective BRAM cell would on every access. Returns true
+    /// when the word actually changed (the bit was previously clear).
+    pub(crate) fn seu_set(&mut self, word: u32, bit: u32) -> bool {
+        let Some(w) = self.words.get_mut(word as usize) else {
+            return false;
+        };
+        let mask = 1i32 << (bit % 32);
+        let changed = *w & mask == 0;
+        *w |= mask;
+        changed
+    }
+
     /// Copy kernel parameters into the param segment (driver behaviour at
     /// block launch, paper §3.1).
     pub fn write_params(&mut self, params: &[i32]) -> Result<(), SimError> {

@@ -3,6 +3,7 @@
 //! by the customization analyzer (dynamic op mix, stack high-water mark).
 
 use crate::isa::Op;
+use crate::sim::fault::FaultStats;
 
 /// Memory-hierarchy counters for one SM over one launch. All zero on
 /// flat memory (the default [`crate::sim::GmemPort`] reports nothing);
@@ -79,6 +80,14 @@ pub struct SmStats {
     pub op_histogram: [u64; 32],
     /// Memory-hierarchy counters (zero on flat memory).
     pub mem: MemStats,
+    /// Protected-upset counters (zero without an ECC/scrub plan).
+    pub fault: FaultStats,
+    /// Checkpoint restarts taken after uncorrectable faults (zero
+    /// without a checkpoint policy).
+    pub restarts: u64,
+    /// Cycles re-executed because of checkpoint restarts (progress
+    /// between the restored checkpoint and the fault, paid twice).
+    pub replayed_cycles: u64,
 }
 
 impl SmStats {
@@ -109,6 +118,9 @@ impl SmStats {
             *mine += theirs;
         }
         self.mem.merge(&other.mem);
+        self.fault.merge(&other.fault);
+        self.restarts += other.restarts;
+        self.replayed_cycles += other.replayed_cycles;
     }
 
     /// Dynamic count of multiplier-consuming instructions (IMUL/IMAD) —
@@ -213,6 +225,31 @@ mod tests {
         let mut a = SmStats { batched_uops: 3, ..Default::default() };
         a.merge(&SmStats { batched_uops: 4, ..Default::default() });
         assert_eq!(a.batched_uops, 7);
+    }
+
+    #[test]
+    fn fault_and_restart_counters_sum_under_merge() {
+        let mut a = SmStats {
+            fault: FaultStats { detected: 2, corrected: 1, ..Default::default() },
+            restarts: 1,
+            replayed_cycles: 100,
+            ..Default::default()
+        };
+        let b = SmStats {
+            fault: FaultStats { detected: 1, uncorrectable: 1, scrubbed: 3, ..Default::default() },
+            restarts: 2,
+            replayed_cycles: 50,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.fault.detected, 3);
+        assert_eq!(a.fault.corrected, 1);
+        assert_eq!(a.fault.uncorrectable, 1);
+        assert_eq!(a.fault.scrubbed, 3);
+        assert_eq!(a.restarts, 3);
+        assert_eq!(a.replayed_cycles, 150);
+        assert!(a.fault.any());
+        assert!(!FaultStats::default().any());
     }
 
     #[test]

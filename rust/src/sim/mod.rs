@@ -30,7 +30,11 @@ pub use alu::{
     eval_lane, AluBackend, AluFactory, AluFunc, NativeAlu, WarpAluIn, WarpAluOut, WARP_SIZE,
 };
 pub use cache::{CacheGeometry, CachedGmem, L1Cache, L1Config, MemoryConfig};
-pub use fault::{FaultEvent, FaultPlan, FaultSite, FaultState, FaultTarget, FaultTargets};
+pub use fault::{
+    upset_outcome, FaultEvent, FaultPlan, FaultSite, FaultState, FaultStats, FaultTarget,
+    FaultTargets, Protection, ProtectionConfig, Scrubber, UpsetKind, UpsetOutcome,
+    ECC_CORRECT_CYCLES,
+};
 pub use mem::{
     GlobalMem, GmemPort, GmemSnapshot, MemCost, MemTiming, SharedMem, WriteRecord,
     GMEM_PAGE_WORDS, PARAM_SEG_BYTES,
@@ -38,7 +42,7 @@ pub use mem::{
 pub use metrics::{MemStats, SmStats};
 pub use regfile::RegFile;
 pub use sched::{WarpScheduler, MAX_RESIDENT_WARPS};
-pub use sm::{BlockDesc, PreDecoded, Sm, SmLaunch};
+pub use sm::{BlockDesc, CheckpointPolicy, PreDecoded, Sm, SmLaunch};
 pub use stack::{EntryType, StackEntry, WarpStack};
 pub use warp::{Warp, WarpStatus};
 

@@ -158,6 +158,25 @@ impl RegFile {
         Some(word as u32)
     }
 
+    /// Number of SEU-addressable general-register words (the modulus the
+    /// injector reduces site selectors by).
+    pub(crate) fn seu_words(&self) -> usize {
+        self.gp.len()
+    }
+
+    /// Stuck-at re-corruption (`sim::fault` aging): force `bit` of `word`
+    /// set, as a defective BRAM cell would on every access. Returns true
+    /// when the word actually changed (the bit was previously clear).
+    pub(crate) fn seu_set(&mut self, word: u32, bit: u32) -> bool {
+        let Some(w) = self.gp.get_mut(word as usize) else {
+            return false;
+        };
+        let mask = 1i32 << (bit % 32);
+        let changed = *w & mask == 0;
+        *w |= mask;
+        changed
+    }
+
     #[inline]
     pub fn read_areg(&self, thread: u32, a: u8) -> i32 {
         debug_assert!(a < NUM_AREGS);

@@ -41,7 +41,10 @@
 //!   oracle (`tests/simd_engine.rs` pins bit- and cycle-identity).
 
 use super::alu::{AluBackend, AluFunc, WarpAluIn, WARP_SIZE};
-use super::fault::{FaultEvent, FaultPlan, FaultSite, FaultState, FaultTarget};
+use super::fault::{
+    upset_outcome, FaultEvent, FaultPlan, FaultSite, FaultState, FaultTarget, ProtectionConfig,
+    UpsetKind, UpsetOutcome,
+};
 use super::mem::{GmemPort, SharedMem, PARAM_SEG_BYTES};
 use super::metrics::SmStats;
 use super::regfile::RegFile;
@@ -298,6 +301,38 @@ pub struct SmLaunch<'a> {
     /// engine. A disabled plan builds no per-SM state, so the only cost is
     /// one `Option` branch per issued instruction.
     pub fault: Option<&'a FaultPlan>,
+    /// Barrier checkpoint/restart policy, or `None` (the default) for
+    /// fail-on-fault. With a policy set, the SM snapshots live state at
+    /// launch start and at every block-wide barrier reconvergence; an
+    /// uncorrectable fault then restores the latest snapshot instead of
+    /// failing the launch (`SmStats::{restarts, replayed_cycles}`).
+    pub checkpoint: Option<CheckpointPolicy>,
+}
+
+/// When the SM may checkpoint and how many correct-and-continue restarts
+/// an uncorrectable fault is allowed before it fails the launch anyway.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    pub max_restarts: u32,
+}
+
+impl CheckpointPolicy {
+    /// Checkpoint at block-wide barrier reconvergence (plus an implicit
+    /// launch-start checkpoint), allowing up to 8 restarts.
+    pub fn at_barriers() -> CheckpointPolicy {
+        CheckpointPolicy { max_restarts: 8 }
+    }
+
+    pub fn with_max_restarts(mut self, max_restarts: u32) -> CheckpointPolicy {
+        self.max_restarts = max_restarts;
+        self
+    }
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> CheckpointPolicy {
+        CheckpointPolicy::at_barriers()
+    }
 }
 
 /// Per-issue execution context threaded into [`Sm::step`]: the decoded
@@ -310,12 +345,39 @@ struct ExecCtx<'a, G: GmemPort + ?Sized, A: AluBackend + ?Sized> {
 }
 
 /// A resident (scheduled) block: its register file partition, shared
-/// memory allocation, and warps.
+/// memory allocation, and warps. `Clone` is the checkpoint snapshot:
+/// register file, shared memory, and warp/stack state are all plain
+/// value types.
+#[derive(Clone)]
 struct Resident {
     desc: BlockDesc,
     regs: RegFile,
     shared: SharedMem,
     warps: Vec<Warp>,
+}
+
+/// A barrier (or launch-start) checkpoint: everything `Sm::run` needs to
+/// re-enter its main loop at a clean reconvergence boundary. Global
+/// memory is *not* snapshotted: execution up to the checkpoint is
+/// deterministic and uncorrupted (uncorrectable faults abort before
+/// mutating state), so replay re-issues byte-identical stores.
+struct Checkpoint {
+    cycle: u64,
+    next_block: usize,
+    resident: Vec<Resident>,
+    sched: WarpScheduler,
+}
+
+/// An aged stuck-at site in one of the silent-corruption classes: the
+/// defective cell re-corrupts `word` on every subsequent access (modeled
+/// at issue granularity for the owning slot) until a scrub pass repairs
+/// it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct AgedSite {
+    target: FaultTarget,
+    slot: usize,
+    word: u32,
+    bit: u32,
 }
 
 impl Resident {
@@ -376,12 +438,31 @@ impl Sm {
             blocks,
             max_resident,
             fault,
+            checkpoint,
         } = *launch;
         assert!(max_resident >= 1, "block scheduler must allow one resident block");
         // SEU schedule: seeded from (plan.seed, sm_id) and advanced by this
         // SM's own cycle stream, which is identical on the sequential and
         // parallel launch paths — so fault sites are path-independent.
         let mut seu = fault.and_then(|p| FaultState::new(p, self.sm_id));
+        // Protection session state (all inert without an enabled plan):
+        // the per-class scheme, the aged stuck-at sites, and the scrub
+        // clock.
+        let protect: ProtectionConfig = fault.map(|p| p.protect).unwrap_or_default();
+        let mut aged: Vec<AgedSite> = Vec::new();
+        let scrub = if seu.is_some() { protect.scrubber } else { None };
+        let mut next_scrub = scrub.map(|s| s.interval_cycles.max(1)).unwrap_or(u64::MAX);
+        // Checkpoint/restart session state: the launch-start snapshot is
+        // implicit (empty resident set, block cursor 0 — restoring it
+        // re-deals every block), refreshed at each block-wide barrier
+        // reconvergence.
+        let mut ckpt: Option<Checkpoint> = checkpoint.map(|_| Checkpoint {
+            cycle: 0,
+            next_block: 0,
+            resident: Vec::new(),
+            sched: WarpScheduler::new(),
+        });
+        let mut restarts_left = checkpoint.map(|p| p.max_restarts).unwrap_or(0);
 
         let mut stats = SmStats::default();
         let mut cycle: u64 = 0;
@@ -430,14 +511,87 @@ impl Sm {
                     let (s, w) = locate(&resident, flat);
                     let slot_base = flat - w as u32;
                     cycle += rows;
+                    // Background scrubber: every interval it repairs up to
+                    // words_per_pass aged stuck-at sites, oldest first.
+                    if let Some(scr) = scrub {
+                        while cycle >= next_scrub {
+                            let n = (scr.words_per_pass as usize).min(aged.len());
+                            if n > 0 {
+                                aged.drain(..n);
+                                stats.fault.scrubbed += n as u64;
+                            }
+                            next_scrub += scr.interval_cycles.max(1);
+                        }
+                    }
+                    // Fault aging: unscrubbed stuck-at sites in the issuing
+                    // slot re-corrupt on every access (modeled at issue
+                    // granularity) — silent bit-sets under parity, a
+                    // per-access correction cost under ECC.
+                    if !aged.is_empty() {
+                        for a in &aged {
+                            if a.slot != s {
+                                continue;
+                            }
+                            match upset_outcome(protect.for_target(a.target), a.target, false) {
+                                UpsetOutcome::SilentFlip => {
+                                    let r = &mut resident[s];
+                                    match a.target {
+                                        FaultTarget::RegisterFile => {
+                                            r.regs.seu_set(a.word, a.bit);
+                                        }
+                                        _ => {
+                                            r.shared.seu_set(a.word, a.bit);
+                                        }
+                                    }
+                                }
+                                UpsetOutcome::Corrected { cycles } => {
+                                    cycle += cycles;
+                                    stats.fault.detected += 1;
+                                    stats.fault.corrected += 1;
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
                     // SEU injection point: upsets land between issues, at
                     // the cycle the issue port advanced to. Detected upsets
-                    // (tag/instruction parity) abort the launch here; data
-                    // upsets silently mutate state and execution continues.
+                    // abort the launch (parity) or restore the latest
+                    // checkpoint (uncorrectable under a checkpoint policy);
+                    // ECC-corrected upsets cost cycles; silent data upsets
+                    // mutate state and execution continues.
                     if let Some(st) = seu.as_mut() {
                         if let Some(ev) = st.poll(cycle) {
                             let pc = resident[s].warps[w].pc;
-                            self.apply_seu(ev, cycle, pc, &mut resident, &*gmem)?;
+                            match self.apply_seu(
+                                ev,
+                                cycle,
+                                pc,
+                                &mut resident,
+                                &*gmem,
+                                &protect,
+                                &mut aged,
+                                &mut stats,
+                            ) {
+                                Ok(extra) => cycle += extra,
+                                Err(e) => {
+                                    let Some(restore) = ckpt.as_ref().filter(|_| restarts_left > 0)
+                                    else {
+                                        return Err(e);
+                                    };
+                                    // Correct-and-continue: roll architectural
+                                    // state back to the last clean barrier
+                                    // boundary and re-execute. The wall clock
+                                    // keeps advancing — the progress between
+                                    // checkpoint and fault is paid twice.
+                                    restarts_left -= 1;
+                                    stats.restarts += 1;
+                                    stats.replayed_cycles += cycle - restore.cycle;
+                                    resident = restore.resident.clone();
+                                    sched = restore.sched.clone();
+                                    next_block = restore.next_block;
+                                    continue;
+                                }
+                            }
                         }
                     }
                     // Memory instructions drain through the single AXI
@@ -455,6 +609,7 @@ impl Sm {
                         }
                     }
                     // Barrier release: all live warps of the block arrived?
+                    let mut reconverged = false;
                     let r = &mut resident[s];
                     if r.warps.iter().any(|x| x.at_barrier)
                         && r.warps.iter().all(|x| x.done || x.at_barrier)
@@ -475,6 +630,7 @@ impl Sm {
                             }
                         }
                         stats.barriers += 1;
+                        reconverged = true;
                     }
                     // Retire the issued block if it just completed (only
                     // the block that issued can change state). Ordered
@@ -489,6 +645,34 @@ impl Sm {
                         resident.remove(s);
                         sched.retire_range(slot_base, retired);
                         stats.blocks += 1;
+                        // Aged (stuck-at) sites live in the retiring block's
+                        // BRAM allocation: drop them, and rebase the slot
+                        // indices the ordered removal just shifted.
+                        if !aged.is_empty() {
+                            aged.retain(|a| a.slot != s);
+                            for a in aged.iter_mut() {
+                                if a.slot > s {
+                                    a.slot -= 1;
+                                }
+                            }
+                        }
+                    }
+                    // Block-wide reconvergence is the checkpoint boundary:
+                    // every live warp just synchronized, so the snapshot is
+                    // a consistent cut of architectural state. Global memory
+                    // is deliberately not captured — replay from here
+                    // re-issues byte-identical stores (deterministic
+                    // engine), and uncorrectable faults abort before
+                    // corrupting state.
+                    if reconverged {
+                        if let Some(c) = ckpt.as_mut() {
+                            *c = Checkpoint {
+                                cycle,
+                                next_block,
+                                resident: resident.clone(),
+                                sched: sched.clone(),
+                            };
+                        }
                     }
                 }
                 None => {
@@ -523,12 +707,21 @@ impl Sm {
         Ok(stats)
     }
 
-    /// Land one scheduled upset ([`FaultEvent`]) in the modeled structure
-    /// it targets. Register-file and shared-memory upsets mutate state
+    /// Land one scheduled upset ([`FaultEvent`]) according to the BRAM
+    /// class's [`Protection`](super::fault::Protection) mode. Under
+    /// parity (the default) behavior is unchanged from the original
+    /// injector: register-file and shared-memory upsets mutate state
     /// silently (no parity on those BRAMs); tag-array and
     /// instruction-image upsets are parity-detected and abort the launch
-    /// with [`SimError::SoftError`]. A tag upset on a tagless (flat)
-    /// memory port lands in unused fabric and is a no-op.
+    /// with [`SimError::SoftError`]. Under ECC a fresh single-bit upset
+    /// is corrected in place (no state flip) at a modeled cycle cost —
+    /// the returned `Ok(extra)` — while a second upset at an already
+    /// aged word exceeds SECDED's correction capability and aborts.
+    /// Stuck-at upsets on the silent-corruption classes additionally
+    /// register an [`AgedSite`] that re-corrupts on later issues until
+    /// scrubbed. A tag upset on a tagless (flat) memory port lands in
+    /// unused fabric and is a no-op.
+    #[allow(clippy::too_many_arguments)]
     fn apply_seu<G: GmemPort + ?Sized>(
         &self,
         ev: FaultEvent,
@@ -536,39 +729,113 @@ impl Sm {
         pc: u32,
         resident: &mut [Resident],
         gmem: &G,
-    ) -> Result<(), SimError> {
+        protect: &ProtectionConfig,
+        aged: &mut Vec<AgedSite>,
+        stats: &mut SmStats,
+    ) -> Result<u64, SimError> {
         let n_slots = resident.len() as u64;
+        let mode = protect.for_target(ev.target);
         match ev.target {
-            FaultTarget::RegisterFile => {
+            FaultTarget::RegisterFile | FaultTarget::SharedMem => {
                 let slot = (ev.sel % n_slots) as usize;
-                resident[slot].regs.seu_flip(ev.sel / n_slots, ev.bit);
-            }
-            FaultTarget::SharedMem => {
-                let slot = (ev.sel % n_slots) as usize;
-                resident[slot].shared.seu_flip(ev.sel / n_slots, ev.bit);
+                let word_sel = ev.sel / n_slots;
+                let is_rf = ev.target == FaultTarget::RegisterFile;
+                let words = if is_rf {
+                    resident[slot].regs.seu_words()
+                } else {
+                    resident[slot].shared.seu_words()
+                };
+                if words == 0 {
+                    return Ok(0);
+                }
+                let word = (word_sel % words as u64) as u32;
+                let aged_hit = aged
+                    .iter()
+                    .any(|a| a.target == ev.target && a.slot == slot && a.word == word);
+                let outcome = upset_outcome(mode, ev.target, aged_hit);
+                // Stuck-at upsets leave a defective cell behind whenever the
+                // word survives (corrected or silently flipped).
+                let mut age = |aged: &mut Vec<AgedSite>| {
+                    if ev.kind == UpsetKind::StuckAt && !aged_hit {
+                        aged.push(AgedSite {
+                            target: ev.target,
+                            slot,
+                            word,
+                            bit: ev.bit % 32,
+                        });
+                    }
+                };
+                match outcome {
+                    UpsetOutcome::SilentFlip => {
+                        if is_rf {
+                            resident[slot].regs.seu_flip(word_sel, ev.bit);
+                        } else {
+                            resident[slot].shared.seu_flip(word_sel, ev.bit);
+                        }
+                        age(aged);
+                        Ok(0)
+                    }
+                    UpsetOutcome::Corrected { cycles } => {
+                        stats.fault.detected += 1;
+                        stats.fault.corrected += 1;
+                        age(aged);
+                        Ok(cycles)
+                    }
+                    UpsetOutcome::Uncorrectable => {
+                        stats.fault.detected += 1;
+                        stats.fault.uncorrectable += 1;
+                        let site = if is_rf {
+                            FaultSite::Register { sm: self.sm_id, slot: slot as u32, word }
+                        } else {
+                            FaultSite::Shared { sm: self.sm_id, slot: slot as u32, word }
+                        };
+                        Err(SimError::SoftError { site, cycle, bit: ev.bit })
+                    }
+                    // Silent classes never report plain parity detection:
+                    // `upset_outcome` only yields it for L1/instr targets.
+                    UpsetOutcome::Detected => unreachable!("parity-detected on a silent class"),
+                }
             }
             FaultTarget::L1Tags => {
                 let tags = gmem.l1_tag_count();
-                if tags > 0 {
-                    return Err(SimError::SoftError {
-                        site: FaultSite::L1Tag {
-                            sm: self.sm_id,
-                            index: (ev.sel % u64::from(tags)) as u32,
-                        },
-                        cycle,
-                        bit: ev.bit,
-                    });
+                if tags == 0 {
+                    return Ok(0);
+                }
+                match upset_outcome(mode, ev.target, false) {
+                    UpsetOutcome::Corrected { cycles } => {
+                        stats.fault.detected += 1;
+                        stats.fault.corrected += 1;
+                        Ok(cycles)
+                    }
+                    _ => {
+                        stats.fault.detected += 1;
+                        Err(SimError::SoftError {
+                            site: FaultSite::L1Tag {
+                                sm: self.sm_id,
+                                index: (ev.sel % u64::from(tags)) as u32,
+                            },
+                            cycle,
+                            bit: ev.bit,
+                        })
+                    }
                 }
             }
-            FaultTarget::InstrImage => {
-                return Err(SimError::SoftError {
-                    site: FaultSite::Instr { sm: self.sm_id, pc },
-                    cycle,
-                    bit: ev.bit,
-                });
-            }
+            FaultTarget::InstrImage => match upset_outcome(mode, ev.target, false) {
+                UpsetOutcome::Corrected { cycles } => {
+                    stats.fault.detected += 1;
+                    stats.fault.corrected += 1;
+                    Ok(cycles)
+                }
+                _ => {
+                    stats.fault.detected += 1;
+                    Err(SimError::SoftError {
+                        site: FaultSite::Instr { sm: self.sm_id, pc },
+                        cycle,
+                        bit: ev.bit,
+                    })
+                }
+            },
         }
-        Ok(())
     }
 
     fn make_resident(
@@ -1005,6 +1272,7 @@ mod tests {
             blocks: &blocks,
             max_resident: 8,
             fault: None,
+            checkpoint: None,
         };
         sm.run(&launch, gmem, &mut alu)
     }
@@ -1258,6 +1526,7 @@ mod tests {
             blocks: &blocks,
             max_resident: 2,
             fault: None,
+            checkpoint: None,
         };
         let stats = sm.run(&launch, &mut g, &mut alu).unwrap();
         assert_eq!(stats.blocks, 6);
@@ -1292,6 +1561,7 @@ mod tests {
             blocks: &blocks,
             max_resident: 17,
             fault: None,
+            checkpoint: None,
         };
         let err = sm.run(&launch, &mut g, &mut alu).unwrap_err();
         assert!(matches!(err, SimError::LimitExceeded(_)), "{err}");
@@ -1317,6 +1587,7 @@ mod tests {
             blocks: &blocks,
             max_resident: 8,
             fault: None,
+            checkpoint: None,
         };
         let stats = sm.run(&launch, gd, ad).unwrap();
         assert_eq!(stats.blocks, 1);
@@ -1343,6 +1614,7 @@ mod tests {
             blocks: &blocks,
             max_resident: 8,
             fault,
+            checkpoint: None,
         };
         sm.run(&launch, gmem, &mut alu)
     }
@@ -1465,5 +1737,217 @@ mod tests {
         let (r1, img1) = run();
         assert_eq!(r0, r1, "same seed, same outcome");
         assert_eq!(img0, img1, "same seed, same memory image");
+    }
+
+    fn run_resilient(
+        src: &str,
+        params: &[i32],
+        ntid: u32,
+        gmem: &mut GlobalMem,
+        fault: Option<&FaultPlan>,
+        checkpoint: Option<CheckpointPolicy>,
+    ) -> Result<SmStats, SimError> {
+        let k = assemble(src).expect("assemble");
+        let pre = PreDecoded::from_kernel(&k);
+        let sm = Sm::new(SmConfig::baseline(), 0);
+        let blocks = [BlockDesc { ctaid_x: 0, ctaid_y: 0, nctaid_x: 1, nctaid_y: 1, ntid }];
+        let mut alu = NativeAlu;
+        let launch = SmLaunch {
+            pre: &pre,
+            regs_per_thread: k.regs_per_thread,
+            smem_bytes: k.smem_bytes,
+            params,
+            blocks: &blocks,
+            max_resident: 8,
+            fault,
+            checkpoint,
+        };
+        sm.run(&launch, gmem, &mut alu)
+    }
+
+    #[test]
+    fn ecc_corrects_silent_class_upsets_bit_identically() {
+        use crate::sim::FaultTargets;
+        let mut clean = GlobalMem::new(4096);
+        let s0 = run_resilient(SCALE_SRC, &[17, 0], 256, &mut clean, None, None).unwrap();
+        // Mean inter-arrival 10 cycles against a run hundreds of cycles
+        // long: many upsets land. ECC repairs each in place, so the
+        // memory image must match the clean run exactly — only time is
+        // lost.
+        let plan = FaultPlan::new(0x51EE7, 100_000.0)
+            .with_targets(FaultTargets::silent())
+            .with_protection(ProtectionConfig::ecc());
+        let mut g = GlobalMem::new(4096);
+        let s1 = run_resilient(SCALE_SRC, &[17, 0], 256, &mut g, Some(&plan), None).unwrap();
+        assert!(s1.fault.corrected > 0, "{:?}", s1.fault);
+        assert_eq!(s1.fault.detected, s1.fault.corrected);
+        assert_eq!(s1.fault.uncorrectable, 0, "no aging without stuck-at faults");
+        assert!(s1.cycles > s0.cycles, "corrections must cost cycles");
+        assert_eq!(clean.read_words(0, 256).unwrap(), g.read_words(0, 256).unwrap());
+    }
+
+    #[test]
+    fn stuck_at_sites_age_and_scrub_under_ecc() {
+        use crate::sim::{FaultTargets, Scrubber};
+        let mut clean = GlobalMem::new(4096);
+        run_resilient(SCALE_SRC, &[5, 0], 256, &mut clean, None, None).unwrap();
+        // Every upset is stuck-at: each ages its word, which then pays an
+        // ECC correction on every subsequent issue until a scrub pass
+        // (tight 16-cycle interval here) repairs it. A fresh upset on a
+        // still-aged word is uncorrectable; the checkpoint policy turns
+        // those rare collisions into restarts instead of failures.
+        let protect = ProtectionConfig {
+            scrubber: Some(Scrubber { interval_cycles: 16, words_per_pass: 2 }),
+            ..ProtectionConfig::ecc()
+        };
+        let plan = FaultPlan::new(0xA6ED, 100_000.0)
+            .with_targets(FaultTargets::silent())
+            .with_protection(protect)
+            .with_stuck_at(1.0);
+        let mut g = GlobalMem::new(4096);
+        let s = run_resilient(
+            SCALE_SRC,
+            &[5, 0],
+            256,
+            &mut g,
+            Some(&plan),
+            Some(CheckpointPolicy::at_barriers()),
+        )
+        .unwrap();
+        assert!(s.fault.corrected > 0, "{:?}", s.fault);
+        assert!(s.fault.scrubbed > 0, "{:?}", s.fault);
+        assert_eq!(
+            clean.read_words(0, 256).unwrap(),
+            g.read_words(0, 256).unwrap(),
+            "ECC never lets a flip reach architectural state"
+        );
+    }
+
+    #[test]
+    fn parity_stuck_at_campaigns_are_deterministic_and_uncounted() {
+        use crate::sim::FaultTargets;
+        // Under parity the silent classes corrupt without any bookkeeping:
+        // the aging machinery must not perturb determinism, and the
+        // protected-upset counters stay zero.
+        let plan = FaultPlan::new(0x57CC, 50_000.0)
+            .with_targets(FaultTargets::silent())
+            .with_stuck_at(1.0);
+        let run = || {
+            let mut g = GlobalMem::new(4096);
+            let r = run_resilient(SCALE_SRC, &[11, 0], 64, &mut g, Some(&plan), None);
+            (r, g.read_words(0, 64).unwrap())
+        };
+        let (r0, img0) = run();
+        let (r1, img1) = run();
+        assert_eq!(r0, r1, "same seed, same outcome");
+        assert_eq!(img0, img1, "same seed, same memory image");
+        // Corruption may fault the run (bad addresses); either way parity
+        // counts nothing.
+        if let Ok(s) = r0 {
+            assert_eq!(s.fault, crate::sim::FaultStats::default());
+        }
+    }
+
+    #[test]
+    fn checkpoint_restart_rescues_uncorrectable_faults_bit_identically() {
+        use crate::sim::FaultTargets;
+        let mut clean = GlobalMem::new(4096);
+        let s0 = run_resilient(SCALE_SRC, &[21, 0], 64, &mut clean, None, None).unwrap();
+        let c = s0.cycles;
+        // Search the seed space for a campaign whose first (parity-fatal)
+        // instruction upset lands mid-run and whose second lands far past
+        // the replayed completion: exactly one restart, then clean sailing.
+        let targets = FaultTargets { instr_image: true, ..FaultTargets::none() };
+        let plan = (0u64..)
+            .map(|n| FaultPlan::new(0xF00D + n, 50.0).with_targets(targets))
+            .find(|p| {
+                let mut st = FaultState::new(p, 0).unwrap();
+                let e1 = st.next_event();
+                e1 < c / 2 && {
+                    st.poll(e1);
+                    st.next_event() > e1 + 4 * c
+                }
+            })
+            .expect("seed search is unbounded");
+        // Without a checkpoint the upset kills the launch...
+        let mut dead = GlobalMem::new(4096);
+        let err =
+            run_resilient(SCALE_SRC, &[21, 0], 64, &mut dead, Some(&plan), None).unwrap_err();
+        assert!(matches!(err, SimError::SoftError { .. }), "{err}");
+        // ...with one, the SM restores the launch-start snapshot, replays,
+        // and completes bit-identical to the fault-free run.
+        let mut g = GlobalMem::new(4096);
+        let s1 = run_resilient(
+            SCALE_SRC,
+            &[21, 0],
+            64,
+            &mut g,
+            Some(&plan),
+            Some(CheckpointPolicy::at_barriers()),
+        )
+        .unwrap();
+        assert_eq!(s1.restarts, 1);
+        assert!(s1.replayed_cycles > 0);
+        assert!(s1.cycles > c, "replayed progress is paid twice");
+        assert_eq!(clean.read_words(0, 64).unwrap(), g.read_words(0, 64).unwrap());
+    }
+
+    #[test]
+    fn barrier_checkpoint_bounds_replay_to_the_post_barrier_half() {
+        use crate::sim::FaultTargets;
+        let mut clean = GlobalMem::new(4096);
+        let s0 = run_resilient(BARRIER_SRC, &[], 64, &mut clean, None, None).unwrap();
+        let c = s0.cycles;
+        assert_eq!(s0.barriers, 1);
+        // A fatal upset in the last quarter of the run lands after the
+        // barrier reconvergence (the barrier releases in the first half:
+        // the post-barrier code is the longer side). Restoring the barrier
+        // checkpoint must NOT re-execute the barrier.
+        let targets = FaultTargets { instr_image: true, ..FaultTargets::none() };
+        let plan = (0u64..)
+            .map(|n| FaultPlan::new(0xBA12 + n, 50.0).with_targets(targets))
+            .find(|p| {
+                let mut st = FaultState::new(p, 0).unwrap();
+                let e1 = st.next_event();
+                e1 > c * 3 / 4 && e1 < c * 9 / 10 && {
+                    st.poll(e1);
+                    st.next_event() > e1 + 4 * c
+                }
+            })
+            .expect("seed search is unbounded");
+        let mut g = GlobalMem::new(4096);
+        let s1 = run_resilient(
+            BARRIER_SRC,
+            &[],
+            64,
+            &mut g,
+            Some(&plan),
+            Some(CheckpointPolicy::at_barriers()),
+        )
+        .unwrap();
+        assert_eq!(s1.restarts, 1);
+        assert_eq!(s1.barriers, 1, "replay resumed past the barrier");
+        assert!(s1.replayed_cycles < c, "replay bounded by the barrier checkpoint");
+        assert_eq!(clean.read_words(0, 64).unwrap(), g.read_words(0, 64).unwrap());
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_still_fails_the_launch() {
+        use crate::sim::FaultTargets;
+        // Mean inter-arrival 1 cycle: every replay dies immediately. After
+        // max_restarts the original error must surface.
+        let targets = FaultTargets { instr_image: true, ..FaultTargets::none() };
+        let plan = FaultPlan::new(0xDEAD, 1_000_000.0).with_targets(targets);
+        let mut g = GlobalMem::new(4096);
+        let err = run_resilient(
+            SCALE_SRC,
+            &[3, 0],
+            64,
+            &mut g,
+            Some(&plan),
+            Some(CheckpointPolicy::at_barriers().with_max_restarts(2)),
+        )
+        .unwrap_err();
+        assert!(matches!(err, SimError::SoftError { .. }), "{err}");
     }
 }

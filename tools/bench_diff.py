@@ -19,6 +19,14 @@ run on main:
   increase on the sick-fleet qos-mode point FAILS the job — that rate is
   deterministic and is the acceptance metric for QoS admission (the
   router completing the jobs the static baseline sheds).
+* **resilience** — per-(policy, protection, aging, fault_rate) sweep
+  (BENCH_resilience.json). An availability drop beyond
+  --resilience-epsilon (default 0.02) FAILS the job — the sweep is
+  deterministic, so a drop means a recovery path (ECC, scrubbing,
+  checkpoint/restart, redundancy voting) regressed; a served corrupted
+  output also FAILS. Baseline points missing the correct-and-continue
+  fields ("corrected" etc. — a pre-ECC report) WARN and are compared on
+  availability alone.
 
 Warn-only (exit 0) when no baseline artifact exists (first run, expired
 retention, artifact renamed) or when the fast-mode flags differ — those
@@ -145,6 +153,73 @@ def diff_qos(current: dict, baseline: dict, wait_threshold: float = 0.25):
     return failures, warnings
 
 
+def diff_resilience(current: dict, baseline: dict, epsilon: float = 0.02):
+    """Compare resilience points by (policy, protection, aging, fault_rate).
+
+    Returns (failures, warnings): an availability drop beyond `epsilon`
+    or a served corrupted output FAILS (the sweep is deterministic — a
+    drop means a recovery path regressed); a baseline point missing the
+    correct-and-continue fields (e.g. "corrected", from a pre-ECC report
+    format) WARNS and is compared on availability alone.
+    """
+    failures: list[str] = []
+    warnings: list[str] = []
+
+    def key(p):
+        # Old-format points carry neither protection nor aging: they were
+        # all parity-protected, all-transient campaigns.
+        return (
+            p["policy"],
+            p.get("protection", "parity"),
+            p.get("aging", "transient"),
+            p["fault_rate"],
+        )
+
+    def availability(p):
+        if "availability" in p:
+            return p["availability"]
+        return p.get("completed", 0) / max(p.get("jobs", 1), 1)
+
+    base_by_key = {key(p): p for p in baseline.get("points", [])}
+    cur_keys = set()
+    for point in current.get("points", []):
+        k = key(point)
+        cur_keys.add(k)
+        name = f"{k[0]}/{k[1]}/{k[2]} @ rate {k[3]:g}"
+        base = base_by_key.get(k)
+        if base is None:
+            warnings.append(f"resilience: no baseline point for '{name}' - skipping")
+            continue
+        missing = [
+            f
+            for f in ("availability", "corrected", "uncorrectable", "restarts")
+            if f not in base
+        ]
+        if missing:
+            warnings.append(
+                f"resilience: baseline point '{name}' predates field(s) "
+                f"{', '.join(missing)} - comparing availability only"
+            )
+        cur_avail, base_avail = availability(point), availability(base)
+        if cur_avail < base_avail - epsilon:
+            failures.append(
+                f"resilience: {name} availability {base_avail:.4f} -> {cur_avail:.4f} "
+                "- a recovery path (ECC/scrub/checkpoint/voting) regressed"
+            )
+        if point.get("corrupted", 0) > 0:
+            failures.append(
+                f"resilience: {name} served {point['corrupted']} corrupted "
+                "output(s) - the verification gate is broken"
+            )
+    for k in base_by_key:
+        if k not in cur_keys:
+            warnings.append(
+                f"resilience: point '{k[0]}/{k[1]}/{k[2]} @ rate {k[3]:g}' "
+                "vanished from the sweep"
+            )
+    return failures, warnings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True, help="this run's BENCH_hot_path.json")
@@ -153,6 +228,14 @@ def main(argv=None) -> int:
     ap.add_argument("--scaling-baseline", help="previous run's BENCH_scaling.json")
     ap.add_argument("--qos-current", help="this run's BENCH_qos.json")
     ap.add_argument("--qos-baseline", help="previous run's BENCH_qos.json")
+    ap.add_argument("--resilience-current", help="this run's BENCH_resilience.json")
+    ap.add_argument("--resilience-baseline", help="previous run's BENCH_resilience.json")
+    ap.add_argument(
+        "--resilience-epsilon",
+        type=float,
+        default=0.02,
+        help="absolute availability drop that fails the gate (default 0.02)",
+    )
     ap.add_argument(
         "--qos-wait-threshold",
         type=float,
@@ -196,6 +279,15 @@ def main(argv=None) -> int:
             warnings += qwarn
         else:
             warnings.append("qos: report missing on one side - skipping")
+
+    if args.resilience_current and args.resilience_baseline:
+        rcur, rbase = load(args.resilience_current), load(args.resilience_baseline)
+        if rcur is not None and rbase is not None:
+            rfail, rwarn = diff_resilience(rcur, rbase, args.resilience_epsilon)
+            failures += rfail
+            warnings += rwarn
+        else:
+            warnings.append("resilience: report missing on one side - skipping")
 
     for w in warnings:
         print(f"WARN: {w}")

@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Differential for rust/src/sim/fault.rs (ISSUE-7 tentpole).
+"""Differential for rust/src/sim/fault.rs (ISSUE-7 tentpole, extended by
+the ISSUE-10 correct-and-continue work).
 
 Toolchain-free check of the SEU injector's determinism contract:
 
@@ -19,12 +20,23 @@ Toolchain-free check of the SEU injector's determinism contract:
    tests/fault_injection.rs::disabled_plans_are_bit_and_cycle_identical.
 5. Inter-arrival sanity: drawn gaps live in [1, 2*mean] with empirical
    mean ~= mean + 0.5 (uniform inter-arrival distribution).
+6. Fault aging: the stuck-at classification draw sits *after* the bit
+   draw and is skipped entirely at fraction 0 (pinned-sequence
+   compatibility); the aged schedule replays the golden constants of
+   fault.rs::stuck_at_schedule_matches_pinned_golden_constants and the
+   observed stuck fraction over 4000 events is pinned exactly.
+7. The SECDED/parity decision table (fault.rs::upset_outcome) is
+   transliterated and pinned: parity flips silent classes and detects
+   tag/instruction upsets; ECC corrects fresh single-bit upsets at the
+   modeled latency and reports an aged-site collision as uncorrectable.
 """
 
 import random
 
 M = (1 << 64) - 1
 SM_STREAM_MIX = 0x9E3779B97F4A7C15
+PPM = 1_000_000
+ECC_CORRECT_CYCLES = 3
 
 # FaultTargets declaration order — pinned (fault.rs::target_order_is_pinned).
 TARGETS = ("register_file", "shared_mem", "l1_tags", "instr_image")
@@ -51,21 +63,23 @@ class XorShift64:
 
 
 class FaultState:
-    """1:1 transliteration of fault.rs::FaultState."""
+    """1:1 transliteration of fault.rs::FaultState (incl. fault aging)."""
 
     @staticmethod
-    def new(seed, rate, targets, sm_id):
+    def new(seed, rate, targets, sm_id, stuck_at_fraction=0.0):
         kinds = [t for t in TARGETS if t in targets]
         if rate <= 0.0 or not kinds:
             return None
-        return FaultState(seed, rate, kinds, sm_id)
+        return FaultState(seed, rate, kinds, sm_id, stuck_at_fraction)
 
-    def __init__(self, seed, rate, kinds, sm_id):
+    def __init__(self, seed, rate, kinds, sm_id, stuck_at_fraction=0.0):
         stream = seed ^ (((sm_id + 1) * SM_STREAM_MIX) & M)
         self.rng = XorShift64(stream)
         self.mean = max(int(1_000_000.0 / rate), 1)
         self.next_event = 1 + self.rng.below(2 * self.mean)
         self.kinds = kinds
+        # Truncating cast, exactly like Rust's `as u64` on the product.
+        self.stuck_ppm = int(min(max(stuck_at_fraction, 0.0), 1.0) * PPM)
 
     def poll(self, cycle):
         if cycle < self.next_event:
@@ -73,13 +87,31 @@ class FaultState:
         target = self.kinds[self.rng.below(len(self.kinds))]
         sel = self.rng.next_u64()
         bit = self.rng.next_u64() % 32
+        # The aging draw comes after the bit draw and ONLY when the plan
+        # ages upsets — fraction-0 plans keep the pinned RNG sequence.
+        if self.stuck_ppm > 0 and self.rng.below(PPM) < self.stuck_ppm:
+            kind = "stuck_at"
+        else:
+            kind = "transient"
         self.next_event = cycle + 1 + self.rng.below(2 * self.mean)
-        return (target, sel, bit)
+        return (target, sel, bit, kind)
 
 
-def schedule(seed, rate, targets, sm_id, events):
+def upset_outcome(protection, target, aged_site, correct_cycles=ECC_CORRECT_CYCLES):
+    """1:1 transliteration of fault.rs::upset_outcome."""
+    if protection == "ecc":
+        if aged_site:
+            return ("uncorrectable",)
+        return ("corrected", correct_cycles)
+    # Parity: silent classes flip, detected classes abort.
+    if target in SILENT:
+        return ("silent_flip",)
+    return ("detected",)
+
+
+def schedule(seed, rate, targets, sm_id, events, stuck=0.0):
     """First `events` upsets, polled exactly at each due cycle."""
-    fs = FaultState.new(seed, rate, targets, sm_id)
+    fs = FaultState.new(seed, rate, targets, sm_id, stuck)
     out = []
     for _ in range(events):
         cycle = fs.next_event
@@ -96,16 +128,61 @@ def check_golden():
     assert fs.mean == 10_000, fs.mean
     assert fs.next_event == 12_812, fs.next_event
     expected = [
-        (12_812, "register_file", 0x097A8C1C8963A82F, 0),
-        (14_584, "shared_mem", 0xF355DFB05DE6D9DF, 24),
-        (22_709, "l1_tags", 0xD5C6D2D5A0BFA0C3, 2),
-        (24_679, "shared_mem", 0x1F5BDF164719BBF4, 13),
+        (12_812, "register_file", 0x097A8C1C8963A82F, 0, "transient"),
+        (14_584, "shared_mem", 0xF355DFB05DE6D9DF, 24, "transient"),
+        (22_709, "l1_tags", 0xD5C6D2D5A0BFA0C3, 2, "transient"),
+        (24_679, "shared_mem", 0x1F5BDF164719BBF4, 13, "transient"),
     ]
     got = schedule(0xC0FFEE, 100.0, TARGETS, 0, 4)
     assert got == expected, f"golden drift:\n  got      {got}\n  expected {expected}"
     fs1 = FaultState.new(0xC0FFEE, 100.0, TARGETS, 1)
     assert fs1.next_event == 6_986, fs1.next_event
     print("golden constants OK (pinned vs fault.rs unit test)")
+
+
+def check_stuck_at_golden():
+    # Pinned against fault.rs::stuck_at_schedule_matches_pinned_golden_constants:
+    # the first event shares the default plan's (cycle, target, sel, bit)
+    # — the classification draw comes *after* the bit draw — and the rest
+    # diverges because of that extra draw.
+    fs = FaultState.new(0xC0FFEE, 100.0, TARGETS, 0, 0.3)
+    assert fs.stuck_ppm == 300_000, fs.stuck_ppm
+    assert fs.next_event == 12_812, "schedule start is aging-independent"
+    expected = [
+        (12_812, "register_file", 0x097A8C1C8963A82F, 0, "transient"),
+        (21_610, "instr_image", 0xE17A7115D43E80B8, 28, "stuck_at"),
+        (21_966, "l1_tags", 0x63D3ED82C0594791, 9, "transient"),
+        (26_812, "l1_tags", 0x08BDDE031D989757, 28, "transient"),
+        (32_664, "register_file", 0xEBF889D201444B61, 24, "transient"),
+        (38_975, "shared_mem", 0x95D82DBDA9E0CE64, 2, "transient"),
+    ]
+    got = schedule(0xC0FFEE, 100.0, TARGETS, 0, 6, stuck=0.3)
+    assert got == expected, f"aging golden drift:\n  got      {got}\n  expected {expected}"
+    # Observed stuck fraction over 4000 events, pinned exactly (the Rust
+    # unit test fault.rs::stuck_fraction_matches_the_draw_over_many_events
+    # asserts the same 1211).
+    fs = FaultState.new(0xC0FFEE, 100.0, TARGETS, 0, 0.3)
+    stuck = sum(1 for _ in range(4_000) if fs.poll(fs.next_event)[3] == "stuck_at")
+    assert stuck == 1_211, stuck
+    # Fraction 0 skips the draw entirely: identical stream to a default plan.
+    plain = schedule(9, 500.0, TARGETS, 2, 32)
+    zeroed = schedule(9, 500.0, TARGETS, 2, 32, stuck=0.0)
+    assert plain == zeroed, "fraction-0 plans must keep the pinned RNG sequence"
+    print("fault-aging golden OK (pinned schedule, stuck count 1211/4000, 0-gating)")
+
+
+def check_upset_outcome_table():
+    # Pinned against fault.rs::upset_outcome_table_is_pinned.
+    for aged in (False, True):
+        assert upset_outcome("parity", "register_file", aged) == ("silent_flip",)
+        assert upset_outcome("parity", "shared_mem", aged) == ("silent_flip",)
+        assert upset_outcome("parity", "l1_tags", aged) == ("detected",)
+        assert upset_outcome("parity", "instr_image", aged) == ("detected",)
+    for t in TARGETS:
+        assert upset_outcome("ecc", t, False, 5) == ("corrected", 5)
+        assert upset_outcome("ecc", t, True, 5) == ("uncorrectable",)
+        assert upset_outcome("ecc", t, False) == ("corrected", ECC_CORRECT_CYCLES)
+    print("upset-outcome table OK (SECDED/parity decisions pinned)")
 
 
 def check_determinism(cases=200):
@@ -116,11 +193,13 @@ def check_determinism(cases=200):
         rate = rnd.choice([10.0, 250.0, 5_000.0, 200_000.0, 1_000_000.0])
         sm = rnd.randrange(8)
         targets = rnd.choice(subsets)
-        a = schedule(seed, rate, targets, sm, 32)
-        b = schedule(seed, rate, targets, sm, 32)
+        stuck = rnd.choice([0.0, 0.3, 1.0])
+        a = schedule(seed, rate, targets, sm, 32, stuck)
+        b = schedule(seed, rate, targets, sm, 32, stuck)
         assert a == b, f"seed {seed:#x} sm {sm}: same plan must replay identically"
-        for _, target, _, bit in a:
+        for _, target, _, bit, kind in a:
             assert target in targets and 0 <= bit < 32
+            assert kind == "transient" if stuck == 0.0 else kind in ("transient", "stuck_at")
     print(f"determinism OK ({cases} random plans, 32 events each, replayed twice)")
 
 
@@ -207,6 +286,8 @@ def check_interarrival():
 
 if __name__ == "__main__":
     check_golden()
+    check_stuck_at_golden()
+    check_upset_outcome_table()
     check_determinism()
     check_poll_granularity()
     check_divergence()
